@@ -1,0 +1,49 @@
+//! Scalability sweep (paper §8, Figure 23 shape): BFS and PageRank across
+//! graph sizes and hardware configurations (xSyG), reporting TEPS.
+//!
+//! `1S` vs `2S` differ only in CPU worker threads (one core on this
+//! container — the structure is exercised, the speedup is not observable;
+//! see DESIGN.md §2). The hybrid columns exercise the real accelerator
+//! element.
+//!
+//! Run: `cargo run --release --example scalability_sweep -- [--scales 11,12,13]`
+
+use totem::engine::EngineConfig;
+use totem::graph::Workload;
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_teps, Table};
+use totem::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let scales = args
+        .f64_list_or("scales", &[11.0, 12.0, 13.0])
+        .map_err(anyhow::Error::msg)?;
+    let alpha = args.f64_or("alpha", 0.7).map_err(anyhow::Error::msg)?;
+
+    for alg in [AlgKind::Bfs, AlgKind::Pagerank] {
+        let mut table = Table::new(
+            &format!("{} traversal rate by config (Fig. 23 shape)", alg.name()),
+            &["workload", "1S", "2S", "1S1G", "2S1G", "2S2G"],
+        );
+        for &s in &scales {
+            let scale = s as u32;
+            let g = build_workload(Workload::Rmat(scale), 42, alg);
+            let mut row = vec![format!("RMAT{scale}")];
+            for hw in ["1S", "2S", "1S1G", "2S1G", "2S2G"] {
+                let cfg = EngineConfig::from_notation(hw, alpha, Strategy::High, 1)
+                    .map_err(anyhow::Error::msg)?
+                    .with_artifacts("artifacts");
+                match measure(&g, RunSpec::new(alg), &cfg, 2) {
+                    Ok(m) => row.push(fmt_teps(m.teps)),
+                    Err(_) => row.push("-".into()), // does not fit the accelerator
+                }
+            }
+            table.row(row);
+        }
+        print!("{}", table.markdown());
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Finding the main actors in a social network (paper §7.2):
+//! Betweenness Centrality on the Twitter-proxy follower graph, plus a
+//! point-to-point shortest-path query (§7.3) on the same network.
+//!
+//! Run:  `cargo run --release --example social_influencers -- [--scale N]`
+
+use totem::engine::EngineConfig;
+use totem::graph::generator::{rmat, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::harness::{measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, fmt_teps, Table};
+use totem::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let scale = args.usize_or("scale", 14).map_err(anyhow::Error::msg)? as u32;
+    let alpha = args.f64_or("alpha", 0.7).map_err(anyhow::Error::msg)?;
+
+    // Twitter-like follower network (skewed, degree 36)
+    let mut el = rmat(&RmatParams {
+        scale,
+        avg_degree: 36,
+        a: 0.60,
+        b: 0.19,
+        c: 0.19,
+        permute: true,
+        seed: 7,
+    });
+    with_random_weights(&mut el, 64, 8); // "common-follower distance" weights
+    let g = CsrGraph::from_edge_list(&el);
+    println!(
+        "== social network: |V| = {} users, |E| = {} follow links ==",
+        g.vertex_count,
+        g.edge_count()
+    );
+
+    // ---- Betweenness Centrality: who brokers information flow? ----------
+    let mut table = Table::new(
+        "BC: hybrid vs host (paper Fig. 19 shape)",
+        &["config", "makespan", "rate", "speedup"],
+    );
+    let host = measure(&g, RunSpec::new(AlgKind::Bc).with_source(1), &EngineConfig::host_only(1), 2)?;
+    table.row(vec![
+        "2S host".into(),
+        fmt_secs(host.makespan_secs),
+        fmt_teps(host.teps),
+        "1.00x".into(),
+    ]);
+    let mut bc_scores: Vec<f32> = host.last.output.as_f32().to_vec();
+    for strategy in [Strategy::High, Strategy::Low] {
+        let cfg = EngineConfig::hybrid(1, alpha, strategy).with_artifacts("artifacts");
+        let m = measure(&g, RunSpec::new(AlgKind::Bc).with_source(1), &cfg, 2)?;
+        table.row(vec![
+            format!("2S1G {}", strategy.name()),
+            fmt_secs(m.makespan_secs),
+            fmt_teps(m.teps),
+            format!("{:.2}x", host.makespan_secs / m.makespan_secs),
+        ]);
+        bc_scores = m.last.output.as_f32().to_vec();
+    }
+    print!("{}", table.markdown());
+
+    let mut idx: Vec<usize> = (0..bc_scores.len()).collect();
+    idx.sort_by(|&a, &b| bc_scores[b].partial_cmp(&bc_scores[a]).unwrap());
+    println!("\ntop 5 information brokers (betweenness):");
+    for &v in idx.iter().take(5) {
+        println!("  user {v:>8}  score {:.1}", bc_scores[v]);
+    }
+
+    // ---- point-to-point shortest path (§7.3) ------------------------------
+    let cfg = EngineConfig::hybrid(1, alpha, Strategy::High).with_artifacts("artifacts");
+    let m = measure(&g, RunSpec::new(AlgKind::Sssp).with_source(1), &cfg, 2)?;
+    let dist = m.last.output.as_f32();
+    let reachable = dist.iter().filter(|d| d.is_finite()).count();
+    let target = idx[0] as usize;
+    println!(
+        "\nSSSP from user 1 (hybrid, HIGH): {} in {} — {} users reachable",
+        fmt_teps(m.teps),
+        fmt_secs(m.makespan_secs),
+        reachable
+    );
+    if dist[target].is_finite() {
+        println!(
+            "  shortest weighted path from user 1 to top broker {target}: {:.1}",
+            dist[target]
+        );
+    }
+    Ok(())
+}

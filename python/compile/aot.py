@@ -1,0 +1,150 @@
+"""AOT lowering: JAX/Pallas superstep functions -> HLO text artifacts.
+
+Runs ONCE at build time (``make artifacts``); the Rust runtime loads the
+HLO text through ``HloModuleProto::from_text_file`` and compiles it on the
+PJRT CPU client. Python is never on the request path.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Each program in ``model.PROGRAMS`` is lowered at every size class
+``(n_cap, e_cap)``; ``manifest.json`` records the marshaling contract the
+Rust side validates (``rust/src/runtime/manifest.rs``).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PROGRAMS
+
+# (n_cap, e_cap) size classes. n_cap-1 is the dummy sink; a partition needs
+# state_len < n_cap and edges <= e_cap. The ladder covers RMAT12..RMAT20
+# offload fractions (DESIGN.md §3).
+SIZE_CLASSES = [
+    (1 << 12, 1 << 15),
+    (1 << 13, 1 << 16),
+    (1 << 14, 1 << 17),
+    (1 << 15, 1 << 18),
+    (1 << 16, 1 << 19),
+    (1 << 17, 1 << 20),
+    (1 << 18, 1 << 21),
+    (1 << 19, 1 << 22),
+    (1 << 20, 1 << 23),
+]
+
+_DTYPES = {"i32": jnp.int32, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(meta, n_cap: int, e_cap: int):
+    """ShapeDtypeStructs in the positional marshaling contract order."""
+    args = []
+    for dt in meta["arrays"]:
+        args.append(jax.ShapeDtypeStruct((n_cap,), _DTYPES[dt]))
+    for dt in meta["aux"]:
+        args.append(jax.ShapeDtypeStruct((n_cap,), _DTYPES[dt]))
+    args.append(jax.ShapeDtypeStruct((e_cap,), jnp.int32))  # src
+    args.append(jax.ShapeDtypeStruct((e_cap,), jnp.int32))  # dst
+    if meta["weights"]:
+        args.append(jax.ShapeDtypeStruct((e_cap,), jnp.float32))
+    if meta["si32"]:
+        args.append(jax.ShapeDtypeStruct((meta["si32"],), jnp.int32))
+    if meta["sf32"]:
+        args.append(jax.ShapeDtypeStruct((meta["sf32"],), jnp.float32))
+    return args
+
+
+def lower_one(name: str, meta, n_cap: int, e_cap: int, out_dir: str,
+              use_pallas: bool = True, force: bool = False):
+    fname = f"{name}_n{n_cap}_e{e_cap}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    entry = {
+        "name": name,
+        "n_cap": n_cap,
+        "e_cap": e_cap,
+        "file": fname,
+        "arrays": meta["arrays"],
+        "aux": meta["aux"],
+        "weights": meta["weights"],
+        "si32": meta["si32"],
+        "sf32": meta["sf32"],
+        "orientation": meta["orientation"],
+    }
+    if not force and os.path.exists(path):
+        return entry, False
+    step = meta["make"](interpret=True, use_pallas=use_pallas)
+    lowered = jax.jit(step).lower(*example_args(meta, n_cap, e_cap))
+    text = to_hlo_text(lowered)
+    with open(path + ".tmp", "w") as f:
+        f.write(text)
+    os.replace(path + ".tmp", path)
+    return entry, True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated program names (default: all)")
+    ap.add_argument("--classes", default=None,
+                    help="comma-separated class indices (default: all)")
+    ap.add_argument("--force", action="store_true", help="re-lower even if present")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = args.only.split(",") if args.only else list(PROGRAMS)
+    class_idx = (
+        [int(i) for i in args.classes.split(",")]
+        if args.classes
+        else range(len(SIZE_CLASSES))
+    )
+
+    entries = []
+    fresh = 0
+    for name in names:
+        meta = PROGRAMS[name]
+        for ci in class_idx:
+            n_cap, e_cap = SIZE_CLASSES[ci]
+            entry, built = lower_one(name, meta, n_cap, e_cap, args.out, force=args.force)
+            entries.append(entry)
+            fresh += built
+            print(f"[aot] {entry['file']}{' (cached)' if not built else ''}", flush=True)
+
+    # ablation variant: the pure-jnp lowering of BFS at the mid classes,
+    # used by `cargo bench ablation` to compare pallas vs plain-XLA codegen.
+    meta = dict(PROGRAMS["bfs"])
+    for ci in (2, 3, 4):
+        n_cap, e_cap = SIZE_CLASSES[ci]
+        jnp_entry, built = lower_one(
+            "bfs_jnp", {**meta, "make": lambda **kw: PROGRAMS["bfs"]["make"](
+                **{**kw, "use_pallas": False})},
+            n_cap, e_cap, args.out, force=args.force,
+        )
+        entries.append(jnp_entry)
+        fresh += built
+        print(f"[aot] {jnp_entry['file']}{' (cached)' if not built else ''}", flush=True)
+
+    manifest = {"version": 1, "programs": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(entries)} entries ({fresh} lowered fresh)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

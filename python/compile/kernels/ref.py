@@ -1,0 +1,122 @@
+"""Pure-numpy correctness oracles.
+
+Deliberately written as plain sequential loops (the most obviously-correct
+form) so a shared bug with the vectorized kernels is impossible. pytest
+compares both the L1 scatter primitives and the L2 superstep functions
+against these.
+"""
+
+import numpy as np
+
+INF_I32 = 1 << 30
+
+
+def scatter_min_ref(base, idx, val):
+    out = np.array(base, copy=True)
+    for k in range(len(idx)):
+        i = int(idx[k])
+        if val[k] < out[i]:
+            out[i] = val[k]
+    return out
+
+
+def scatter_add_ref(base, idx, val):
+    out = np.array(base, copy=True)
+    for k in range(len(idx)):
+        out[int(idx[k])] += val[k]
+    return out
+
+
+def bfs_step_ref(levels, src, dst, cur):
+    """One level-synchronous BFS superstep over a COO edge list."""
+    out = np.array(levels, copy=True)
+    for k in range(len(src)):
+        if levels[int(src[k])] == cur:
+            cand = cur + 1
+            if cand < out[int(dst[k])]:
+                out[int(dst[k])] = cand
+    changed = int(np.any(out != levels))
+    return out, changed
+
+
+def sssp_step_ref(dist, src, dst, w):
+    """One all-edge Bellman-Ford relaxation."""
+    out = np.array(dist, copy=True)
+    for k in range(len(src)):
+        cand = dist[int(src[k])] + w[k]
+        if cand < out[int(dst[k])]:
+            out[int(dst[k])] = cand
+    changed = int(np.any(out != dist))
+    return out, changed
+
+
+def cc_step_ref(labels, src, dst):
+    """One label-propagation relaxation."""
+    out = np.array(labels, copy=True)
+    for k in range(len(src)):
+        cand = labels[int(src[k])]
+        if cand < out[int(dst[k])]:
+            out[int(dst[k])] = cand
+    changed = int(np.any(out != labels))
+    return out, changed
+
+
+def pagerank_step_ref(rank, contrib, inv_outdeg, mask, src, dst, base, damping):
+    """One pull-based PageRank round: src indexes contributors."""
+    sums = np.zeros_like(rank)
+    for k in range(len(src)):
+        sums[int(dst[k])] += contrib[int(src[k])]
+    new_rank = np.where(mask > 0.5, base + damping * sums, rank)
+    new_contrib = np.where(mask > 0.5, new_rank * inv_outdeg, contrib)
+    return new_rank.astype(np.float32), new_contrib.astype(np.float32), 1
+
+
+def bc_fwd_step_ref(dist, numsp, src, dst, cur):
+    """One BC forward superstep: settle levels, then accumulate sigma."""
+    new_dist = np.array(dist, copy=True)
+    for k in range(len(src)):
+        if dist[int(src[k])] == cur and cur + 1 < new_dist[int(dst[k])]:
+            new_dist[int(dst[k])] = cur + 1
+    new_numsp = np.array(numsp, copy=True)
+    for k in range(len(src)):
+        if dist[int(src[k])] == cur and new_dist[int(dst[k])] == cur + 1:
+            new_numsp[int(dst[k])] += numsp[int(src[k])]
+    changed = int(np.any(new_dist != dist) or np.any(new_numsp != numsp))
+    return new_dist, new_numsp, changed
+
+
+def bc_bwd_step_ref(dist, numsp, delta, bc, ratio, src, dst, cur):
+    """One BC backward superstep over published ratios."""
+    sums = np.zeros_like(ratio)
+    for k in range(len(src)):
+        sums[int(src[k])] += ratio[int(dst[k])]
+    at = dist == cur
+    new_delta = np.where(at, numsp * sums, delta).astype(np.float32)
+    new_bc = (bc + np.where(at, new_delta, 0.0)).astype(np.float32)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        r = np.where(at & (numsp > 0), (1.0 + new_delta) / np.maximum(numsp, 1e-30), 0.0)
+    return new_delta, new_bc, r.astype(np.float32), 1
+
+
+# --- tiny end-to-end oracles over a COO graph (multi-step convergence) -----
+
+def bfs_full_ref(n, src, dst, source):
+    levels = np.full(n, INF_I32, np.int32)
+    levels[source] = 0
+    cur = 0
+    while True:
+        levels2, changed = bfs_step_ref(levels, src, dst, cur)
+        levels = levels2
+        cur += 1
+        if not changed:
+            return levels
+
+
+def sssp_full_ref(n, src, dst, w, source):
+    dist = np.full(n, np.inf, np.float32)
+    dist[source] = 0.0
+    while True:
+        dist2, changed = sssp_step_ref(dist, src, dst, w)
+        if not changed:
+            return dist
+        dist = dist2

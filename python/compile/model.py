@@ -1,0 +1,203 @@
+"""L2: per-algorithm BSP superstep functions (build-time JAX).
+
+Each function is one accelerator superstep over a padded partition, calling
+the L1 Pallas scatter kernels. The marshaling contract with the Rust
+runtime (``rust/src/runtime/``, see also DESIGN.md §3) is positional:
+
+    inputs:  (state arrays [N]..., aux arrays [N]..., src [E] i32,
+              dst [E] i32, [w [E] f32], [si32 [k]], [sf32 [k]])
+    outputs: (state arrays [N]..., changed i32[1])
+
+Conventions shared with the Rust engine:
+- ``INF_I32 = 1 << 30`` marks unreached i32 levels (not i32::MAX, so +1
+  cannot overflow); f32 distances use IEEE infinity (inf + w == inf keeps
+  padding edges inert);
+- device index ``N-1`` is the dummy sink: padding edges point there and
+  its state is an identity element for every reduce, so they are no-ops;
+- ghost slots live inside the state arrays; the Rust engine performs all
+  inbox/outbox exchange host-side between supersteps.
+
+``PROGRAMS`` is the registry ``aot.py`` lowers and ``manifest.json``
+advertises to the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import scatter_ops as k
+
+INF_I32 = 1 << 30
+
+
+def _changed_any(diff) -> jnp.ndarray:
+    return jnp.any(diff).astype(jnp.int32).reshape((1,))
+
+
+def make_bfs_step(interpret=True, grid=None, use_pallas=True):
+    """Level-synchronous BFS relaxation (paper Figure 11)."""
+    smin = k.edge_scatter_min if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_min_jnp(b, i, v)
+    )
+
+    def bfs_step(levels, src, dst, si32):
+        cur = si32[0]
+        cand = jnp.where(levels[src] == cur, cur + 1, jnp.int32(INF_I32))
+        new = smin(levels, dst, cand, grid=grid, interpret=interpret)
+        return new, _changed_any(new != levels)
+
+    return bfs_step
+
+
+def make_sssp_step(interpret=True, grid=None, use_pallas=True):
+    """All-edge Bellman-Ford relaxation (paper Figure 20 / Harish et al.)."""
+    smin = k.edge_scatter_min if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_min_jnp(b, i, v)
+    )
+
+    def sssp_step(dist, src, dst, w):
+        cand = dist[src] + w  # inf + w == inf: padding edges are inert
+        new = smin(dist, dst, cand, grid=grid, interpret=interpret)
+        return new, _changed_any(new < dist)
+
+    return sssp_step
+
+
+def make_cc_step(interpret=True, grid=None, use_pallas=True):
+    """Label-propagation relaxation over the undirected COO."""
+    smin = k.edge_scatter_min if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_min_jnp(b, i, v)
+    )
+
+    def cc_step(labels, src, dst):
+        cand = labels[src]
+        new = smin(labels, dst, cand, grid=grid, interpret=interpret)
+        return new, _changed_any(new != labels)
+
+    return cc_step
+
+
+def make_pagerank_step(interpret=True, grid=None, use_pallas=True):
+    """Pull-based PageRank round (paper Figure 14).
+
+    ``src`` indexes contributors (in-neighbors, possibly ghost-in slots),
+    ``dst`` the ranked vertex. ``mask`` selects real local vertices: ghost
+    slots must keep their pulled contributions and the rank of non-real
+    slots is meaningless.
+    """
+    sadd = k.edge_scatter_add if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_add_jnp(b, i, v)
+    )
+
+    def pagerank_step(rank, contrib, inv_outdeg, mask, src, dst, sf32):
+        base, damping = sf32[0], sf32[1]
+        sums = sadd(jnp.zeros_like(rank), dst, contrib[src], grid=grid, interpret=interpret)
+        real = mask > 0.5
+        new_rank = jnp.where(real, base + damping * sums, rank)
+        new_contrib = jnp.where(real, new_rank * inv_outdeg, contrib)
+        return new_rank, new_contrib, jnp.ones((1,), jnp.int32)
+
+    return pagerank_step
+
+
+def make_bc_fwd_step(interpret=True, grid=None, use_pallas=True):
+    """BC forward superstep (paper Figure 18 forwardPropagation):
+    settle levels with min, then accumulate sigma into vertices that ended at
+    exactly ``cur + 1``."""
+    smin = k.edge_scatter_min if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_min_jnp(b, i, v)
+    )
+    sadd = k.edge_scatter_add if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_add_jnp(b, i, v)
+    )
+
+    def bc_fwd_step(dist, numsp, src, dst, si32):
+        cur = si32[0]
+        active = dist[src] == cur
+        cand = jnp.where(active, cur + 1, jnp.int32(INF_I32))
+        new_dist = smin(dist, dst, cand, grid=grid, interpret=interpret)
+        add_mask = active & (new_dist[dst] == cur + 1)
+        adds = jnp.where(add_mask, numsp[src], jnp.float32(0.0))
+        new_numsp = sadd(numsp, dst, adds, grid=grid, interpret=interpret)
+        changed = _changed_any((new_dist != dist) | (new_numsp != numsp))
+        return new_dist, new_numsp, changed
+
+    return bc_fwd_step
+
+
+def make_bc_bwd_step(interpret=True, grid=None, use_pallas=True):
+    """BC backward superstep: delta from published ratios, scatter-added by
+    *source* (each vertex sums its successors' ratios)."""
+    sadd = k.edge_scatter_add if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_add_jnp(b, i, v)
+    )
+
+    def bc_bwd_step(dist, numsp, delta, bc, ratio, src, dst, si32):
+        cur = si32[0]
+        sums = sadd(jnp.zeros_like(ratio), src, ratio[dst], grid=grid, interpret=interpret)
+        at = dist == cur
+        new_delta = jnp.where(at, numsp * sums, delta)
+        new_bc = bc + jnp.where(at, new_delta, jnp.float32(0.0))
+        safe = jnp.maximum(numsp, jnp.float32(1e-30))
+        new_ratio = jnp.where(at & (numsp > 0), (1.0 + new_delta) / safe, jnp.float32(0.0))
+        return dist, numsp, new_delta, new_bc, new_ratio, jnp.ones((1,), jnp.int32)
+
+    return bc_bwd_step
+
+
+# --- registry: the contract aot.py lowers and rust validates ---------------
+
+PROGRAMS = {
+    "bfs": dict(
+        make=make_bfs_step,
+        arrays=["i32"],
+        aux=[],
+        weights=False,
+        si32=1,
+        sf32=0,
+        orientation="fwd",
+    ),
+    "sssp": dict(
+        make=make_sssp_step,
+        arrays=["f32"],
+        aux=[],
+        weights=True,
+        si32=0,
+        sf32=0,
+        orientation="fwd",
+    ),
+    "cc": dict(
+        make=make_cc_step,
+        arrays=["i32"],
+        aux=[],
+        weights=False,
+        si32=0,
+        sf32=0,
+        orientation="fwd",
+    ),
+    "pagerank": dict(
+        make=make_pagerank_step,
+        arrays=["f32", "f32"],
+        aux=["f32", "f32"],
+        weights=False,
+        si32=0,
+        sf32=2,
+        orientation="rev",
+    ),
+    "bc_fwd": dict(
+        make=make_bc_fwd_step,
+        arrays=["i32", "f32"],
+        aux=[],
+        weights=False,
+        si32=1,
+        sf32=0,
+        orientation="fwd",
+    ),
+    "bc_bwd": dict(
+        make=make_bc_bwd_step,
+        arrays=["i32", "f32", "f32", "f32", "f32"],
+        aux=[],
+        weights=False,
+        si32=1,
+        sf32=0,
+        orientation="fwd",
+    ),
+}

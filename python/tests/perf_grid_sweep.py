@@ -1,0 +1,60 @@
+"""Perf-pass L1 experiment: grid width of the Pallas scatter kernels.
+
+Times the *compiled* BFS step (the same XLA pipeline the Rust PJRT runtime
+executes) at several edge-tile grid widths plus the plain-jnp lowering, at
+a representative size class. Run manually:
+
+    python tests/perf_grid_sweep.py [n_cap] [e_cap]
+
+Not collected by pytest (no `test_` prefix); results feed EXPERIMENTS.md
+§Perf and the DEFAULT_GRID choice in kernels/scatter_ops.py.
+"""
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def bench(step, args, iters=20):
+    out = step(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = step(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 1 << 16
+    e = int(sys.argv[2]) if len(sys.argv) > 2 else 1 << 19
+    rng = np.random.default_rng(0)
+    levels = jnp.array(
+        np.where(rng.uniform(size=n) < 0.1, 1, model.INF_I32).astype(np.int32)
+    )
+    src = jnp.array(rng.integers(0, n - 1, e).astype(np.int32))
+    dst = jnp.array(rng.integers(0, n - 1, e).astype(np.int32))
+    cur = jnp.array([1], jnp.int32)
+
+    print(f"n={n} e={e}")
+    results = {}
+    for grid in [1, 2, 4, 8, 16]:
+        step = jax.jit(model.make_bfs_step(interpret=True, grid=grid))
+        dt = bench(step, (levels, src, dst, cur))
+        results[f"grid={grid}"] = dt
+        print(f"  pallas grid={grid:<3} {dt*1e3:8.2f} ms/step  ({e/dt/1e6:7.1f} Medges/s)")
+    step = jax.jit(model.make_bfs_step(use_pallas=False))
+    dt = bench(step, (levels, src, dst, cur))
+    results["jnp"] = dt
+    print(f"  jnp (no pallas) {dt*1e3:8.2f} ms/step  ({e/dt/1e6:7.1f} Medges/s)")
+    best = min(results, key=results.get)
+    print(f"best: {best}")
+
+
+if __name__ == "__main__":
+    main()

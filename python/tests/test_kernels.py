@@ -1,0 +1,161 @@
+"""L1 kernel correctness: Pallas scatter primitives vs sequential oracles.
+
+Hypothesis sweeps shapes, dtypes, index patterns (duplicates, dummy-slot
+padding) — the CORE correctness signal for the accelerator path.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.scatter_ops import (
+    edge_scatter_add,
+    edge_scatter_add_jnp,
+    edge_scatter_min,
+    edge_scatter_min_jnp,
+)
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+@st.composite
+def scatter_case(draw, value_dtype):
+    n = draw(st.sampled_from([1, 2, 8, 17, 64, 256]))
+    e = draw(st.sampled_from([1, 8, 64, 128, 512]))
+    idx = draw(
+        st.lists(st.integers(0, n - 1), min_size=e, max_size=e)
+    )
+    if value_dtype == "i32":
+        base = draw(st.lists(st.integers(-1000, 1000), min_size=n, max_size=n))
+        val = draw(st.lists(st.integers(-1000, 1000), min_size=e, max_size=e))
+        return (
+            np.array(base, np.int32),
+            np.array(idx, np.int32),
+            np.array(val, np.int32),
+        )
+    base = draw(
+        st.lists(
+            st.floats(-1e3, 1e3, allow_nan=False, allow_subnormal=False, width=32), min_size=n, max_size=n
+        )
+    )
+    val = draw(
+        st.lists(
+            st.floats(-1e3, 1e3, allow_nan=False, allow_subnormal=False, width=32), min_size=e, max_size=e
+        )
+    )
+    return (
+        np.array(base, np.float32),
+        np.array(idx, np.int32),
+        np.array(val, np.float32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=scatter_case("i32"))
+def test_scatter_min_i32_matches_ref(case):
+    base, idx, val = case
+    out = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    np.testing.assert_array_equal(out, ref.scatter_min_ref(base, idx, val))
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=scatter_case("f32"))
+def test_scatter_min_f32_matches_ref(case):
+    base, idx, val = case
+    out = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    # atol=0 allclose: IEEE minimum(-0.0, 0.0) = -0.0, the `<` oracle keeps
+    # +0.0 — numerically identical, bitwise not.
+    np.testing.assert_allclose(out, ref.scatter_min_ref(base, idx, val), rtol=0, atol=0)
+
+
+@st.composite
+def scatter_add_case(draw):
+    """f32 add values as multiples of 0.5: sums stay exactly representable,
+    so the result is order-independent and comparable bit-exactly."""
+    n = draw(st.sampled_from([1, 2, 8, 17, 64, 256]))
+    e = draw(st.sampled_from([1, 8, 64, 128, 512]))
+    idx = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    base = draw(st.lists(st.integers(-64, 64), min_size=n, max_size=n))
+    val = draw(st.lists(st.integers(-64, 64), min_size=e, max_size=e))
+    return (
+        (np.array(base, np.float32) / 2.0).astype(np.float32),
+        np.array(idx, np.int32),
+        (np.array(val, np.float32) / 2.0).astype(np.float32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=scatter_add_case())
+def test_scatter_add_f32_matches_ref(case):
+    base, idx, val = case
+    out = _np(edge_scatter_add(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    np.testing.assert_array_equal(out, ref.scatter_add_ref(base, idx, val))
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=scatter_case("i32"))
+def test_pallas_matches_jnp_variant(case):
+    base, idx, val = case
+    a = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    b = _np(edge_scatter_min_jnp(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("grid", [1, 2, 4, 8])
+def test_grid_invariance(grid):
+    """Result must not depend on the HBM->VMEM tiling."""
+    rng = np.random.default_rng(42)
+    n, e = 128, 1024
+    base = rng.integers(0, 1000, n).astype(np.int32)
+    idx = rng.integers(0, n, e).astype(np.int32)
+    val = rng.integers(0, 1000, e).astype(np.int32)
+    out = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val), grid=grid))
+    np.testing.assert_array_equal(out, ref.scatter_min_ref(base, idx, val))
+
+
+def test_add_grid_invariance():
+    rng = np.random.default_rng(7)
+    n, e = 64, 512
+    base = rng.normal(size=n).astype(np.float32)
+    idx = rng.integers(0, n, e).astype(np.int32)
+    val = rng.normal(size=e).astype(np.float32)
+    outs = [
+        _np(edge_scatter_add(jnp.array(base), jnp.array(idx), jnp.array(val), grid=g))
+        for g in (1, 4, 8)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5)
+
+
+def test_dummy_slot_padding_is_inert():
+    """Padding edges target slot n-1 with identity values — a no-op."""
+    n = 16
+    base = np.full(n, ref.INF_I32, np.int32)
+    base[0] = 0
+    idx = np.full(32, n - 1, np.int32)
+    val = np.full(32, ref.INF_I32, np.int32)
+    out = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    np.testing.assert_array_equal(out, base)
+
+    basef = np.zeros(n, np.float32)
+    valf = np.zeros(32, np.float32)
+    outf = _np(edge_scatter_add(jnp.array(basef), jnp.array(idx), jnp.array(valf)))
+    np.testing.assert_array_equal(outf, basef)
+
+
+def test_duplicate_indices_reduce():
+    base = np.full(4, 100, np.int32)
+    idx = np.array([2, 2, 2, 2], np.int32)
+    val = np.array([5, 9, 3, 7], np.int32)
+    out = _np(edge_scatter_min(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    assert out[2] == 3
+    outa = _np(
+        edge_scatter_add(
+            jnp.zeros(4, jnp.float32), jnp.array(idx), jnp.array(val, np.float32)
+        )
+    )
+    assert outa[2] == 24.0

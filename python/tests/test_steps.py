@@ -1,0 +1,175 @@
+"""L2 superstep correctness: model.PROGRAMS step functions vs oracles,
+including multi-step convergence to whole-algorithm results on random
+graphs (the padded-partition path the Rust engine exercises)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+INF = model.INF_I32
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+@st.composite
+def coo_graph(draw):
+    """Random padded COO 'partition': n includes a dummy sink at n-1."""
+    n = draw(st.sampled_from([4, 8, 32, 65]))
+    e = draw(st.sampled_from([8, 32, 128]))
+    n_real = n - 1
+    src = draw(st.lists(st.integers(0, n_real - 1), min_size=e, max_size=e))
+    dst = draw(st.lists(st.integers(0, n_real - 1), min_size=e, max_size=e))
+    n_pad = draw(st.integers(0, 8))
+    src += [n - 1] * n_pad
+    dst += [n - 1] * n_pad
+    return n, np.array(src, np.int32), np.array(dst, np.int32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=coo_graph(), cur=st.integers(0, 3))
+def test_bfs_step_matches_ref(g, cur):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src))
+    levels = rng.choice([0, 1, 2, 3, INF], size=n).astype(np.int32)
+    levels[n - 1] = INF  # dummy
+    step = model.make_bfs_step()
+    out, changed = step(jnp.array(levels), jnp.array(src), jnp.array(dst),
+                        jnp.array([cur], jnp.int32))
+    exp, exp_changed = ref.bfs_step_ref(levels, src, dst, cur)
+    np.testing.assert_array_equal(_np(out), exp)
+    assert int(_np(changed)[0]) == exp_changed
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=coo_graph())
+def test_sssp_step_matches_ref(g):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 1)
+    dist = rng.choice([0.0, 1.5, 3.0, np.inf], size=n).astype(np.float32)
+    w = rng.uniform(0.5, 4.0, size=len(src)).astype(np.float32)
+    step = model.make_sssp_step()
+    out, changed = step(jnp.array(dist), jnp.array(src), jnp.array(dst), jnp.array(w))
+    exp, exp_changed = ref.sssp_step_ref(dist, src, dst, w)
+    np.testing.assert_allclose(_np(out), exp, rtol=1e-6)
+    assert int(_np(changed)[0]) == exp_changed
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=coo_graph())
+def test_cc_step_matches_ref(g):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 2)
+    labels = rng.integers(0, n, size=n).astype(np.int32)
+    step = model.make_cc_step()
+    out, changed = step(jnp.array(labels), jnp.array(src), jnp.array(dst))
+    exp, exp_changed = ref.cc_step_ref(labels, src, dst)
+    np.testing.assert_array_equal(_np(out), exp)
+    assert int(_np(changed)[0]) == exp_changed
+
+
+@settings(max_examples=12, deadline=None)
+@given(g=coo_graph())
+def test_pagerank_step_matches_ref(g):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 3)
+    rank = rng.uniform(0, 1, n).astype(np.float32)
+    contrib = rng.uniform(0, 1, n).astype(np.float32)
+    inv_outdeg = rng.uniform(0, 1, n).astype(np.float32)
+    mask = (rng.uniform(0, 1, n) > 0.3).astype(np.float32)
+    mask[n - 1] = 0.0
+    base, damping = np.float32(0.15 / n), np.float32(0.85)
+    step = model.make_pagerank_step()
+    r, c, _ = step(jnp.array(rank), jnp.array(contrib), jnp.array(inv_outdeg),
+                   jnp.array(mask), jnp.array(src), jnp.array(dst),
+                   jnp.array([base, damping], jnp.float32))
+    er, ec, _ = ref.pagerank_step_ref(rank, contrib, inv_outdeg, mask, src, dst,
+                                      base, damping)
+    np.testing.assert_allclose(_np(r), er, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(_np(c), ec, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=12, deadline=None)
+@given(g=coo_graph(), cur=st.integers(0, 2))
+def test_bc_fwd_step_matches_ref(g, cur):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 4)
+    dist = rng.choice([0, 1, 2, INF], size=n).astype(np.int32)
+    dist[n - 1] = INF
+    numsp = np.where(dist != INF, rng.integers(1, 4, n), 0).astype(np.float32)
+    step = model.make_bc_fwd_step()
+    d, s, changed = step(jnp.array(dist), jnp.array(numsp), jnp.array(src),
+                         jnp.array(dst), jnp.array([cur], jnp.int32))
+    ed, es, ec = ref.bc_fwd_step_ref(dist, numsp, src, dst, cur)
+    np.testing.assert_array_equal(_np(d), ed)
+    np.testing.assert_allclose(_np(s), es, rtol=1e-5)
+    assert int(_np(changed)[0]) == ec
+
+
+@settings(max_examples=12, deadline=None)
+@given(g=coo_graph(), cur=st.integers(0, 2))
+def test_bc_bwd_step_matches_ref(g, cur):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 5)
+    dist = rng.choice([0, 1, 2, 3, INF], size=n).astype(np.int32)
+    dist[n - 1] = INF
+    numsp = np.where(dist != INF, rng.integers(1, 4, n), 0).astype(np.float32)
+    delta = rng.uniform(0, 2, n).astype(np.float32)
+    bc = rng.uniform(0, 2, n).astype(np.float32)
+    ratio = np.where(dist == cur + 1, rng.uniform(0.1, 1, n), 0).astype(np.float32)
+    step = model.make_bc_bwd_step()
+    d2, s2, dl, b2, r2, _ = step(
+        jnp.array(dist), jnp.array(numsp), jnp.array(delta), jnp.array(bc),
+        jnp.array(ratio), jnp.array(src), jnp.array(dst),
+        jnp.array([cur], jnp.int32))
+    edl, eb, er, _ = ref.bc_bwd_step_ref(dist, numsp, delta, bc, ratio, src, dst, cur)
+    np.testing.assert_array_equal(_np(d2), dist)
+    np.testing.assert_array_equal(_np(s2), numsp)
+    np.testing.assert_allclose(_np(dl), edl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(_np(b2), eb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(_np(r2), er, rtol=1e-5, atol=1e-6)
+
+
+# --- multi-step convergence on random graphs -------------------------------
+
+def _random_graph(seed, n_real=40, e=160):
+    rng = np.random.default_rng(seed)
+    n = n_real + 1  # + dummy
+    src = rng.integers(0, n_real, e).astype(np.int32)
+    dst = rng.integers(0, n_real, e).astype(np.int32)
+    return n, src, dst
+
+
+def test_bfs_converges_to_full_traversal():
+    n, src, dst = _random_graph(11)
+    step = model.make_bfs_step()
+    levels = np.full(n, INF, np.int32)
+    levels[0] = 0
+    cur = 0
+    for _ in range(n):
+        out, changed = step(jnp.array(levels), jnp.array(src), jnp.array(dst),
+                            jnp.array([cur], jnp.int32))
+        levels = _np(out)
+        cur += 1
+        if int(_np(changed)[0]) == 0:
+            break
+    np.testing.assert_array_equal(levels, ref.bfs_full_ref(n, src, dst, 0))
+
+
+def test_sssp_converges_to_shortest_paths():
+    n, src, dst = _random_graph(13)
+    rng = np.random.default_rng(99)
+    w = rng.uniform(0.5, 3.0, len(src)).astype(np.float32)
+    step = model.make_sssp_step()
+    dist = np.full(n, np.inf, np.float32)
+    dist[0] = 0.0
+    for _ in range(n + 1):
+        out, changed = step(jnp.array(dist), jnp.array(src), jnp.array(dst), jnp.array(w))
+        if int(_np(changed)[0]) == 0:
+            break
+        dist = _np(out)
+    np.testing.assert_allclose(dist, ref.sssp_full_ref(n, src, dst, w, 0), rtol=1e-5)

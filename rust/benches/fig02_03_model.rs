@@ -1,0 +1,83 @@
+//! Figures 2 & 3 (paper §3.3): predicted speedup from the performance
+//! model. Pure model evaluation — reproduces the paper's curves exactly,
+//! since they depend only on Eq. 4.
+//!
+//! Fig 2 left:  speedup vs α for r_cpu ∈ {0.5, 1, 2, 5} BE/s (β = 5%).
+//! Fig 2 right: speedup vs α for β ∈ {5, 10, 20, 40, 100}% (r_cpu = 1).
+//! Fig 3:       speedup vs per-edge message volume (α = 60%, r_cpu = 1).
+
+use totem::model::{comm_rate_for_message_bytes, speedup_eq4, ModelParams};
+use totem::report::{save, Figure, Series};
+use totem::util::json::{arr, obj};
+
+fn alphas() -> Vec<f64> {
+    (30..=100).step_by(5).map(|x| x as f64 / 100.0).collect()
+}
+
+fn main() {
+    let c = 3e9;
+
+    // --- Figure 2 left ------------------------------------------------------
+    let mut fig2l = Figure::new(
+        "Fig 2 (left): predicted speedup vs alpha, varying r_cpu (beta=5%, c=3 BE/s)",
+        "alpha (CPU edge share)",
+        "speedup",
+    );
+    for r_cpu in [0.5e9, 1e9, 2e9, 5e9] {
+        let p = ModelParams { r_cpu, r_acc: 2.0 * r_cpu, c };
+        let mut s = Series::new(&format!("r_cpu={} BE/s", r_cpu / 1e9));
+        for a in alphas() {
+            s.push(a, speedup_eq4(a, 0.05, &p));
+        }
+        fig2l.series.push(s);
+    }
+
+    // --- Figure 2 right -----------------------------------------------------
+    let mut fig2r = Figure::new(
+        "Fig 2 (right): predicted speedup vs alpha, varying beta (r_cpu=1 BE/s, c=3 BE/s)",
+        "alpha (CPU edge share)",
+        "speedup",
+    );
+    let p1 = ModelParams { r_cpu: 1e9, r_acc: 2e9, c };
+    for beta in [0.05, 0.10, 0.20, 0.40, 1.00] {
+        let mut s = Series::new(&format!("beta={:.0}%", beta * 100.0));
+        for a in alphas() {
+            s.push(a, speedup_eq4(a, beta, &p1));
+        }
+        fig2r.series.push(s);
+    }
+
+    // --- Figure 3 -----------------------------------------------------------
+    let mut fig3 = Figure::new(
+        "Fig 3: predicted speedup vs per-edge message volume (alpha=60%, r_cpu=1 BE/s)",
+        "message bytes per boundary edge",
+        "speedup",
+    );
+    for beta in [0.05, 0.20, 0.40] {
+        let mut s = Series::new(&format!("beta={:.0}%", beta * 100.0));
+        for msg_bytes in [4.0, 8.0, 12.0, 16.0, 24.0, 32.0] {
+            let p = ModelParams {
+                r_cpu: 1e9,
+                r_acc: 2e9,
+                c: comm_rate_for_message_bytes(c, msg_bytes),
+            };
+            s.push(msg_bytes, speedup_eq4(0.6, beta, &p));
+        }
+        fig3.series.push(s);
+    }
+
+    let md = format!("{}\n{}\n{}", fig2l.markdown(), fig2r.markdown(), fig3.markdown());
+    print!("{md}");
+    let json = obj(vec![(
+        "figures",
+        arr(vec![fig2l.to_json(), fig2r.to_json(), fig3.to_json()]),
+    )]);
+    save("fig02_03_model", &md, &json).expect("write results");
+
+    // paper sanity anchors: with β≤40% the model predicts speedup at α<1;
+    // with β=100% slowdown only past α ≈ 0.7 (§3.3).
+    assert!(speedup_eq4(0.7, 0.40, &p1) > 1.0);
+    assert!(speedup_eq4(0.60, 1.0, &p1) > 1.0);
+    assert!(speedup_eq4(0.75, 1.0, &p1) < 1.0);
+    eprintln!("fig02_03_model: OK (anchors hold)");
+}

@@ -1,0 +1,159 @@
+//! Figure 7 + Table 3 (paper §5.1): model-predicted vs TOTEM-achieved
+//! speedup while varying α, for all four algorithms; Pearson correlation
+//! and average error per workload.
+//!
+//! The model parameters are calibrated on this testbed (paper §3.3: r_cpu
+//! from the CPU-only run, c from measured channel rate) — the paper's
+//! claim under test is that a two-parameter linear model *tracks* the
+//! achieved hybrid performance (correlation ≈ 0.9+), not the absolute
+//! numbers.
+
+use totem::graph::Workload;
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::engine::EngineConfig;
+use totem::model::{calibrate, speedup};
+use totem::partition::Strategy;
+use totem::report::{save, Figure, Series, Table};
+use totem::stats;
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig07_table3: SKIP (run `make artifacts`)");
+        return;
+    }
+    let reps = args.usize_or("reps", 2).unwrap();
+    let scales: Vec<u32> = args
+        .f64_list_or("scales", &[13.0, 14.0, 15.0])
+        .unwrap()
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    let algs = [AlgKind::Bfs, AlgKind::Pagerank, AlgKind::Bc, AlgKind::Sssp];
+    let alphas = args
+        .f64_list_or("alphas", &[0.5, 0.6, 0.7, 0.8, 0.9])
+        .unwrap();
+    let accel_counts: Vec<usize> = if args.has("two-accels") { vec![1, 2] } else { vec![1] };
+
+    let mut table3 = Table::new(
+        "Table 3: model accuracy (correlation + avg error)",
+        &["algorithm", "workload", "correlation", "avg err"],
+    );
+    let mut fig_json = Vec::new();
+    let mut fig7: Option<Figure> = None;
+
+    for alg in algs {
+        for &scale in &scales {
+            let g = build_workload(Workload::Rmat(scale), 42, alg);
+            // calibrate on this workload (host run + hybrid probe)
+            let cal = match calibrate_alg(&g, alg, &artifacts) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("calibrate {} RMAT{scale}: {e:#}", alg.name());
+                    continue;
+                }
+            };
+            let mut predicted = Vec::new();
+            let mut achieved = Vec::new();
+            let mut series_pred = Series::new(&format!("{}-model", alg.name()));
+            let mut series_ach = Series::new(&format!("{}-achieved", alg.name()));
+            for &accels in &accel_counts {
+                for &alpha in &alphas {
+                    let cfg = EngineConfig::hybrid(accels, alpha, Strategy::Rand)
+                        .with_artifacts(&artifacts);
+                    let m = match measure(&g, RunSpec::new(alg), &cfg, reps) {
+                        Ok(m) => m,
+                        Err(_) => continue, // does not fit the accelerator
+                    };
+                    let r = &m.last;
+                    let beta = calibrate::beta_of(r, g.edge_count());
+                    let pred = speedup(r.shares[0], beta, &cal.params);
+                    let ach = cal.host_secs / m.makespan_secs;
+                    predicted.push(pred);
+                    achieved.push(ach);
+                    if accels == 1 {
+                        series_pred.push(alpha, pred);
+                        series_ach.push(alpha, ach);
+                    }
+                }
+            }
+            if predicted.len() < 2 {
+                continue;
+            }
+            let corr = stats::pearson(&predicted, &achieved);
+            let err = stats::avg_error_pct(&predicted, &achieved);
+            table3.row(vec![
+                alg.name().to_string(),
+                format!("RMAT{scale}"),
+                format!("{corr:.2}"),
+                format!("{err:+.0}%"),
+            ]);
+            fig_json.push(obj(vec![
+                ("alg", s(alg.name())),
+                ("workload", s(&format!("RMAT{scale}"))),
+                ("correlation", num(corr)),
+                ("avg_err_pct", num(err)),
+                ("predicted", arr(predicted.iter().map(|&x| num(x)).collect())),
+                ("achieved", arr(achieved.iter().map(|&x| num(x)).collect())),
+            ]));
+            // figure uses the middle scale
+            if scale == scales[scales.len() / 2] {
+                let f = fig7.get_or_insert_with(|| {
+                    Figure::new(
+                        &format!("Fig 7: predicted (model) vs achieved speedup, RMAT{scale} 2S1G"),
+                        "alpha",
+                        "speedup vs host-only",
+                    )
+                });
+                f.series.push(series_pred);
+                f.series.push(series_ach);
+            }
+        }
+    }
+
+    let mut md = table3.markdown();
+    if let Some(f) = &fig7 {
+        md.push('\n');
+        md.push_str(&f.markdown());
+    }
+    print!("{md}");
+    save(
+        "fig07_table3",
+        &md,
+        &obj(vec![("entries", arr(fig_json))]),
+    )
+    .unwrap();
+    eprintln!("fig07_table3: done");
+}
+
+fn calibrate_alg(
+    g: &totem::graph::CsrGraph,
+    alg: AlgKind,
+    artifacts: &std::path::Path,
+) -> anyhow::Result<calibrate::Calibration> {
+    use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp};
+    // same source policy as the harness sweep (max-degree hub)
+    let src = totem::harness::resolve_source(g, &RunSpec::new(alg));
+    match alg {
+        AlgKind::Bfs => calibrate::calibrate_with(
+            g, &mut Bfs::new(src), &mut Bfs::new(src), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Pagerank => calibrate::calibrate_with(
+            g,
+            &mut Pagerank::new(5),
+            &mut Pagerank::new(5),
+            artifacts,
+            0.7,
+            Strategy::Rand,
+        ),
+        AlgKind::Sssp => calibrate::calibrate_with(
+            g, &mut Sssp::new(src), &mut Sssp::new(src), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Bc => calibrate::calibrate_with(
+            g, &mut Bc::new(src), &mut Bc::new(src), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Cc => calibrate::calibrate_with(
+            g, &mut Cc::new(), &mut Cc::new(), artifacts, 0.7, Strategy::Rand),
+    }
+}

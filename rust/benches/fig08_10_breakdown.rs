@@ -1,0 +1,91 @@
+//! Figures 8 & 10 (paper §5.2, §6.3.2): breakdown of BFS execution time
+//! into computation (bottleneck processor), accelerator compute, and
+//! communication — for one and two accelerators, across α and across
+//! partitioning strategies.
+//!
+//! Paper shape: communication is a small fraction of the total after
+//! message reduction; the bottleneck processor dominates.
+
+use totem::engine::EngineConfig;
+use totem::graph::Workload;
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig08_10_breakdown: SKIP (run `make artifacts`)");
+        return;
+    }
+    let scale = args.usize_or("scale", 14).unwrap() as u32;
+    let reps = args.usize_or("reps", 2).unwrap();
+    let g = build_workload(Workload::Rmat(scale), 42, AlgKind::Bfs);
+
+    // --- Fig 8: RAND partitioning, alpha sweep, 1 and 2 accelerators -------
+    let mut t8 = Table::new(
+        &format!("Fig 8: BFS time breakdown, RMAT{scale}, RAND partitioning"),
+        &["config", "alpha", "total", "cpu compute", "accel compute", "comm", "comm %"],
+    );
+    let mut rows = Vec::new();
+    for accels in [1usize, 2] {
+        for alpha in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            let cfg =
+                EngineConfig::hybrid(accels, alpha, Strategy::Rand).with_artifacts(&artifacts);
+            let Ok(m) = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, reps) else {
+                continue;
+            };
+            let r = &m.last;
+            let cpu = r.metrics.partition_compute_secs(0);
+            let acc: f64 = (1..=accels).map(|p| r.metrics.partition_compute_secs(p)).sum();
+            let total = m.makespan_secs;
+            t8.row(vec![
+                format!("2S{accels}G"),
+                format!("{alpha:.1}"),
+                fmt_secs(total),
+                fmt_secs(cpu),
+                fmt_secs(acc),
+                fmt_secs(m.comm_secs),
+                format!("{:.1}%", 100.0 * m.comm_secs / total),
+            ]);
+            rows.push(obj(vec![
+                ("config", s(&format!("2S{accels}G"))),
+                ("alpha", num(alpha)),
+                ("total", num(total)),
+                ("cpu", num(cpu)),
+                ("accel", num(acc)),
+                ("comm", num(m.comm_secs)),
+            ]));
+        }
+    }
+
+    // --- Fig 10: strategy comparison at a fixed offload --------------------
+    let mut t10 = Table::new(
+        &format!("Fig 10: BFS breakdown by strategy, RMAT{scale}, alpha=0.8, 2S1G"),
+        &["strategy", "total", "cpu compute", "accel compute", "comm", "cpu verts"],
+    );
+    for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+        let cfg = EngineConfig::hybrid(1, 0.8, strat).with_artifacts(&artifacts);
+        let Ok(m) = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, reps) else {
+            continue;
+        };
+        let r = &m.last;
+        t10.row(vec![
+            strat.name().to_string(),
+            fmt_secs(m.makespan_secs),
+            fmt_secs(r.metrics.partition_compute_secs(0)),
+            fmt_secs(r.metrics.partition_compute_secs(1)),
+            fmt_secs(m.comm_secs),
+            r.vertices[0].to_string(),
+        ]);
+    }
+
+    let md = format!("{}\n{}", t8.markdown(), t10.markdown());
+    print!("{md}");
+    save("fig08_10_breakdown", &md, &obj(vec![("rows", arr(rows))])).unwrap();
+    eprintln!("fig08_10_breakdown: done");
+}

@@ -1,0 +1,144 @@
+//! Figures 15, 16, 17 (paper §7.1): PageRank on the UK-WEB proxy.
+//!
+//! - Fig 15: traversal rate per strategy for one and two accelerators,
+//!   with host-only as reference; LOW can offload the most edges (fewest
+//!   accelerator vertices per edge), HIGH gives the fastest CPU side.
+//! - Fig 16: execution-time breakdown (computation dominates, comm small).
+//! - Fig 17: CPU read vs write memory accesses per strategy relative to
+//!   host-only — HIGH slashes writes (∝ |V_cpu|) while reads (∝ |E_cpu|)
+//!   stay put.
+
+use totem::engine::EngineConfig;
+use totem::graph::{rmat, CsrGraph, RmatParams, Workload};
+use totem::harness::{measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, fmt_teps, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig15_16_17_pagerank: SKIP (run `make artifacts`)");
+        return;
+    }
+    let reps = args.usize_or("reps", 2).unwrap();
+    let rounds = args.usize_or("rounds", 5).unwrap();
+    // web-crawl workload: the full proxy with --full, a scale-15 web-shaped
+    // graph otherwise (same skew parameters, 1/8 size) to keep bench time low.
+    let g: CsrGraph = if args.has("full") {
+        Workload::UkWebProxy.build(42)
+    } else {
+        CsrGraph::from_edge_list(&rmat(&RmatParams {
+            scale: 15,
+            avg_degree: 35,
+            a: 0.62,
+            b: 0.19,
+            c: 0.17,
+            permute: true,
+            seed: 42,
+        }))
+    };
+    eprintln!("workload: |V|={} |E|={}", g.vertex_count, g.edge_count());
+    let spec = RunSpec::new(AlgKind::Pagerank).with_rounds(rounds);
+
+    let host_cfg = EngineConfig::host_only(1).with_instrument(true);
+    let host = measure(&g, spec, &host_cfg, reps).expect("host");
+    let host_reads = host.last.metrics.mem[0].reads as f64;
+    let host_writes = host.last.metrics.mem[0].writes as f64;
+
+    let mut t15 = Table::new(
+        "Fig 15: PageRank rate by strategy (UK-WEB proxy)",
+        &["config", "strategy", "rate", "vs host", "accel verts", "accel edges"],
+    );
+    let mut t16 = Table::new(
+        "Fig 16: PageRank breakdown",
+        &["config", "strategy", "total", "cpu", "accel", "comm", "comm %"],
+    );
+    let mut t17 = Table::new(
+        "Fig 17: CPU memory accesses vs host-only",
+        &["strategy", "reads %", "writes %", "cpu verts"],
+    );
+    t15.row(vec![
+        "2S".into(),
+        "-".into(),
+        fmt_teps(host.teps),
+        "1.00x".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    let mut rows = Vec::new();
+    for accels in [1usize, 2] {
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            let cfg = EngineConfig::hybrid(accels, 0.7, strat)
+                .with_artifacts(&artifacts)
+                .with_instrument(true);
+            let m = match measure(&g, spec, &cfg, reps) {
+                Ok(m) => m,
+                Err(_) => {
+                    // Fig 15's "missing bars": partition does not fit
+                    t15.row(vec![
+                        format!("2S{accels}G"),
+                        strat.name().into(),
+                        "does not fit".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+            };
+            let r = &m.last;
+            let acc: f64 = (1..=accels).map(|p| r.metrics.partition_compute_secs(p)).sum();
+            t15.row(vec![
+                format!("2S{accels}G"),
+                strat.name().into(),
+                fmt_teps(m.teps),
+                format!("{:.2}x", host.makespan_secs / m.makespan_secs),
+                r.vertices[1..].iter().sum::<usize>().to_string(),
+                r.footprints[1..].iter().map(|f| f.edges).sum::<usize>().to_string(),
+            ]);
+            t16.row(vec![
+                format!("2S{accels}G"),
+                strat.name().into(),
+                fmt_secs(m.makespan_secs),
+                fmt_secs(r.metrics.partition_compute_secs(0)),
+                fmt_secs(acc),
+                fmt_secs(m.comm_secs),
+                format!("{:.1}%", 100.0 * m.comm_secs / m.makespan_secs),
+            ]);
+            if accels == 1 {
+                t17.row(vec![
+                    strat.name().into(),
+                    format!("{:.0}%", 100.0 * r.metrics.mem[0].reads as f64 / host_reads),
+                    format!("{:.0}%", 100.0 * r.metrics.mem[0].writes as f64 / host_writes),
+                    r.vertices[0].to_string(),
+                ]);
+            }
+            rows.push(obj(vec![
+                ("config", s(&format!("2S{accels}G"))),
+                ("strategy", s(strat.name())),
+                ("teps", num(m.teps)),
+                ("reads", num(r.metrics.mem[0].reads as f64)),
+                ("writes", num(r.metrics.mem[0].writes as f64)),
+                ("cpu_vertices", num(r.vertices[0] as f64)),
+            ]));
+        }
+    }
+
+    let md = format!("{}\n{}\n{}", t15.markdown(), t16.markdown(), t17.markdown());
+    print!("{md}");
+    save(
+        "fig15_16_17_pagerank",
+        &md,
+        &obj(vec![
+            ("host_reads", num(host_reads)),
+            ("host_writes", num(host_writes)),
+            ("rows", arr(rows)),
+        ]),
+    )
+    .unwrap();
+    eprintln!("fig15_16_17_pagerank: done");
+}

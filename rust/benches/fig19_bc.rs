@@ -1,0 +1,118 @@
+//! Figure 19 (paper §7.2): Betweenness Centrality on the Twitter proxy —
+//! traversal rate per strategy and α (left), execution breakdown at the
+//! maximum offloadable partition (right).
+//!
+//! Paper shape: HIGH wins at a fixed α; LOW can offload more edges
+//! (BC keeps 5 per-vertex state arrays, so accelerator capacity is
+//! vertex-bound and LOW's few-vertex accelerator partitions fit more
+//! edges), which in the paper flips the overall winner to LOW.
+
+use totem::engine::EngineConfig;
+use totem::graph::{rmat, CsrGraph, RmatParams, Workload};
+use totem::harness::{measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, fmt_teps, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig19_bc: SKIP (run `make artifacts`)");
+        return;
+    }
+    let reps = args.usize_or("reps", 2).unwrap();
+    let g: CsrGraph = if args.has("full") {
+        Workload::TwitterProxy.build(7)
+    } else {
+        CsrGraph::from_edge_list(&rmat(&RmatParams {
+            scale: 14,
+            avg_degree: 36,
+            a: 0.60,
+            b: 0.19,
+            c: 0.19,
+            permute: true,
+            seed: 7,
+        }))
+    };
+    eprintln!("workload: |V|={} |E|={}", g.vertex_count, g.edge_count());
+    let spec = RunSpec::new(AlgKind::Bc).with_source(1);
+
+    let host = measure(&g, spec, &EngineConfig::host_only(1), reps).expect("host");
+
+    let mut t_rate = Table::new(
+        "Fig 19 (left): BC rate by strategy and alpha (2S1G)",
+        &["strategy", "alpha", "rate", "vs host", "max offload?"],
+    );
+    let mut t_break = Table::new(
+        "Fig 19 (right): BC breakdown at max offload",
+        &["strategy", "max alpha fits", "total", "cpu", "accel", "comm"],
+    );
+    let mut rows = Vec::new();
+    for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+        // find the maximum offload (minimum alpha) that still fits, then
+        // report the sweep — the paper's "LOW offloads 20% more" effect.
+        let mut min_fitting_alpha = None;
+        for &alpha in &[0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            let cfg = EngineConfig::hybrid(1, alpha, strat).with_artifacts(&artifacts);
+            match measure(&g, spec, &cfg, reps) {
+                Ok(m) => {
+                    if min_fitting_alpha.is_none() {
+                        min_fitting_alpha = Some(alpha);
+                        let r = &m.last;
+                        t_break.row(vec![
+                            strat.name().into(),
+                            format!("{alpha:.1}"),
+                            fmt_secs(m.makespan_secs),
+                            fmt_secs(r.metrics.partition_compute_secs(0)),
+                            fmt_secs(r.metrics.partition_compute_secs(1)),
+                            fmt_secs(m.comm_secs),
+                        ]);
+                    }
+                    t_rate.row(vec![
+                        strat.name().into(),
+                        format!("{alpha:.1}"),
+                        fmt_teps(m.teps),
+                        format!("{:.2}x", host.makespan_secs / m.makespan_secs),
+                        if Some(alpha) == min_fitting_alpha { "max".into() } else { "".into() },
+                    ]);
+                    rows.push(obj(vec![
+                        ("strategy", s(strat.name())),
+                        ("alpha", num(alpha)),
+                        ("teps", num(m.teps)),
+                        (
+                            "speedup",
+                            num(host.makespan_secs / m.makespan_secs),
+                        ),
+                    ]));
+                }
+                Err(_) => {
+                    t_rate.row(vec![
+                        strat.name().into(),
+                        format!("{alpha:.1}"),
+                        "does not fit".into(),
+                        "-".into(),
+                        "".into(),
+                    ]);
+                }
+            }
+        }
+    }
+
+    let md = format!(
+        "host-only BC rate: {}\n\n{}\n{}",
+        fmt_teps(host.teps),
+        t_rate.markdown(),
+        t_break.markdown()
+    );
+    print!("{md}");
+    save(
+        "fig19_bc",
+        &md,
+        &obj(vec![("host_teps", num(host.teps)), ("rows", arr(rows))]),
+    )
+    .unwrap();
+    eprintln!("fig19_bc: done");
+}

@@ -1,0 +1,117 @@
+//! Figures 21 & 22 (paper §7.3): SSSP (Bellman-Ford) on the Twitter
+//! proxy — rate by strategy (left), breakdown (right), and host memory
+//! read/write accesses per strategy vs host-only processing (Fig 22).
+//!
+//! Paper shape: HIGH is best (atomic distance updates contend on the
+//! per-vertex state; fewer CPU vertices → fewer contended writes);
+//! communication is negligible; weighted edges double the accelerator's
+//! edge footprint (SSSP partitions need the weight array).
+
+use totem::engine::EngineConfig;
+use totem::graph::{generator, CsrGraph, RmatParams, Workload};
+use totem::harness::{measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, fmt_teps, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig21_22_sssp: SKIP (run `make artifacts`)");
+        return;
+    }
+    let reps = args.usize_or("reps", 2).unwrap();
+    let mut el = if args.has("full") {
+        Workload::TwitterProxy.generate(7)
+    } else {
+        generator::rmat(&RmatParams {
+            scale: 14,
+            avg_degree: 36,
+            a: 0.60,
+            b: 0.19,
+            c: 0.19,
+            permute: true,
+            seed: 7,
+        })
+    };
+    generator::with_random_weights(&mut el, 64, 9);
+    let g = CsrGraph::from_edge_list(&el);
+    eprintln!("workload: |V|={} |E|={} (weighted)", g.vertex_count, g.edge_count());
+    let spec = RunSpec::new(AlgKind::Sssp).with_source(1);
+
+    let host_cfg = EngineConfig::host_only(1).with_instrument(true);
+    let host = measure(&g, spec, &host_cfg, reps).expect("host");
+    let host_reads = host.last.metrics.mem[0].reads as f64;
+    let host_writes = host.last.metrics.mem[0].writes as f64;
+
+    let mut t21 = Table::new(
+        "Fig 21: SSSP rate and breakdown by strategy (2S2G, alpha=0.65)",
+        &["strategy", "rate", "vs host", "total", "cpu", "accel", "comm"],
+    );
+    let mut t22 = Table::new(
+        "Fig 22: host memory accesses vs host-only",
+        &["strategy", "reads %", "writes %", "cpu verts"],
+    );
+    let mut rows = Vec::new();
+    for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+        let cfg = EngineConfig::hybrid(2, 0.65, strat)
+            .with_artifacts(&artifacts)
+            .with_instrument(true);
+        let m = match measure(&g, spec, &cfg, reps) {
+            Ok(m) => m,
+            Err(_) => {
+                t21.row(vec![
+                    strat.name().into(),
+                    "does not fit".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+        };
+        let r = &m.last;
+        let acc: f64 = (1..3).map(|p| r.metrics.partition_compute_secs(p)).sum();
+        t21.row(vec![
+            strat.name().into(),
+            fmt_teps(m.teps),
+            format!("{:.2}x", host.makespan_secs / m.makespan_secs),
+            fmt_secs(m.makespan_secs),
+            fmt_secs(r.metrics.partition_compute_secs(0)),
+            fmt_secs(acc),
+            fmt_secs(m.comm_secs),
+        ]);
+        t22.row(vec![
+            strat.name().into(),
+            format!("{:.0}%", 100.0 * r.metrics.mem[0].reads as f64 / host_reads),
+            format!("{:.0}%", 100.0 * r.metrics.mem[0].writes as f64 / host_writes),
+            r.vertices[0].to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("strategy", s(strat.name())),
+            ("teps", num(m.teps)),
+            ("reads_pct", num(r.metrics.mem[0].reads as f64 / host_reads)),
+            ("writes_pct", num(r.metrics.mem[0].writes as f64 / host_writes)),
+        ]));
+    }
+
+    let md = format!(
+        "host-only SSSP rate: {}\n\n{}\n{}",
+        fmt_teps(host.teps),
+        t21.markdown(),
+        t22.markdown()
+    );
+    print!("{md}");
+    save(
+        "fig21_22_sssp",
+        &md,
+        &obj(vec![("host_teps", num(host.teps)), ("rows", arr(rows))]),
+    )
+    .unwrap();
+    eprintln!("fig21_22_sssp: done");
+}

@@ -1,0 +1,81 @@
+//! Figure 23 (paper §8): scalability across graph sizes and hardware
+//! configurations — BFS, PageRank, BC, SSSP × RMAT sizes × {1S, 2S, 1S1G,
+//! 2S1G, 2S2G}, reporting traversal rates.
+//!
+//! `xS` socket scaling is thread-count only (single core here; the paper's
+//! 2S≈2×1S effect is not observable — noted in EXPERIMENTS.md). The
+//! accelerator columns exercise the real PJRT element; partitioning uses
+//! the per-algorithm best strategy as in the paper ("the graph is
+//! partitioned to obtain best performance").
+
+use totem::engine::EngineConfig;
+use totem::graph::Workload;
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::partition::Strategy;
+use totem::report::{fmt_teps, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("fig23_scalability: SKIP (run `make artifacts`)");
+        return;
+    }
+    let reps = args.usize_or("reps", 2).unwrap();
+    let scales: Vec<u32> = args
+        .f64_list_or("scales", &[12.0, 13.0, 14.0, 15.0])
+        .unwrap()
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    let alpha = args.f64_or("alpha", 0.75).unwrap();
+    let configs = ["1S", "2S", "1S1G", "2S1G", "2S2G"];
+
+    let mut all = Vec::new();
+    let mut md = String::new();
+    for alg in [AlgKind::Bfs, AlgKind::Pagerank, AlgKind::Bc, AlgKind::Sssp] {
+        // per-paper: best strategy per algorithm (HIGH for BFS/PR/SSSP,
+        // LOW for BC at max offload; HIGH used everywhere for uniformity
+        // of the sweep, as HIGH also wins BC at fixed alpha).
+        let strategy = Strategy::High;
+        let mut t = Table::new(
+            &format!("Fig 23: {} rate by config and size", alg.name()),
+            &["workload", "1S", "2S", "1S1G", "2S1G", "2S2G"],
+        );
+        for &scale in &scales {
+            let g = build_workload(Workload::Rmat(scale), 42, alg);
+            let mut row = vec![format!("RMAT{scale}")];
+            for hw in configs {
+                let cfg = match EngineConfig::from_notation(hw, alpha, strategy, 1) {
+                    Ok(c) => c.with_artifacts(&artifacts),
+                    Err(_) => {
+                        row.push("-".into());
+                        continue;
+                    }
+                };
+                match measure(&g, RunSpec::new(alg), &cfg, reps) {
+                    Ok(m) => {
+                        row.push(fmt_teps(m.teps));
+                        all.push(obj(vec![
+                            ("alg", s(alg.name())),
+                            ("scale", num(scale as f64)),
+                            ("hw", s(hw)),
+                            ("teps", num(m.teps)),
+                            ("makespan", num(m.makespan_secs)),
+                        ]));
+                    }
+                    Err(_) => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        md.push_str(&t.markdown());
+        md.push('\n');
+    }
+    print!("{md}");
+    save("fig23_scalability", &md, &obj(vec![("rows", arr(all))])).unwrap();
+    eprintln!("fig23_scalability: done");
+}

@@ -1,0 +1,114 @@
+//! Table 4 (paper §9.4): processing times for all five algorithms across
+//! framework/hardware configurations on the Twitter workload.
+//!
+//! The `baseline` module plays the Galois/Ligra role: a clean whole-graph
+//! shared-memory implementation with no partitioning machinery. The TOTEM
+//! columns run the engine host-only (2S) and hybrid (1S1G / 2S1G / 2S2G).
+//! PageRank times one round and BC one source, exactly like the paper's
+//! table.
+
+use std::time::Instant;
+use totem::baseline;
+use totem::engine::EngineConfig;
+use totem::graph::{generator, CsrGraph, RmatParams, Workload};
+use totem::harness::{measure, AlgKind, RunSpec, ALL_ALGS};
+use totem::partition::Strategy;
+use totem::report::{fmt_secs, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn baseline_secs(alg: AlgKind, g: &CsrGraph, reps: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        match alg {
+            AlgKind::Bfs => {
+                let _ = baseline::bfs(g, 1);
+            }
+            AlgKind::Pagerank => {
+                let _ = baseline::pagerank(g, 1);
+            }
+            AlgKind::Sssp => {
+                let _ = baseline::sssp(g, 1);
+            }
+            AlgKind::Bc => {
+                let _ = baseline::bc(g, 1);
+            }
+            AlgKind::Cc => {
+                let _ = baseline::cc(g);
+            }
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let have_accel = artifacts.join("manifest.json").exists();
+    let reps = args.usize_or("reps", 2).unwrap();
+    let alpha = args.f64_or("alpha", 0.7).unwrap();
+    let mut el = if args.has("full") {
+        Workload::TwitterProxy.generate(7)
+    } else {
+        generator::rmat(&RmatParams {
+            scale: 14,
+            avg_degree: 36,
+            a: 0.60,
+            b: 0.19,
+            c: 0.19,
+            permute: true,
+            seed: 7,
+        })
+    };
+    generator::with_random_weights(&mut el, 64, 9);
+    let g = CsrGraph::from_edge_list(&el);
+    eprintln!("Twitter proxy: |V|={} |E|={}", g.vertex_count, g.edge_count());
+
+    let mut t = Table::new(
+        "Table 4: processing times (Twitter proxy; PageRank=1 round, BC=1 source)",
+        &["algorithm", "2S-Baseline", "2S-TOTEM", "1S1G", "2S1G", "2S2G"],
+    );
+    let mut rows = Vec::new();
+    for alg in ALL_ALGS {
+        let spec = RunSpec::new(alg).with_source(1).with_rounds(1);
+        let base = baseline_secs(alg, &g, reps);
+        let host = measure(&g, spec, &EngineConfig::host_only(1), reps)
+            .map(|m| m.makespan_secs)
+            .unwrap_or(f64::NAN);
+        let mut cells = vec![alg.name().to_string(), fmt_secs(base), fmt_secs(host)];
+        let mut jrow = vec![
+            ("alg", s(alg.name())),
+            ("baseline", num(base)),
+            ("totem_2s", num(host)),
+        ];
+        for hw in ["1S1G", "2S1G", "2S2G"] {
+            if !have_accel {
+                cells.push("-".into());
+                continue;
+            }
+            let cfg = EngineConfig::from_notation(hw, alpha, Strategy::High, 1)
+                .unwrap()
+                .with_artifacts(&artifacts);
+            match measure(&g, spec, &cfg, reps) {
+                Ok(m) => {
+                    cells.push(fmt_secs(m.makespan_secs));
+                    jrow.push(match hw {
+                        "1S1G" => ("hyb_1s1g", num(m.makespan_secs)),
+                        "2S1G" => ("hyb_2s1g", num(m.makespan_secs)),
+                        _ => ("hyb_2s2g", num(m.makespan_secs)),
+                    });
+                }
+                Err(_) => cells.push("-".into()),
+            }
+        }
+        t.row(cells);
+        rows.push(obj(jrow));
+    }
+    let md = t.markdown();
+    print!("{md}");
+    save("table4_frameworks", &md, &obj(vec![("rows", arr(rows))])).unwrap();
+    eprintln!("table4_frameworks: done");
+}

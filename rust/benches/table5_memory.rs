@@ -1,0 +1,87 @@
+//! Table 5 (paper §9.4): memory footprint of an accelerator partition per
+//! algorithm — graph representation, inbox/outbox buffers, and algorithm
+//! state — at the maximum offload that fits.
+//!
+//! Paper shape to reproduce: the graph structure takes over half the
+//! space (most for SSSP, which carries edge weights); communication
+//! buffers ≈ a quarter; algorithm state under ~10% for single-array
+//! algorithms, more for BC (5 arrays).
+
+use totem::engine::EngineConfig;
+use totem::graph::{generator, CsrGraph, RmatParams, Workload};
+use totem::harness::{measure, RunSpec, ALL_ALGS};
+use totem::partition::Strategy;
+use totem::report::{save, Table};
+use totem::util::args::Args;
+use totem::util::fmt_bytes;
+use totem::util::json::{arr, num, obj, s};
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("table5_memory: SKIP (run `make artifacts`)");
+        return;
+    }
+    let alpha = args.f64_or("alpha", 0.6).unwrap();
+    let mut el = if args.has("full") {
+        Workload::TwitterProxy.generate(7)
+    } else {
+        generator::rmat(&RmatParams {
+            scale: 14,
+            avg_degree: 36,
+            a: 0.60,
+            b: 0.19,
+            c: 0.19,
+            permute: true,
+            seed: 7,
+        })
+    };
+    generator::with_random_weights(&mut el, 64, 9);
+    let g = CsrGraph::from_edge_list(&el);
+
+    let mut t = Table::new(
+        "Table 5: accelerator-partition memory footprint (Twitter proxy, max offload, LOW)",
+        &["algorithm", "|V|", "|E|", "graph repr", "inbox", "outbox", "alg state", "total"],
+    );
+    let mut rows = Vec::new();
+    for alg in ALL_ALGS {
+        // LOW places the fewest vertices on the accelerator per edge for
+        // state-heavy algorithms; paper's Table 5 uses the best-performing
+        // configuration's partitions.
+        let cfg = EngineConfig::hybrid(1, alpha, Strategy::Low).with_artifacts(&artifacts);
+        let spec = RunSpec::new(alg).with_source(1).with_rounds(1);
+        let m = match measure(&g, spec, &cfg, 1) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{}: {e:#}", alg.name());
+                continue;
+            }
+        };
+        let fp = &m.last.footprints[1];
+        t.row(vec![
+            alg.name().to_string(),
+            fp.vertices.to_string(),
+            fp.edges.to_string(),
+            fmt_bytes(fp.graph_bytes),
+            fmt_bytes(fp.inbox_bytes),
+            fmt_bytes(fp.outbox_bytes),
+            fmt_bytes(fp.state_bytes),
+            fmt_bytes(fp.total()),
+        ]);
+        rows.push(obj(vec![
+            ("alg", s(alg.name())),
+            ("vertices", num(fp.vertices as f64)),
+            ("edges", num(fp.edges as f64)),
+            ("graph_bytes", num(fp.graph_bytes as f64)),
+            ("inbox_bytes", num(fp.inbox_bytes as f64)),
+            ("outbox_bytes", num(fp.outbox_bytes as f64)),
+            ("state_bytes", num(fp.state_bytes as f64)),
+        ]));
+    }
+    let md = t.markdown();
+    print!("{md}");
+    save("table5_memory", &md, &obj(vec![("rows", arr(rows))])).unwrap();
+    eprintln!("table5_memory: done");
+}

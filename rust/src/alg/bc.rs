@@ -1,0 +1,365 @@
+//! Betweenness Centrality — Brandes' algorithm (paper §7.2, Figure 18).
+//!
+//! Two BSP cycles:
+//!
+//! **Forward** (cycle 0): a level-synchronous BFS that also counts
+//! shortest paths. `dist` propagates with `min`; `numsp` (σ) accumulates
+//! with `add`. The two travel as a *paired* message
+//! ([`CommOp::DistSigma`]): a σ contribution applies only when the
+//! accompanying level matches the receiver's final level — exactly the
+//! `dist[nbr] == level + 1` guard in Figure 18 line 11, enforced across
+//! the partition boundary.
+//!
+//! **Backward** (cycle 1): dependency accumulation in decreasing level
+//! order. Instead of pulling `delta` and `numsp` separately, each
+//! processed level publishes `ratio[v] = (1 + δ(v)) / σ(v)` (zero
+//! everywhere else), so a successor's full term `σ(v)/σ(w) · (1+δ(w))`
+//! becomes `σ(v) · ratio[w]` — one pulled value per unique remote
+//! neighbor, the paper's two-way communication (§4.3.2) with reduction.
+//!
+//! Single-source, like the paper's Table 4 measurements. TEPS counts
+//! forward + backward traversals (×2, §5).
+
+use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
+use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
+use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::{as_atomic_f32_cells, as_atomic_i32_cells, atomic_add_f32};
+use crate::util::threadpool::parallel_reduce;
+use std::sync::atomic::Ordering;
+
+pub struct Bc {
+    pub source: u32,
+    /// Maximum finite BFS level, computed between cycles.
+    max_level: i32,
+}
+
+impl Bc {
+    pub fn new(source: u32) -> Bc {
+        Bc { source, max_level: 0 }
+    }
+}
+
+const DIST: usize = 0;
+const NUMSP: usize = 1;
+const DELTA: usize = 2;
+const BC: usize = 3;
+const RATIO: usize = 4;
+
+impl Algorithm for Bc {
+    fn spec(&self) -> AlgSpec {
+        AlgSpec {
+            name: "bc",
+            needs_weights: false,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+        }
+    }
+
+    fn cycles(&self) -> usize {
+        2
+    }
+
+    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
+        let n = part.state_len();
+        let mut dist = vec![INF_I32; n];
+        let mut numsp = vec![0f32; n];
+        if pg.part_of[self.source as usize] as usize == part.id {
+            let l = pg.local_of[self.source as usize] as usize;
+            dist[l] = 0;
+            numsp[l] = 1.0;
+        }
+        AlgState::new(vec![
+            StateArray::I32(dist),
+            StateArray::F32(numsp),
+            StateArray::F32(vec![0f32; n]), // delta
+            StateArray::F32(vec![0f32; n]), // bc
+            StateArray::F32(vec![0f32; n]), // ratio
+        ])
+    }
+
+    fn begin_cycle(&mut self, cycle: usize, pg: &PartitionedGraph, states: &mut [AlgState]) {
+        if cycle != 1 {
+            return;
+        }
+        // max finite level across all real vertices
+        let mut max_level = 0i32;
+        for (p, st) in pg.parts.iter().zip(states.iter()) {
+            let dist = st.arrays[DIST].as_i32();
+            for v in 0..p.nv {
+                if dist[v] != INF_I32 {
+                    max_level = max_level.max(dist[v]);
+                }
+            }
+        }
+        self.max_level = max_level;
+        // seed ratio for the deepest level: δ = 0 there, so
+        // ratio = 1/σ. All other slots zero.
+        for (p, st) in pg.parts.iter().zip(states.iter_mut()) {
+            let (head, tail) = st.arrays.split_at_mut(RATIO);
+            let dist = head[DIST].as_i32();
+            let numsp = head[NUMSP].as_f32();
+            let ratio = tail[0].as_f32_mut();
+            ratio.fill(0.0);
+            for v in 0..p.nv {
+                if dist[v] == max_level && numsp[v] > 0.0 {
+                    ratio[v] = 1.0 / numsp[v];
+                }
+            }
+        }
+    }
+
+    fn channels(&self, cycle: usize) -> Vec<CommOp> {
+        if cycle == 0 {
+            vec![CommOp::DistSigma { dist: DIST, sigma: NUMSP }]
+        } else {
+            // backward pulls the final levels and the published ratios
+            vec![
+                CommOp::Single(Channel::pull_i32(DIST)),
+                CommOp::Single(Channel::pull_f32(RATIO)),
+            ]
+        }
+    }
+
+    fn program(&self, cycle: usize) -> ProgramSpec {
+        if cycle == 0 {
+            ProgramSpec {
+                name: "bc_fwd",
+                arrays: vec![DIST, NUMSP],
+                pads: vec![Pad::I32(INF_I32), Pad::F32(0.0)],
+                aux: vec![],
+                needs_weights: false,
+                n_si32: 1,
+                n_sf32: 0,
+                orientation: EdgeOrientation::Forward,
+            }
+        } else {
+            ProgramSpec {
+                name: "bc_bwd",
+                arrays: vec![DIST, NUMSP, DELTA, BC, RATIO],
+                pads: vec![
+                    Pad::I32(INF_I32),
+                    Pad::F32(0.0),
+                    Pad::F32(0.0),
+                    Pad::F32(0.0),
+                    Pad::F32(0.0),
+                ],
+                aux: vec![],
+                needs_weights: false,
+                n_si32: 1,
+                n_sf32: 0,
+                orientation: EdgeOrientation::Forward,
+            }
+        }
+    }
+
+    fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
+        if ctx.cycle == 0 {
+            vec![ctx.superstep as i32]
+        } else {
+            vec![self.max_level - 1 - ctx.superstep as i32]
+        }
+    }
+
+    fn cycle_done(&self, cycle: usize, next_superstep: usize, any_changed: bool) -> bool {
+        if cycle == 0 {
+            !any_changed
+        } else {
+            // levels max_level-1 .. 1; engine always runs ≥ 1 superstep
+            next_superstep as i64 >= (self.max_level as i64 - 1).max(1)
+        }
+    }
+
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        if ctx.cycle == 0 {
+            self.forward_cpu(part, state, ctx)
+        } else {
+            self.backward_cpu(part, state, ctx)
+        }
+    }
+
+    fn output_array(&self) -> usize {
+        BC
+    }
+}
+
+impl Bc {
+    /// Figure 18 forwardPropagation.
+    fn forward_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let cur = ctx.superstep as i32;
+        let (dist_arr, rest) = state.arrays.split_at_mut(NUMSP);
+        let dist_cells = as_atomic_i32_cells(dist_arr[DIST].as_i32_mut());
+        let numsp_cells = as_atomic_f32_cells(rest[0].as_f32_mut());
+
+        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                if ctx.instrument {
+                    reads += 1;
+                }
+                if dist_cells[v].load(Ordering::Relaxed) != cur {
+                    continue;
+                }
+                let v_numsp = f32::from_bits(numsp_cells[v].load(Ordering::Relaxed));
+                if ctx.instrument {
+                    reads += 1;
+                }
+                for &t in part.targets(v as u32) {
+                    let t = t as usize;
+                    // discover (Fig 18 lines 7-9): settle the level
+                    let prev = dist_cells[t].fetch_min(cur + 1, Ordering::Relaxed);
+                    if prev > cur + 1 {
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                    if ctx.instrument {
+                        reads += 1;
+                    }
+                    // accumulate σ (Fig 18 lines 11-12): only into
+                    // vertices/slots settled exactly one level deeper.
+                    // Within a superstep all writers write cur+1, so the
+                    // re-read is stable.
+                    if dist_cells[t].load(Ordering::Relaxed) == cur + 1 {
+                        atomic_add_f32(&numsp_cells[t], v_numsp);
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) = parallel_reduce(
+            part.nv,
+            ctx.threads,
+            (false, 0u64, 0u64),
+            fold,
+            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
+        );
+        ComputeOut { changed, reads, writes }
+    }
+
+    /// Figure 18 backwardPropagation, with the published-ratio formulation.
+    fn backward_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let cur = self.max_level - 1 - ctx.superstep as i32;
+        let nv = part.nv;
+        let mut reads = 0u64;
+        let mut writes = 0u64;
+
+        // Phase A: δ and centrality for vertices at level `cur`.
+        {
+            let (head, tail) = state.arrays.split_at_mut(DELTA);
+            let dist = head[DIST].as_i32();
+            let numsp = head[NUMSP].as_f32();
+            let (delta_arr, tail2) = tail.split_at_mut(1);
+            let delta = delta_arr[0].as_f32_mut();
+            let (bc_arr, ratio_arr) = tail2.split_at_mut(1);
+            let bc = bc_arr[0].as_f32_mut();
+            let ratio = ratio_arr[0].as_f32();
+            for v in 0..nv {
+                if dist[v] != cur {
+                    continue;
+                }
+                let mut sum = 0f32;
+                for &t in part.targets(v as u32) {
+                    sum += ratio[t as usize];
+                }
+                if ctx.instrument {
+                    reads += 1 + part.targets(v as u32).len() as u64;
+                    writes += 2;
+                }
+                delta[v] = numsp[v] * sum;
+                bc[v] += delta[v];
+            }
+        }
+
+        // Phase B: publish this level's ratios, zero everything else so
+        // stale deeper-level ratios can't leak into the next superstep.
+        {
+            let (head, tail) = state.arrays.split_at_mut(RATIO);
+            let dist = head[DIST].as_i32();
+            let numsp = head[NUMSP].as_f32();
+            let delta = head[DELTA].as_f32();
+            let ratio = tail[0].as_f32_mut();
+            for v in 0..nv {
+                ratio[v] = if dist[v] == cur && numsp[v] > 0.0 {
+                    (1.0 + delta[v]) / numsp[v]
+                } else {
+                    0.0
+                };
+            }
+            if ctx.instrument {
+                writes += nv as u64;
+            }
+        }
+        ComputeOut { changed: true, reads, writes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    /// Path 0->1->2->3: vertex 1 lies on paths 0→{2,3}, vertex 2 on 0→3.
+    fn path4() -> CsrGraph {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(2, 3);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn path_centrality_host() {
+        let g = path4();
+        let mut alg = Bc::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        // δ(3)=0; δ(2)=σ2/σ3(1+0)=1; δ(1)=σ1/σ2(1+1)=2; bc=δ per vertex
+        assert_eq!(r.output.as_f32(), &[0.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn diamond_split_paths() {
+        // 0->1->3, 0->2->3 : two shortest paths to 3, each middle carries ½.
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Bc::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_f32(), &[0.0, 0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn partitioned_matches_host() {
+        let g = path4();
+        let mut a = Bc::new(0);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            let mut b = Bc::new(0);
+            let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], strat);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            for (x, y) in r1.output.as_f32().iter().zip(r2.output.as_f32()) {
+                assert!((x - y).abs() < 1e-5, "{strat:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_source() {
+        let mut el = EdgeList::new(3);
+        el.push(1, 2);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Bc::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_f32(), &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,220 @@
+//! Breadth-First Search — the paper's level-synchronous kernel (Figure 11).
+//!
+//! Per superstep `cur`, every vertex at level `cur` relaxes its edges:
+//! unvisited local neighbors get level `cur+1`; remote neighbors get a
+//! `min` into their ghost slot, which the communication phase reduces into
+//! the owning partition (one message per unique remote neighbor — §3.4).
+//!
+//! The CPU kernel uses the cache-resident **visited bitmap** (Chhugani et
+//! al. 2012; paper §6.3.2): a bit per local vertex answers "already has a
+//! level?" without touching the 4-byte level entry. The bitmap is exactly
+//! why the HIGH partitioning strategy super-linearly accelerates the CPU
+//! side — fewer CPU vertices → the bitmap fits in LLC (Figure 12).
+
+use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
+use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
+use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::as_atomic_i32_cells;
+use crate::util::threadpool::parallel_reduce;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// BFS from a single source vertex (global id).
+pub struct Bfs {
+    pub source: u32,
+}
+
+impl Bfs {
+    pub fn new(source: u32) -> Bfs {
+        Bfs { source }
+    }
+}
+
+const LEVELS: usize = 0;
+
+impl Algorithm for Bfs {
+    fn spec(&self) -> AlgSpec {
+        AlgSpec {
+            name: "bfs",
+            needs_weights: false,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+        }
+    }
+
+    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
+        let n = part.state_len();
+        let mut levels = vec![INF_I32; n];
+        if pg.part_of[self.source as usize] as usize == part.id {
+            levels[pg.local_of[self.source as usize] as usize] = 0;
+        }
+        let mut st = AlgState::new(vec![StateArray::I32(levels)]);
+        // visited bitmap over local vertices (the paper's summary structure)
+        st.scratch = vec![0u64; part.nv.div_ceil(64).max(1)];
+        if pg.part_of[self.source as usize] as usize == part.id {
+            let l = pg.local_of[self.source as usize] as usize;
+            st.scratch[l / 64] |= 1 << (l % 64);
+        }
+        st
+    }
+
+    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
+        vec![CommOp::Single(Channel::push_min_i32(LEVELS))]
+    }
+
+    fn program(&self, _cycle: usize) -> ProgramSpec {
+        ProgramSpec {
+            name: "bfs",
+            arrays: vec![LEVELS],
+            pads: vec![Pad::I32(INF_I32)],
+            aux: vec![],
+            needs_weights: false,
+            n_si32: 1,
+            n_sf32: 0,
+            orientation: EdgeOrientation::Forward,
+        }
+    }
+
+    fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
+        vec![ctx.superstep as i32]
+    }
+
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let cur = ctx.superstep as i32;
+        let nv = part.nv;
+        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
+        let levels = arrays[LEVELS].as_i32_mut();
+        let cells = as_atomic_i32_cells(levels);
+        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
+        // layout as u64.
+        let bitmap: &[AtomicU64] = unsafe {
+            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
+        };
+
+        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                if ctx.instrument {
+                    reads += 1; // level[v]
+                }
+                if cells[v].load(Ordering::Relaxed) != cur {
+                    continue;
+                }
+                for &t in part.targets(v as u32) {
+                    let t = t as usize;
+                    if t < nv {
+                        // visited-bitmap fast path (Fig 11 lines 6-7)
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        let bit = 1u64 << (t % 64);
+                        if bitmap[t / 64].load(Ordering::Relaxed) & bit != 0 {
+                            continue;
+                        }
+                        // claim the bit; the level write races benignly
+                        // (all writers this superstep write cur+1).
+                        let prev = bitmap[t / 64].fetch_or(bit, Ordering::Relaxed);
+                        if prev & bit == 0 {
+                            // might already hold a level delivered by the
+                            // inbox (stale bitmap) — min keeps it correct.
+                            cells[t].fetch_min(cur + 1, Ordering::Relaxed);
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    } else {
+                        // boundary edge: reduce into the ghost slot
+                        let prev = cells[t].fetch_min(cur + 1, Ordering::Relaxed);
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        if prev > cur + 1 {
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (false, 0u64, 0u64),
+            fold,
+            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
+        );
+        ComputeOut { changed, reads, writes }
+    }
+}
+
+/// Direction-optimized BFS variant (Beamer et al. 2013; paper §10): when
+/// the frontier is large, switch from top-down edge expansion to a
+/// bottom-up sweep where unvisited vertices probe their *incoming*
+/// neighbors. Ablation bench `bench ablation_dobfs`. CPU-only partitions:
+/// the bottom-up sweep needs the reverse adjacency, so this variant keeps
+/// a reversed copy and is exposed as a standalone whole-graph routine in
+/// `baseline`; inside the hybrid engine the standard top-down kernel is
+/// used (as in the paper's headline results, §8).
+pub fn frontier_density(levels: &[i32], cur: i32) -> f64 {
+    let total = levels.len().max(1);
+    let in_frontier = levels.iter().filter(|&&l| l == cur).count();
+    in_frontier as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn chain(n: usize) -> CsrGraph {
+        let mut el = EdgeList::new(n);
+        for i in 0..n - 1 {
+            el.push(i as u32, i as u32 + 1);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn single_partition_chain() {
+        let g = chain(10);
+        let mut alg = Bfs::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        let levels = r.output.as_i32();
+        for (v, &l) in levels.iter().enumerate() {
+            assert_eq!(l, v as i32);
+        }
+    }
+
+    #[test]
+    fn two_cpu_partitions_match() {
+        let g = chain(32);
+        let mut a = Bfs::new(0);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        let mut b = Bfs::new(0);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand);
+        let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+        assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        // 2, 3 disconnected
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Bfs::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_i32(), &[0, 1, INF_I32, INF_I32]);
+    }
+
+    #[test]
+    fn frontier_density_counts() {
+        assert!((frontier_density(&[0, 1, 1, INF_I32], 1) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,162 @@
+//! Connected Components via label propagation (paper §9.4).
+//!
+//! Operates on the undirected view (each edge doubled, Table 5 note).
+//! Every vertex starts with its own global id as label; labels propagate
+//! with `min` until quiescence. The reduction operator is `min` — one of
+//! the paper's canonical reduction-friendly algorithms (§3.4: "minimum
+//! label in a connected components algorithm").
+//!
+//! Activation uses the same monotone trick as SSSP: a vertex propagates
+//! when its label dropped since it last propagated (covers inbox updates
+//! without extra channels).
+
+use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
+use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
+use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::as_atomic_i32_cells;
+use crate::util::threadpool::parallel_reduce;
+use std::sync::atomic::Ordering;
+
+#[derive(Default)]
+pub struct Cc;
+
+impl Cc {
+    pub fn new() -> Cc {
+        Cc
+    }
+}
+
+const LABELS: usize = 0;
+/// CPU-only: label at the time of the last propagation.
+const PROPAGATED_AT: usize = 1;
+
+impl Algorithm for Cc {
+    fn spec(&self) -> AlgSpec {
+        AlgSpec {
+            name: "cc",
+            needs_weights: false,
+            undirected: true,
+            reversed: false,
+            fixed_rounds: None,
+        }
+    }
+
+    fn init_state(&mut self, _pg: &PartitionedGraph, part: &Partition) -> AlgState {
+        let n = part.state_len();
+        let mut labels = vec![INF_I32; n];
+        for (l, &g) in part.local_to_global.iter().enumerate() {
+            labels[l] = g as i32;
+        }
+        AlgState::new(vec![
+            StateArray::I32(labels),
+            StateArray::I32(vec![INF_I32; n]),
+        ])
+    }
+
+    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
+        vec![CommOp::Single(Channel::push_min_i32(LABELS))]
+    }
+
+    fn program(&self, _cycle: usize) -> ProgramSpec {
+        ProgramSpec {
+            name: "cc",
+            arrays: vec![LABELS],
+            pads: vec![Pad::I32(INF_I32)],
+            aux: vec![],
+            needs_weights: false,
+            n_si32: 0,
+            n_sf32: 0,
+            orientation: EdgeOrientation::Forward,
+        }
+    }
+
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let nv = part.nv;
+        let (labels_arr, rest) = state.arrays.split_at_mut(PROPAGATED_AT);
+        let labels = labels_arr[LABELS].as_i32_mut();
+        let cells = as_atomic_i32_cells(labels);
+        // per-vertex, written only by the owning chunk.
+        let propagated_cells = as_atomic_i32_cells(rest[0].as_i32_mut());
+
+        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                let lv = cells[v].load(Ordering::Relaxed);
+                if ctx.instrument {
+                    reads += 2;
+                }
+                if lv >= propagated_cells[v].load(Ordering::Relaxed) {
+                    continue;
+                }
+                propagated_cells[v].store(lv, Ordering::Relaxed);
+                for &t in part.targets(v as u32) {
+                    let old = cells[t as usize].fetch_min(lv, Ordering::Relaxed);
+                    if ctx.instrument {
+                        reads += 1;
+                    }
+                    if lv < old {
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (false, 0u64, 0u64),
+            fold,
+            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
+        );
+        ComputeOut { changed, reads, writes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn two_components() -> CsrGraph {
+        // component A: 0-1-2 (chain), component B: 3-4
+        let mut el = EdgeList::new(5);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(3, 4);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn labels_host_only() {
+        let g = two_components();
+        let mut alg = Cc::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_i32(), &[0, 0, 0, 3, 3]);
+    }
+
+    #[test]
+    fn partitioned_matches() {
+        let g = two_components();
+        let mut a = Cc::new();
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for shares in [[0.5, 0.5], [0.3, 0.7]] {
+            let mut b = Cc::new();
+            let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_keep_own_label() {
+        let g = CsrGraph::from_edge_list(&EdgeList::new(3));
+        let mut alg = Cc::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_i32(), &[0, 1, 2]);
+    }
+}

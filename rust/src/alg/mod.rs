@@ -1,0 +1,196 @@
+//! Algorithm abstraction — the paper's callback API (§4.2, Figure 5).
+//!
+//! TOTEM's programmer view is a set of callbacks hooked into the BSP cycle
+//! (`alg_init`, `alg_compute`, `alg_scatter`, `alg_finalize`). Here the
+//! same roles appear as the [`Algorithm`] trait:
+//!
+//! - `init_state`  ↔ `alg_init` (allocate per-partition state);
+//! - `compute_cpu` ↔ the CPU `alg_compute` kernel;
+//! - the accelerator `alg_compute` is the AOT-compiled JAX/Pallas step
+//!   program named by [`ProgramSpec`] (see `python/compile/model.py`);
+//! - `channels`    ↔ `alg_scatter`: each channel declares which state
+//!   array is communicated and with which reduction operator, and the
+//!   engine applies it generically (the paper's "user-defined reduction");
+//! - `collect` is handled by the engine via `output_array`.
+//!
+//! Algorithms with several BSP cycles (Betweenness Centrality's forward +
+//! backward sweeps) declare `cycles() > 1` and get a `begin_cycle` hook.
+
+pub mod bc;
+pub mod bfs;
+pub mod cc;
+pub mod pagerank;
+pub mod sssp;
+
+use crate::engine::state::{AlgState, CommOp};
+use crate::graph::CsrGraph;
+use crate::partition::{Partition, PartitionedGraph};
+
+/// "Infinite" distance/level marker. `1 << 30` (not `i32::MAX`) so that
+/// `INF + 1` cannot overflow in kernels, matching the Pallas side.
+pub const INF_I32: i32 = 1 << 30;
+
+/// Static description of an algorithm.
+#[derive(Debug, Clone, Copy)]
+pub struct AlgSpec {
+    pub name: &'static str,
+    /// Requires edge weights (SSSP).
+    pub needs_weights: bool,
+    /// Operates on the undirected view (CC): each edge is doubled.
+    pub undirected: bool,
+    /// Operates on the reversed graph (pull-based PageRank §7.1: a vertex
+    /// pulls the ranks of its in-neighbors).
+    pub reversed: bool,
+    /// Fixed superstep count per cycle (PageRank); `None` → run to
+    /// quiescence.
+    pub fixed_rounds: Option<usize>,
+}
+
+/// Per-superstep context handed to compute kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    pub cycle: usize,
+    /// 0-based superstep within the current cycle.
+    pub superstep: usize,
+    /// Worker threads available to the CPU element.
+    pub threads: usize,
+    /// Memory-access counters on?
+    pub instrument: bool,
+}
+
+/// Result of a CPU compute phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeOut {
+    pub changed: bool,
+    /// Instrumented state-memory reads/writes (0 when not instrumenting).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// Edge array orientation for the accelerator COO upload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeOrientation {
+    /// `(src = vertex, dst = target)` — push algorithms.
+    Forward,
+    /// `(src = target, dst = vertex)` — pull algorithms over in-edge lists
+    /// (PageRank on the reversed graph).
+    Reversed,
+}
+
+/// Pad value for the `[state_len, n_cap)` region of device arrays.
+#[derive(Debug, Clone, Copy)]
+pub enum Pad {
+    I32(i32),
+    F32(f32),
+}
+
+/// Which AOT program implements a cycle's superstep on the accelerator,
+/// and how to marshal it. Input order contract with `python/compile`:
+/// `(state arrays…, aux arrays…, src, dst, [weights], [si32], [sf32])`;
+/// outputs `(state arrays…, changed)`.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    /// Program name in the AOT manifest (e.g. "bfs").
+    pub name: &'static str,
+    /// Indices into `AlgState::arrays`, in program order.
+    pub arrays: Vec<usize>,
+    /// Pad values, parallel to `arrays`.
+    pub pads: Vec<Pad>,
+    /// Indices into `AlgState::aux`, in program order.
+    pub aux: Vec<usize>,
+    pub needs_weights: bool,
+    pub n_si32: usize,
+    pub n_sf32: usize,
+    pub orientation: EdgeOrientation,
+}
+
+/// The TOTEM algorithm interface. See module docs.
+pub trait Algorithm {
+    fn spec(&self) -> AlgSpec;
+
+    /// BSP cycles (1 for everything except BC's forward+backward).
+    fn cycles(&self) -> usize {
+        1
+    }
+
+    /// One-time hook before partitioning-independent state is built.
+    /// `original` is the caller's graph, `prepared` the transformed view
+    /// that was partitioned (reversed/undirected as per the spec).
+    fn prepare(&mut self, _original: &CsrGraph, _prepared: &CsrGraph) {}
+
+    /// Allocate and initialize this partition's state arrays.
+    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState;
+
+    /// Hook at the start of each cycle (BC computes the max level here).
+    fn begin_cycle(&mut self, _cycle: usize, _pg: &PartitionedGraph, _states: &mut [AlgState]) {}
+
+    /// Communicated state arrays for a cycle.
+    fn channels(&self, cycle: usize) -> Vec<CommOp>;
+
+    /// Accelerator step program for a cycle.
+    fn program(&self, cycle: usize) -> ProgramSpec;
+
+    /// Scalar inputs for the accelerator program at this superstep.
+    fn scalars_i32(&self, _ctx: &StepCtx) -> Vec<i32> {
+        vec![]
+    }
+    fn scalars_f32(&self, _ctx: &StepCtx) -> Vec<f32> {
+        vec![]
+    }
+
+    /// The CPU element's compute phase for one partition.
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut;
+
+    /// Should the cycle stop before superstep `next_superstep`?
+    /// Default: quiesce when no partition changed anything.
+    fn cycle_done(&self, _cycle: usize, next_superstep: usize, any_changed: bool) -> bool {
+        if let Some(r) = self.spec().fixed_rounds {
+            next_superstep >= r
+        } else {
+            !any_changed
+        }
+    }
+
+    /// Which `arrays` index carries the per-vertex result.
+    fn output_array(&self) -> usize {
+        0
+    }
+}
+
+/// Traversed-edges-per-second accounting (paper §5 "Evaluation Metrics").
+/// `output` is the collected global result array; `g` the original graph.
+pub fn traversed_edges(alg_name: &str, output: &crate::engine::state::StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+    match alg_name {
+        // Σ degree(v) over visited vertices.
+        "bfs" => output
+            .as_i32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l != INF_I32)
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum(),
+        // Σ degree(v) over vertices with finite distance.
+        "sssp" => output
+            .as_f32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d.is_finite())
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum(),
+        // 2 × Σ degree(v) over vertices with non-zero score (fwd + bwd).
+        "bc" => {
+            2 * output
+                .as_f32()
+                .iter()
+                .enumerate()
+                .filter(|(_, &s)| s > 0.0)
+                .map(|(v, _)| g.out_degree(v as u32))
+                .sum::<u64>()
+        }
+        // |E| per iteration.
+        "pagerank" => g.edge_count() as u64 * rounds as u64,
+        // undirected view doubles the edges.
+        "cc" => 2 * g.edge_count() as u64,
+        _ => g.edge_count() as u64,
+    }
+}

@@ -1,0 +1,173 @@
+//! Single-Source Shortest Path — Bellman-Ford (paper §7.3, Figure 20).
+//!
+//! The paper picks Bellman-Ford over Dijkstra/Δ-stepping because every
+//! active vertex can relax its edges in parallel — a good fit for the
+//! accelerator's bulk model. The CPU kernel keeps the paper's `active`
+//! optimization (a vertex relaxes only when its distance improved); the
+//! accelerator program relaxes **all** edges each superstep (Harish et al.
+//! 2007 style), which is exactly how the original CUDA kernels behave.
+//!
+//! Remote activation falls out of monotonicity: instead of explicit active
+//! flags that the communication phase would have to maintain, each vertex
+//! remembers the distance it last relaxed at (`relaxed_at`); any vertex
+//! whose current distance is lower — whether improved locally or by an
+//! inbox message — is active.
+
+use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx};
+use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
+use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::{as_atomic_f32_cells, atomic_min_f32};
+use crate::util::threadpool::parallel_reduce;
+use std::sync::atomic::Ordering;
+
+pub struct Sssp {
+    pub source: u32,
+}
+
+impl Sssp {
+    pub fn new(source: u32) -> Sssp {
+        Sssp { source }
+    }
+}
+
+const DIST: usize = 0;
+/// CPU-only: distance at which the vertex last relaxed its edges.
+const RELAXED_AT: usize = 1;
+
+impl Algorithm for Sssp {
+    fn spec(&self) -> AlgSpec {
+        AlgSpec {
+            name: "sssp",
+            needs_weights: true,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+        }
+    }
+
+    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
+        let n = part.state_len();
+        let mut dist = vec![f32::INFINITY; n];
+        if pg.part_of[self.source as usize] as usize == part.id {
+            dist[pg.local_of[self.source as usize] as usize] = 0.0;
+        }
+        AlgState::new(vec![
+            StateArray::F32(dist),
+            StateArray::F32(vec![f32::INFINITY; n]),
+        ])
+    }
+
+    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
+        vec![CommOp::Single(Channel::push_min_f32(DIST))]
+    }
+
+    fn program(&self, _cycle: usize) -> ProgramSpec {
+        ProgramSpec {
+            name: "sssp",
+            arrays: vec![DIST],
+            pads: vec![Pad::F32(f32::INFINITY)],
+            aux: vec![],
+            needs_weights: true,
+            n_si32: 0,
+            n_sf32: 0,
+            orientation: EdgeOrientation::Forward,
+        }
+    }
+
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let nv = part.nv;
+        let (dist_arr, rest) = state.arrays.split_at_mut(RELAXED_AT);
+        let dist = dist_arr[DIST].as_f32_mut();
+        let dist_cells = as_atomic_f32_cells(dist);
+        // per-vertex, written only by the owning chunk — atomic view just
+        // satisfies the shared-closure borrow.
+        let relaxed_cells = as_atomic_f32_cells(rest[0].as_f32_mut());
+
+        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                let dv = f32::from_bits(dist_cells[v].load(Ordering::Relaxed));
+                if ctx.instrument {
+                    reads += 2; // dist[v], relaxed_at[v]
+                }
+                // active test (Fig 20 line 4): distance improved since the
+                // last relaxation — covers both local and inbox updates.
+                if dv >= f32::from_bits(relaxed_cells[v].load(Ordering::Relaxed)) {
+                    continue;
+                }
+                relaxed_cells[v].store(dv.to_bits(), Ordering::Relaxed);
+                let ts = part.targets(v as u32);
+                let ws = part.weights(v as u32);
+                for (k, &t) in ts.iter().enumerate() {
+                    let nd = dv + ws[k];
+                    let old = atomic_min_f32(&dist_cells[t as usize], nd);
+                    if ctx.instrument {
+                        reads += 1;
+                    }
+                    if nd < old {
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (false, 0u64, 0u64),
+            fold,
+            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
+        );
+        ComputeOut { changed, reads, writes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn weighted_diamond() -> CsrGraph {
+        // 0 -1-> 1 -1-> 3 ; 0 -5-> 2 -1-> 3 ; shortest 0->3 = 2
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        el.weights = Some(vec![1.0, 5.0, 1.0, 1.0]);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn shortest_paths_host_only() {
+        let g = weighted_diamond();
+        let mut alg = Sssp::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_f32(), &[0.0, 1.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn partitioned_matches_host() {
+        let g = weighted_diamond();
+        let mut a = Sssp::new(0);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        let mut b = Sssp::new(0);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Low);
+        let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+        assert_eq!(r1.output.as_f32(), r2.output.as_f32());
+    }
+
+    #[test]
+    fn requires_weights() {
+        let mut el = EdgeList::new(2);
+        el.push(0, 1);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Sssp::new(0);
+        assert!(engine::run(&g, &mut alg, &EngineConfig::host_only(1)).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Engine configuration — the paper's `totem_attr_t` (§4.2) plus the
+//! hardware-configuration notation `xSyG` (§5: x CPU sockets, y GPUs).
+
+use crate::partition::Strategy;
+use std::path::PathBuf;
+
+/// What kind of processing element executes a partition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ElementKind {
+    /// Native Rust element with a bounded worker count. `threads` models
+    /// the paper's socket count (1S/2S).
+    Cpu { threads: usize },
+    /// AOT-compiled JAX/Pallas programs executed through PJRT — the
+    /// accelerator ("GPU") element.
+    Accelerator,
+}
+
+/// Engine attributes.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// One element per partition; index = partition id. Partition 0 is the
+    /// host/CPU by the paper's convention.
+    pub elements: Vec<ElementKind>,
+    /// Edge share per partition (α = shares[0]).
+    pub shares: Vec<f64>,
+    pub strategy: Strategy,
+    /// Seed for RAND partitioning and any tie-breaking.
+    pub seed: u64,
+    /// Safety bound on supersteps per BSP cycle.
+    pub max_supersteps: usize,
+    /// Fixed round count override (PageRank; paper uses 5 in Fig 16 and 1
+    /// in Table 4).
+    pub rounds: Option<usize>,
+    /// Enable memory-access counters in the CPU kernels (Fig 12/17/22).
+    pub instrument: bool,
+    /// Where the AOT artifacts live (manifest.json + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Emulated accelerator memory capacity in bytes (paper: 6 GB Titans).
+    /// A partition whose footprint exceeds this fails to map, reproducing
+    /// the "minimum α" structure of Figures 7/9/15.
+    pub accel_memory_budget: u64,
+}
+
+impl EngineConfig {
+    fn base() -> EngineConfig {
+        EngineConfig {
+            elements: vec![ElementKind::Cpu { threads: 1 }],
+            shares: vec![1.0],
+            strategy: Strategy::Rand,
+            seed: 1,
+            max_supersteps: 100_000,
+            rounds: None,
+            instrument: false,
+            artifacts_dir: PathBuf::from("artifacts"),
+            accel_memory_budget: 256 << 20, // 256 MB default "device"
+        }
+    }
+
+    /// Host-only (`xS`) configuration.
+    pub fn host_only(threads: usize) -> EngineConfig {
+        EngineConfig {
+            elements: vec![ElementKind::Cpu { threads }],
+            ..Self::base()
+        }
+    }
+
+    /// Hybrid `2SyG`-style configuration: one CPU partition holding an
+    /// `alpha` share of the edges plus `accels` accelerator partitions
+    /// splitting the rest evenly.
+    pub fn hybrid(accels: usize, alpha: f64, strategy: Strategy) -> EngineConfig {
+        assert!(accels >= 1, "hybrid needs at least one accelerator");
+        assert!((0.0..=1.0).contains(&alpha));
+        let mut elements = vec![ElementKind::Cpu { threads: 1 }];
+        let mut shares = vec![alpha];
+        for _ in 0..accels {
+            elements.push(ElementKind::Accelerator);
+            shares.push((1.0 - alpha) / accels as f64);
+        }
+        EngineConfig { elements, shares, strategy, ..Self::base() }
+    }
+
+    /// Multi-partition CPU-only configuration — exercises the full BSP +
+    /// communication machinery without PJRT (used heavily by tests).
+    pub fn cpu_partitions(shares: &[f64], strategy: Strategy) -> EngineConfig {
+        EngineConfig {
+            elements: shares.iter().map(|_| ElementKind::Cpu { threads: 1 }).collect(),
+            shares: shares.to_vec(),
+            strategy,
+            ..Self::base()
+        }
+    }
+
+    /// Parse the paper's `xSyG` notation into a config: `x` sockets →
+    /// CPU threads, `y` GPUs → accelerator partitions.
+    pub fn from_notation(
+        notation: &str,
+        alpha: f64,
+        strategy: Strategy,
+        threads_per_socket: usize,
+    ) -> Result<EngineConfig, String> {
+        let s = notation.to_ascii_uppercase();
+        let parts: Vec<&str> = s.split(['S', 'G']).collect();
+        let (x, y) = match parts.as_slice() {
+            [x, ""] => (x.parse::<usize>().map_err(|e| e.to_string())?, 0),
+            [x, y, ""] => (
+                x.parse::<usize>().map_err(|e| e.to_string())?,
+                y.parse::<usize>().map_err(|e| e.to_string())?,
+            ),
+            _ => return Err(format!("bad hardware notation '{notation}' (e.g. 2S1G)")),
+        };
+        if x == 0 {
+            return Err("need at least one CPU socket".into());
+        }
+        let threads = x * threads_per_socket;
+        let mut cfg = if y == 0 {
+            Self::host_only(threads)
+        } else {
+            let mut c = Self::hybrid(y, alpha, strategy);
+            c.elements[0] = ElementKind::Cpu { threads };
+            c
+        };
+        cfg.strategy = strategy;
+        Ok(cfg)
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        self.rounds = Some(rounds);
+        self
+    }
+
+    pub fn with_instrument(mut self, on: bool) -> Self {
+        self.instrument = on;
+        self
+    }
+
+    pub fn with_artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn has_accelerator(&self) -> bool {
+        self.elements.iter().any(|e| *e == ElementKind::Accelerator)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_shares_sum_to_one() {
+        let c = EngineConfig::hybrid(2, 0.5, Strategy::High);
+        assert_eq!(c.elements.len(), 3);
+        assert!((c.shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(c.shares[1], 0.25);
+        assert!(c.has_accelerator());
+    }
+
+    #[test]
+    fn notation_parsing() {
+        let c = EngineConfig::from_notation("2S", 0.7, Strategy::High, 8).unwrap();
+        assert_eq!(c.elements, vec![ElementKind::Cpu { threads: 16 }]);
+
+        let c = EngineConfig::from_notation("2S1G", 0.7, Strategy::High, 8).unwrap();
+        assert_eq!(c.elements.len(), 2);
+        assert_eq!(c.elements[0], ElementKind::Cpu { threads: 16 });
+        assert_eq!(c.elements[1], ElementKind::Accelerator);
+        assert!((c.shares[0] - 0.7).abs() < 1e-12);
+
+        let c = EngineConfig::from_notation("1s2g", 0.6, Strategy::Low, 4).unwrap();
+        assert_eq!(c.elements.len(), 3);
+        assert_eq!(c.elements[0], ElementKind::Cpu { threads: 4 });
+
+        assert!(EngineConfig::from_notation("0S1G", 0.5, Strategy::Rand, 4).is_err());
+        assert!(EngineConfig::from_notation("XYZ", 0.5, Strategy::Rand, 4).is_err());
+    }
+
+    #[test]
+    fn cpu_partitions_config() {
+        let c = EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::Rand);
+        assert_eq!(c.num_partitions(), 2);
+        assert!(!c.has_accelerator());
+    }
+}

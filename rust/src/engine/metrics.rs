@@ -1,0 +1,155 @@
+//! Execution metrics (paper §5.2 and all breakdown figures).
+//!
+//! Every superstep records: per-partition compute time, communication time
+//! (transfer + scatter), bytes moved across the element boundary, and
+//! message counts. The headline numbers derive from these:
+//!
+//! - **makespan** (Eq. 2): `Σ_steps (max_p compute_p + comm)` — the time a
+//!   truly concurrent hybrid platform would take, since partitions compute
+//!   in parallel within a BSP superstep but communication is serialized.
+//! - **bottleneck compute**: `Σ_steps max_p compute_p` (the "Computation"
+//!   bar in Figures 8/10/16/19/21).
+//! - **per-element compute**: `Σ_steps compute_p` (the "GPU" bar).
+//!
+//! On this single-core container the raw wall time is close to the *sum*
+//! over partitions; the makespan is the faithful concurrent-platform
+//! number (DESIGN.md §2).
+
+/// Metrics for one BSP superstep.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Compute seconds per partition.
+    pub compute: Vec<f64>,
+    /// Communication seconds (all pairs, transfer + scatter-apply).
+    pub comm: f64,
+    /// Bytes that crossed a partition boundary this step.
+    pub bytes: u64,
+    /// Messages (ghost-slot values) delivered this step.
+    pub messages: u64,
+}
+
+/// Memory-access counters per partition (instrumented CPU kernels;
+/// Figures 12/17/22 proxies).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemCounters {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// Full run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub steps: Vec<StepMetrics>,
+    pub partitions: usize,
+    /// Wall-clock of the whole run (includes engine overhead).
+    pub wall_secs: f64,
+    /// Per-partition memory access counters (only filled when
+    /// `EngineConfig::instrument` is set).
+    pub mem: Vec<MemCounters>,
+    /// Per-partition accelerator transfer bytes (state upload + readback),
+    /// part of the comm story for hybrid configs.
+    pub accel_transfer_bytes: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn new(partitions: usize) -> Self {
+        Metrics {
+            steps: Vec::new(),
+            partitions,
+            wall_secs: 0.0,
+            mem: vec![MemCounters::default(); partitions],
+            accel_transfer_bytes: vec![0; partitions],
+        }
+    }
+
+    pub fn supersteps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Eq. 2 makespan in seconds.
+    pub fn makespan_secs(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| {
+                s.compute.iter().copied().fold(0.0, f64::max) + s.comm
+            })
+            .sum()
+    }
+
+    /// Σ max_p compute — the "Computation" (bottleneck processor) bar.
+    pub fn bottleneck_compute_secs(&self) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| s.compute.iter().copied().fold(0.0, f64::max))
+            .sum()
+    }
+
+    /// Σ compute for one partition (e.g. the "GPU" bar in Fig 8/10).
+    pub fn partition_compute_secs(&self, p: usize) -> f64 {
+        self.steps.iter().map(|s| s.compute.get(p).copied().unwrap_or(0.0)).sum()
+    }
+
+    /// Total communication seconds.
+    pub fn comm_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.comm).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.steps.iter().map(|s| s.messages).sum()
+    }
+
+    /// Index of the slowest partition by total compute time — the paper's
+    /// "bottleneck processor" (always the CPU in their experiments).
+    pub fn bottleneck_partition(&self) -> usize {
+        (0..self.partitions)
+            .max_by(|&a, &b| {
+                self.partition_compute_secs(a)
+                    .total_cmp(&self.partition_compute_secs(b))
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Metrics {
+        let mut m = Metrics::new(2);
+        m.steps.push(StepMetrics {
+            compute: vec![2.0, 1.0],
+            comm: 0.5,
+            bytes: 100,
+            messages: 10,
+        });
+        m.steps.push(StepMetrics {
+            compute: vec![1.0, 3.0],
+            comm: 0.5,
+            bytes: 50,
+            messages: 5,
+        });
+        m
+    }
+
+    #[test]
+    fn makespan_is_sum_of_max_plus_comm() {
+        let m = sample();
+        assert!((m.makespan_secs() - (2.5 + 3.5)).abs() < 1e-12);
+        assert!((m.bottleneck_compute_secs() - 5.0).abs() < 1e-12);
+        assert!((m.comm_secs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_partition_totals() {
+        let m = sample();
+        assert_eq!(m.partition_compute_secs(0), 3.0);
+        assert_eq!(m.partition_compute_secs(1), 4.0);
+        assert_eq!(m.bottleneck_partition(), 1);
+        assert_eq!(m.total_bytes(), 150);
+        assert_eq!(m.total_messages(), 15);
+    }
+}

@@ -1,0 +1,491 @@
+//! The BSP engine (paper §4): partition → per-superstep
+//! compute / communicate / synchronize → terminate on quiescence.
+//!
+//! Each partition is executed by a processing element: the native Rust CPU
+//! element, or the accelerator element (AOT JAX/Pallas programs via PJRT).
+//! The communication phase exchanges ghost-slot values between partitions
+//! with the algorithm's reduction operator — the paper's inbox/outbox
+//! machinery with message aggregation (§4.3.2) — and is identical code for
+//! every element pairing.
+
+pub mod config;
+pub mod metrics;
+pub mod state;
+
+pub use crate::alg::INF_I32;
+pub use config::{ElementKind, EngineConfig};
+pub use metrics::{MemCounters, Metrics, StepMetrics};
+pub use state::{AlgState, Channel, ChannelKind, CommOp, Reduce, StateArray};
+
+use crate::alg::{Algorithm, StepCtx};
+use crate::graph::CsrGraph;
+use crate::partition::{BetaStats, PartitionedGraph};
+use crate::runtime::{AccelPartition, PjrtRuntime};
+use crate::util::timer::{timed, Stopwatch};
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Result of a hybrid run.
+pub struct RunResult {
+    /// Global per-vertex result (e.g. BFS levels, PageRank ranks).
+    pub output: StateArray,
+    pub metrics: Metrics,
+    pub supersteps: usize,
+    /// Realized per-partition edge shares (α = shares[0]).
+    pub shares: Vec<f64>,
+    /// Per-partition vertex counts (Figure 13).
+    pub vertices: Vec<usize>,
+    /// Boundary-edge statistics (Figure 4).
+    pub beta: BetaStats,
+    /// Per-partition memory footprints (Table 5).
+    pub footprints: Vec<PartitionFootprint>,
+    /// Per-partition communicated slots per superstep (outbox + inbox
+    /// ghost entries) — the model's per-partition |E_p^b| after reduction.
+    pub comm_slots: Vec<u64>,
+}
+
+impl RunResult {
+    pub fn makespan_secs(&self) -> f64 {
+        self.metrics.makespan_secs()
+    }
+}
+
+/// Memory footprint of one partition, in the paper's Table 5 categories.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionFootprint {
+    pub vertices: usize,
+    pub edges: usize,
+    /// Graph structure (CSR / COO + weights).
+    pub graph_bytes: u64,
+    /// Inbox: ghost slots other partitions keep *of our* vertices.
+    pub inbox_bytes: u64,
+    /// Outbox: our ghost slots for remote vertices.
+    pub outbox_bytes: u64,
+    /// Algorithm state arrays.
+    pub state_bytes: u64,
+}
+
+impl PartitionFootprint {
+    pub fn total(&self) -> u64 {
+        self.graph_bytes + self.inbox_bytes + self.outbox_bytes + self.state_bytes
+    }
+}
+
+enum Element {
+    Cpu { threads: usize },
+    Accel(Box<AccelPartition>),
+}
+
+/// Run `alg` on `g` under `cfg`. The graph is partitioned per the config,
+/// each partition is bound to its element, and BSP cycles execute until
+/// the algorithm quiesces (or its fixed round count elapses).
+pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Result<RunResult> {
+    let spec = alg.spec();
+    if spec.needs_weights && g.weights.is_none() {
+        bail!("{} requires edge weights", spec.name);
+    }
+
+    // --- graph preparation (§4.2: the engine owns the data layout) -------
+    let mut prepared: Option<CsrGraph> = None;
+    if spec.undirected {
+        prepared = Some(g.to_undirected());
+    }
+    if spec.reversed {
+        let base = prepared.as_ref().unwrap_or(g);
+        prepared = Some(base.reverse());
+    }
+    let pg_graph: &CsrGraph = prepared.as_ref().unwrap_or(g);
+    alg.prepare(g, pg_graph);
+
+    // --- partition --------------------------------------------------------
+    let nparts = cfg.num_partitions();
+    let pg = PartitionedGraph::partition(pg_graph, cfg.strategy, &cfg.shares, cfg.seed);
+
+    // --- state + elements --------------------------------------------------
+    let mut states: Vec<AlgState> = pg
+        .parts
+        .iter()
+        .map(|p| alg.init_state(&pg, p))
+        .collect();
+
+    let mut runtime: Option<PjrtRuntime> = None;
+    if cfg.has_accelerator() {
+        runtime = Some(PjrtRuntime::new(&cfg.artifacts_dir)?);
+    }
+
+    let mut footprints: Vec<PartitionFootprint> = Vec::with_capacity(nparts);
+    for (pid, part) in pg.parts.iter().enumerate() {
+        let msg_bytes: u64 = alg.channels(0).iter().map(|op| op.bytes_per_slot()).sum();
+        let inbox: u64 = pg
+            .parts
+            .iter()
+            .flat_map(|q| q.ghosts.iter())
+            .filter(|t| t.remote_part == pid)
+            .map(|t| (4 + msg_bytes) * t.len() as u64)
+            .sum();
+        footprints.push(PartitionFootprint {
+            vertices: part.nv,
+            edges: part.edge_count(),
+            graph_bytes: part.graph_bytes(),
+            inbox_bytes: inbox,
+            outbox_bytes: part.comm_bytes(msg_bytes),
+            state_bytes: states[pid].state_bytes(),
+        });
+    }
+
+    let mut elements: Vec<Element> = Vec::with_capacity(nparts);
+    for (pid, kind) in cfg.elements.iter().enumerate() {
+        match kind {
+            ElementKind::Cpu { threads } => elements.push(Element::Cpu { threads: *threads }),
+            ElementKind::Accelerator => {
+                let rt = runtime.as_mut().expect("runtime initialized above");
+                let prog = alg.program(0);
+                let accel = rt
+                    .instantiate(&prog, &pg.parts[pid], &states[pid], cfg.accel_memory_budget)
+                    .with_context(|| {
+                        format!(
+                            "partition {pid} ({} vertices, {} edges) does not fit the accelerator",
+                            pg.parts[pid].nv,
+                            pg.parts[pid].edge_count()
+                        )
+                    })?;
+                // device-side footprint supersedes the host estimate
+                footprints[pid].graph_bytes = accel.graph_bytes();
+                footprints[pid].state_bytes = accel.state_bytes();
+                elements.push(Element::Accel(Box::new(accel)));
+            }
+        }
+    }
+
+    // --- BSP cycles --------------------------------------------------------
+    let wall0 = Instant::now();
+    let mut metrics = Metrics::new(nparts);
+    let mut total_steps = 0usize;
+
+    for cycle in 0..alg.cycles() {
+        alg.begin_cycle(cycle, &pg, &mut states);
+        let channels = alg.channels(cycle);
+
+        // Re-bind accelerator partitions to this cycle's program.
+        if cycle > 0 {
+            let prog = alg.program(cycle);
+            for (pid, el) in elements.iter_mut().enumerate() {
+                if let Element::Accel(acc) = el {
+                    let rt = runtime.as_mut().unwrap();
+                    **acc = rt.instantiate(&prog, &pg.parts[pid], &states[pid], cfg.accel_memory_budget)?;
+                }
+            }
+        }
+
+        // Initial synchronization: pull channels must see remote values
+        // before the first compute (PageRank contributions, BC ratios).
+        {
+            let mut sw = Stopwatch::new();
+            let (bytes, msgs) = sw.time(|| comm_phase(&pg, &mut states, &channels, true));
+            metrics.steps.push(StepMetrics {
+                compute: vec![0.0; nparts],
+                comm: sw.secs(),
+                bytes,
+                messages: msgs,
+            });
+        }
+
+        let mut superstep = 0usize;
+        loop {
+            let mut step = StepMetrics {
+                compute: vec![0.0; nparts],
+                comm: 0.0,
+                bytes: 0,
+                messages: 0,
+            };
+            let mut any_changed = false;
+
+            // -- compute phase (elements run concurrently on real hardware;
+            //    we time each separately and take the max — Eq. 2).
+            for (pid, el) in elements.iter_mut().enumerate() {
+                let part = &pg.parts[pid];
+                match el {
+                    Element::Cpu { threads } => {
+                        let ctx = StepCtx {
+                            cycle,
+                            superstep,
+                            threads: *threads,
+                            instrument: cfg.instrument,
+                        };
+                        let (out, secs) = timed(|| alg.compute_cpu(part, &mut states[pid], &ctx));
+                        step.compute[pid] = secs;
+                        any_changed |= out.changed;
+                        metrics.mem[pid].reads += out.reads;
+                        metrics.mem[pid].writes += out.writes;
+                    }
+                    Element::Accel(acc) => {
+                        let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
+                        let si32 = alg.scalars_i32(&ctx);
+                        let sf32 = alg.scalars_f32(&ctx);
+                        let out = acc.step(&mut states[pid], &si32, &sf32)?;
+                        // paper attribution: kernel execution = compute,
+                        // host<->device transfer = communication.
+                        step.compute[pid] = out.exec_secs;
+                        step.comm += out.upload_secs + out.readback_secs;
+                        step.bytes += out.transfer_bytes;
+                        metrics.accel_transfer_bytes[pid] += out.transfer_bytes;
+                        any_changed |= out.changed;
+                    }
+                }
+            }
+
+            // -- communication phase ---------------------------------------
+            let mut sw = Stopwatch::new();
+            let (bytes, msgs) = sw.time(|| comm_phase(&pg, &mut states, &channels, false));
+            step.comm += sw.secs();
+            step.bytes += bytes;
+            step.messages += msgs;
+
+            metrics.steps.push(step);
+            superstep += 1;
+            total_steps += 1;
+
+            if alg.cycle_done(cycle, superstep, any_changed) {
+                break;
+            }
+            if superstep >= cfg.max_supersteps {
+                bail!(
+                    "{}: exceeded max_supersteps={} in cycle {cycle}",
+                    spec.name,
+                    cfg.max_supersteps
+                );
+            }
+        }
+    }
+    metrics.wall_secs = wall0.elapsed().as_secs_f64();
+
+    // --- collect (paper: alg_collect via local→global maps) ----------------
+    let out_idx = alg.output_array();
+    let output = collect_output(&pg, &states, out_idx);
+
+    let mut comm_slots = vec![0u64; nparts];
+    for p in &pg.parts {
+        for t in &p.ghosts {
+            comm_slots[p.id] += t.len() as u64;
+            comm_slots[t.remote_part] += t.len() as u64;
+        }
+    }
+
+    Ok(RunResult {
+        output,
+        metrics,
+        supersteps: total_steps,
+        shares: pg.edge_shares(),
+        vertices: pg.parts.iter().map(|p| p.nv).collect(),
+        beta: pg.beta_stats(),
+        footprints,
+        comm_slots,
+    })
+}
+
+/// Exchange all communication ops between all partition pairs. Returns
+/// (bytes, messages) moved. `pull_only` is the cycle-initial sync: only
+/// pull channels run, so pull algorithms see remote values before their
+/// first compute.
+fn comm_phase(
+    pg: &PartitionedGraph,
+    states: &mut [AlgState],
+    ops: &[CommOp],
+    pull_only: bool,
+) -> (u64, u64) {
+    let mut bytes = 0u64;
+    let mut msgs = 0u64;
+    for op in ops {
+        match *op {
+            CommOp::Single(ch) => {
+                if pull_only && ch.kind == ChannelKind::Push {
+                    continue;
+                }
+                let (b, m) = comm_single(pg, states, ch);
+                bytes += b;
+                msgs += m;
+            }
+            CommOp::DistSigma { dist, sigma } => {
+                if pull_only {
+                    continue;
+                }
+                let (b, m) = comm_dist_sigma(pg, states, dist, sigma);
+                bytes += b;
+                msgs += m;
+            }
+        }
+    }
+    (bytes, msgs)
+}
+
+/// Split-borrow two distinct partitions' states: `(read &states[a], write
+/// &mut states[b])`. Zero-copy — the comm phase's hot path (perf pass
+/// §Perf-L3-1: removed the per-table message `Vec` allocations).
+fn two_states(states: &mut [AlgState], a: usize, b: usize) -> (&AlgState, &mut AlgState) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (x, y) = states.split_at_mut(b);
+        (&x[a], &mut y[0])
+    } else {
+        let (x, y) = states.split_at_mut(a);
+        (&y[0], &mut x[b])
+    }
+}
+
+fn comm_single(pg: &PartitionedGraph, states: &mut [AlgState], ch: Channel) -> (u64, u64) {
+    let mut bytes = 0u64;
+    let mut msgs = 0u64;
+    for pid in 0..pg.parts.len() {
+        let p = &pg.parts[pid];
+        for t in &p.ghosts {
+            let n = t.len();
+            if n == 0 {
+                continue;
+            }
+            let q = t.remote_part;
+            debug_assert_ne!(q, pid);
+            match ch.kind {
+                ChannelKind::Push => {
+                    // outbox slice of p → reduce into q's real slots
+                    let (src, dst) = two_states(states, pid, q);
+                    match (&src.arrays[ch.array], &mut dst.arrays[ch.array]) {
+                        (StateArray::I32(v), StateArray::I32(dv)) => {
+                            for (i, &m) in v[t.slot_base..t.slot_base + n].iter().enumerate() {
+                                state::apply_i32(
+                                    ch.reduce,
+                                    &mut dv[t.remote_locals[i] as usize],
+                                    m,
+                                );
+                            }
+                        }
+                        (StateArray::F32(v), StateArray::F32(dv)) => {
+                            for (i, &m) in v[t.slot_base..t.slot_base + n].iter().enumerate() {
+                                state::apply_f32(
+                                    ch.reduce,
+                                    &mut dv[t.remote_locals[i] as usize],
+                                    m,
+                                );
+                            }
+                        }
+                        _ => unreachable!("channel dtype mismatch"),
+                    }
+                    if ch.reset_after_send {
+                        match &mut states[pid].arrays[ch.array] {
+                            StateArray::I32(v) => v[t.slot_base..t.slot_base + n]
+                                .fill(ch.reduce.identity_i32()),
+                            StateArray::F32(v) => v[t.slot_base..t.slot_base + n]
+                                .fill(ch.reduce.identity_f32()),
+                        }
+                    }
+                }
+                ChannelKind::Pull => {
+                    // gather q's real values → overwrite p's ghost slots
+                    let (src, dst) = two_states(states, q, pid);
+                    match (&src.arrays[ch.array], &mut dst.arrays[ch.array]) {
+                        (StateArray::I32(v), StateArray::I32(dv)) => {
+                            for (i, &l) in t.remote_locals.iter().enumerate() {
+                                dv[t.slot_base + i] = v[l as usize];
+                            }
+                        }
+                        (StateArray::F32(v), StateArray::F32(dv)) => {
+                            for (i, &l) in t.remote_locals.iter().enumerate() {
+                                dv[t.slot_base + i] = v[l as usize];
+                            }
+                        }
+                        _ => unreachable!("channel dtype mismatch"),
+                    }
+                }
+            }
+            bytes += 4 * n as u64;
+            msgs += n as u64;
+        }
+    }
+    (bytes, msgs)
+}
+
+/// BC forward paired scatter: a σ contribution is valid only for the level
+/// it was generated at. `msg_dist < dist[w]` means w was just discovered
+/// through this boundary → σ replaces (w had none); `==` means another
+/// shortest path of the same length → σ adds; `>` means a stale candidate
+/// (w is actually closer) → both are dropped.
+fn comm_dist_sigma(
+    pg: &PartitionedGraph,
+    states: &mut [AlgState],
+    dist_idx: usize,
+    sigma_idx: usize,
+) -> (u64, u64) {
+    let mut bytes = 0u64;
+    let mut msgs = 0u64;
+    for pid in 0..pg.parts.len() {
+        let p = &pg.parts[pid];
+        for t in &p.ghosts {
+            let n = t.len();
+            if n == 0 {
+                continue;
+            }
+            let q = t.remote_part;
+            let dist_out: Vec<i32> = {
+                let v = states[pid].arrays[dist_idx].as_i32();
+                v[t.slot_base..t.slot_base + n].to_vec()
+            };
+            let sigma_out: Vec<f32> = {
+                let v = states[pid].arrays[sigma_idx].as_f32();
+                v[t.slot_base..t.slot_base + n].to_vec()
+            };
+            {
+                let (dst_state, _) = {
+                    // two disjoint arrays of the remote state
+                    let st = &mut states[q];
+                    let (a, b) = if dist_idx < sigma_idx {
+                        let (x, y) = st.arrays.split_at_mut(sigma_idx);
+                        (&mut x[dist_idx], &mut y[0])
+                    } else {
+                        let (x, y) = st.arrays.split_at_mut(dist_idx);
+                        (&mut y[0], &mut x[sigma_idx])
+                    };
+                    ((a, b), ())
+                };
+                let (dist_arr, sigma_arr) = dst_state;
+                let dv = dist_arr.as_i32_mut();
+                let sv = sigma_arr.as_f32_mut();
+                for i in 0..n {
+                    let w = t.remote_locals[i] as usize;
+                    let (md, ms) = (dist_out[i], sigma_out[i]);
+                    if md < dv[w] {
+                        dv[w] = md;
+                        sv[w] = ms;
+                    } else if md == dv[w] && md != crate::alg::INF_I32 {
+                        sv[w] += ms;
+                    }
+                }
+            }
+            // reset σ slots (add semantics); dist slots stay (min).
+            let sv = states[pid].arrays[sigma_idx].as_f32_mut();
+            sv[t.slot_base..t.slot_base + n].fill(0.0);
+            bytes += 8 * n as u64;
+            msgs += n as u64;
+        }
+    }
+    (bytes, msgs)
+}
+
+/// Gather the `idx`-th state array of every partition into a global array.
+fn collect_output(pg: &PartitionedGraph, states: &[AlgState], idx: usize) -> StateArray {
+    match &states.first().map(|s| &s.arrays[idx]) {
+        Some(StateArray::I32(_)) => {
+            let locals: Vec<Vec<i32>> = states
+                .iter()
+                .map(|s| s.arrays[idx].as_i32().to_vec())
+                .collect();
+            StateArray::I32(pg.collect_to_global(&locals))
+        }
+        Some(StateArray::F32(_)) => {
+            let locals: Vec<Vec<f32>> = states
+                .iter()
+                .map(|s| s.arrays[idx].as_f32().to_vec())
+                .collect();
+            StateArray::F32(pg.collect_to_global(&locals))
+        }
+        None => StateArray::I32(Vec::new()),
+    }
+}

@@ -1,0 +1,277 @@
+//! Unified per-partition algorithm state (DESIGN.md §3).
+//!
+//! Every partition — CPU- or accelerator-resident — owns the same dense
+//! state representation: a list of typed arrays of length
+//! `Partition::state_len()` (real vertices, then ghost slots, then the
+//! dummy sink). The engine's communication phase, the CPU kernels, and the
+//! accelerator marshaling all operate on this one layout, which is what
+//! makes the hybrid engine algorithm-agnostic.
+
+/// A single state array. Only `i32` and `f32` exist on both sides of the
+/// PJRT boundary, so everything is expressed in those.
+#[derive(Debug, Clone)]
+pub enum StateArray {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl StateArray {
+    pub fn len(&self) -> usize {
+        match self {
+            StateArray::I32(v) => v.len(),
+            StateArray::F32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            StateArray::I32(v) => v,
+            _ => panic!("expected i32 array"),
+        }
+    }
+    pub fn as_i32_mut(&mut self) -> &mut Vec<i32> {
+        match self {
+            StateArray::I32(v) => v,
+            _ => panic!("expected i32 array"),
+        }
+    }
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            StateArray::F32(v) => v,
+            _ => panic!("expected f32 array"),
+        }
+    }
+    pub fn as_f32_mut(&mut self) -> &mut Vec<f32> {
+        match self {
+            StateArray::F32(v) => v,
+            _ => panic!("expected f32 array"),
+        }
+    }
+    pub fn bytes(&self) -> u64 {
+        4 * self.len() as u64
+    }
+}
+
+/// Per-partition algorithm state.
+#[derive(Debug, Clone)]
+pub struct AlgState {
+    /// Mutable arrays — communicated, computed on, and (for accelerator
+    /// partitions) shipped across the PJRT boundary every superstep.
+    pub arrays: Vec<StateArray>,
+    /// Constant per-vertex arrays (e.g. PageRank's 1/outdeg), uploaded to
+    /// the accelerator once alongside the edge arrays.
+    pub aux: Vec<StateArray>,
+    /// CPU-only scratch (e.g. the BFS visited bitmap, paper §5 / Fig 12).
+    pub scratch: Vec<u64>,
+}
+
+impl AlgState {
+    pub fn new(arrays: Vec<StateArray>) -> Self {
+        AlgState { arrays, aux: Vec::new(), scratch: Vec::new() }
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        self.arrays.iter().map(|a| a.bytes()).sum()
+    }
+}
+
+/// Message reduction operator (paper §3.4: min for BFS/SSSP/CC, sum for
+/// PageRank-style rank aggregation, set for pull channels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    MinI32,
+    MinF32,
+    AddF32,
+    SetI32,
+    SetF32,
+}
+
+impl Reduce {
+    /// The identity element used to (re)initialize ghost slots.
+    pub fn identity_i32(&self) -> i32 {
+        match self {
+            Reduce::MinI32 => super::INF_I32,
+            Reduce::SetI32 => 0,
+            _ => panic!("not an i32 reduce"),
+        }
+    }
+    pub fn identity_f32(&self) -> f32 {
+        match self {
+            Reduce::MinF32 => f32::INFINITY,
+            Reduce::AddF32 => 0.0,
+            Reduce::SetF32 => 0.0,
+            _ => panic!("not an f32 reduce"),
+        }
+    }
+    pub fn is_f32(&self) -> bool {
+        matches!(self, Reduce::MinF32 | Reduce::AddF32 | Reduce::SetF32)
+    }
+}
+
+/// Communication direction of a channel.
+///
+/// `Push`: ghost slots accumulate updates for remote vertices during
+/// compute; the comm phase sends slot values and reduces them into the
+/// remote partition's real slots (BFS levels, SSSP distances, BC σ).
+///
+/// `Pull`: the comm phase gathers remote *real* values and overwrites the
+/// local ghost slots (PageRank contributions, BC dependency ratios) before
+/// the next compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelKind {
+    Push,
+    Pull,
+}
+
+/// One communicated state array.
+#[derive(Debug, Clone, Copy)]
+pub struct Channel {
+    /// Index into `AlgState::arrays`.
+    pub array: usize,
+    pub reduce: Reduce,
+    pub kind: ChannelKind,
+    /// Reset ghost slots to the reduce identity after sending. Required
+    /// for `Add` channels (a re-send would double-count); unnecessary for
+    /// idempotent `Min` channels.
+    pub reset_after_send: bool,
+}
+
+impl Channel {
+    pub fn push_min_i32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::MinI32, kind: ChannelKind::Push, reset_after_send: false }
+    }
+    pub fn push_min_f32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::MinF32, kind: ChannelKind::Push, reset_after_send: false }
+    }
+    pub fn push_add_f32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::AddF32, kind: ChannelKind::Push, reset_after_send: true }
+    }
+    pub fn pull_f32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::SetF32, kind: ChannelKind::Pull, reset_after_send: false }
+    }
+    pub fn pull_i32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::SetI32, kind: ChannelKind::Pull, reset_after_send: false }
+    }
+}
+
+/// A communication-phase operation. Most algorithms use independent
+/// [`Channel`]s; Betweenness Centrality's forward sweep needs the paired
+/// distance + σ scatter (a σ contribution may only be applied when the
+/// accompanying BFS level agrees with the receiver's — otherwise a stale
+/// candidate level would corrupt shortest-path counts).
+#[derive(Debug, Clone, Copy)]
+pub enum CommOp {
+    Single(Channel),
+    /// BC forward: `dist` is an i32 min-channel, `sigma` an f32 add-channel
+    /// applied only where the delivered distance equals (or improves) the
+    /// receiver's. Sigma ghost slots are reset after sending.
+    DistSigma { dist: usize, sigma: usize },
+}
+
+impl CommOp {
+    /// Bytes per ghost slot this op moves.
+    pub fn bytes_per_slot(&self) -> u64 {
+        match self {
+            CommOp::Single(_) => 4,
+            CommOp::DistSigma { .. } => 8,
+        }
+    }
+}
+
+/// Apply `reduce(dst, msg)` to one i32 cell; returns true if it changed.
+#[inline]
+pub fn apply_i32(reduce: Reduce, dst: &mut i32, msg: i32) -> bool {
+    match reduce {
+        Reduce::MinI32 => {
+            if msg < *dst {
+                *dst = msg;
+                true
+            } else {
+                false
+            }
+        }
+        Reduce::SetI32 => {
+            let ch = *dst != msg;
+            *dst = msg;
+            ch
+        }
+        _ => panic!("i32 apply with f32 reduce"),
+    }
+}
+
+/// Apply `reduce(dst, msg)` to one f32 cell; returns true if it changed.
+#[inline]
+pub fn apply_f32(reduce: Reduce, dst: &mut f32, msg: f32) -> bool {
+    match reduce {
+        Reduce::MinF32 => {
+            if msg < *dst {
+                *dst = msg;
+                true
+            } else {
+                false
+            }
+        }
+        Reduce::AddF32 => {
+            if msg != 0.0 {
+                *dst += msg;
+                true
+            } else {
+                false
+            }
+        }
+        Reduce::SetF32 => {
+            let ch = *dst != msg;
+            *dst = msg;
+            ch
+        }
+        _ => panic!("f32 apply with i32 reduce"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_apply_semantics() {
+        let mut x = 10i32;
+        assert!(apply_i32(Reduce::MinI32, &mut x, 3));
+        assert_eq!(x, 3);
+        assert!(!apply_i32(Reduce::MinI32, &mut x, 5));
+        assert_eq!(x, 3);
+
+        let mut y = 1.5f32;
+        assert!(apply_f32(Reduce::AddF32, &mut y, 0.5));
+        assert_eq!(y, 2.0);
+        assert!(!apply_f32(Reduce::AddF32, &mut y, 0.0));
+
+        let mut z = 0.0f32;
+        assert!(apply_f32(Reduce::SetF32, &mut z, 4.0));
+        assert!(!apply_f32(Reduce::SetF32, &mut z, 4.0));
+    }
+
+    #[test]
+    fn identities() {
+        assert_eq!(Reduce::MinI32.identity_i32(), super::super::INF_I32);
+        assert_eq!(Reduce::AddF32.identity_f32(), 0.0);
+        assert_eq!(Reduce::MinF32.identity_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn array_accessors() {
+        let mut a = StateArray::I32(vec![1, 2, 3]);
+        a.as_i32_mut()[0] = 9;
+        assert_eq!(a.as_i32(), &[9, 2, 3]);
+        assert_eq!(a.bytes(), 12);
+        let s = AlgState::new(vec![a, StateArray::F32(vec![0.0; 5])]);
+        assert_eq!(s.state_bytes(), 12 + 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected f32")]
+    fn wrong_type_panics() {
+        StateArray::I32(vec![1]).as_f32();
+    }
+}

@@ -1,0 +1,290 @@
+//! Compressed Sparse Row graph representation (paper §4.3.1).
+//!
+//! Space-efficient `O(|V| + |E|)` adjacency: `row_offsets[v]..row_offsets[v+1]`
+//! indexes into `col_indices` (destination vertex of each out-edge).
+//! Weights are optional and parallel to `col_indices` (SSSP only).
+//!
+//! Vertex ids are `u32` (graphs up to 4B vertices); edge offsets are `u64`
+//! (graphs beyond 4B edges), mirroring the paper's `vid`/`eid` sizing rule
+//! in §4.3.3.
+
+pub type VertexId = u32;
+
+/// An edge list staging structure; the mutable builder-side twin of
+/// [`CsrGraph`].
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    pub vertex_count: usize,
+    pub edges: Vec<(VertexId, VertexId)>,
+    pub weights: Option<Vec<f32>>,
+}
+
+impl EdgeList {
+    pub fn new(vertex_count: usize) -> Self {
+        EdgeList { vertex_count, edges: Vec::new(), weights: None }
+    }
+
+    pub fn push(&mut self, src: VertexId, dst: VertexId) {
+        debug_assert!((src as usize) < self.vertex_count);
+        debug_assert!((dst as usize) < self.vertex_count);
+        self.edges.push((src, dst));
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// Immutable CSR graph.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    pub vertex_count: usize,
+    pub row_offsets: Vec<u64>,
+    pub col_indices: Vec<VertexId>,
+    pub weights: Option<Vec<f32>>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list with counting sort — `O(|V| + |E|)`.
+    /// Weight order follows edge order.
+    pub fn from_edge_list(el: &EdgeList) -> Self {
+        let v = el.vertex_count;
+        let mut deg = vec![0u64; v + 1];
+        for &(s, _) in &el.edges {
+            deg[s as usize + 1] += 1;
+        }
+        for i in 0..v {
+            deg[i + 1] += deg[i];
+        }
+        let row_offsets = deg.clone();
+        let mut cursor = deg;
+        let mut col_indices = vec![0u32; el.edges.len()];
+        let mut weights = el.weights.as_ref().map(|_| vec![0f32; el.edges.len()]);
+        for (i, &(s, d)) in el.edges.iter().enumerate() {
+            let slot = cursor[s as usize];
+            col_indices[slot as usize] = d;
+            if let (Some(w_out), Some(w_in)) = (&mut weights, &el.weights) {
+                w_out[slot as usize] = w_in[i];
+            }
+            cursor[s as usize] += 1;
+        }
+        CsrGraph { vertex_count: v, row_offsets, col_indices, weights }
+    }
+
+    #[inline]
+    pub fn edge_count(&self) -> usize {
+        self.col_indices.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> u64 {
+        self.row_offsets[v as usize + 1] - self.row_offsets[v as usize]
+    }
+
+    /// Out-neighborhood of `v` as a slice of destination ids.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.row_offsets[v as usize] as usize;
+        let hi = self.row_offsets[v as usize + 1] as usize;
+        &self.col_indices[lo..hi]
+    }
+
+    /// Edge-parallel weights for `v` (panics if the graph is unweighted).
+    #[inline]
+    pub fn edge_weights(&self, v: VertexId) -> &[f32] {
+        let lo = self.row_offsets[v as usize] as usize;
+        let hi = self.row_offsets[v as usize + 1] as usize;
+        &self.weights.as_ref().expect("unweighted graph")[lo..hi]
+    }
+
+    /// Iterate `(src, dst)` over all edges.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.vertex_count as u32)
+            .flat_map(move |v| self.neighbors(v).iter().map(move |&d| (v, d)))
+    }
+
+    /// Degree of every vertex, as a dense array.
+    pub fn out_degrees(&self) -> Vec<u64> {
+        (0..self.vertex_count)
+            .map(|v| self.row_offsets[v + 1] - self.row_offsets[v])
+            .collect()
+    }
+
+    /// Reversed graph: edge (u,v) becomes (v,u). Weights follow edges.
+    /// Used to derive in-edge CSR for pull-based algorithms (PageRank §7.1).
+    pub fn reverse(&self) -> CsrGraph {
+        let v = self.vertex_count;
+        let mut deg = vec![0u64; v + 1];
+        for &d in &self.col_indices {
+            deg[d as usize + 1] += 1;
+        }
+        for i in 0..v {
+            deg[i + 1] += deg[i];
+        }
+        let row_offsets = deg.clone();
+        let mut cursor = deg;
+        let mut col_indices = vec![0u32; self.col_indices.len()];
+        let mut weights = self.weights.as_ref().map(|_| vec![0f32; self.col_indices.len()]);
+        for s in 0..v as u32 {
+            let lo = self.row_offsets[s as usize] as usize;
+            for (k, &d) in self.neighbors(s).iter().enumerate() {
+                let slot = cursor[d as usize] as usize;
+                col_indices[slot] = s;
+                if let (Some(w_out), Some(w_in)) = (&mut weights, &self.weights) {
+                    w_out[slot] = w_in[lo + k];
+                }
+                cursor[d as usize] += 1;
+            }
+        }
+        CsrGraph { vertex_count: v, row_offsets, col_indices, weights }
+    }
+
+    /// Undirected view: every edge doubled (u,v)+(v,u), as the paper does
+    /// for Connected Components (§9.4 Table 5 note).
+    pub fn to_undirected(&self) -> CsrGraph {
+        let mut el = EdgeList::new(self.vertex_count);
+        el.edges.reserve(self.edge_count() * 2);
+        let mut w = self.weights.as_ref().map(|_| Vec::with_capacity(self.edge_count() * 2));
+        for s in 0..self.vertex_count as u32 {
+            let lo = self.row_offsets[s as usize] as usize;
+            for (k, &d) in self.neighbors(s).iter().enumerate() {
+                el.edges.push((s, d));
+                el.edges.push((d, s));
+                if let (Some(wv), Some(ws)) = (&mut w, &self.weights) {
+                    wv.push(ws[lo + k]);
+                    wv.push(ws[lo + k]);
+                }
+            }
+        }
+        el.weights = w;
+        CsrGraph::from_edge_list(&el)
+    }
+
+    /// Bytes used by the CSR arrays themselves (paper §4.3.3:
+    /// `eid × |V| + vid × |E| (+ 4 × |E| weights)`).
+    pub fn footprint_bytes(&self) -> u64 {
+        let base = (self.row_offsets.len() * 8 + self.col_indices.len() * 4) as u64;
+        base + self.weights.as_ref().map_or(0, |w| (w.len() * 4) as u64)
+    }
+
+    /// Structural invariant check (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_offsets.len() != self.vertex_count + 1 {
+            return Err("row_offsets length".into());
+        }
+        if self.row_offsets[0] != 0 {
+            return Err("row_offsets[0] != 0".into());
+        }
+        if *self.row_offsets.last().unwrap() != self.col_indices.len() as u64 {
+            return Err("row_offsets tail != |E|".into());
+        }
+        if self.row_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_offsets not monotone".into());
+        }
+        if self.col_indices.iter().any(|&d| (d as usize) >= self.vertex_count) {
+            return Err("col index out of range".into());
+        }
+        if let Some(w) = &self.weights {
+            if w.len() != self.col_indices.len() {
+                return Err("weights length mismatch".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = diamond();
+        g.validate().unwrap();
+        assert_eq!(g.vertex_count, 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.out_degree(0), 2);
+    }
+
+    #[test]
+    fn reverse_inverts_edges() {
+        let g = diamond();
+        let r = g.reverse();
+        r.validate().unwrap();
+        assert_eq!(r.neighbors(3), &[1, 2]);
+        assert_eq!(r.neighbors(1), &[0]);
+        assert_eq!(r.neighbors(0), &[] as &[u32]);
+        // double reverse = original edge multiset
+        let rr = r.reverse();
+        let mut e1: Vec<_> = g.iter_edges().collect();
+        let mut e2: Vec<_> = rr.iter_edges().collect();
+        e1.sort_unstable();
+        e2.sort_unstable();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn weights_follow_reverse() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.weights = Some(vec![10.0, 20.0]);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(g.edge_weights(0), &[10.0]);
+        let r = g.reverse();
+        assert_eq!(r.edge_weights(1), &[10.0]);
+        assert_eq!(r.edge_weights(2), &[20.0]);
+    }
+
+    #[test]
+    fn undirected_doubles_edges() {
+        let g = diamond();
+        let u = g.to_undirected();
+        u.validate().unwrap();
+        assert_eq!(u.edge_count(), 8);
+        assert_eq!(u.neighbors(3), &[1, 2]);
+    }
+
+    #[test]
+    fn iter_edges_complete() {
+        let g = diamond();
+        let edges: Vec<_> = g.iter_edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn footprint_matches_formula() {
+        let g = diamond();
+        assert_eq!(g.footprint_bytes(), (5 * 8 + 4 * 4) as u64);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edge_list(&EdgeList::new(0));
+        g.validate().unwrap();
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn self_loops_and_multi_edges_preserved() {
+        let mut el = EdgeList::new(2);
+        el.push(0, 0);
+        el.push(0, 1);
+        el.push(0, 1);
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(g.neighbors(0), &[0, 1, 1]);
+    }
+}

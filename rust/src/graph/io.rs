@@ -1,0 +1,237 @@
+//! Graph serialization.
+//!
+//! Two formats:
+//! - a text edge-list format (`src dst [weight]` per line, `#` comments,
+//!   `p <V> <E>` header optional) — interchange with the outside world;
+//! - a fast little-endian binary CSR snapshot (`.tcsr`) so benchmark
+//!   workloads are generated once and memory-mapped-style loaded after —
+//!   the paper treats graph loading as an amortized pre-processing cost
+//!   (§5, "Time Measurements").
+
+use super::csr::{CsrGraph, EdgeList};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TOTEMCSR";
+const VERSION: u32 = 1;
+
+/// Write a text edge list.
+pub fn write_edge_list(el: &EdgeList, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# totem edge list")?;
+    writeln!(w, "p {} {}", el.vertex_count, el.edges.len())?;
+    match &el.weights {
+        Some(ws) => {
+            for (&(s, d), &wt) in el.edges.iter().zip(ws) {
+                writeln!(w, "{s} {d} {wt}")?;
+            }
+        }
+        None => {
+            for &(s, d) in &el.edges {
+                writeln!(w, "{s} {d}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a text edge list. Vertices are sized from the `p` header if
+/// present, else `max id + 1`.
+pub fn read_edge_list(path: &Path) -> Result<EdgeList> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let r = BufReader::new(f);
+    let mut el = EdgeList::new(0);
+    let mut weights: Vec<f32> = Vec::new();
+    let mut saw_weights = false;
+    let mut max_id = 0u32;
+    for (ln, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut parts = t.split_whitespace();
+        let first = parts.next().unwrap();
+        if first == "p" {
+            let v: usize = parts
+                .next()
+                .context("p line: missing V")?
+                .parse()
+                .context("p line: bad V")?;
+            el.vertex_count = v;
+            continue;
+        }
+        let s: u32 = first.parse().with_context(|| format!("line {}: bad src", ln + 1))?;
+        let d: u32 = parts
+            .next()
+            .with_context(|| format!("line {}: missing dst", ln + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", ln + 1))?;
+        if let Some(wtok) = parts.next() {
+            let wt: f32 = wtok.parse().with_context(|| format!("line {}: bad weight", ln + 1))?;
+            weights.push(wt);
+            saw_weights = true;
+        } else if saw_weights {
+            bail!("line {}: mixed weighted/unweighted edges", ln + 1);
+        }
+        max_id = max_id.max(s).max(d);
+        el.edges.push((s, d));
+    }
+    if el.vertex_count == 0 && !el.edges.is_empty() {
+        el.vertex_count = max_id as usize + 1;
+    }
+    if el.vertex_count <= max_id as usize && !el.edges.is_empty() {
+        bail!("vertex id {max_id} out of declared range {}", el.vertex_count);
+    }
+    if saw_weights {
+        if weights.len() != el.edges.len() {
+            bail!("mixed weighted/unweighted edges");
+        }
+        el.weights = Some(weights);
+    }
+    Ok(el)
+}
+
+fn write_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_slice<T: Copy>(w: &mut impl Write, xs: &[T]) -> Result<()> {
+    // Safe for the POD types we use (u32/u64/f32), little-endian hosts.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_vec<T: Copy + Default>(r: &mut impl Read, n: usize) -> Result<Vec<T>> {
+    let mut v = vec![T::default(); n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, n * std::mem::size_of::<T>())
+    };
+    r.read_exact(bytes)?;
+    Ok(v)
+}
+
+/// Write the binary CSR snapshot.
+pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u32(&mut w, VERSION)?;
+    write_u32(&mut w, if g.weights.is_some() { 1 } else { 0 })?;
+    write_u64(&mut w, g.vertex_count as u64)?;
+    write_u64(&mut w, g.edge_count() as u64)?;
+    write_slice(&mut w, &g.row_offsets)?;
+    write_slice(&mut w, &g.col_indices)?;
+    if let Some(ws) = &g.weights {
+        write_slice(&mut w, ws)?;
+    }
+    Ok(())
+}
+
+/// Read the binary CSR snapshot.
+pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a totem CSR file");
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != VERSION {
+        bail!("{path:?}: unsupported version {ver}");
+    }
+    let weighted = read_u32(&mut r)? == 1;
+    let v = read_u64(&mut r)? as usize;
+    let e = read_u64(&mut r)? as usize;
+    let row_offsets: Vec<u64> = read_vec(&mut r, v + 1)?;
+    let col_indices: Vec<u32> = read_vec(&mut r, e)?;
+    let weights = if weighted { Some(read_vec::<f32>(&mut r, e)?) } else { None };
+    let g = CsrGraph { vertex_count: v, row_offsets, col_indices, weights };
+    g.validate().map_err(|e| anyhow::anyhow!("{path:?}: corrupt CSR: {e}"))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, with_random_weights, RmatParams};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("totem_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn edge_list_text_roundtrip() {
+        let mut el = rmat(&RmatParams::paper(6, 1));
+        with_random_weights(&mut el, 16, 2);
+        let p = tmp("a.el");
+        write_edge_list(&el, &p).unwrap();
+        let back = read_edge_list(&p).unwrap();
+        assert_eq!(back.vertex_count, el.vertex_count);
+        assert_eq!(back.edges, el.edges);
+        assert_eq!(back.weights, el.weights);
+    }
+
+    #[test]
+    fn edge_list_without_header_sizes_from_ids() {
+        let p = tmp("b.el");
+        std::fs::write(&p, "# c\n0 5\n5 2\n").unwrap();
+        let el = read_edge_list(&p).unwrap();
+        assert_eq!(el.vertex_count, 6);
+        assert_eq!(el.edges, vec![(0, 5), (5, 2)]);
+    }
+
+    #[test]
+    fn csr_binary_roundtrip() {
+        let mut el = rmat(&RmatParams::paper(8, 3));
+        with_random_weights(&mut el, 64, 4);
+        let g = CsrGraph::from_edge_list(&el);
+        let p = tmp("c.tcsr");
+        write_csr(&g, &p).unwrap();
+        let back = read_csr(&p).unwrap();
+        assert_eq!(back.vertex_count, g.vertex_count);
+        assert_eq!(back.row_offsets, g.row_offsets);
+        assert_eq!(back.col_indices, g.col_indices);
+        assert_eq!(back.weights, g.weights);
+    }
+
+    #[test]
+    fn csr_rejects_corruption() {
+        let p = tmp("d.tcsr");
+        std::fs::write(&p, b"NOTMAGIC????????").unwrap();
+        assert!(read_csr(&p).is_err());
+    }
+
+    #[test]
+    fn mixed_weights_rejected() {
+        let p = tmp("e.el");
+        std::fs::write(&p, "0 1 2.0\n1 0\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
+    }
+}

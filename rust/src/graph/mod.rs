@@ -1,0 +1,10 @@
+//! Graph substrate: CSR representation (paper §4.3.1), synthetic workload
+//! generators (Table 2), serialization, and topology statistics.
+
+pub mod csr;
+pub mod generator;
+pub mod io;
+pub mod properties;
+
+pub use csr::{CsrGraph, EdgeList, VertexId};
+pub use generator::{rmat, uniform, with_random_weights, RmatParams, Workload};

@@ -1,0 +1,199 @@
+//! Benchmark/CLI harness support: run any algorithm by name on any
+//! workload under any engine configuration, with repeated measurements and
+//! TEPS accounting (paper §5 "Evaluation Metrics" / "Data Collection").
+
+use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, traversed_edges};
+use crate::engine::{self, EngineConfig, RunResult};
+use crate::graph::generator::with_random_weights;
+use crate::graph::{CsrGraph, Workload};
+use crate::stats;
+use anyhow::Result;
+
+/// The five evaluated algorithms (paper §5 + §9.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgKind {
+    Bfs,
+    Pagerank,
+    Sssp,
+    Bc,
+    Cc,
+}
+
+pub const ALL_ALGS: [AlgKind; 5] = [
+    AlgKind::Bfs,
+    AlgKind::Pagerank,
+    AlgKind::Sssp,
+    AlgKind::Bc,
+    AlgKind::Cc,
+];
+
+impl AlgKind {
+    pub fn parse(name: &str) -> Result<AlgKind, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "bfs" => Ok(AlgKind::Bfs),
+            "pagerank" | "pr" => Ok(AlgKind::Pagerank),
+            "sssp" => Ok(AlgKind::Sssp),
+            "bc" => Ok(AlgKind::Bc),
+            "cc" => Ok(AlgKind::Cc),
+            _ => Err(format!("unknown algorithm '{name}' (bfs|pagerank|sssp|bc|cc)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgKind::Bfs => "bfs",
+            AlgKind::Pagerank => "pagerank",
+            AlgKind::Sssp => "sssp",
+            AlgKind::Bc => "bc",
+            AlgKind::Cc => "cc",
+        }
+    }
+
+    pub fn needs_weights(&self) -> bool {
+        matches!(self, AlgKind::Sssp)
+    }
+}
+
+/// Sentinel: pick the highest-degree vertex as the source (Graph500
+/// samples sources with non-zero degree; the max-degree hub is the
+/// deterministic equivalent).
+pub const AUTO_SOURCE: u32 = u32::MAX;
+
+/// Run parameters beyond the engine config.
+#[derive(Debug, Clone, Copy)]
+pub struct RunSpec {
+    pub alg: AlgKind,
+    pub source: u32,
+    pub rounds: usize,
+}
+
+impl RunSpec {
+    pub fn new(alg: AlgKind) -> RunSpec {
+        RunSpec { alg, source: AUTO_SOURCE, rounds: crate::alg::pagerank::DEFAULT_ROUNDS }
+    }
+    pub fn with_source(mut self, s: u32) -> Self {
+        self.source = s;
+        self
+    }
+    pub fn with_rounds(mut self, r: usize) -> Self {
+        self.rounds = r;
+        self
+    }
+}
+
+/// Build a workload graph, attaching weights when the algorithm needs them.
+pub fn build_workload(w: Workload, seed: u64, alg: AlgKind) -> CsrGraph {
+    let mut el = w.generate(seed);
+    if alg.needs_weights() {
+        with_random_weights(&mut el, 64, seed ^ 0x5eed);
+    }
+    CsrGraph::from_edge_list(&el)
+}
+
+/// Resolve the run's source vertex (AUTO → highest-degree vertex).
+pub fn resolve_source(g: &CsrGraph, spec: &RunSpec) -> u32 {
+    if spec.source != AUTO_SOURCE {
+        return spec.source;
+    }
+    (0..g.vertex_count as u32)
+        .max_by_key(|&v| g.out_degree(v))
+        .unwrap_or(0)
+}
+
+/// Dispatch one engine run by algorithm kind. Returns the run result and
+/// the traversed-edge count for TEPS.
+pub fn run_alg(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig) -> Result<(RunResult, u64)> {
+    let spec = RunSpec { source: resolve_source(g, &spec), ..spec };
+    let r = match spec.alg {
+        AlgKind::Bfs => engine::run(g, &mut Bfs::new(spec.source), cfg)?,
+        AlgKind::Pagerank => engine::run(g, &mut Pagerank::new(spec.rounds), cfg)?,
+        AlgKind::Sssp => engine::run(g, &mut Sssp::new(spec.source), cfg)?,
+        AlgKind::Bc => engine::run(g, &mut Bc::new(spec.source), cfg)?,
+        AlgKind::Cc => engine::run(g, &mut Cc::new(), cfg)?,
+    };
+    let rounds = if spec.alg == AlgKind::Pagerank { spec.rounds } else { 1 };
+    let traversed = traversed_edges(spec.alg.name(), &r.output, g, rounds);
+    Ok((r, traversed))
+}
+
+/// Repeated measurement of one configuration.
+pub struct Measured {
+    /// Mean makespan over reps (Eq. 2 accounting).
+    pub makespan_secs: f64,
+    pub makespan_ci95: f64,
+    /// Mean TEPS over reps.
+    pub teps: f64,
+    /// Bottleneck-processor compute seconds (mean).
+    pub bottleneck_secs: f64,
+    /// Communication seconds (mean).
+    pub comm_secs: f64,
+    /// Last run's full result (partition stats etc. are deterministic
+    /// given the seed, so any rep's copy is representative).
+    pub last: RunResult,
+    pub traversed: u64,
+}
+
+/// Run `reps` repetitions (after one warmup) and aggregate.
+pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> Result<Measured> {
+    let reps = reps.max(1);
+    // warmup (compiles accelerator programs, faults pages)
+    let _ = run_alg(g, spec, cfg)?;
+    let mut makespans = Vec::with_capacity(reps);
+    let mut bottleneck = Vec::with_capacity(reps);
+    let mut comm = Vec::with_capacity(reps);
+    let mut teps = Vec::with_capacity(reps);
+    let mut last: Option<(RunResult, u64)> = None;
+    for _ in 0..reps {
+        let (r, tr) = run_alg(g, spec, cfg)?;
+        let mk = r.makespan_secs().max(1e-12);
+        makespans.push(mk);
+        bottleneck.push(r.metrics.bottleneck_compute_secs());
+        comm.push(r.metrics.comm_secs());
+        teps.push(tr as f64 / mk);
+        last = Some((r, tr));
+    }
+    let (last, traversed) = last.unwrap();
+    Ok(Measured {
+        makespan_secs: stats::mean(&makespans),
+        makespan_ci95: stats::ci95(&makespans),
+        teps: stats::mean(&teps),
+        bottleneck_secs: stats::mean(&bottleneck),
+        comm_secs: stats::mean(&comm),
+        last,
+        traversed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Strategy;
+
+    #[test]
+    fn parse_alg_names() {
+        assert_eq!(AlgKind::parse("BFS").unwrap(), AlgKind::Bfs);
+        assert_eq!(AlgKind::parse("pr").unwrap(), AlgKind::Pagerank);
+        assert!(AlgKind::parse("dijkstra").is_err());
+    }
+
+    #[test]
+    fn measure_host_only_all_algs() {
+        let seed = 3;
+        for alg in ALL_ALGS {
+            let g = build_workload(Workload::Rmat(8), seed, alg);
+            let m = measure(&g, RunSpec::new(alg), &EngineConfig::host_only(1), 2).unwrap();
+            assert!(m.makespan_secs > 0.0, "{:?}", alg);
+            assert!(m.teps > 0.0, "{:?}", alg);
+            assert!(m.traversed > 0, "{:?}", alg);
+        }
+    }
+
+    #[test]
+    fn measure_partitioned() {
+        let g = build_workload(Workload::Rmat(9), 5, AlgKind::Bfs);
+        let cfg = EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::High);
+        let m = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, 2).unwrap();
+        assert!(m.comm_secs >= 0.0);
+        assert!((m.last.shares[0] - 0.6).abs() < 0.1);
+    }
+}

@@ -1,0 +1,22 @@
+//! # TOTEM — hybrid CPU + accelerator graph processing
+//!
+//! A reproduction of *"Efficient Large-Scale Graph Processing on Hybrid CPU
+//! and GPU Systems"* (Gharaibeh et al., 2013) on a Rust + JAX/Pallas stack:
+//! the Rust coordinator owns partitioning, the BSP engine and the CPU
+//! processing element; accelerator partitions execute AOT-compiled
+//! JAX/Pallas step programs through the PJRT C API (`xla` crate).
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod alg;
+pub mod baseline;
+pub mod engine;
+pub mod graph;
+pub mod harness;
+pub mod model;
+pub mod partition;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,327 @@
+//! `totem` — the hybrid graph-processing launcher.
+//!
+//! Subcommands:
+//!   run        execute an algorithm on a workload under a hardware config
+//!   model      evaluate the performance model (Eqs. 1–4)
+//!   calibrate  measure r_cpu / r_acc / c on this testbed
+//!   generate   write a workload to disk (edge list or binary CSR)
+//!   info       degree-distribution statistics of a workload
+//!   beta       boundary-edge statistics for a partitioning (Fig. 4)
+//!
+//! Examples:
+//!   totem run --alg bfs --workload rmat14 --hw 2S1G --alpha 0.7 --strategy high
+//!   totem run --alg pagerank --workload ukweb --hw 2S2G --alpha 0.6 --rounds 5
+//!   totem model --beta 0.05 --rcpu 1e9 --c 3e9
+//!   totem calibrate --alg bfs --workload rmat13
+//!   totem beta --workload twitter --parts 2 --strategy rand
+
+use anyhow::{anyhow, bail, Result};
+use totem::engine::EngineConfig;
+use totem::graph::{io as gio, properties, Workload};
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::model::{self, calibrate, ModelParams};
+use totem::partition::{PartitionedGraph, Strategy};
+use totem::report::{fmt_secs, fmt_teps, Table};
+use totem::util::args::Args;
+use totem::util::{fmt_bytes, fmt_count};
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let code = match cmd.as_str() {
+        "run" => run_cmd(&args),
+        "model" => model_cmd(&args),
+        "calibrate" => calibrate_cmd(&args),
+        "generate" => generate_cmd(&args),
+        "info" => info_cmd(&args),
+        "beta" => beta_cmd(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' — try `totem help`")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+totem — hybrid (CPU + accelerator) graph processing engine
+
+USAGE: totem <command> [--flags]
+
+COMMANDS:
+  run        --alg bfs|pagerank|sssp|bc|cc --workload rmatN|uniformN|twitter|ukweb|csr:PATH
+             --hw xS[yG] --alpha F --strategy rand|high|low [--source N]
+             [--rounds N] [--reps N] [--seed N] [--instrument]
+             [--artifacts DIR] [--threads N] [--budget-mb N]
+  model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
+  calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
+  generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
+  info       --workload W [--seed N]
+  beta       --workload W --parts N [--strategy S] [--seed N]
+";
+
+fn parse_workload_or_file(args: &Args, alg: Option<AlgKind>) -> Result<totem::graph::CsrGraph> {
+    let w = args.str_or("workload", "rmat14");
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    if let Some(path) = w.strip_prefix("csr:") {
+        return gio::read_csr(&PathBuf::from(path));
+    }
+    if let Some(path) = w.strip_prefix("el:") {
+        let el = gio::read_edge_list(&PathBuf::from(path))?;
+        return Ok(totem::graph::CsrGraph::from_edge_list(&el));
+    }
+    let wl = Workload::parse(&w).map_err(anyhow::Error::msg)?;
+    Ok(match alg {
+        Some(a) => build_workload(wl, seed, a),
+        None => wl.build(seed),
+    })
+}
+
+fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
+    let hw = args.str_or("hw", "1S");
+    let alpha = args.f64_or("alpha", 0.7).map_err(anyhow::Error::msg)?;
+    let strategy =
+        Strategy::parse(&args.str_or("strategy", "high")).map_err(anyhow::Error::msg)?;
+    let threads = args.usize_or("threads", 1).map_err(anyhow::Error::msg)?;
+    let mut cfg = EngineConfig::from_notation(&hw, alpha, strategy, threads)
+        .map_err(anyhow::Error::msg)?;
+    cfg = cfg
+        .with_seed(args.u64_or("seed", 42).map_err(anyhow::Error::msg)?)
+        .with_instrument(args.has("instrument"))
+        .with_artifacts(args.str_or("artifacts", "artifacts"));
+    let mb = args.usize_or("budget-mb", 0).map_err(anyhow::Error::msg)?;
+    if mb > 0 {
+        cfg.accel_memory_budget = (mb as u64) << 20;
+    }
+    if alg == AlgKind::Pagerank {
+        cfg.rounds = Some(args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?);
+    }
+    Ok(cfg)
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let alg = AlgKind::parse(&args.str_or("alg", "bfs")).map_err(anyhow::Error::msg)?;
+    let g = parse_workload_or_file(args, Some(alg))?;
+    let cfg = engine_config(args, alg)?;
+    let spec = RunSpec::new(alg)
+        .with_source(args.u64_or("source", u32::MAX as u64).map_err(anyhow::Error::msg)? as u32)
+        .with_rounds(args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?);
+    let reps = args.usize_or("reps", 3).map_err(anyhow::Error::msg)?;
+
+    eprintln!(
+        "# {} on |V|={} |E|={} — {} partitions",
+        alg.name(),
+        fmt_count(g.vertex_count as u64),
+        fmt_count(g.edge_count() as u64),
+        cfg.num_partitions()
+    );
+    let m = measure(&g, spec, &cfg, reps)?;
+    let r = &m.last;
+
+    println!("algorithm        : {}", alg.name());
+    println!("supersteps       : {}", r.supersteps);
+    println!(
+        "makespan         : {} ± {} (95% CI, {} reps)",
+        fmt_secs(m.makespan_secs),
+        fmt_secs(m.makespan_ci95),
+        reps
+    );
+    println!("traversal rate   : {}", fmt_teps(m.teps));
+    println!("bottleneck comp. : {}", fmt_secs(m.bottleneck_secs));
+    println!("communication    : {}", fmt_secs(m.comm_secs));
+    println!(
+        "comm volume      : {} in {} messages",
+        fmt_bytes(r.metrics.total_bytes()),
+        fmt_count(r.metrics.total_messages())
+    );
+    println!(
+        "beta             : raw {:.2}% -> reduced {:.2}%",
+        100.0 * r.beta.beta_raw(),
+        100.0 * r.beta.beta_reduced()
+    );
+    let mut t = Table::new(
+        "Partitions",
+        &["part", "element", "vertices", "edges", "share", "compute", "footprint"],
+    );
+    for (i, fp) in r.footprints.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            format!("{:?}", cfg.elements[i]),
+            fmt_count(fp.vertices as u64),
+            fmt_count(fp.edges as u64),
+            format!("{:.1}%", 100.0 * r.shares[i]),
+            fmt_secs(r.metrics.partition_compute_secs(i)),
+            fmt_bytes(fp.total()),
+        ]);
+    }
+    print!("{}", t.markdown());
+    if args.has("instrument") {
+        for (i, mc) in r.metrics.mem.iter().enumerate() {
+            println!(
+                "mem[{}]: {} reads, {} writes",
+                i,
+                fmt_count(mc.reads),
+                fmt_count(mc.writes)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn model_cmd(args: &Args) -> Result<()> {
+    let p = ModelParams {
+        r_cpu: args.f64_or("rcpu", 1e9).map_err(anyhow::Error::msg)?,
+        r_acc: args.f64_or("racc", 2e9).map_err(anyhow::Error::msg)?,
+        c: model::comm_rate_for_message_bytes(
+            args.f64_or("c", 3e9).map_err(anyhow::Error::msg)?,
+            args.f64_or("msg-bytes", 4.0).map_err(anyhow::Error::msg)?,
+        ),
+    };
+    let beta = args.f64_or("beta", 0.05).map_err(anyhow::Error::msg)?;
+    let alphas = args
+        .f64_list_or("alphas", &[0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0])
+        .map_err(anyhow::Error::msg)?;
+    let mut t = Table::new(
+        &format!(
+            "Predicted speedup (Eq. 4): r_cpu={:.2e} r_acc={:.2e} c={:.2e} beta={beta}",
+            p.r_cpu, p.r_acc, p.c
+        ),
+        &["alpha", "speedup"],
+    );
+    for a in alphas {
+        t.row(vec![format!("{a:.2}"), format!("{:.3}", model::speedup(a, beta, &p))]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn calibrate_cmd(args: &Args) -> Result<()> {
+    let alg = AlgKind::parse(&args.str_or("alg", "bfs")).map_err(anyhow::Error::msg)?;
+    let g = parse_workload_or_file(args, Some(alg))?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let alpha = args.f64_or("alpha", 0.6).map_err(anyhow::Error::msg)?;
+    let src = totem::harness::resolve_source(&g, &RunSpec::new(alg));
+    let cal = match alg {
+        AlgKind::Bfs => calibrate::calibrate(
+            &g,
+            &mut totem::alg::bfs::Bfs::new(src),
+            &mut totem::alg::bfs::Bfs::new(src),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Pagerank => calibrate::calibrate(
+            &g,
+            &mut totem::alg::pagerank::Pagerank::new(5),
+            &mut totem::alg::pagerank::Pagerank::new(5),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Sssp => calibrate::calibrate(
+            &g,
+            &mut totem::alg::sssp::Sssp::new(src),
+            &mut totem::alg::sssp::Sssp::new(src),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Bc => calibrate::calibrate(
+            &g,
+            &mut totem::alg::bc::Bc::new(src),
+            &mut totem::alg::bc::Bc::new(src),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Cc => calibrate::calibrate(
+            &g,
+            &mut totem::alg::cc::Cc::new(),
+            &mut totem::alg::cc::Cc::new(),
+            &artifacts,
+            alpha,
+        )?,
+    };
+    println!("r_cpu = {:.3e} edges/s", cal.params.r_cpu);
+    println!("r_acc = {:.3e} edges/s", cal.params.r_acc);
+    println!("c     = {:.3e} messages/s", cal.params.c);
+    println!("host makespan = {}", fmt_secs(cal.host_secs));
+    Ok(())
+}
+
+fn generate_cmd(args: &Args) -> Result<()> {
+    let w = Workload::parse(&args.str_or("workload", "rmat14")).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let out = PathBuf::from(
+        args.get("out")
+            .ok_or_else(|| anyhow!("--out is required"))?,
+    );
+    let mut el = w.generate(seed);
+    if args.has("weights") {
+        totem::graph::with_random_weights(&mut el, 64, seed ^ 0x5eed);
+    }
+    match args.str_or("format", "csr").as_str() {
+        "el" => gio::write_edge_list(&el, &out)?,
+        "csr" => gio::write_csr(&totem::graph::CsrGraph::from_edge_list(&el), &out)?,
+        f => bail!("unknown format '{f}' (el|csr)"),
+    }
+    println!(
+        "wrote {} (|V|={}, |E|={})",
+        out.display(),
+        fmt_count(el.vertex_count as u64),
+        fmt_count(el.edge_count() as u64)
+    );
+    Ok(())
+}
+
+fn info_cmd(args: &Args) -> Result<()> {
+    let g = parse_workload_or_file(args, None)?;
+    let s = properties::degree_stats(&g);
+    println!("vertices        : {}", fmt_count(s.vertex_count as u64));
+    println!("edges           : {}", fmt_count(s.edge_count as u64));
+    println!("mean degree     : {:.2}", s.mean_degree);
+    println!("max degree      : {}", fmt_count(s.max_degree));
+    println!("top-1% edges    : {:.1}%", 100.0 * s.top1pct_edge_share);
+    println!("degree Gini     : {:.3}", s.gini);
+    println!("zero out-degree : {}", fmt_count(s.zero_degree as u64));
+    println!(
+        "50% edge cover  : {} vertices",
+        fmt_count(properties::vertices_covering_edge_fraction(&g, 0.5) as u64)
+    );
+    let mut t = Table::new("log2 degree histogram", &["degree >=", "vertices"]);
+    for (lb, c) in properties::degree_histogram_log2(&g) {
+        t.row(vec![lb.to_string(), fmt_count(c as u64)]);
+    }
+    print!("{}", t.markdown());
+    Ok(())
+}
+
+fn beta_cmd(args: &Args) -> Result<()> {
+    let g = parse_workload_or_file(args, None)?;
+    let parts = args.usize_or("parts", 2).map_err(anyhow::Error::msg)?;
+    let strategy =
+        Strategy::parse(&args.str_or("strategy", "rand")).map_err(anyhow::Error::msg)?;
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let shares = vec![1.0 / parts as f64; parts];
+    let pg = PartitionedGraph::partition(&g, strategy, &shares, seed);
+    let b = pg.beta_stats();
+    println!(
+        "{} {}-way: beta without reduction = {:.2}%, with reduction = {:.2}%  ({} boundary edges -> {} messages)",
+        strategy.name(),
+        parts,
+        100.0 * b.beta_raw(),
+        100.0 * b.beta_reduced(),
+        fmt_count(b.boundary_edges),
+        fmt_count(b.reduced_messages),
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Model calibration (paper §3.3) and prediction-vs-achievement machinery
+//! (Figure 7 / Table 3).
+//!
+//! The paper sets `r_cpu` by running the CPU-only implementation — "a
+//! reasonable assumption as one typically starts off by implementing a CPU
+//! version" — and takes `c` from measured PCI-E bandwidth. We do the same
+//! on this testbed: `r_cpu` from a host-only engine run, `r_acc` from the
+//! accelerator's kernel-execution rate in a hybrid probe run, and `c` from
+//! the measured transfer+scatter rate of the communication phase.
+
+use super::ModelParams;
+use crate::alg::{traversed_edges, Algorithm};
+use crate::engine::{self, EngineConfig, RunResult};
+use crate::graph::CsrGraph;
+use crate::partition::Strategy;
+use anyhow::Result;
+use std::path::Path;
+
+/// Calibrated parameters plus the probe measurements behind them.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub params: ModelParams,
+    /// Host-only makespan on the calibration workload (the speedup
+    /// denominator's baseline).
+    pub host_secs: f64,
+    /// Traversed edges of the calibration run.
+    pub traversed: u64,
+}
+
+/// Number of PageRank-style rounds assumed when converting outputs to
+/// traversed edges (ignored by traversal algorithms).
+fn rounds_of(r: &RunResult) -> usize {
+    r.supersteps.max(1)
+}
+
+/// Measure `r_cpu` from a host-only run: traversed edges per second of
+/// bottleneck compute time.
+pub fn measure_host<A: Algorithm>(g: &CsrGraph, alg: &mut A) -> Result<(f64, f64, u64)> {
+    let cfg = EngineConfig::host_only(1);
+    let r = engine::run(g, alg, &cfg)?;
+    let traversed = traversed_edges(alg.spec().name, &r.output, g, rounds_of(&r));
+    let compute = r.metrics.bottleneck_compute_secs().max(1e-9);
+    Ok((traversed as f64 / compute, r.makespan_secs(), traversed))
+}
+
+/// Calibrate all three parameters for an algorithm on a workload.
+///
+/// `alpha_probe` sets the hybrid probe's CPU share (something comfortably
+/// within the accelerator's size classes, e.g. 0.6).
+pub fn calibrate<A: Algorithm>(
+    g: &CsrGraph,
+    host_alg: &mut A,
+    probe_alg: &mut A,
+    artifacts: &Path,
+    alpha_probe: f64,
+) -> Result<Calibration> {
+    calibrate_with(g, host_alg, probe_alg, artifacts, alpha_probe, Strategy::High)
+}
+
+/// Like [`calibrate`] but with an explicit probe partitioning strategy —
+/// the probe should match the configuration the predictions will be
+/// compared against (the accelerator's effective rate depends on the
+/// partition geometry through the AOT size-class padding).
+pub fn calibrate_with<A: Algorithm>(
+    g: &CsrGraph,
+    host_alg: &mut A,
+    probe_alg: &mut A,
+    artifacts: &Path,
+    alpha_probe: f64,
+    strategy: Strategy,
+) -> Result<Calibration> {
+    let (r_cpu, host_secs, traversed) = measure_host(g, host_alg)?;
+
+    let cfg = EngineConfig::hybrid(1, alpha_probe, strategy).with_artifacts(artifacts);
+    let r = engine::run(g, probe_alg, &cfg)?;
+    // accelerator rate: its edge share of the traversed work per second of
+    // kernel execution.
+    let acc_share: f64 = r.shares[1..].iter().sum();
+    let acc_compute: f64 = (1..r.shares.len())
+        .map(|p| r.metrics.partition_compute_secs(p))
+        .sum();
+    let r_acc = traversed as f64 * acc_share / acc_compute.max(1e-9);
+    // channel rate: messages per second of communication time (transfer +
+    // scatter-apply + accelerator state movement).
+    let comm = r.metrics.comm_secs().max(1e-9);
+    let c = r.metrics.total_messages() as f64 / comm;
+
+    Ok(Calibration {
+        params: ModelParams { r_cpu, r_acc, c },
+        host_secs,
+        traversed,
+    })
+}
+
+/// One Figure-7 data point: model prediction vs achieved speedup at a
+/// given α.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedupPoint {
+    pub alpha: f64,
+    pub predicted: f64,
+    pub achieved: f64,
+}
+
+/// Compute the model's β for a hybrid run: the CPU partition's
+/// communicated slots (after reduction) per total edge.
+pub fn beta_of(run: &RunResult, total_edges: usize) -> f64 {
+    run.comm_slots.first().copied().unwrap_or(0) as f64 / total_edges.max(1) as f64
+}
+
+/// Evaluate prediction vs achievement for one hybrid run.
+pub fn speedup_point(
+    cal: &Calibration,
+    run: &RunResult,
+    total_edges: usize,
+) -> SpeedupPoint {
+    let alpha = run.shares.first().copied().unwrap_or(1.0);
+    let beta = beta_of(run, total_edges);
+    SpeedupPoint {
+        alpha,
+        predicted: super::speedup(alpha, beta, &cal.params),
+        achieved: cal.host_secs / run.makespan_secs().max(1e-12),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::Bfs;
+    use crate::graph::generator::{rmat, RmatParams};
+
+    #[test]
+    fn host_measurement_positive() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 3)));
+        let mut alg = Bfs::new(0);
+        let (r_cpu, secs, traversed) = measure_host(&g, &mut alg).unwrap();
+        assert!(r_cpu > 0.0);
+        assert!(secs > 0.0);
+        assert!(traversed > 0);
+    }
+
+    #[test]
+    fn calibrate_with_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 5)));
+        let mut host = Bfs::new(0);
+        let mut probe = Bfs::new(0);
+        let cal = calibrate(&g, &mut host, &mut probe, &dir, 0.6).unwrap();
+        assert!(cal.params.r_cpu > 0.0);
+        assert!(cal.params.r_acc > 0.0);
+        assert!(cal.params.c > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! The hybrid-platform performance model (paper §3, Equations 1–4).
+//!
+//! Predicts the speedup of processing a graph on `{cpu, accelerator}`
+//! versus the host alone, from five parameters:
+//!
+//! - `r_cpu`, `r_acc` — processing rates in edges/second;
+//! - `c` — communication rate over the host↔accelerator link (edges/s,
+//!   i.e. link bandwidth ÷ bytes per edge message);
+//! - `α` — share of edges that stay on the host;
+//! - `β` — share of edges that cross the partition (after reduction).
+//!
+//! Eq. 1: `t(G_p) = |E_p^b| / c + |E_p| / r_p`
+//! Eq. 2: `makespan = max_p t(G_p)`
+//! Eq. 3/4: `speedup = (1/r_cpu) / (β/c + α/r_cpu)` assuming the CPU
+//! partition dominates (the paper's assumption ii, validated in §5.2).
+//!
+//! [`calibrate`] measures the parameters on this testbed so the model can
+//! be compared with achieved speedups (Figure 7 / Table 3).
+
+pub mod calibrate;
+
+/// Model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelParams {
+    /// CPU processing rate, edges/s.
+    pub r_cpu: f64,
+    /// Accelerator processing rate, edges/s.
+    pub r_acc: f64,
+    /// Host↔accelerator communication rate, edges/s (bandwidth ÷ message
+    /// bytes).
+    pub c: f64,
+}
+
+impl ModelParams {
+    /// The paper's Figure 1 reference values for 2013 commodity parts:
+    /// r_cpu = 1 BE/s, r_acc = 2 BE/s (assumption ii: the GPU is faster),
+    /// c = 3 BE/s (PCI-E 3.0 at 12 GB/s, 4-byte messages).
+    pub fn paper_reference() -> ModelParams {
+        ModelParams { r_cpu: 1e9, r_acc: 2e9, c: 3e9 }
+    }
+}
+
+/// A partition's workload in model terms.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionLoad {
+    /// Share of |E| processed by this partition.
+    pub edge_share: f64,
+    /// Share of |E| that this partition communicates (boundary messages
+    /// after reduction, normalized by |E|).
+    pub boundary_share: f64,
+}
+
+/// Eq. 1: time to process one partition, normalized to |E| = 1.
+pub fn partition_time(load: &PartitionLoad, rate: f64, c: f64) -> f64 {
+    load.boundary_share / c + load.edge_share / rate
+}
+
+/// Eq. 2: makespan of a two-element platform, normalized to |E| = 1.
+pub fn makespan(cpu: &PartitionLoad, acc: &PartitionLoad, p: &ModelParams) -> f64 {
+    partition_time(cpu, p.r_cpu, p.c).max(partition_time(acc, p.r_acc, p.c))
+}
+
+/// Eq. 4: predicted speedup vs host-only processing.
+///
+/// `alpha` = CPU edge share, `beta` = boundary share (after reduction).
+/// Uses the general Eq. 2 form (max over both elements), which reduces to
+/// the paper's Eq. 4 whenever the CPU partition dominates.
+pub fn speedup(alpha: f64, beta: f64, p: &ModelParams) -> f64 {
+    let host_only = 1.0 / p.r_cpu;
+    let cpu = PartitionLoad { edge_share: alpha, boundary_share: beta };
+    let acc = PartitionLoad { edge_share: 1.0 - alpha, boundary_share: beta };
+    host_only / makespan(&cpu, &acc, p)
+}
+
+/// Eq. 4 exactly as printed (CPU-dominant assumption): `c / (β·r_cpu + α·c)`.
+pub fn speedup_eq4(alpha: f64, beta: f64, p: &ModelParams) -> f64 {
+    p.c / (beta * p.r_cpu + alpha * p.c)
+}
+
+/// Figure 3's x-axis: scale the communication rate by the per-edge message
+/// volume. `c_base` is the rate at 4 bytes/edge.
+pub fn comm_rate_for_message_bytes(c_base: f64, msg_bytes: f64) -> f64 {
+    c_base * 4.0 / msg_bytes
+}
+
+/// Predicted speedup series over a range of α values (a figure column).
+pub fn speedup_series(alphas: &[f64], beta: f64, p: &ModelParams) -> Vec<f64> {
+    alphas.iter().map(|&a| speedup(a, beta, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infinite_bandwidth_gives_one_over_alpha() {
+        // §3.2: "if c is set to infinity, the speedup ≈ 1/α"
+        let p = ModelParams { r_cpu: 1e9, r_acc: 1e12, c: f64::INFINITY };
+        for alpha in [0.3, 0.5, 0.8] {
+            let s = speedup(alpha, 0.5, &p);
+            assert!((s - 1.0 / alpha).abs() < 1e-9, "alpha={alpha} s={s}");
+        }
+    }
+
+    #[test]
+    fn eq4_matches_general_when_cpu_dominates() {
+        let p = ModelParams::paper_reference();
+        // large α → CPU partition dominates
+        for alpha in [0.6, 0.8, 0.95] {
+            let a = speedup(alpha, 0.05, &p);
+            let b = speedup_eq4(alpha, 0.05, &p);
+            assert!((a - b).abs() < 1e-12, "alpha={alpha}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn higher_beta_lower_speedup() {
+        let p = ModelParams::paper_reference();
+        let s1 = speedup(0.6, 0.05, &p);
+        let s2 = speedup(0.6, 0.40, &p);
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn figure2_worst_case_slowdown_threshold() {
+        // Fig 2 right: with β=100% (bipartite worst case), slowdown is
+        // predicted only for α > ~0.7 at r_cpu=1, c=3 BE/s... the paper
+        // phrases it as: slowdown predicted only for α *below* 0.7 — i.e.
+        // speedup < 1 exactly when α + β·r/c > 1 ⇒ α > 1 - 1/3.
+        let p = ModelParams::paper_reference();
+        assert!(speedup_eq4(0.75, 1.0, &p) < 1.0);
+        assert!(speedup_eq4(0.60, 1.0, &p) > 1.0);
+    }
+
+    #[test]
+    fn figure3_message_volume() {
+        // doubling message bytes halves c and lowers speedup
+        let p = ModelParams::paper_reference();
+        let c8 = comm_rate_for_message_bytes(p.c, 8.0);
+        assert!((c8 - 1.5e9).abs() < 1.0);
+        let p8 = ModelParams { c: c8, ..p };
+        assert!(speedup(0.6, 0.2, &p8) < speedup(0.6, 0.2, &p));
+    }
+
+    #[test]
+    fn speedup_monotone_in_alpha() {
+        let p = ModelParams::paper_reference();
+        let s = speedup_series(&[0.9, 0.7, 0.5], 0.05, &p);
+        assert!(s[0] < s[1] && s[1] < s[2]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Vertex→partition assignment strategies (paper §6).
+//!
+//! - `RAND`: vertices in random order, greedily filled to the target edge
+//!   shares — the naïve baseline of §3.4/§5.
+//! - `HIGH`: vertices sorted by degree **descending**; partition 0 (the CPU
+//!   by convention) receives the highest-degree vertices until it holds its
+//!   edge share, the accelerator partitions receive the low-degree tail.
+//! - `LOW`: ascending — the CPU gets the low-degree vertices, the
+//!   accelerators the hubs (best for state-heavy algorithms like BC, §7.2).
+//!
+//! All three are exactly the paper's low-cost strategies: `O(|V| log |V|)`
+//! sorting (§6.2 notes partial sort achieves `O(|V|)`; full sort keeps the
+//! code simple and is nowhere near the bottleneck).
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Partitioning strategy (paper Figure 9 notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Random vertex placement, edge-share balanced.
+    Rand,
+    /// Highest-degree vertices on partition 0 (CPU).
+    High,
+    /// Lowest-degree vertices on partition 0 (CPU).
+    Low,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "rand" | "random" => Ok(Strategy::Rand),
+            "high" => Ok(Strategy::High),
+            "low" => Ok(Strategy::Low),
+            _ => Err(format!("unknown strategy '{s}' (rand|high|low)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Rand => "RAND",
+            Strategy::High => "HIGH",
+            Strategy::Low => "LOW",
+        }
+    }
+}
+
+/// Compute a vertex→partition assignment hitting the requested edge
+/// `shares` (fractions of |E|, must sum to ~1; partition 0 = CPU).
+///
+/// Returns one partition id per vertex. Greedy prefix fill over the
+/// strategy's vertex order: a partition keeps receiving vertices until its
+/// cumulative out-degree reaches its share of the edges.
+pub fn assign(g: &CsrGraph, strategy: Strategy, shares: &[f64], seed: u64) -> Vec<u8> {
+    assert!(!shares.is_empty() && shares.len() <= 8, "1..=8 partitions supported");
+    let total: f64 = shares.iter().sum();
+    assert!(
+        (total - 1.0).abs() < 1e-6,
+        "shares must sum to 1 (got {total})"
+    );
+    assert!(shares.iter().all(|&s| s >= 0.0));
+
+    let v = g.vertex_count;
+    let mut order: Vec<u32> = (0..v as u32).collect();
+    match strategy {
+        Strategy::Rand => {
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut order);
+        }
+        Strategy::High => {
+            order.sort_by_key(|&x| std::cmp::Reverse(g.out_degree(x)));
+        }
+        Strategy::Low => {
+            order.sort_by_key(|&x| g.out_degree(x));
+        }
+    }
+
+    let e_total = g.edge_count() as f64;
+    let mut assignment = vec![0u8; v];
+    let mut part = 0usize;
+    let mut cum_edges = 0f64;
+    let mut cum_target: f64 = shares[0] * e_total;
+    for &vtx in &order {
+        // advance to the next partition once this one's edge budget is full
+        while part + 1 < shares.len() && cum_edges >= cum_target - 1e-9 {
+            part += 1;
+            cum_target += shares[part] * e_total;
+        }
+        assignment[vtx as usize] = part as u8;
+        cum_edges += g.out_degree(vtx) as f64;
+    }
+    assignment
+}
+
+/// Realized statistics of an assignment: per-partition vertex and edge
+/// counts (Figure 13's |V_cpu| plot is `vertices[0] / |V|`).
+#[derive(Debug, Clone)]
+pub struct AssignmentStats {
+    pub vertices: Vec<usize>,
+    pub edges: Vec<u64>,
+}
+
+pub fn assignment_stats(g: &CsrGraph, assignment: &[u8], parts: usize) -> AssignmentStats {
+    let mut vertices = vec![0usize; parts];
+    let mut edges = vec![0u64; parts];
+    for v in 0..g.vertex_count {
+        let p = assignment[v] as usize;
+        vertices[p] += 1;
+        edges[p] += g.out_degree(v as u32);
+    }
+    AssignmentStats { vertices, edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, uniform, RmatParams};
+    use crate::graph::CsrGraph;
+
+    fn g_rmat() -> CsrGraph {
+        CsrGraph::from_edge_list(&rmat(&RmatParams::paper(12, 42)))
+    }
+
+    #[test]
+    fn shares_respected_all_strategies() {
+        let g = g_rmat();
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            let a = assign(&g, strat, &[0.7, 0.3], 1);
+            let st = assignment_stats(&g, &a, 2);
+            let frac = st.edges[0] as f64 / g.edge_count() as f64;
+            // greedy fill overshoots by at most one vertex's degree
+            assert!(
+                (frac - 0.7).abs() < 0.05,
+                "{}: frac={frac}",
+                strat.name()
+            );
+        }
+    }
+
+    #[test]
+    fn three_way_shares() {
+        let g = g_rmat();
+        let a = assign(&g, Strategy::Rand, &[0.5, 0.25, 0.25], 3);
+        let st = assignment_stats(&g, &a, 3);
+        let fr: Vec<f64> = st.edges.iter().map(|&e| e as f64 / g.edge_count() as f64).collect();
+        assert!((fr[0] - 0.5).abs() < 0.05, "{fr:?}");
+        assert!((fr[1] - 0.25).abs() < 0.05, "{fr:?}");
+    }
+
+    #[test]
+    fn high_gives_cpu_few_vertices() {
+        // The paper's key observation (Fig 13): for the same edge share,
+        // HIGH puts orders of magnitude fewer vertices on the CPU than LOW.
+        let g = g_rmat();
+        let hi = assignment_stats(&g, &assign(&g, Strategy::High, &[0.5, 0.5], 1), 2);
+        let lo = assignment_stats(&g, &assign(&g, Strategy::Low, &[0.5, 0.5], 1), 2);
+        assert!(
+            hi.vertices[0] * 10 < lo.vertices[0],
+            "high={} low={}",
+            hi.vertices[0],
+            lo.vertices[0]
+        );
+    }
+
+    #[test]
+    fn high_low_are_degree_monotone() {
+        let g = g_rmat();
+        let a = assign(&g, Strategy::High, &[0.6, 0.4], 1);
+        let min_p0 = (0..g.vertex_count)
+            .filter(|&v| a[v] == 0)
+            .map(|v| g.out_degree(v as u32))
+            .min()
+            .unwrap();
+        let max_p1 = (0..g.vertex_count)
+            .filter(|&v| a[v] == 1)
+            .map(|v| g.out_degree(v as u32))
+            .max()
+            .unwrap();
+        assert!(min_p0 >= max_p1, "min_p0={min_p0} max_p1={max_p1}");
+    }
+
+    #[test]
+    fn rand_is_seed_deterministic() {
+        let g = g_rmat();
+        assert_eq!(
+            assign(&g, Strategy::Rand, &[0.5, 0.5], 9),
+            assign(&g, Strategy::Rand, &[0.5, 0.5], 9)
+        );
+        assert_ne!(
+            assign(&g, Strategy::Rand, &[0.5, 0.5], 9),
+            assign(&g, Strategy::Rand, &[0.5, 0.5], 10)
+        );
+    }
+
+    #[test]
+    fn single_partition_all_zero() {
+        let g = CsrGraph::from_edge_list(&uniform(8, 4, 1));
+        let a = assign(&g, Strategy::High, &[1.0], 0);
+        assert!(a.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Strategy::parse("HIGH").unwrap(), Strategy::High);
+        assert_eq!(Strategy::parse("random").unwrap(), Strategy::Rand);
+        assert!(Strategy::parse("metis").is_err());
+    }
+}

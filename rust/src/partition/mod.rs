@@ -1,0 +1,526 @@
+//! Graph partitioning for hybrid platforms (paper §4.3.1, §6).
+//!
+//! A [`PartitionedGraph`] splits a CSR graph into per-element partitions
+//! with the paper's data layout:
+//!
+//! - each partition renumbers its vertices into a dense local id space;
+//! - boundary edges do **not** store the remote vertex id — they store an
+//!   index into a *ghost slot* (the paper's outbox-buffer entry), so all
+//!   local edges to the same remote vertex share one slot: this is the
+//!   message **reduction** of §3.4, applied structurally;
+//! - per remote partition, a [`GhostTable`] records which remote-local
+//!   vertices the slots correspond to, sorted by remote id (the paper's
+//!   "inbox sorted by vertex IDs" pre-fetch optimization);
+//! - within a vertex's adjacency, local edges come first, boundary edges
+//!   last (§4.3.4 optimization ii).
+//!
+//! The per-partition **state layout** shared by CPU and accelerator
+//! elements (DESIGN.md §3):
+//!
+//! ```text
+//! [0, nv)                 real local vertices
+//! [nv, nv + n_ghost)      ghost slots, grouped by remote partition
+//! [nv + n_ghost]          dummy sink (accelerator padding edges land here)
+//! ```
+
+pub mod assignment;
+
+pub use assignment::{assign, assignment_stats, AssignmentStats, Strategy};
+
+use crate::graph::CsrGraph;
+
+/// Ghost (boundary) table towards one remote partition.
+#[derive(Debug, Clone)]
+pub struct GhostTable {
+    /// The remote partition id.
+    pub remote_part: usize,
+    /// Local ids *in the remote partition* of each ghost vertex, ascending.
+    pub remote_locals: Vec<u32>,
+    /// First state-array slot used by this table in the owning partition.
+    pub slot_base: usize,
+    /// Raw boundary edges that collapsed into this table (β numerator
+    /// before reduction, Figure 4).
+    pub boundary_edges: u64,
+}
+
+impl GhostTable {
+    pub fn len(&self) -> usize {
+        self.remote_locals.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.remote_locals.is_empty()
+    }
+}
+
+/// Local CSR of a partition. `targets` entries are **state indices**:
+/// `< nv` → real local vertex; `>= nv` → ghost slot.
+#[derive(Debug, Clone)]
+pub struct LocalCsr {
+    pub row_offsets: Vec<u64>,
+    pub targets: Vec<u32>,
+    pub weights: Option<Vec<f32>>,
+    /// Per vertex, how many of its targets are local (local-first ordering).
+    pub local_counts: Vec<u32>,
+}
+
+/// One partition of the graph plus its communication metadata.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub id: usize,
+    /// Real local vertex count.
+    pub nv: usize,
+    /// local id -> global id.
+    pub local_to_global: Vec<u32>,
+    pub csr: LocalCsr,
+    pub ghosts: Vec<GhostTable>,
+    pub n_ghost: usize,
+}
+
+impl Partition {
+    /// Length of the unified state arrays (real + ghosts + dummy).
+    #[inline]
+    pub fn state_len(&self) -> usize {
+        self.nv + self.n_ghost + 1
+    }
+
+    /// Index of the dummy sink slot.
+    #[inline]
+    pub fn dummy_index(&self) -> usize {
+        self.nv + self.n_ghost
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.csr.targets.len()
+    }
+
+    /// Neighbor state-indices of local vertex `v`.
+    #[inline]
+    pub fn targets(&self, v: u32) -> &[u32] {
+        let lo = self.csr.row_offsets[v as usize] as usize;
+        let hi = self.csr.row_offsets[v as usize + 1] as usize;
+        &self.csr.targets[lo..hi]
+    }
+
+    #[inline]
+    pub fn weights(&self, v: u32) -> &[f32] {
+        let lo = self.csr.row_offsets[v as usize] as usize;
+        let hi = self.csr.row_offsets[v as usize + 1] as usize;
+        &self.csr.weights.as_ref().expect("unweighted partition")[lo..hi]
+    }
+
+    /// Spread a global per-vertex array into this partition's state layout
+    /// (ghost + dummy slots take `fill`).
+    pub fn map_vertex_array<T: Copy>(&self, global: &[T], fill: T) -> Vec<T> {
+        let mut out = vec![fill; self.state_len()];
+        for (l, &g) in self.local_to_global.iter().enumerate() {
+            out[l] = global[g as usize];
+        }
+        out
+    }
+
+    /// Bytes of the partition graph structure (paper §4.3.3 item i).
+    pub fn graph_bytes(&self) -> u64 {
+        (self.csr.row_offsets.len() * 8
+            + self.csr.targets.len() * 4
+            + self.csr.weights.as_ref().map_or(0, |w| w.len() * 4)
+            + self.local_to_global.len() * 4) as u64
+    }
+
+    /// Bytes of the ghost/communication tables, `(vid + s) × slots` with
+    /// s = per-message state bytes (paper §4.3.3 items ii/iii).
+    pub fn comm_bytes(&self, msg_bytes: u64) -> u64 {
+        self.ghosts
+            .iter()
+            .map(|t| (4 + msg_bytes) * t.len() as u64)
+            .sum()
+    }
+}
+
+/// The partitioned graph: all partitions plus global lookup tables.
+#[derive(Debug, Clone)]
+pub struct PartitionedGraph {
+    pub parts: Vec<Partition>,
+    /// global vertex -> partition id.
+    pub part_of: Vec<u8>,
+    /// global vertex -> local id within its partition.
+    pub local_of: Vec<u32>,
+    pub global_vertex_count: usize,
+    pub total_edges: usize,
+}
+
+/// Communication-volume statistics (Figure 4).
+#[derive(Debug, Clone)]
+pub struct BetaStats {
+    /// Boundary edges (messages without reduction).
+    pub boundary_edges: u64,
+    /// Ghost slots (messages with reduction).
+    pub reduced_messages: u64,
+    pub total_edges: u64,
+}
+
+impl BetaStats {
+    /// β without reduction: fraction of edges that cross partitions.
+    pub fn beta_raw(&self) -> f64 {
+        self.boundary_edges as f64 / self.total_edges.max(1) as f64
+    }
+    /// β with reduction: messages actually sent per edge.
+    pub fn beta_reduced(&self) -> f64 {
+        self.reduced_messages as f64 / self.total_edges.max(1) as f64
+    }
+}
+
+impl PartitionedGraph {
+    /// Partition `g` according to `assignment` (one partition id per
+    /// vertex; ids must be `< nparts`).
+    ///
+    /// Within each partition, vertices are ordered by descending degree —
+    /// the partition-local analogue of the paper's degree ordering, which
+    /// also gives the accelerator's SIMD batches uniform work.
+    pub fn build(g: &CsrGraph, assignment: &[u8], nparts: usize) -> PartitionedGraph {
+        assert_eq!(assignment.len(), g.vertex_count);
+        let v_total = g.vertex_count;
+
+        // --- local id spaces -------------------------------------------------
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); nparts];
+        for v in 0..v_total as u32 {
+            members[assignment[v as usize] as usize].push(v);
+        }
+        for m in members.iter_mut() {
+            m.sort_by_key(|&x| std::cmp::Reverse(g.out_degree(x)));
+        }
+        let mut local_of = vec![0u32; v_total];
+        for m in &members {
+            for (l, &v) in m.iter().enumerate() {
+                local_of[v as usize] = l as u32;
+            }
+        }
+
+        // --- per-partition build ---------------------------------------------
+        let mut parts = Vec::with_capacity(nparts);
+        for (pid, mem) in members.iter().enumerate() {
+            let nv = mem.len();
+
+            // Pass 1: collect unique remote (part, remote_local) pairs and
+            // raw boundary counts.
+            let mut boundary: Vec<(u8, u32)> = Vec::new();
+            let mut boundary_count = vec![0u64; nparts];
+            for &gv in mem {
+                for &gd in g.neighbors(gv) {
+                    let q = assignment[gd as usize];
+                    if q as usize != pid {
+                        boundary.push((q, local_of[gd as usize]));
+                        boundary_count[q as usize] += 1;
+                    }
+                }
+            }
+            boundary.sort_unstable();
+            boundary.dedup();
+
+            // Ghost tables grouped by remote partition, slots contiguous.
+            let mut ghosts: Vec<GhostTable> = Vec::new();
+            let mut slot_base = nv;
+            let mut i = 0;
+            while i < boundary.len() {
+                let q = boundary[i].0;
+                let mut remote_locals = Vec::new();
+                while i < boundary.len() && boundary[i].0 == q {
+                    remote_locals.push(boundary[i].1);
+                    i += 1;
+                }
+                let len = remote_locals.len();
+                ghosts.push(GhostTable {
+                    remote_part: q as usize,
+                    remote_locals,
+                    slot_base,
+                    boundary_edges: boundary_count[q as usize],
+                });
+                slot_base += len;
+            }
+            let n_ghost = slot_base - nv;
+
+            // Pass 2: rewrite edges to state indices, local-first order.
+            let mut row_offsets = Vec::with_capacity(nv + 1);
+            row_offsets.push(0u64);
+            let mut targets: Vec<u32> = Vec::new();
+            let mut weights: Option<Vec<f32>> = g.weights.as_ref().map(|_| Vec::new());
+            let mut local_counts = Vec::with_capacity(nv);
+            let mut ghost_buf: Vec<(u32, f32)> = Vec::new();
+            for &gv in mem {
+                let glo = g.row_offsets[gv as usize] as usize;
+                let nbrs = g.neighbors(gv);
+                ghost_buf.clear();
+                let mut n_local = 0u32;
+                for (k, &gd) in nbrs.iter().enumerate() {
+                    let w = g.weights.as_ref().map_or(0.0, |ws| ws[glo + k]);
+                    let q = assignment[gd as usize] as usize;
+                    if q == pid {
+                        targets.push(local_of[gd as usize]);
+                        if let Some(wv) = &mut weights {
+                            wv.push(w);
+                        }
+                        n_local += 1;
+                    } else {
+                        // find the ghost table for q and the slot via
+                        // binary search over its sorted remote_locals.
+                        let t = ghosts
+                            .iter()
+                            .find(|t| t.remote_part == q)
+                            .expect("ghost table must exist");
+                        let idx = t
+                            .remote_locals
+                            .binary_search(&local_of[gd as usize])
+                            .expect("ghost entry must exist");
+                        ghost_buf.push(((t.slot_base + idx) as u32, w));
+                    }
+                }
+                for &(slot, w) in &ghost_buf {
+                    targets.push(slot);
+                    if let Some(wv) = &mut weights {
+                        wv.push(w);
+                    }
+                }
+                local_counts.push(n_local);
+                row_offsets.push(targets.len() as u64);
+            }
+
+            parts.push(Partition {
+                id: pid,
+                nv,
+                local_to_global: mem.clone(),
+                csr: LocalCsr { row_offsets, targets, weights, local_counts },
+                ghosts,
+                n_ghost,
+            });
+        }
+
+        PartitionedGraph {
+            parts,
+            part_of: assignment.to_vec(),
+            local_of,
+            global_vertex_count: v_total,
+            total_edges: g.edge_count(),
+        }
+    }
+
+    /// Convenience: assign + build in one call.
+    pub fn partition(
+        g: &CsrGraph,
+        strategy: Strategy,
+        shares: &[f64],
+        seed: u64,
+    ) -> PartitionedGraph {
+        let a = assign(g, strategy, shares, seed);
+        PartitionedGraph::build(g, &a, shares.len())
+    }
+
+    /// Figure 4 statistics.
+    pub fn beta_stats(&self) -> BetaStats {
+        let mut boundary = 0u64;
+        let mut reduced = 0u64;
+        for p in &self.parts {
+            for t in &p.ghosts {
+                boundary += t.boundary_edges;
+                reduced += t.len() as u64;
+            }
+        }
+        BetaStats {
+            boundary_edges: boundary,
+            reduced_messages: reduced,
+            total_edges: self.total_edges as u64,
+        }
+    }
+
+    /// Realized edge share per partition (the effective α of partition 0).
+    pub fn edge_shares(&self) -> Vec<f64> {
+        self.parts
+            .iter()
+            .map(|p| p.edge_count() as f64 / self.total_edges.max(1) as f64)
+            .collect()
+    }
+
+    /// Gather a per-partition-state array back into a global array.
+    pub fn collect_to_global<T: Copy + Default>(&self, locals: &[Vec<T>]) -> Vec<T> {
+        let mut out = vec![T::default(); self.global_vertex_count];
+        for (p, vals) in self.parts.iter().zip(locals) {
+            for (l, &g) in p.local_to_global.iter().enumerate() {
+                out[g as usize] = vals[l];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, with_random_weights, RmatParams};
+    use crate::graph::{CsrGraph, EdgeList};
+
+    fn small() -> CsrGraph {
+        // 0->1,0->2,1->2,2->3,3->0,3->1 ; partitions {0,1} and {2,3}
+        let mut el = EdgeList::new(4);
+        for &(s, d) in &[(0, 1), (0, 2), (1, 2), (2, 3), (3, 0), (3, 1)] {
+            el.push(s, d);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn two_way_structure() {
+        let g = small();
+        let pg = PartitionedGraph::build(&g, &[0, 0, 1, 1], 2);
+        assert_eq!(pg.parts.len(), 2);
+        let p0 = &pg.parts[0];
+        let p1 = &pg.parts[1];
+        assert_eq!(p0.nv, 2);
+        assert_eq!(p1.nv, 2);
+        // p0 boundary edges: 0->2 and 1->2 → both to the same remote vertex
+        // → ONE ghost slot (reduction!).
+        assert_eq!(p0.n_ghost, 1);
+        assert_eq!(p0.ghosts[0].boundary_edges, 2);
+        // p1 boundary: 3->0, 3->1 → two distinct remotes → two slots.
+        assert_eq!(p1.n_ghost, 2);
+        // edge counts preserved
+        assert_eq!(p0.edge_count() + p1.edge_count(), g.edge_count());
+    }
+
+    #[test]
+    fn beta_stats_small() {
+        let g = small();
+        let pg = PartitionedGraph::build(&g, &[0, 0, 1, 1], 2);
+        let b = pg.beta_stats();
+        assert_eq!(b.boundary_edges, 4); // 0->2,1->2,3->0,3->1
+        assert_eq!(b.reduced_messages, 3);
+        assert!((b.beta_raw() - 4.0 / 6.0).abs() < 1e-12);
+        assert!((b.beta_reduced() - 3.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_edges_first() {
+        let g = small();
+        let pg = PartitionedGraph::build(&g, &[0, 0, 1, 1], 2);
+        for p in &pg.parts {
+            for v in 0..p.nv as u32 {
+                let t = p.targets(v);
+                let nl = p.csr.local_counts[v as usize] as usize;
+                assert!(t[..nl].iter().all(|&x| (x as usize) < p.nv));
+                assert!(t[nl..].iter().all(|&x| (x as usize) >= p.nv));
+            }
+        }
+    }
+
+    #[test]
+    fn state_indices_in_range() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 7)));
+        let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.6, 0.4], 1);
+        for p in &pg.parts {
+            let n = p.state_len() as u32;
+            assert!(p.csr.targets.iter().all(|&t| t < n - 1)); // never dummy
+        }
+    }
+
+    #[test]
+    fn weights_preserved_across_partitioning() {
+        let mut el = rmat(&RmatParams::paper(8, 3));
+        with_random_weights(&mut el, 64, 5);
+        let g = CsrGraph::from_edge_list(&el);
+        let pg = PartitionedGraph::partition(&g, Strategy::Rand, &[0.5, 0.5], 2);
+        // total weight preserved
+        let total_g: f64 = g.weights.as_ref().unwrap().iter().map(|&w| w as f64).sum();
+        let total_p: f64 = pg
+            .parts
+            .iter()
+            .map(|p| {
+                p.csr
+                    .weights
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .map(|&w| w as f64)
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!((total_g - total_p).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ghost_tables_sorted_and_consistent() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 11)));
+        let pg = PartitionedGraph::partition(&g, Strategy::Rand, &[0.4, 0.3, 0.3], 3);
+        for p in &pg.parts {
+            let mut next_base = p.nv;
+            for t in &p.ghosts {
+                assert_eq!(t.slot_base, next_base);
+                next_base += t.len();
+                assert!(t.remote_locals.windows(2).all(|w| w[0] < w[1]));
+                let rp = &pg.parts[t.remote_part];
+                assert!(t.remote_locals.iter().all(|&l| (l as usize) < rp.nv));
+            }
+            assert_eq!(next_base, p.nv + p.n_ghost);
+        }
+    }
+
+    #[test]
+    fn round_trip_edges_through_ghosts() {
+        // Every global edge must be recoverable from the partitioned form.
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 13)));
+        let pg = PartitionedGraph::partition(&g, Strategy::Low, &[0.5, 0.5], 4);
+        let mut rebuilt: Vec<(u32, u32)> = Vec::new();
+        for p in &pg.parts {
+            for v in 0..p.nv as u32 {
+                let gv = p.local_to_global[v as usize];
+                for &t in p.targets(v) {
+                    let gd = if (t as usize) < p.nv {
+                        p.local_to_global[t as usize]
+                    } else {
+                        // resolve ghost slot → remote partition local id
+                        let tab = p
+                            .ghosts
+                            .iter()
+                            .find(|tab| {
+                                (t as usize) >= tab.slot_base
+                                    && (t as usize) < tab.slot_base + tab.len()
+                            })
+                            .unwrap();
+                        let rl = tab.remote_locals[t as usize - tab.slot_base];
+                        pg.parts[tab.remote_part].local_to_global[rl as usize]
+                    };
+                    rebuilt.push((gv, gd));
+                }
+            }
+        }
+        let mut orig: Vec<(u32, u32)> = g.iter_edges().collect();
+        orig.sort_unstable();
+        rebuilt.sort_unstable();
+        assert_eq!(orig, rebuilt);
+    }
+
+    #[test]
+    fn map_and_collect_roundtrip() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 17)));
+        let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.7, 0.3], 1);
+        let global: Vec<u32> = (0..g.vertex_count as u32).map(|v| v * 3).collect();
+        let locals: Vec<Vec<u32>> = pg
+            .parts
+            .iter()
+            .map(|p| p.map_vertex_array(&global, u32::MAX))
+            .collect();
+        let back = pg.collect_to_global(&locals);
+        assert_eq!(back, global);
+    }
+
+    #[test]
+    fn reduction_shrinks_beta_on_scale_free() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(12, 19)));
+        let pg = PartitionedGraph::partition(&g, Strategy::Rand, &[0.5, 0.5], 7);
+        let b = pg.beta_stats();
+        // random 2-way partitioning: raw β ≈ 50%, reduced far lower (Fig 4)
+        assert!((b.beta_raw() - 0.5).abs() < 0.05, "raw={}", b.beta_raw());
+        assert!(
+            b.beta_reduced() < 0.6 * b.beta_raw(),
+            "reduced={} raw={}",
+            b.beta_reduced(),
+            b.beta_raw()
+        );
+    }
+}

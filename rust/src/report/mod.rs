@@ -1,0 +1,302 @@
+//! Reporting: markdown tables, ASCII series plots, and JSON result dumps
+//! for the benchmark harness (one emitter per paper table/figure).
+
+use crate::util::json::{arr, num, obj, s, JsonValue};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A markdown table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(line, " {:<w$} |", c, w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r));
+        }
+        out
+    }
+}
+
+/// A named data series for a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Terminal-friendly figure: a set of series rendered as a data table plus
+/// an ASCII plot — the harness's stand-in for the paper's figures.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Figure {
+        Figure {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        // data table: x column + one column per series
+        let mut xs: Vec<f64> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|p| p.0))
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup();
+        let mut headers = vec![self.x_label.clone()];
+        headers.extend(self.series.iter().map(|s| s.name.clone()));
+        let _ = writeln!(out, "| {} |", headers.join(" | "));
+        let _ = writeln!(out, "|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for &x in &xs {
+            let mut cells = vec![trim_num(x)];
+            for s in &self.series {
+                let y = s
+                    .points
+                    .iter()
+                    .find(|p| (p.0 - x).abs() < 1e-9)
+                    .map(|p| trim_num(p.1))
+                    .unwrap_or_else(|| "-".into());
+                cells.push(y);
+            }
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        let _ = writeln!(out, "\n```\n{}```", self.ascii_plot(64, 16));
+        out
+    }
+
+    /// Simple multi-series scatter/line plot in a character grid.
+    pub fn ascii_plot(&self, width: usize, height: usize) -> String {
+        let pts: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.points.clone()).collect();
+        if pts.is_empty() {
+            return String::from("(no data)\n");
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        y0 = y0.min(0.0_f64.max(y0 - 0.05 * (y1 - y0).abs()));
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let mut grid = vec![vec![' '; width]; height];
+        for (si, series) in self.series.iter().enumerate() {
+            for &(x, y) in &series.points {
+                let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+                let row = height - 1 - cy.min(height - 1);
+                grid[row][cx.min(width - 1)] = marks[si % marks.len()];
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{} ({})", self.y_label, self.title);
+        for (i, row) in grid.iter().enumerate() {
+            let label = if i == 0 {
+                format!("{y1:>9.3}")
+            } else if i == height - 1 {
+                format!("{y0:>9.3}")
+            } else {
+                " ".repeat(9)
+            };
+            let _ = writeln!(out, "{label} |{}", row.iter().collect::<String>());
+        }
+        let _ = writeln!(out, "{} +{}", " ".repeat(9), "-".repeat(width));
+        let _ = writeln!(
+            out,
+            "{} {:<w$}{}",
+            " ".repeat(9),
+            format!("{x0:.2}"),
+            format!("{x1:.2}"),
+            w = width.saturating_sub(6)
+        );
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("{} {}", marks[i % marks.len()], s.name))
+            .collect();
+        let _ = writeln!(out, "{} x: {}   [{}]", " ".repeat(9), self.x_label, legend.join(", "));
+        out
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("x_label", s(&self.x_label)),
+            ("y_label", s(&self.y_label)),
+            (
+                "series",
+                arr(self
+                    .series
+                    .iter()
+                    .map(|sr| {
+                        obj(vec![
+                            ("name", s(&sr.name)),
+                            (
+                                "points",
+                                arr(sr
+                                    .points
+                                    .iter()
+                                    .map(|&(x, y)| arr(vec![num(x), num(y)]))
+                                    .collect()),
+                            ),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+fn trim_num(x: f64) -> String {
+    if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if (x - x.round()).abs() < 1e-9 {
+        format!("{x:.0}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Write markdown + JSON result files under `results/`.
+pub fn save(name: &str, markdown: &str, json: &JsonValue) -> std::io::Result<()> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{name}.md")), markdown)?;
+    std::fs::write(dir.join(format!("{name}.json")), json.render())?;
+    Ok(())
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(x: f64) -> String {
+    if x >= 1.0 {
+        format!("{x:.2}s")
+    } else if x >= 1e-3 {
+        format!("{:.2}ms", x * 1e3)
+    } else {
+        format!("{:.0}µs", x * 1e6)
+    }
+}
+
+/// Format a TEPS rate.
+pub fn fmt_teps(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} BTEPS", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1} MTEPS", x / 1e6)
+    } else {
+        format!("{:.0} KTEPS", x / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "22".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a"));
+        assert!(md.contains("| 1"));
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn figure_renders() {
+        let mut f = Figure::new("Speedup", "alpha", "speedup");
+        let mut s1 = Series::new("model");
+        s1.push(0.5, 2.0);
+        s1.push(1.0, 1.0);
+        f.series.push(s1);
+        let md = f.markdown();
+        assert!(md.contains("| alpha | model |"));
+        assert!(md.contains("```"));
+        let j = f.to_json();
+        assert!(j.get("series").is_some());
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.002), "2.00ms");
+        assert!(fmt_teps(2.5e9).contains("BTEPS"));
+        assert!(fmt_teps(3.0e6).contains("MTEPS"));
+    }
+}

@@ -1,0 +1,284 @@
+//! AOT artifact manifest.
+//!
+//! `python/compile/aot.py` lowers every (program × size-class) pair to
+//! `artifacts/<name>_n<N>_e<E>.hlo.txt` and records the marshaling contract
+//! in `artifacts/manifest.json`. This module parses and validates that
+//! contract; `runtime::PjrtRuntime` compiles entries on demand.
+//!
+//! A manifest entry must agree exactly with the Rust-side
+//! [`crate::alg::ProgramSpec`] — array dtypes and order, aux arrays,
+//! weights, scalar counts, and edge orientation — otherwise instantiation
+//! fails loudly rather than feeding a program garbage.
+
+use crate::alg::{EdgeOrientation, ProgramSpec};
+use crate::util::json::{parse_str, JsonValue};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Element type of a device array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I32,
+    F32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "i32" => Ok(DType::I32),
+            "f32" => Ok(DType::F32),
+            _ => bail!("bad dtype '{s}'"),
+        }
+    }
+}
+
+/// One AOT-compiled program at one size class.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Device array length for per-vertex state (includes ghost slots,
+    /// padding, and the dummy sink at `n_cap - 1`).
+    pub n_cap: usize,
+    /// Device edge capacity.
+    pub e_cap: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Dtypes of the mutable state arrays, in program input order.
+    pub arrays: Vec<DType>,
+    /// Dtypes of the constant aux vertex arrays.
+    pub aux: Vec<DType>,
+    pub weights: bool,
+    pub n_si32: usize,
+    pub n_sf32: usize,
+    pub orientation: EdgeOrientation,
+}
+
+impl ManifestEntry {
+    fn from_json(v: &JsonValue) -> Result<ManifestEntry> {
+        let name = v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("entry missing name"))?
+            .to_string();
+        let get_usize = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing field {k}"))
+        };
+        let dtypes = |k: &str| -> Result<Vec<DType>> {
+            v.get(k)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing array {k}"))?
+                .iter()
+                .map(|x| {
+                    DType::parse(x.as_str().ok_or_else(|| anyhow!("{name}: bad {k}"))?)
+                })
+                .collect()
+        };
+        let orientation = match v.get("orientation").and_then(|x| x.as_str()) {
+            Some("fwd") | None => EdgeOrientation::Forward,
+            Some("rev") => EdgeOrientation::Reversed,
+            Some(o) => bail!("{name}: bad orientation '{o}'"),
+        };
+        Ok(ManifestEntry {
+            n_cap: get_usize("n_cap")?,
+            e_cap: get_usize("e_cap")?,
+            file: v
+                .get("file")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?
+                .to_string(),
+            arrays: dtypes("arrays")?,
+            aux: dtypes("aux")?,
+            weights: v.get("weights").map(|x| x == &JsonValue::Bool(true)).unwrap_or(false),
+            n_si32: get_usize("si32")?,
+            n_sf32: get_usize("sf32")?,
+            orientation,
+            name,
+        })
+    }
+
+    /// Device memory this entry allocates (Table 5 accounting): state +
+    /// aux arrays at `n_cap`, edge arrays at `e_cap`.
+    pub fn device_bytes(&self) -> u64 {
+        let state = 4 * (self.arrays.len() + self.aux.len()) as u64 * self.n_cap as u64;
+        let edges = 4 * (2 + self.weights as usize) as u64 * self.e_cap as u64;
+        state + edges
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let v = parse_str(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let entries = v
+            .get("programs")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("{path:?}: missing 'programs'"))?
+            .iter()
+            .map(ManifestEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Smallest size class of `name` fitting `(n_needed, e_needed)` and the
+    /// memory budget. Mirrors the paper's GPU-memory constraint: if
+    /// nothing fits, the partition cannot be offloaded.
+    pub fn select(
+        &self,
+        name: &str,
+        n_needed: usize,
+        e_needed: usize,
+        budget_bytes: u64,
+    ) -> Result<&ManifestEntry> {
+        let mut candidates: Vec<&ManifestEntry> = self
+            .entries
+            .iter()
+            // strict `<` on n: slot n_cap-1 is the dummy sink
+            .filter(|e| e.name == name && e.n_cap > n_needed && e.e_cap >= e_needed)
+            .collect();
+        candidates.sort_by_key(|e| (e.n_cap, e.e_cap));
+        let fitting = candidates.iter().find(|e| e.device_bytes() <= budget_bytes);
+        match fitting {
+            Some(e) => Ok(e),
+            None if candidates.is_empty() => bail!(
+                "no AOT size class for program '{name}' covers n={n_needed}, e={e_needed} \
+                 (available: {:?})",
+                self.entries
+                    .iter()
+                    .filter(|e| e.name == name)
+                    .map(|e| (e.n_cap, e.e_cap))
+                    .collect::<Vec<_>>()
+            ),
+            None => bail!(
+                "program '{name}' at n={n_needed}, e={e_needed} needs {} bytes, over the \
+                 accelerator budget of {budget_bytes}",
+                candidates[0].device_bytes()
+            ),
+        }
+    }
+
+    /// Validate a Rust-side spec against a manifest entry.
+    pub fn check_spec(entry: &ManifestEntry, spec: &ProgramSpec, arrays: &[DType]) -> Result<()> {
+        if entry.arrays != arrays {
+            bail!(
+                "program '{}': state dtype mismatch rust={arrays:?} manifest={:?}",
+                entry.name,
+                entry.arrays
+            );
+        }
+        if entry.weights != spec.needs_weights {
+            bail!("program '{}': weights mismatch", entry.name);
+        }
+        if entry.n_si32 != spec.n_si32 || entry.n_sf32 != spec.n_sf32 {
+            bail!(
+                "program '{}': scalar count mismatch rust=({}, {}) manifest=({}, {})",
+                entry.name,
+                spec.n_si32,
+                spec.n_sf32,
+                entry.n_si32,
+                entry.n_sf32
+            );
+        }
+        if entry.orientation != spec.orientation {
+            bail!("program '{}': edge orientation mismatch", entry.name);
+        }
+        if entry.aux.len() != spec.aux.len() {
+            bail!("program '{}': aux count mismatch", entry.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::Pad;
+
+    fn write_manifest(json: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "totem_manifest_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        dir
+    }
+
+    const SAMPLE: &str = r#"{"version":1,"programs":[
+      {"name":"bfs","n_cap":4096,"e_cap":32768,"file":"bfs_n4096.hlo.txt",
+       "arrays":["i32"],"aux":[],"weights":false,"si32":1,"sf32":0,"orientation":"fwd"},
+      {"name":"bfs","n_cap":16384,"e_cap":131072,"file":"bfs_n16384.hlo.txt",
+       "arrays":["i32"],"aux":[],"weights":false,"si32":1,"sf32":0,"orientation":"fwd"},
+      {"name":"pagerank","n_cap":4096,"e_cap":32768,"file":"pr.hlo.txt",
+       "arrays":["f32","f32"],"aux":["f32","f32"],"weights":false,"si32":0,"sf32":2,
+       "orientation":"rev"}
+    ]}"#;
+
+    #[test]
+    fn load_and_select() {
+        let dir = write_manifest(SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.select("bfs", 4000, 30000, u64::MAX).unwrap();
+        assert_eq!(e.n_cap, 4096);
+        // n == n_cap must NOT fit (dummy slot)
+        let e = m.select("bfs", 4096, 100, u64::MAX).unwrap();
+        assert_eq!(e.n_cap, 16384);
+        assert!(m.select("bfs", 100_000, 1, u64::MAX).is_err());
+        assert!(m.select("nope", 1, 1, u64::MAX).is_err());
+    }
+
+    #[test]
+    fn budget_respected() {
+        let dir = write_manifest(SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        // tiny budget: nothing fits
+        assert!(m.select("bfs", 100, 100, 1024).is_err());
+    }
+
+    #[test]
+    fn device_bytes_formula() {
+        let dir = write_manifest(SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let e = &m.entries[0];
+        assert_eq!(e.device_bytes(), (4 * 4096 + 2 * 4 * 32768) as u64);
+    }
+
+    #[test]
+    fn spec_validation() {
+        let dir = write_manifest(SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let spec = ProgramSpec {
+            name: "bfs",
+            arrays: vec![0],
+            pads: vec![Pad::I32(0)],
+            aux: vec![],
+            needs_weights: false,
+            n_si32: 1,
+            n_sf32: 0,
+            orientation: EdgeOrientation::Forward,
+        };
+        Manifest::check_spec(&m.entries[0], &spec, &[DType::I32]).unwrap();
+        assert!(Manifest::check_spec(&m.entries[0], &spec, &[DType::F32]).is_err());
+        let mut bad = spec.clone();
+        bad.n_si32 = 0;
+        assert!(Manifest::check_spec(&m.entries[0], &bad, &[DType::I32]).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_message() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

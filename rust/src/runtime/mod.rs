@@ -1,0 +1,371 @@
+//! PJRT runtime — the accelerator processing element.
+//!
+//! Loads AOT artifacts (HLO text lowered by `python/compile/aot.py` from
+//! JAX/Pallas step functions), compiles them once per size class on the
+//! PJRT CPU client, and executes them against partition state.
+//!
+//! Data movement model (mirrors a discrete GPU; DESIGN.md §2/§6):
+//! - **edge arrays and aux vertex arrays are device-resident** — uploaded
+//!   once at instantiation, like the paper's GPU-resident CSR;
+//! - **state arrays cross the boundary every superstep** (upload before
+//!   execute, readback after) — this measured copy is the PCIe-transfer
+//!   analogue and is attributed to the communication phase;
+//! - scalars (the BSP round counter etc.) are tiny per-step uploads.
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod manifest;
+
+pub use manifest::{DType, Manifest, ManifestEntry};
+
+use crate::alg::{EdgeOrientation, Pad, ProgramSpec};
+use crate::engine::state::{AlgState, StateArray};
+use crate::partition::Partition;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Shared PJRT client + compiled-program cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, entry: &ManifestEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", entry.file))?,
+        );
+        self.cache.insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Bind a partition to an accelerator program: select the size class,
+    /// compile, and upload the device-resident arrays.
+    pub fn instantiate(
+        &mut self,
+        prog: &ProgramSpec,
+        part: &Partition,
+        state: &AlgState,
+        budget_bytes: u64,
+    ) -> Result<AccelPartition> {
+        let dtypes: Vec<DType> = prog
+            .arrays
+            .iter()
+            .map(|&i| match &state.arrays[i] {
+                StateArray::I32(_) => DType::I32,
+                StateArray::F32(_) => DType::F32,
+            })
+            .collect();
+        let entry = self
+            .manifest
+            .select(prog.name, part.state_len(), part.edge_count(), budget_bytes)?
+            .clone();
+        Manifest::check_spec(&entry, prog, &dtypes)?;
+        let exe = self.compile(&entry)?;
+
+        let n_cap = entry.n_cap;
+        let e_cap = entry.e_cap;
+        let dummy = (n_cap - 1) as i32;
+
+        // --- COO edge arrays, padded with dummy self-edges -----------------
+        let ne = part.edge_count();
+        if ne > e_cap {
+            bail!("partition edges {ne} exceed class e_cap {e_cap}");
+        }
+        let mut src = vec![dummy; e_cap];
+        let mut dst = vec![dummy; e_cap];
+        let mut wgt = if entry.weights { Some(vec![0f32; e_cap]) } else { None };
+        let mut k = 0usize;
+        for v in 0..part.nv as u32 {
+            let ts = part.targets(v);
+            let lo = part.csr.row_offsets[v as usize] as usize;
+            for (j, &t) in ts.iter().enumerate() {
+                match prog.orientation {
+                    EdgeOrientation::Forward => {
+                        src[k] = v as i32;
+                        dst[k] = t as i32;
+                    }
+                    EdgeOrientation::Reversed => {
+                        src[k] = t as i32;
+                        dst[k] = v as i32;
+                    }
+                }
+                if let Some(wv) = &mut wgt {
+                    wv[k] = part.csr.weights.as_ref().expect("weighted program")[lo + j];
+                }
+                k += 1;
+            }
+        }
+
+        let src_buf = self
+            .client
+            .buffer_from_host_buffer(&src, &[e_cap], None)
+            .map_err(|e| anyhow!("edge upload: {e}"))?;
+        let dst_buf = self
+            .client
+            .buffer_from_host_buffer(&dst, &[e_cap], None)
+            .map_err(|e| anyhow!("edge upload: {e}"))?;
+        let wgt_buf = match &wgt {
+            Some(w) => Some(
+                self.client
+                    .buffer_from_host_buffer(w, &[e_cap], None)
+                    .map_err(|e| anyhow!("weight upload: {e}"))?,
+            ),
+            None => None,
+        };
+
+        // --- aux vertex arrays (constant), padded to n_cap -----------------
+        let mut aux_bufs = Vec::with_capacity(prog.aux.len());
+        for (&ai, &adt) in prog.aux.iter().zip(&entry.aux) {
+            let buf = match (&state.aux[ai], adt) {
+                (StateArray::I32(v), DType::I32) => {
+                    let mut p = vec![0i32; n_cap];
+                    p[..v.len()].copy_from_slice(v);
+                    self.client
+                        .buffer_from_host_buffer(&p, &[n_cap], None)
+                        .map_err(|e| anyhow!("aux upload: {e}"))?
+                }
+                (StateArray::F32(v), DType::F32) => {
+                    let mut p = vec![0f32; n_cap];
+                    p[..v.len()].copy_from_slice(v);
+                    self.client
+                        .buffer_from_host_buffer(&p, &[n_cap], None)
+                        .map_err(|e| anyhow!("aux upload: {e}"))?
+                }
+                _ => bail!("aux dtype mismatch for program '{}'", entry.name),
+            };
+            aux_bufs.push(buf);
+        }
+
+        let graph_bytes = (2 + entry.weights as usize) as u64 * 4 * e_cap as u64
+            + 4 * aux_bufs.len() as u64 * n_cap as u64;
+        let state_bytes = 4 * prog.arrays.len() as u64 * n_cap as u64;
+
+        // Per-dtype pad values must be uniform within a program so the
+        // upload scratch's padding region can be written once and reused
+        // across supersteps (perf pass §Perf-L3-2). This holds for every
+        // algorithm here; assert it to keep future programs honest.
+        let mut pad_i32 = 0i32;
+        let mut pad_f32 = 0f32;
+        for (k, &ai) in prog.arrays.iter().enumerate() {
+            match (&state.arrays[ai], prog.pads[k]) {
+                (StateArray::I32(_), Pad::I32(p)) => pad_i32 = p,
+                (StateArray::F32(_), Pad::F32(p)) => pad_f32 = p,
+                _ => bail!("pad/dtype mismatch in '{}' array {k}", prog.name),
+            }
+        }
+        for (k, &ai) in prog.arrays.iter().enumerate() {
+            match (&state.arrays[ai], prog.pads[k]) {
+                (StateArray::I32(_), Pad::I32(p)) if p != pad_i32 => {
+                    bail!("'{}': non-uniform i32 pads", prog.name)
+                }
+                (StateArray::F32(_), Pad::F32(p)) if p != pad_f32 => {
+                    bail!("'{}': non-uniform f32 pads", prog.name)
+                }
+                _ => {}
+            }
+        }
+
+        Ok(AccelPartition {
+            client: self.client.clone(),
+            exe,
+            spec: prog.clone(),
+            n_cap,
+            state_len: part.state_len(),
+            src_buf,
+            dst_buf,
+            wgt_buf,
+            aux_bufs,
+            graph_bytes,
+            state_bytes,
+            scratch_i32: vec![pad_i32; n_cap],
+            scratch_f32: vec![pad_f32; n_cap],
+        })
+    }
+}
+
+/// Outcome of one accelerator superstep.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccelStepOut {
+    pub changed: bool,
+    pub upload_secs: f64,
+    pub exec_secs: f64,
+    pub readback_secs: f64,
+    pub transfer_bytes: u64,
+}
+
+/// A partition bound to an accelerator program with device-resident edges.
+pub struct AccelPartition {
+    client: xla::PjRtClient,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    spec: ProgramSpec,
+    n_cap: usize,
+    state_len: usize,
+    src_buf: xla::PjRtBuffer,
+    dst_buf: xla::PjRtBuffer,
+    wgt_buf: Option<xla::PjRtBuffer>,
+    aux_bufs: Vec<xla::PjRtBuffer>,
+    graph_bytes: u64,
+    state_bytes: u64,
+    scratch_i32: Vec<i32>,
+    scratch_f32: Vec<f32>,
+}
+
+impl AccelPartition {
+    pub fn graph_bytes(&self) -> u64 {
+        self.graph_bytes
+    }
+    pub fn state_bytes(&self) -> u64 {
+        self.state_bytes
+    }
+    pub fn n_cap(&self) -> usize {
+        self.n_cap
+    }
+
+    /// Execute one superstep: upload state, run the AOT program, read the
+    /// new state back into `state`.
+    pub fn step(
+        &mut self,
+        state: &mut AlgState,
+        si32: &[i32],
+        sf32: &[f32],
+    ) -> Result<AccelStepOut> {
+        if si32.len() != self.spec.n_si32 || sf32.len() != self.spec.n_sf32 {
+            bail!("scalar count mismatch for '{}'", self.spec.name);
+        }
+        let n_cap = self.n_cap;
+        let mut out = AccelStepOut::default();
+
+        // --- upload state arrays -------------------------------------------
+        let t0 = Instant::now();
+        let mut state_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(self.spec.arrays.len());
+        for (k, &ai) in self.spec.arrays.iter().enumerate() {
+            // scratch padding region is prefilled at instantiation and
+            // preserved by readback (kernels keep padding inert), so only
+            // the live prefix is copied per superstep.
+            let buf = match &state.arrays[ai] {
+                StateArray::I32(v) => {
+                    self.scratch_i32[..v.len()].copy_from_slice(v);
+                    self.client
+                        .buffer_from_host_buffer(&self.scratch_i32, &[n_cap], None)
+                        .map_err(|e| anyhow!("state upload: {e}"))?
+                }
+                StateArray::F32(v) => {
+                    self.scratch_f32[..v.len()].copy_from_slice(v);
+                    self.client
+                        .buffer_from_host_buffer(&self.scratch_f32, &[n_cap], None)
+                        .map_err(|e| anyhow!("state upload: {e}"))?
+                }
+            };
+            let _ = k;
+            state_bufs.push(buf);
+            out.transfer_bytes += 4 * n_cap as u64;
+        }
+        let mut scalar_bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        if self.spec.n_si32 > 0 {
+            scalar_bufs.push(
+                self.client
+                    .buffer_from_host_buffer(si32, &[si32.len()], None)
+                    .map_err(|e| anyhow!("scalar upload: {e}"))?,
+            );
+            out.transfer_bytes += 4 * si32.len() as u64;
+        }
+        if self.spec.n_sf32 > 0 {
+            scalar_bufs.push(
+                self.client
+                    .buffer_from_host_buffer(sf32, &[sf32.len()], None)
+                    .map_err(|e| anyhow!("scalar upload: {e}"))?,
+            );
+            out.transfer_bytes += 4 * sf32.len() as u64;
+        }
+        out.upload_secs = t0.elapsed().as_secs_f64();
+
+        // --- execute --------------------------------------------------------
+        let t1 = Instant::now();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        args.extend(state_bufs.iter());
+        args.extend(self.aux_bufs.iter());
+        args.push(&self.src_buf);
+        args.push(&self.dst_buf);
+        if let Some(w) = &self.wgt_buf {
+            args.push(w);
+        }
+        args.extend(scalar_bufs.iter());
+        let results = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("executing '{}': {e}", self.spec.name))?;
+        out.exec_secs = t1.elapsed().as_secs_f64();
+
+        // --- readback -------------------------------------------------------
+        let t2 = Instant::now();
+        let mut tuple = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose: {e}"))?;
+        if parts.len() != self.spec.arrays.len() + 1 {
+            bail!(
+                "program '{}' returned {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.arrays.len() + 1
+            );
+        }
+        for (k, &ai) in self.spec.arrays.iter().enumerate() {
+            // copy_raw_to into the persistent scratch: no per-step Vec
+            // allocation (perf pass §Perf-L3-2).
+            match &mut state.arrays[ai] {
+                StateArray::I32(v) => {
+                    parts[k]
+                        .copy_raw_to(&mut self.scratch_i32)
+                        .map_err(|e| anyhow!("readback array {k}: {e}"))?;
+                    v.copy_from_slice(&self.scratch_i32[..self.state_len]);
+                }
+                StateArray::F32(v) => {
+                    parts[k]
+                        .copy_raw_to(&mut self.scratch_f32)
+                        .map_err(|e| anyhow!("readback array {k}: {e}"))?;
+                    v.copy_from_slice(&self.scratch_f32[..self.state_len]);
+                }
+            }
+            out.transfer_bytes += 4 * n_cap as u64;
+        }
+        let changed: i32 = parts[self.spec.arrays.len()]
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("changed flag: {e}"))?
+            .first()
+            .copied()
+            .unwrap_or(0);
+        out.changed = changed != 0;
+        out.readback_secs = t2.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}

@@ -1,0 +1,194 @@
+//! Statistics used by the evaluation harness.
+//!
+//! The paper reports: averages over 64 runs with 95% confidence intervals
+//! (§5 "Data Collection"), Pearson's correlation coefficient between
+//! model-predicted and achieved speedups (Figure 7), and average error
+//! (Table 3). This module implements exactly those.
+
+/// Arithmetic mean. Empty input returns 0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Half-width of the 95% confidence interval of the mean, using the normal
+/// approximation (z = 1.96). The paper plots these as error bars; with 64
+/// samples the normal approximation matches Student-t to <2%.
+pub fn ci95(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * stddev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Pearson's correlation coefficient between paired samples.
+///
+/// Returns 0 when either side has zero variance (degenerate but defined —
+/// the paper's Figure 7 reports r in [-1, 1]).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Average signed relative error of `predicted` w.r.t. `achieved`, in
+/// percent — Table 3's "Avg. Err." column. Positive means the model
+/// under-predicts (achieved > predicted), matching the paper's sign
+/// convention (BFS rows are positive because offloading also improves the
+/// CPU's cache behaviour, which the model misses).
+pub fn avg_error_pct(predicted: &[f64], achieved: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), achieved.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let errs: Vec<f64> = predicted
+        .iter()
+        .zip(achieved)
+        .map(|(p, a)| if *p != 0.0 { (a - p) / p * 100.0 } else { 0.0 })
+        .collect();
+    mean(&errs)
+}
+
+/// Simple linear regression y = a + b x; returns (a, b).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return (mean(ys), 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for i in 0..n {
+        sxy += (xs[i] - mx) * (ys[i] - my);
+        sxx += (xs[i] - mx) * (xs[i] - mx);
+    }
+    if sxx == 0.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Median (copies and sorts; fine at harness scale).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Geometric mean (used when summarizing speedups across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_no_correlation_degenerate() {
+        let xs = [1.0, 1.0, 1.0];
+        let ys = [2.0, 5.0, 9.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn pearson_known_value() {
+        let xs = [1.0, 2.0, 3.0, 5.0, 8.0];
+        let ys = [0.11, 0.12, 0.13, 0.15, 0.18];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9); // exactly linear
+    }
+
+    #[test]
+    fn avg_error_sign_convention() {
+        // model predicts 1.0, we achieve 1.1 => +10% (under-prediction)
+        assert!((avg_error_pct(&[1.0], &[1.1]) - 10.0).abs() < 1e-9);
+        assert!((avg_error_pct(&[2.0], &[1.5]) + 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..16).map(|i| (i % 4) as f64).collect();
+        let b: Vec<f64> = (0..64).map(|i| (i % 4) as f64).collect();
+        assert!(ci95(&b) < ci95(&a));
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9 && (b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,177 @@
+//! Tiny CLI argument parser (no clap in the offline dependency set).
+//!
+//! Supports the shapes the `totem` binary and the bench harnesses need:
+//! `--key value`, `--key=value`, boolean `--flag`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" separator: rest is positional
+                    out.positional.extend(it);
+                    break;
+                }
+                let (key, val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // consume the next token as the value unless it looks
+                        // like another flag; then treat as boolean.
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.seen.push(key.clone());
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected integer, got '{v}' ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected integer, got '{v}' ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected number, got '{v}' ({e})")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected bool, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of f64, e.g. `--alphas 0.5,0.6,0.7`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|e| format!("--{key}: bad element '{x}' ({e})"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["run", "--alg", "bfs", "--alpha=0.7", "--verbose", "--n", "42"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("alg"), Some("bfs"));
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 0.7);
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.str_or("alg", "bfs"), "bfs");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert!(!a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--offset=-3"]);
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.0);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--alphas", "0.5, 0.6,0.7", "--algs", "bfs,pagerank"]);
+        assert_eq!(a.f64_list_or("alphas", &[]).unwrap(), vec![0.5, 0.6, 0.7]);
+        assert_eq!(a.str_list_or("algs", &[]), vec!["bfs", "pagerank"]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

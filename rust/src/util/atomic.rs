@@ -1,0 +1,143 @@
+//! Atomic min / add helpers for the CPU compute kernels.
+//!
+//! The paper's CPU kernels use `atomicSet` / `atomicMin` / `atomicAdd`
+//! (Figures 11, 18, 20). Rust's standard atomics cover integer min
+//! (`fetch_min`) but not floating point, so f32 min/add are implemented as
+//! compare-exchange loops over the bit pattern — the standard lock-free
+//! recipe. All operations use `Relaxed` ordering: the BSP model inserts a
+//! full barrier between the compute and communication phases, so only
+//! atomicity (not ordering) is required within a phase.
+
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+/// Atomically `*a = min(*a, v)`; returns the previous value.
+#[inline]
+pub fn atomic_min_i32(a: &AtomicI32, v: i32) -> i32 {
+    a.fetch_min(v, Ordering::Relaxed)
+}
+
+/// Atomically `*a = min(*a, v)` for u32; returns the previous value.
+#[inline]
+pub fn atomic_min_u32(a: &AtomicU32, v: u32) -> u32 {
+    a.fetch_min(v, Ordering::Relaxed)
+}
+
+/// Atomically `*a = min(*a, v)` for f32 stored as bits; returns previous.
+///
+/// NaN-free inputs assumed (graph distances / ranks never produce NaN in
+/// our kernels; debug_assert guards it).
+#[inline]
+pub fn atomic_min_f32(a: &AtomicU32, v: f32) -> f32 {
+    debug_assert!(!v.is_nan());
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f32::from_bits(cur);
+        if cur_f <= v {
+            return cur_f;
+        }
+        match a.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return cur_f,
+            Err(next) => cur = next,
+        }
+    }
+}
+
+/// Atomically `*a += v` for f32 stored as bits; returns previous.
+#[inline]
+pub fn atomic_add_f32(a: &AtomicU32, v: f32) -> f32 {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f32::from_bits(cur);
+        let new = cur_f + v;
+        match a.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return cur_f,
+            Err(next) => cur = next,
+        }
+    }
+}
+
+/// View a `&mut [f32]` as atomic u32 bit cells. Sound because `AtomicU32`
+/// has the same size/alignment as `f32` and the mutable borrow guarantees
+/// exclusive ownership of the region for the duration.
+#[inline]
+pub fn as_atomic_f32_cells(xs: &mut [f32]) -> &[AtomicU32] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicU32, xs.len()) }
+}
+
+/// View a `&mut [i32]` as atomic i32 cells.
+#[inline]
+pub fn as_atomic_i32_cells(xs: &mut [i32]) -> &[AtomicI32] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicI32, xs.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn f32_min_sequential() {
+        let a = AtomicU32::new(10.0f32.to_bits());
+        atomic_min_f32(&a, 12.0);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 10.0);
+        atomic_min_f32(&a, 3.5);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3.5);
+    }
+
+    #[test]
+    fn f32_add_sequential() {
+        let a = AtomicU32::new(1.0f32.to_bits());
+        atomic_add_f32(&a, 2.5);
+        atomic_add_f32(&a, -0.5);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3.0);
+    }
+
+    #[test]
+    fn f32_add_concurrent_sums_correctly() {
+        let a = AtomicU32::new(0.0f32.to_bits());
+        let aref = &a;
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        atomic_add_f32(aref, 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 4000.0);
+    }
+
+    #[test]
+    fn f32_min_concurrent_finds_min() {
+        let a = AtomicU32::new(f32::INFINITY.to_bits());
+        let aref = &a;
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                scope.spawn(move || {
+                    for i in 0..1000u32 {
+                        atomic_min_f32(aref, (t * 1000 + i) as f32);
+                    }
+                });
+            }
+        });
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 0.0);
+    }
+
+    #[test]
+    fn cell_views_alias_storage() {
+        let mut xs = vec![1.0f32, 2.0, 3.0];
+        {
+            let cells = as_atomic_f32_cells(&mut xs);
+            atomic_add_f32(&cells[1], 10.0);
+        }
+        assert_eq!(xs, vec![1.0, 12.0, 3.0]);
+
+        let mut ys = vec![5i32, 6];
+        {
+            let cells = as_atomic_i32_cells(&mut ys);
+            atomic_min_i32(&cells[0], 2);
+        }
+        assert_eq!(ys, vec![2, 6]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Self-contained utility layer: PRNG, JSON, CLI args, atomics, scoped
+//! parallelism, timers. The offline build environment vendors only the
+//! `xla` crate closure, so everything here is hand-rolled (see DESIGN.md §6).
+
+pub mod args;
+pub mod atomic;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+/// Format a byte count human-readably (used by reports and Table 5).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut x = bytes as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes}B")
+    } else {
+        format!("{x:.1}{}", UNITS[u])
+    }
+}
+
+/// Format a count with thousands separators, e.g. 1234567 -> "1,234,567".
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(7), "7");
+        assert_eq!(fmt_count(1234), "1,234");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+}

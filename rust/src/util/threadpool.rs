@@ -1,0 +1,124 @@
+//! Scoped data-parallel helpers for the CPU processing element.
+//!
+//! The paper's CPU kernels are OpenMP `parallel for` loops over the
+//! partition's vertices (Figure 11). We reproduce that with
+//! `std::thread::scope` and static chunking — no external crate needed.
+//!
+//! The thread count models the paper's `xS` configurations (CPU sockets):
+//! `1S` = half the configured parallelism, `2S` = full. On this container
+//! (1 core) the structure is exercised but wall-clock parallel speedup is
+//! not observable; see DESIGN.md §2.
+
+/// Run `f(thread_idx, lo, hi)` over `0..n` split into `threads` contiguous
+/// chunks. With `threads == 1` the call is inlined on the caller thread
+/// (no spawn overhead) — the common case on this testbed.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n < 2 * threads {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(t, lo, hi));
+        }
+    });
+}
+
+/// Map-reduce over `0..n`: each thread folds its chunk with `fold`, results
+/// combined with `combine`. Used for "finished" voting and counters.
+pub fn parallel_reduce<T, F, C>(n: usize, threads: usize, init: T, fold: F, combine: C) -> T
+where
+    T: Send + Clone,
+    F: Fn(usize, usize, T) -> T + Sync,
+    C: Fn(T, T) -> T,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n < 2 * threads {
+        return fold(0, n, init);
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials: Vec<Option<T>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fold = &fold;
+            let seed = init.clone();
+            handles.push(scope.spawn(move || fold(lo, hi, seed)));
+        }
+        for h in handles {
+            partials.push(Some(h.join().expect("worker panicked")));
+        }
+    });
+    let mut acc = init;
+    for p in partials.into_iter().flatten() {
+        acc = combine(acc, p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        for threads in [1, 2, 3, 7] {
+            for n in [0usize, 1, 5, 100, 101] {
+                let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                parallel_chunks(n, threads, |_, lo, hi| {
+                    for i in lo..hi {
+                        counts[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    counts.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                    "n={n} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_sums() {
+        for threads in [1, 2, 4] {
+            let total = parallel_reduce(
+                1000,
+                threads,
+                0u64,
+                |lo, hi, acc| acc + (lo..hi).map(|x| x as u64).sum::<u64>(),
+                |a, b| a + b,
+            );
+            assert_eq!(total, 999 * 1000 / 2);
+        }
+    }
+
+    #[test]
+    fn reduce_all_vote() {
+        // the "finished" vote: AND across chunks
+        let finished = parallel_reduce(
+            64,
+            4,
+            true,
+            |lo, hi, acc| acc && (lo..hi).all(|i| i != 13),
+            |a, b| a && b,
+        );
+        assert!(!finished);
+    }
+}

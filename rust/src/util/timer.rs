@@ -1,0 +1,78 @@
+//! Phase timing utilities.
+//!
+//! The engine attributes every nanosecond of a BSP superstep to a phase
+//! (per-partition compute, transfer, scatter). These are thin wrappers over
+//! `std::time::Instant` that accumulate into named buckets.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Stopwatch {
+    total: Duration,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, accumulate, and return its value.
+    #[inline]
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total += t0.elapsed();
+        out
+    }
+
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.total = Duration::ZERO;
+    }
+}
+
+/// Measure one closure's duration in seconds along with its value.
+#[inline]
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "secs={}", sw.secs());
+        sw.reset();
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, dt) = timed(|| 7u32);
+        assert_eq!(v, 7);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! End-to-end hybrid integration: CPU partition + accelerator partition(s)
+//! executing AOT JAX/Pallas programs through PJRT, checked against the
+//! whole-graph baseline. Requires `make artifacts`; tests skip (with a
+//! loud message) if the manifest is missing so `cargo test` stays green on
+//! a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp};
+use totem::baseline;
+use totem::engine::{self, EngineConfig};
+use totem::graph::generator::{rmat, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::partition::Strategy;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        None
+    }
+}
+
+fn hybrid_cfg(accels: usize, alpha: f64, strategy: Strategy, dir: &Path) -> EngineConfig {
+    EngineConfig::hybrid(accels, alpha, strategy).with_artifacts(dir)
+}
+
+#[test]
+fn bfs_hybrid_matches_baseline() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 5)));
+    let expect = baseline::bfs(&g, 0);
+    for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+        let mut alg = Bfs::new(0);
+        let r = engine::run(&g, &mut alg, &hybrid_cfg(1, 0.7, strat, &dir)).unwrap();
+        assert_eq!(r.output.as_i32(), expect.as_slice(), "strategy {strat:?}");
+        assert!(r.metrics.accel_transfer_bytes[1] > 0, "accelerator must have run");
+    }
+}
+
+#[test]
+fn sssp_hybrid_matches_baseline() {
+    let Some(dir) = artifacts() else { return };
+    let mut el = rmat(&RmatParams::paper(10, 7));
+    with_random_weights(&mut el, 64, 8);
+    let g = CsrGraph::from_edge_list(&el);
+    let expect = baseline::sssp(&g, 3);
+    let mut alg = Sssp::new(3);
+    let r = engine::run(&g, &mut alg, &hybrid_cfg(1, 0.6, Strategy::High, &dir)).unwrap();
+    assert_eq!(r.output.as_f32(), expect.as_slice());
+}
+
+#[test]
+fn cc_hybrid_matches_baseline() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 9)));
+    let expect = baseline::cc(&g);
+    let mut alg = Cc::new();
+    let r = engine::run(&g, &mut alg, &hybrid_cfg(1, 0.6, Strategy::Rand, &dir)).unwrap();
+    assert_eq!(r.output.as_i32(), expect.as_slice());
+}
+
+#[test]
+fn pagerank_hybrid_matches_baseline() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 11)));
+    let expect = baseline::pagerank(&g, 5);
+    for strat in [Strategy::High, Strategy::Low] {
+        let mut alg = Pagerank::new(5);
+        let r = engine::run(&g, &mut alg, &hybrid_cfg(1, 0.7, strat, &dir)).unwrap();
+        for (v, (a, b)) in r.output.as_f32().iter().zip(&expect).enumerate() {
+            let tol = 1e-4 * b.abs().max(1e-6);
+            assert!((a - b).abs() <= tol.max(1e-7), "{strat:?} v{v}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn bc_hybrid_matches_baseline() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 13)));
+    let expect = baseline::bc(&g, 1);
+    let mut alg = Bc::new(1);
+    let r = engine::run(&g, &mut alg, &hybrid_cfg(1, 0.6, Strategy::High, &dir)).unwrap();
+    for (v, (a, b)) in r.output.as_f32().iter().zip(&expect).enumerate() {
+        let tol = 1e-3 * b.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "v{v}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn two_accelerators_match() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 15)));
+    let expect = baseline::bfs(&g, 0);
+    let mut alg = Bfs::new(0);
+    let r = engine::run(&g, &mut alg, &hybrid_cfg(2, 0.5, Strategy::High, &dir)).unwrap();
+    assert_eq!(r.output.as_i32(), expect.as_slice());
+    assert!(r.metrics.accel_transfer_bytes[1] > 0);
+    assert!(r.metrics.accel_transfer_bytes[2] > 0);
+}
+
+#[test]
+fn memory_budget_rejects_oversized_partition() {
+    let Some(dir) = artifacts() else { return };
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 17)));
+    let mut cfg = hybrid_cfg(1, 0.5, Strategy::High, &dir);
+    cfg.accel_memory_budget = 1024; // 1KB "GPU"
+    let mut alg = Bfs::new(0);
+    let err = match engine::run(&g, &mut alg, &cfg) {
+        Ok(_) => panic!("1KB accelerator budget must be rejected"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("does not fit"), "unexpected error: {msg}");
+}

@@ -1,0 +1,158 @@
+//! Failure injection: the engine and runtime must fail cleanly (typed
+//! errors, actionable messages) rather than panic or silently corrupt,
+//! for every operator mistake we could think of.
+
+use std::path::PathBuf;
+use totem::alg::{bfs::Bfs, sssp::Sssp};
+use totem::engine::{self, EngineConfig};
+use totem::graph::generator::{rmat, RmatParams};
+use totem::graph::{io as gio, CsrGraph};
+use totem::partition::Strategy;
+use totem::runtime::{Manifest, PjrtRuntime};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("totem_fail_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn small_graph() -> CsrGraph {
+    CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 1)))
+}
+
+#[test]
+fn missing_artifacts_directory() {
+    let g = small_graph();
+    let cfg = EngineConfig::hybrid(1, 0.7, Strategy::High)
+        .with_artifacts("/nonexistent/artifacts");
+    let mut alg = Bfs::new(0);
+    let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "got: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json() {
+    let d = tmpdir("badjson");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn manifest_with_missing_fields() {
+    let d = tmpdir("fields");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"programs":[{"name":"bfs"}]}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    assert!(format!("{err:#}").contains("bfs"));
+}
+
+#[test]
+fn corrupt_hlo_file_fails_at_compile() {
+    let d = tmpdir("badhlo");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,"programs":[
+            {"name":"bfs","n_cap":65536,"e_cap":1048576,"file":"bfs.hlo.txt",
+             "arrays":["i32"],"aux":[],"weights":false,"si32":1,"sf32":0,
+             "orientation":"fwd"}]}"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("bfs.hlo.txt"), "HloModule garbage !!!").unwrap();
+    let g = small_graph();
+    let cfg = EngineConfig::hybrid(1, 0.7, Strategy::High).with_artifacts(&d);
+    let mut alg = Bfs::new(0);
+    assert!(engine::run(&g, &mut alg, &cfg).map(|_| ()).is_err());
+}
+
+#[test]
+fn manifest_spec_mismatch_is_rejected() {
+    // declare bfs with f32 state: must be rejected before any execution
+    let d = tmpdir("mismatch");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,"programs":[
+            {"name":"bfs","n_cap":65536,"e_cap":1048576,"file":"bfs.hlo.txt",
+             "arrays":["f32"],"aux":[],"weights":false,"si32":1,"sf32":0,
+             "orientation":"fwd"}]}"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("bfs.hlo.txt"), "unused").unwrap();
+    let g = small_graph();
+    let cfg = EngineConfig::hybrid(1, 0.7, Strategy::High).with_artifacts(&d);
+    let mut alg = Bfs::new(0);
+    let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("dtype mismatch"), "{err:#}");
+}
+
+#[test]
+fn no_fitting_size_class() {
+    let d = tmpdir("tiny");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,"programs":[
+            {"name":"bfs","n_cap":16,"e_cap":16,"file":"bfs.hlo.txt",
+             "arrays":["i32"],"aux":[],"weights":false,"si32":1,"sf32":0,
+             "orientation":"fwd"}]}"#,
+    )
+    .unwrap();
+    let g = small_graph();
+    let cfg = EngineConfig::hybrid(1, 0.5, Strategy::High).with_artifacts(&d);
+    let mut alg = Bfs::new(0);
+    let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("size class"), "{err:#}");
+}
+
+#[test]
+fn weighted_algorithm_on_unweighted_graph() {
+    let g = small_graph(); // no weights
+    let mut alg = Sssp::new(0);
+    let err = engine::run(&g, &mut alg, &EngineConfig::host_only(1))
+        .map(|_| ())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("weights"));
+}
+
+#[test]
+fn runtime_rejects_unknown_program() {
+    let d = tmpdir("unknown");
+    std::fs::write(d.join("manifest.json"), r#"{"version":1,"programs":[]}"#).unwrap();
+    let rt = PjrtRuntime::new(&d);
+    // empty manifest loads fine; selection must fail with the program name
+    let rt = rt.unwrap();
+    let err = rt.manifest().select("nope", 10, 10, u64::MAX).unwrap_err();
+    assert!(format!("{err:#}").contains("nope"));
+}
+
+#[test]
+fn graph_io_rejects_out_of_range_vertices() {
+    let d = tmpdir("io");
+    let p = d.join("bad.el");
+    std::fs::write(&p, "p 2 1\n0 5\n").unwrap();
+    assert!(gio::read_edge_list(&p).is_err());
+}
+
+#[test]
+fn engine_source_out_of_partition_is_fine() {
+    // a source vertex with zero degree: run must terminate immediately
+    let g = small_graph();
+    let isolated = (0..g.vertex_count as u32)
+        .find(|&v| g.out_degree(v) == 0)
+        .unwrap_or(0);
+    let mut alg = Bfs::new(isolated);
+    let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+    assert_eq!(r.output.as_i32()[isolated as usize], 0);
+}
+
+#[test]
+fn zero_share_partition_is_empty_but_valid() {
+    let g = small_graph();
+    let cfg = EngineConfig::cpu_partitions(&[1.0, 0.0], Strategy::Rand);
+    let mut alg = Bfs::new(0);
+    let r = engine::run(&g, &mut alg, &cfg).unwrap();
+    assert_eq!(r.output.as_i32().len(), g.vertex_count);
+}

@@ -1,0 +1,179 @@
+//! Property-based tests over the engine's core invariants, driven by the
+//! repo's deterministic PRNG (no external proptest in the offline set —
+//! randomized trials with printed seeds serve the same role: any failure
+//! message pins the exact reproduction).
+
+use totem::alg::{bfs::Bfs, cc::Cc, sssp::Sssp};
+use totem::baseline;
+use totem::engine::{self, EngineConfig};
+use totem::graph::generator::{rmat, uniform, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::partition::{assign, PartitionedGraph, Strategy};
+use totem::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng, weighted: bool) -> CsrGraph {
+    let scale = 6 + (rng.below(4) as u32); // 64..512 vertices
+    let mut el = if rng.below(2) == 0 {
+        rmat(&RmatParams::paper(scale, rng.next_u64()))
+    } else {
+        uniform(scale, 4 + rng.below(12) as u32, rng.next_u64())
+    };
+    if weighted {
+        with_random_weights(&mut el, 32, rng.next_u64());
+    }
+    CsrGraph::from_edge_list(&el)
+}
+
+fn random_shares(rng: &mut Rng) -> Vec<f64> {
+    let parts = 2 + rng.below(2) as usize; // 2 or 3
+    let mut shares: Vec<f64> = (0..parts).map(|_| 0.1 + rng.next_f64()).collect();
+    let total: f64 = shares.iter().sum();
+    shares.iter_mut().for_each(|x| *x /= total);
+    shares
+}
+
+fn random_strategy(rng: &mut Rng) -> Strategy {
+    match rng.below(3) {
+        0 => Strategy::Rand,
+        1 => Strategy::High,
+        _ => Strategy::Low,
+    }
+}
+
+/// Partitioning must preserve the edge multiset for any assignment.
+#[test]
+fn prop_partition_preserves_edges() {
+    let mut rng = Rng::new(0xDEC0DE);
+    for trial in 0..25 {
+        let g = random_graph(&mut rng, false);
+        let shares = random_shares(&mut rng);
+        let strat = random_strategy(&mut rng);
+        let seed = rng.next_u64();
+        let pg = PartitionedGraph::partition(&g, strat, &shares, seed);
+        let mut total_edges = 0usize;
+        let mut total_vertices = 0usize;
+        for p in &pg.parts {
+            total_edges += p.edge_count();
+            total_vertices += p.nv;
+            // every ghost table is sorted and in-range
+            for t in &p.ghosts {
+                assert!(t.remote_locals.windows(2).all(|w| w[0] < w[1]), "trial {trial}");
+                let rp = &pg.parts[t.remote_part];
+                assert!(t.remote_locals.iter().all(|&l| (l as usize) < rp.nv));
+            }
+        }
+        assert_eq!(total_edges, g.edge_count(), "trial {trial}");
+        assert_eq!(total_vertices, g.vertex_count, "trial {trial}");
+        // β invariants: reduction can only shrink the message count
+        let b = pg.beta_stats();
+        assert!(b.reduced_messages <= b.boundary_edges, "trial {trial}");
+        assert!(b.beta_raw() <= 1.0);
+    }
+}
+
+/// Greedy assignment hits requested shares within one max-degree slack.
+#[test]
+fn prop_assignment_share_accuracy() {
+    let mut rng = Rng::new(0xA55E55);
+    for trial in 0..25 {
+        let g = random_graph(&mut rng, false);
+        let shares = random_shares(&mut rng);
+        let strat = random_strategy(&mut rng);
+        let a = assign(&g, strat, &shares, rng.next_u64());
+        let max_deg = (0..g.vertex_count as u32).map(|v| g.out_degree(v)).max().unwrap_or(0);
+        let mut edges = vec![0u64; shares.len()];
+        for v in 0..g.vertex_count {
+            edges[a[v] as usize] += g.out_degree(v as u32);
+        }
+        // cumulative prefix property: partition k's cumulative edges is
+        // within max_deg of the cumulative target
+        let mut cum = 0f64;
+        let mut cum_t = 0f64;
+        for (k, &e) in edges.iter().enumerate().take(shares.len() - 1) {
+            cum += e as f64;
+            cum_t += shares[k] * g.edge_count() as f64;
+            assert!(
+                (cum - cum_t).abs() <= max_deg as f64 + 1.0,
+                "trial {trial} part {k}: cum {cum} target {cum_t} maxdeg {max_deg}"
+            );
+        }
+    }
+}
+
+/// BFS levels from the hybrid engine must equal the sequential oracle for
+/// any graph × partitioning × source.
+#[test]
+fn prop_bfs_equivalence() {
+    let mut rng = Rng::new(0xBF5);
+    for trial in 0..15 {
+        let g = random_graph(&mut rng, false);
+        let src = rng.below(g.vertex_count as u64) as u32;
+        let expect = baseline::bfs(&g, src);
+        let shares = random_shares(&mut rng);
+        let cfg = EngineConfig::cpu_partitions(&shares, random_strategy(&mut rng))
+            .with_seed(rng.next_u64());
+        let mut alg = Bfs::new(src);
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        assert_eq!(r.output.as_i32(), expect.as_slice(), "trial {trial} src {src}");
+    }
+}
+
+/// SSSP distances are exact (min-reduction is order independent).
+#[test]
+fn prop_sssp_equivalence() {
+    let mut rng = Rng::new(0x555);
+    for trial in 0..12 {
+        let g = random_graph(&mut rng, true);
+        let src = rng.below(g.vertex_count as u64) as u32;
+        let expect = baseline::sssp(&g, src);
+        let shares = random_shares(&mut rng);
+        let cfg = EngineConfig::cpu_partitions(&shares, random_strategy(&mut rng))
+            .with_seed(rng.next_u64());
+        let mut alg = Sssp::new(src);
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        assert_eq!(r.output.as_f32(), expect.as_slice(), "trial {trial} src {src}");
+    }
+}
+
+/// CC labels are the component-minimum global id everywhere.
+#[test]
+fn prop_cc_labels_are_component_minima() {
+    let mut rng = Rng::new(0xCC);
+    for trial in 0..12 {
+        let g = random_graph(&mut rng, false);
+        let expect = baseline::cc(&g);
+        let shares = random_shares(&mut rng);
+        let cfg = EngineConfig::cpu_partitions(&shares, random_strategy(&mut rng))
+            .with_seed(rng.next_u64());
+        let mut alg = Cc::new();
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        let got = r.output.as_i32();
+        assert_eq!(got, expect.as_slice(), "trial {trial}");
+        // label invariant: each vertex's label equals the min vertex id
+        // reachable in its undirected component — check label ≤ own id
+        for (v, &l) in got.iter().enumerate() {
+            assert!(l <= v as i32, "trial {trial} vertex {v}");
+        }
+    }
+}
+
+/// The makespan decomposition must be internally consistent for any run.
+#[test]
+fn prop_metrics_consistency() {
+    let mut rng = Rng::new(0x3E7);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng, false);
+        let shares = random_shares(&mut rng);
+        let cfg = EngineConfig::cpu_partitions(&shares, random_strategy(&mut rng));
+        let mut alg = Bfs::new(0);
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        let m = &r.metrics;
+        let makespan = m.makespan_secs();
+        assert!(makespan >= m.bottleneck_compute_secs());
+        assert!((m.bottleneck_compute_secs() + m.comm_secs() - makespan).abs() < 1e-9);
+        let per_part_max: f64 = (0..shares.len())
+            .map(|p| m.partition_compute_secs(p))
+            .fold(0.0, f64::max);
+        assert!(m.bottleneck_compute_secs() >= per_part_max / m.supersteps().max(1) as f64);
+    }
+}
