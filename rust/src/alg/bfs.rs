@@ -79,6 +79,21 @@ impl Algorithm for Bfs {
         vec![ctx.superstep as i32]
     }
 
+    /// After a migration the engine remapped `levels` onto the new
+    /// partition; the visited bitmap is derived state — a bit is set iff
+    /// the vertex already holds a level (claims only ever accompany a
+    /// `fetch_min` to a finite level, so bit ⊆ finite always holds).
+    fn rebuild_scratch(&self, part: &Partition, state: &mut AlgState) {
+        let mut bitmap = vec![0u64; part.nv.div_ceil(64).max(1)];
+        let levels = state.arrays[LEVELS].as_i32();
+        for (v, &l) in levels.iter().take(part.nv).enumerate() {
+            if l != INF_I32 {
+                bitmap[v / 64] |= 1 << (v % 64);
+            }
+        }
+        state.scratch = bitmap;
+    }
+
     fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
         let cur = ctx.superstep as i32;
         let nv = part.nv;

@@ -105,7 +105,12 @@ pub struct ProgramSpec {
 }
 
 /// The TOTEM algorithm interface. See module docs.
-pub trait Algorithm {
+///
+/// `Sync` is required because the pipelined executor calls `compute_cpu`
+/// for different partitions from concurrent scoped threads (all kernel
+/// state lives in the per-partition `AlgState`, so implementations are
+/// naturally `Sync`).
+pub trait Algorithm: Sync {
     fn spec(&self) -> AlgSpec;
 
     /// BSP cycles (1 for everything except BC's forward+backward).
@@ -155,6 +160,14 @@ pub trait Algorithm {
     fn output_array(&self) -> usize {
         0
     }
+
+    /// Rebuild partition-local scratch (`AlgState::scratch`) after the
+    /// dynamic α controller migrated vertices: the engine has rebuilt the
+    /// partition and remapped the typed state arrays through the global id
+    /// maps, but scratch layout is algorithm-private (e.g. the BFS visited
+    /// bitmap), so algorithms that use it must override this. Default:
+    /// no scratch.
+    fn rebuild_scratch(&self, _part: &Partition, _state: &mut AlgState) {}
 }
 
 /// Traversed-edges-per-second accounting (paper §5 "Evaluation Metrics").

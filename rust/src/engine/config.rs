@@ -15,6 +15,79 @@ pub enum ElementKind {
     Accelerator,
 }
 
+/// How the engine schedules a BSP superstep (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The paper's lockstep loop: all partitions compute, then all
+    /// communication, then the quiescence vote.
+    #[default]
+    Synchronous,
+    /// Pipelined executor: partitions compute concurrently on their own
+    /// threads, and each pairwise ghost exchange starts as soon as both
+    /// endpoints finished computing — communication overlaps the compute
+    /// of still-running partitions. Output is bit-identical to
+    /// [`ExecMode::Synchronous`] (DESIGN.md §4.2).
+    Pipelined,
+}
+
+/// Dynamic α re-balancing policy (DESIGN.md §5): watch per-element busy
+/// time each superstep and migrate a band of boundary vertices from the
+/// slowest to the fastest partition when imbalance persists.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RebalanceConfig {
+    /// Trigger when `(max_p busy - min_p busy) / max_p busy` exceeds this
+    /// (must be in `(0, 1]`; e.g. 0.3 = slowest element 30% busier).
+    pub imbalance_threshold: f64,
+    /// Consecutive over-threshold supersteps required before migrating
+    /// (must be ≥ 1; absorbs per-step noise).
+    pub patience: usize,
+    /// Edge share of the donor partition moved per migration (must be in
+    /// `(0, 1)`; the band is cut from the donor's lowest-degree tail —
+    /// the same degree-ordered machinery as `partition::assign`).
+    pub migration_band: f64,
+    /// Hard cap on migrations per run (0 disables re-balancing).
+    pub max_migrations: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> RebalanceConfig {
+        RebalanceConfig {
+            imbalance_threshold: 0.25,
+            patience: 2,
+            migration_band: 0.10,
+            max_migrations: 8,
+        }
+    }
+}
+
+impl RebalanceConfig {
+    /// Validate the knobs; the engine calls this before the first
+    /// superstep so operator mistakes fail loudly, not mid-run.
+    pub fn validate(&self, num_partitions: usize) -> Result<(), String> {
+        if !(self.imbalance_threshold > 0.0 && self.imbalance_threshold <= 1.0) {
+            return Err(format!(
+                "rebalance: imbalance_threshold must be in (0, 1], got {}",
+                self.imbalance_threshold
+            ));
+        }
+        if self.patience == 0 {
+            return Err("rebalance: patience must be >= 1".into());
+        }
+        if !(self.migration_band > 0.0 && self.migration_band < 1.0) {
+            return Err(format!(
+                "rebalance: migration_band must be in (0, 1), got {}",
+                self.migration_band
+            ));
+        }
+        if num_partitions < 2 {
+            return Err(format!(
+                "rebalance: needs >= 2 partitions to migrate between, got {num_partitions}"
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Engine attributes.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -39,6 +112,10 @@ pub struct EngineConfig {
     /// A partition whose footprint exceeds this fails to map, reproducing
     /// the "minimum α" structure of Figures 7/9/15.
     pub accel_memory_budget: u64,
+    /// Superstep scheduling: lockstep or pipelined (DESIGN.md §4).
+    pub mode: ExecMode,
+    /// Dynamic α re-balancing; `None` keeps launch-time shares fixed.
+    pub rebalance: Option<RebalanceConfig>,
 }
 
 impl EngineConfig {
@@ -53,6 +130,8 @@ impl EngineConfig {
             instrument: false,
             artifacts_dir: PathBuf::from("artifacts"),
             accel_memory_budget: 256 << 20, // 256 MB default "device"
+            mode: ExecMode::Synchronous,
+            rebalance: None,
         }
     }
 
@@ -143,6 +222,23 @@ impl EngineConfig {
         self
     }
 
+    /// Switch to the pipelined executor (DESIGN.md §4.2).
+    pub fn pipelined(mut self) -> Self {
+        self.mode = ExecMode::Pipelined;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Enable dynamic α re-balancing with the given policy.
+    pub fn with_rebalance(mut self, rb: RebalanceConfig) -> Self {
+        self.rebalance = Some(rb);
+        self
+    }
+
     pub fn num_partitions(&self) -> usize {
         self.elements.len()
     }
@@ -189,5 +285,28 @@ mod tests {
         let c = EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::Rand);
         assert_eq!(c.num_partitions(), 2);
         assert!(!c.has_accelerator());
+    }
+
+    #[test]
+    fn mode_defaults_and_builders() {
+        let c = EngineConfig::host_only(1);
+        assert_eq!(c.mode, ExecMode::Synchronous);
+        assert!(c.rebalance.is_none());
+        let c = c.pipelined().with_rebalance(RebalanceConfig::default());
+        assert_eq!(c.mode, ExecMode::Pipelined);
+        assert!(c.rebalance.is_some());
+    }
+
+    #[test]
+    fn rebalance_validation() {
+        let ok = RebalanceConfig::default();
+        assert!(ok.validate(2).is_ok());
+        assert!(ok.validate(1).is_err());
+        assert!(RebalanceConfig { imbalance_threshold: 0.0, ..ok }.validate(2).is_err());
+        assert!(RebalanceConfig { imbalance_threshold: -1.0, ..ok }.validate(2).is_err());
+        assert!(RebalanceConfig { imbalance_threshold: 1.5, ..ok }.validate(2).is_err());
+        assert!(RebalanceConfig { patience: 0, ..ok }.validate(2).is_err());
+        assert!(RebalanceConfig { migration_band: 0.0, ..ok }.validate(2).is_err());
+        assert!(RebalanceConfig { migration_band: 1.0, ..ok }.validate(2).is_err());
     }
 }

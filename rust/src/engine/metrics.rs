@@ -22,10 +22,27 @@ pub struct StepMetrics {
     pub compute: Vec<f64>,
     /// Communication seconds (all pairs, transfer + scatter-apply).
     pub comm: f64,
+    /// Seconds of `comm` that executed while at least one partition was
+    /// still computing — communication hidden behind computation by the
+    /// pipelined executor (always 0 in synchronous mode). Invariant:
+    /// `comm_overlapped <= comm`.
+    pub comm_overlapped: f64,
     /// Bytes that crossed a partition boundary this step.
     pub bytes: u64,
     /// Messages (ghost-slot values) delivered this step.
     pub messages: u64,
+}
+
+impl StepMetrics {
+    /// Empty record for a step over `partitions` elements.
+    pub fn empty(partitions: usize) -> StepMetrics {
+        StepMetrics { compute: vec![0.0; partitions], ..Default::default() }
+    }
+
+    /// Communication seconds on the critical path (not hidden by compute).
+    pub fn comm_exposed(&self) -> f64 {
+        (self.comm - self.comm_overlapped).max(0.0)
+    }
 }
 
 /// Memory-access counters per partition (instrumented CPU kernels;
@@ -49,6 +66,8 @@ pub struct Metrics {
     /// Per-partition accelerator transfer bytes (state upload + readback),
     /// part of the comm story for hybrid configs.
     pub accel_transfer_bytes: Vec<u64>,
+    /// Vertex migrations performed by the dynamic α controller.
+    pub migrations: usize,
 }
 
 impl Metrics {
@@ -59,6 +78,7 @@ impl Metrics {
             wall_secs: 0.0,
             mem: vec![MemCounters::default(); partitions],
             accel_transfer_bytes: vec![0; partitions],
+            migrations: 0,
         }
     }
 
@@ -66,12 +86,15 @@ impl Metrics {
         self.steps.len()
     }
 
-    /// Eq. 2 makespan in seconds.
+    /// Eq. 2 makespan in seconds, extended for overlap: per step, the
+    /// bottleneck element's compute plus the communication that was *not*
+    /// hidden behind compute. With `comm_overlapped == 0` (synchronous
+    /// mode) this is exactly the paper's Eq. 2.
     pub fn makespan_secs(&self) -> f64 {
         self.steps
             .iter()
             .map(|s| {
-                s.compute.iter().copied().fold(0.0, f64::max) + s.comm
+                s.compute.iter().copied().fold(0.0, f64::max) + s.comm_exposed()
             })
             .sum()
     }
@@ -92,6 +115,23 @@ impl Metrics {
     /// Total communication seconds.
     pub fn comm_secs(&self) -> f64 {
         self.steps.iter().map(|s| s.comm).sum()
+    }
+
+    /// Communication seconds hidden behind compute by the pipeline.
+    pub fn overlapped_comm_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.comm_overlapped).sum()
+    }
+
+    /// Realized overlap factor in `[0, 1]`: fraction of communication
+    /// time hidden behind compute (0 for the synchronous engine). This is
+    /// the measured counterpart of `model::overlap`'s ω parameter.
+    pub fn overlap_factor(&self) -> f64 {
+        let comm = self.comm_secs();
+        if comm <= 0.0 {
+            0.0
+        } else {
+            (self.overlapped_comm_secs() / comm).clamp(0.0, 1.0)
+        }
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -123,12 +163,14 @@ mod tests {
         m.steps.push(StepMetrics {
             compute: vec![2.0, 1.0],
             comm: 0.5,
+            comm_overlapped: 0.0,
             bytes: 100,
             messages: 10,
         });
         m.steps.push(StepMetrics {
             compute: vec![1.0, 3.0],
             comm: 0.5,
+            comm_overlapped: 0.0,
             bytes: 50,
             messages: 5,
         });
@@ -141,6 +183,27 @@ mod tests {
         assert!((m.makespan_secs() - (2.5 + 3.5)).abs() < 1e-12);
         assert!((m.bottleneck_compute_secs() - 5.0).abs() < 1e-12);
         assert!((m.comm_secs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_shortens_makespan() {
+        let mut m = sample();
+        // hide 0.3s of the second step's comm behind compute
+        m.steps[1].comm_overlapped = 0.3;
+        assert!((m.makespan_secs() - (2.5 + 3.2)).abs() < 1e-12);
+        assert!((m.overlapped_comm_secs() - 0.3).abs() < 1e-12);
+        assert!((m.overlap_factor() - 0.3).abs() < 1e-12);
+        assert!((m.steps[1].comm_exposed() - 0.2).abs() < 1e-12);
+        // fully synchronous metrics report zero overlap
+        assert_eq!(sample().overlap_factor(), 0.0);
+    }
+
+    #[test]
+    fn empty_step_record() {
+        let s = StepMetrics::empty(3);
+        assert_eq!(s.compute, vec![0.0; 3]);
+        assert_eq!(s.comm, 0.0);
+        assert_eq!(s.comm_exposed(), 0.0);
     }
 
     #[test]

@@ -7,19 +7,36 @@
 //! with the algorithm's reduction operator — the paper's inbox/outbox
 //! machinery with message aggregation (§4.3.2) — and is identical code for
 //! every element pairing.
+//!
+//! Two superstep executors share that machinery (DESIGN.md §4):
+//!
+//! - [`ExecMode::Synchronous`]: the paper's lockstep loop — all partitions
+//!   compute, then all pairwise exchanges run, then the quiescence vote.
+//! - [`ExecMode::Pipelined`]: partitions compute concurrently on their own
+//!   threads and each pairwise exchange starts as soon as both endpoints
+//!   finished computing, overlapping communication with the compute of
+//!   still-running partitions ([`pipeline`]). Output is bit-identical to
+//!   the synchronous executor.
+//!
+//! On top of either executor, an optional dynamic α controller
+//! ([`rebalance`], [`RebalanceConfig`]) watches per-element busy time and
+//! migrates bands of boundary vertices from the slowest to the fastest
+//! element when imbalance persists (DESIGN.md §5).
 
 pub mod config;
 pub mod metrics;
+mod pipeline;
+mod rebalance;
 pub mod state;
 
 pub use crate::alg::INF_I32;
-pub use config::{ElementKind, EngineConfig};
+pub use config::{ElementKind, EngineConfig, ExecMode, RebalanceConfig};
 pub use metrics::{MemCounters, Metrics, StepMetrics};
 pub use state::{AlgState, Channel, ChannelKind, CommOp, Reduce, StateArray};
 
 use crate::alg::{Algorithm, StepCtx};
 use crate::graph::CsrGraph;
-use crate::partition::{BetaStats, PartitionedGraph};
+use crate::partition::{BetaStats, GhostTable, PartitionedGraph};
 use crate::runtime::{AccelPartition, PjrtRuntime};
 use crate::util::timer::{timed, Stopwatch};
 use anyhow::{bail, Context, Result};
@@ -31,13 +48,14 @@ pub struct RunResult {
     pub output: StateArray,
     pub metrics: Metrics,
     pub supersteps: usize,
-    /// Realized per-partition edge shares (α = shares[0]).
+    /// Realized per-partition edge shares (α = shares[0]); reflects the
+    /// *final* partitioning after any dynamic re-balancing.
     pub shares: Vec<f64>,
-    /// Per-partition vertex counts (Figure 13).
+    /// Per-partition vertex counts (Figure 13), final partitioning.
     pub vertices: Vec<usize>,
-    /// Boundary-edge statistics (Figure 4).
+    /// Boundary-edge statistics (Figure 4), final partitioning.
     pub beta: BetaStats,
-    /// Per-partition memory footprints (Table 5).
+    /// Per-partition memory footprints (Table 5), final partitioning.
     pub footprints: Vec<PartitionFootprint>,
     /// Per-partition communicated slots per superstep (outbox + inbox
     /// ghost entries) — the model's per-partition |E_p^b| after reduction.
@@ -71,9 +89,15 @@ impl PartitionFootprint {
     }
 }
 
-enum Element {
+pub(crate) enum Element {
     Cpu { threads: usize },
     Accel(Box<AccelPartition>),
+}
+
+/// Outcome of one executed superstep (either executor).
+pub(crate) struct SuperstepOutcome {
+    pub step: StepMetrics,
+    pub any_changed: bool,
 }
 
 /// Run `alg` on `g` under `cfg`. The graph is partitioned per the config,
@@ -83,6 +107,10 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     let spec = alg.spec();
     if spec.needs_weights && g.weights.is_none() {
         bail!("{} requires edge weights", spec.name);
+    }
+    let nparts = cfg.num_partitions();
+    if let Some(rb) = &cfg.rebalance {
+        rb.validate(nparts).map_err(anyhow::Error::msg)?;
     }
 
     // --- graph preparation (§4.2: the engine owns the data layout) -------
@@ -98,8 +126,7 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     alg.prepare(g, pg_graph);
 
     // --- partition --------------------------------------------------------
-    let nparts = cfg.num_partitions();
-    let pg = PartitionedGraph::partition(pg_graph, cfg.strategy, &cfg.shares, cfg.seed);
+    let mut pg = PartitionedGraph::partition(pg_graph, cfg.strategy, &cfg.shares, cfg.seed);
 
     // --- state + elements --------------------------------------------------
     let mut states: Vec<AlgState> = pg
@@ -111,26 +138,6 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     let mut runtime: Option<PjrtRuntime> = None;
     if cfg.has_accelerator() {
         runtime = Some(PjrtRuntime::new(&cfg.artifacts_dir)?);
-    }
-
-    let mut footprints: Vec<PartitionFootprint> = Vec::with_capacity(nparts);
-    for (pid, part) in pg.parts.iter().enumerate() {
-        let msg_bytes: u64 = alg.channels(0).iter().map(|op| op.bytes_per_slot()).sum();
-        let inbox: u64 = pg
-            .parts
-            .iter()
-            .flat_map(|q| q.ghosts.iter())
-            .filter(|t| t.remote_part == pid)
-            .map(|t| (4 + msg_bytes) * t.len() as u64)
-            .sum();
-        footprints.push(PartitionFootprint {
-            vertices: part.nv,
-            edges: part.edge_count(),
-            graph_bytes: part.graph_bytes(),
-            inbox_bytes: inbox,
-            outbox_bytes: part.comm_bytes(msg_bytes),
-            state_bytes: states[pid].state_bytes(),
-        });
     }
 
     let mut elements: Vec<Element> = Vec::with_capacity(nparts);
@@ -149,9 +156,6 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
                             pg.parts[pid].edge_count()
                         )
                     })?;
-                // device-side footprint supersedes the host estimate
-                footprints[pid].graph_bytes = accel.graph_bytes();
-                footprints[pid].state_bytes = accel.state_bytes();
                 elements.push(Element::Accel(Box::new(accel)));
             }
         }
@@ -161,6 +165,7 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     let wall0 = Instant::now();
     let mut metrics = Metrics::new(nparts);
     let mut total_steps = 0usize;
+    let mut controller = cfg.rebalance.map(rebalance::Controller::new);
 
     for cycle in 0..alg.cycles() {
         alg.begin_cycle(cycle, &pg, &mut states);
@@ -168,13 +173,9 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
 
         // Re-bind accelerator partitions to this cycle's program.
         if cycle > 0 {
-            let prog = alg.program(cycle);
-            for (pid, el) in elements.iter_mut().enumerate() {
-                if let Element::Accel(acc) = el {
-                    let rt = runtime.as_mut().unwrap();
-                    **acc = rt.instantiate(&prog, &pg.parts[pid], &states[pid], cfg.accel_memory_budget)?;
-                }
-            }
+            let rebinds =
+                build_accel_rebinds(alg, cycle, &pg, &states, &elements, runtime.as_mut(), cfg)?;
+            commit_accel_rebinds(&mut elements, rebinds);
         }
 
         // Initial synchronization: pull channels must see remote values
@@ -182,66 +183,27 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
         {
             let mut sw = Stopwatch::new();
             let (bytes, msgs) = sw.time(|| comm_phase(&pg, &mut states, &channels, true));
-            metrics.steps.push(StepMetrics {
-                compute: vec![0.0; nparts],
-                comm: sw.secs(),
-                bytes,
-                messages: msgs,
-            });
+            let mut step = StepMetrics::empty(nparts);
+            step.comm = sw.secs();
+            step.bytes = bytes;
+            step.messages = msgs;
+            metrics.steps.push(step);
         }
 
         let mut superstep = 0usize;
         loop {
-            let mut step = StepMetrics {
-                compute: vec![0.0; nparts],
-                comm: 0.0,
-                bytes: 0,
-                messages: 0,
+            let outcome = match cfg.mode {
+                ExecMode::Synchronous => run_superstep_sync(
+                    &*alg, &pg, &mut states, &mut elements, &channels, cycle, superstep,
+                    cfg.instrument, &mut metrics,
+                )?,
+                ExecMode::Pipelined => pipeline::run_superstep(
+                    &*alg, &pg, &mut states, &mut elements, &channels, cycle, superstep,
+                    cfg.instrument, &mut metrics,
+                )?,
             };
-            let mut any_changed = false;
-
-            // -- compute phase (elements run concurrently on real hardware;
-            //    we time each separately and take the max — Eq. 2).
-            for (pid, el) in elements.iter_mut().enumerate() {
-                let part = &pg.parts[pid];
-                match el {
-                    Element::Cpu { threads } => {
-                        let ctx = StepCtx {
-                            cycle,
-                            superstep,
-                            threads: *threads,
-                            instrument: cfg.instrument,
-                        };
-                        let (out, secs) = timed(|| alg.compute_cpu(part, &mut states[pid], &ctx));
-                        step.compute[pid] = secs;
-                        any_changed |= out.changed;
-                        metrics.mem[pid].reads += out.reads;
-                        metrics.mem[pid].writes += out.writes;
-                    }
-                    Element::Accel(acc) => {
-                        let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
-                        let si32 = alg.scalars_i32(&ctx);
-                        let sf32 = alg.scalars_f32(&ctx);
-                        let out = acc.step(&mut states[pid], &si32, &sf32)?;
-                        // paper attribution: kernel execution = compute,
-                        // host<->device transfer = communication.
-                        step.compute[pid] = out.exec_secs;
-                        step.comm += out.upload_secs + out.readback_secs;
-                        step.bytes += out.transfer_bytes;
-                        metrics.accel_transfer_bytes[pid] += out.transfer_bytes;
-                        any_changed |= out.changed;
-                    }
-                }
-            }
-
-            // -- communication phase ---------------------------------------
-            let mut sw = Stopwatch::new();
-            let (bytes, msgs) = sw.time(|| comm_phase(&pg, &mut states, &channels, false));
-            step.comm += sw.secs();
-            step.bytes += bytes;
-            step.messages += msgs;
-
-            metrics.steps.push(step);
+            let any_changed = outcome.any_changed;
+            metrics.steps.push(outcome.step);
             superstep += 1;
             total_steps += 1;
 
@@ -255,6 +217,47 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
                     cfg.max_supersteps
                 );
             }
+
+            // -- dynamic α controller (DESIGN.md §5) ------------------------
+            if let Some(ctrl) = controller.as_mut() {
+                let busy = metrics.steps.last().expect("step just pushed").compute.clone();
+                if let Some((donor, recipient)) = ctrl.observe(&busy) {
+                    let (migrated, secs) = timed(|| {
+                        let candidate = rebalance::migrate_band(
+                            &*alg,
+                            pg_graph,
+                            &pg,
+                            &states,
+                            &channels,
+                            donor,
+                            recipient,
+                            ctrl.band(),
+                        )?;
+                        // Re-bind accelerators against the candidate BEFORE
+                        // committing: a band that no longer fits the device
+                        // skips this migration instead of aborting the run.
+                        let rebinds = build_accel_rebinds(
+                            &*alg, cycle, &candidate.pg, &candidate.states, &elements,
+                            runtime.as_mut(), cfg,
+                        )
+                        .ok()?;
+                        Some((candidate, rebinds))
+                    });
+                    if let Some((candidate, rebinds)) = migrated {
+                        pg = candidate.pg;
+                        states = candidate.states;
+                        commit_accel_rebinds(&mut elements, rebinds);
+                        metrics.migrations += 1;
+                        // migration (rebuild + remap + pull refresh) is
+                        // engine overhead on the critical path: charge it
+                        // as exposed communication of the step just run.
+                        let last = metrics.steps.last_mut().expect("step just pushed");
+                        last.comm += secs;
+                        last.bytes += candidate.refresh.0;
+                        last.messages += candidate.refresh.1;
+                    }
+                }
+            }
         }
     }
     metrics.wall_secs = wall0.elapsed().as_secs_f64();
@@ -262,6 +265,8 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     // --- collect (paper: alg_collect via local→global maps) ----------------
     let out_idx = alg.output_array();
     let output = collect_output(&pg, &states, out_idx);
+
+    let footprints = footprints_of(&*alg, &pg, &states, &elements);
 
     let mut comm_slots = vec![0u64; nparts];
     for p in &pg.parts {
@@ -283,11 +288,148 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     })
 }
 
-/// Exchange all communication ops between all partition pairs. Returns
+/// One lockstep superstep: all elements compute (timed separately, Eq. 2),
+/// then all communication runs serialized.
+#[allow(clippy::too_many_arguments)]
+fn run_superstep_sync<A: Algorithm>(
+    alg: &A,
+    pg: &PartitionedGraph,
+    states: &mut [AlgState],
+    elements: &mut [Element],
+    channels: &[CommOp],
+    cycle: usize,
+    superstep: usize,
+    instrument: bool,
+    metrics: &mut Metrics,
+) -> Result<SuperstepOutcome> {
+    let nparts = pg.parts.len();
+    let mut step = StepMetrics::empty(nparts);
+    let mut any_changed = false;
+
+    // -- compute phase (elements run concurrently on real hardware; here
+    //    each is timed separately and the metrics take the max — Eq. 2).
+    for (pid, el) in elements.iter_mut().enumerate() {
+        let part = &pg.parts[pid];
+        match el {
+            Element::Cpu { threads } => {
+                let ctx = StepCtx {
+                    cycle,
+                    superstep,
+                    threads: *threads,
+                    instrument,
+                };
+                let (out, secs) = timed(|| alg.compute_cpu(part, &mut states[pid], &ctx));
+                step.compute[pid] = secs;
+                any_changed |= out.changed;
+                metrics.mem[pid].reads += out.reads;
+                metrics.mem[pid].writes += out.writes;
+            }
+            Element::Accel(acc) => {
+                let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
+                let si32 = alg.scalars_i32(&ctx);
+                let sf32 = alg.scalars_f32(&ctx);
+                let out = acc.step(&mut states[pid], &si32, &sf32)?;
+                // paper attribution: kernel execution = compute,
+                // host<->device transfer = communication.
+                step.compute[pid] = out.exec_secs;
+                step.comm += out.upload_secs + out.readback_secs;
+                step.bytes += out.transfer_bytes;
+                metrics.accel_transfer_bytes[pid] += out.transfer_bytes;
+                any_changed |= out.changed;
+            }
+        }
+    }
+
+    // -- communication phase ---------------------------------------
+    let mut sw = Stopwatch::new();
+    let (bytes, msgs) = sw.time(|| comm_phase(pg, states, channels, false));
+    step.comm += sw.secs();
+    step.bytes += bytes;
+    step.messages += msgs;
+
+    Ok(SuperstepOutcome { step, any_changed })
+}
+
+/// Build fresh accelerator bindings for every accelerator element against
+/// a (possibly candidate) partitioning and cycle program — without
+/// touching the live elements, so callers can abandon the batch if any
+/// partition fails to map (used for BC's cycle switch, where failure is a
+/// hard error, and for vertex migrations, where failure skips the
+/// migration instead of aborting the run).
+fn build_accel_rebinds<A: Algorithm>(
+    alg: &A,
+    cycle: usize,
+    pg: &PartitionedGraph,
+    states: &[AlgState],
+    elements: &[Element],
+    runtime: Option<&mut PjrtRuntime>,
+    cfg: &EngineConfig,
+) -> Result<Vec<(usize, AccelPartition)>> {
+    let mut out = Vec::new();
+    let Some(rt) = runtime else { return Ok(out) };
+    let prog = alg.program(cycle);
+    for (pid, el) in elements.iter().enumerate() {
+        if matches!(el, Element::Accel(_)) {
+            let acc = rt
+                .rebind(&prog, &pg.parts[pid], &states[pid], cfg.accel_memory_budget)
+                .with_context(|| format!("re-binding accelerator partition {pid}"))?;
+            out.push((pid, acc));
+        }
+    }
+    Ok(out)
+}
+
+/// Install bindings produced by [`build_accel_rebinds`].
+fn commit_accel_rebinds(elements: &mut [Element], rebinds: Vec<(usize, AccelPartition)>) {
+    for (pid, acc) in rebinds {
+        if let Element::Accel(slot) = &mut elements[pid] {
+            **slot = acc;
+        }
+    }
+}
+
+/// Table 5 footprint accounting over the current partitioning; accelerator
+/// partitions report their device-side graph/state bytes.
+fn footprints_of<A: Algorithm>(
+    alg: &A,
+    pg: &PartitionedGraph,
+    states: &[AlgState],
+    elements: &[Element],
+) -> Vec<PartitionFootprint> {
+    let msg_bytes: u64 = alg.channels(0).iter().map(|op| op.bytes_per_slot()).sum();
+    let mut out = Vec::with_capacity(pg.parts.len());
+    for (pid, part) in pg.parts.iter().enumerate() {
+        let inbox: u64 = pg
+            .parts
+            .iter()
+            .flat_map(|q| q.ghosts.iter())
+            .filter(|t| t.remote_part == pid)
+            .map(|t| (4 + msg_bytes) * t.len() as u64)
+            .sum();
+        let mut fp = PartitionFootprint {
+            vertices: part.nv,
+            edges: part.edge_count(),
+            graph_bytes: part.graph_bytes(),
+            inbox_bytes: inbox,
+            outbox_bytes: part.comm_bytes(msg_bytes),
+            state_bytes: states[pid].state_bytes(),
+        };
+        if let Element::Accel(acc) = &elements[pid] {
+            // device-side footprint supersedes the host estimate
+            fp.graph_bytes = acc.graph_bytes();
+            fp.state_bytes = acc.state_bytes();
+        }
+        out.push(fp);
+    }
+    out
+}
+
+/// Exchange all communication ops between all partition pairs, in the
+/// canonical order (op-major, then owner partition, then table). Returns
 /// (bytes, messages) moved. `pull_only` is the cycle-initial sync: only
 /// pull channels run, so pull algorithms see remote values before their
 /// first compute.
-fn comm_phase(
+pub(crate) fn comm_phase(
     pg: &PartitionedGraph,
     states: &mut [AlgState],
     ops: &[CommOp],
@@ -296,20 +438,10 @@ fn comm_phase(
     let mut bytes = 0u64;
     let mut msgs = 0u64;
     for op in ops {
-        match *op {
-            CommOp::Single(ch) => {
-                if pull_only && ch.kind == ChannelKind::Push {
-                    continue;
-                }
-                let (b, m) = comm_single(pg, states, ch);
-                bytes += b;
-                msgs += m;
-            }
-            CommOp::DistSigma { dist, sigma } => {
-                if pull_only {
-                    continue;
-                }
-                let (b, m) = comm_dist_sigma(pg, states, dist, sigma);
+        for pid in 0..pg.parts.len() {
+            for t in &pg.parts[pid].ghosts {
+                let (owner, remote) = two_states(states, pid, t.remote_part);
+                let (b, m) = comm_op_table(op, pull_only, t, owner, remote);
                 bytes += b;
                 msgs += m;
             }
@@ -318,37 +450,45 @@ fn comm_phase(
     (bytes, msgs)
 }
 
-/// Split-borrow two distinct partitions' states: `(read &states[a], write
-/// &mut states[b])`. Zero-copy — the comm phase's hot path (perf pass
-/// §Perf-L3-1: removed the per-table message `Vec` allocations).
-fn two_states(states: &mut [AlgState], a: usize, b: usize) -> (&AlgState, &mut AlgState) {
+/// Split-borrow two distinct partitions' states. Zero-copy — the comm
+/// phase's hot path (perf pass §Perf-L3-1: removed the per-table message
+/// `Vec` allocations).
+fn two_states(states: &mut [AlgState], a: usize, b: usize) -> (&mut AlgState, &mut AlgState) {
     debug_assert_ne!(a, b);
     if a < b {
         let (x, y) = states.split_at_mut(b);
-        (&x[a], &mut y[0])
+        (&mut x[a], &mut y[0])
     } else {
         let (x, y) = states.split_at_mut(a);
-        (&y[0], &mut x[b])
+        (&mut y[0], &mut x[b])
     }
 }
 
-fn comm_single(pg: &PartitionedGraph, states: &mut [AlgState], ch: Channel) -> (u64, u64) {
-    let mut bytes = 0u64;
-    let mut msgs = 0u64;
-    for pid in 0..pg.parts.len() {
-        let p = &pg.parts[pid];
-        for t in &p.ghosts {
-            let n = t.len();
-            if n == 0 {
-                continue;
+/// Apply one communication op across one ghost table. `owner` is the
+/// partition owning the table (the outbox side); `remote` is the
+/// partition `t` points at. Both executors and the post-migration refresh
+/// funnel through this one function, which is what keeps the pipelined
+/// engine bit-identical to the synchronous one (DESIGN.md §4.2).
+pub(crate) fn comm_op_table(
+    op: &CommOp,
+    pull_only: bool,
+    t: &GhostTable,
+    owner: &mut AlgState,
+    remote: &mut AlgState,
+) -> (u64, u64) {
+    let n = t.len();
+    if n == 0 {
+        return (0, 0);
+    }
+    match *op {
+        CommOp::Single(ch) => {
+            if pull_only && ch.kind == ChannelKind::Push {
+                return (0, 0);
             }
-            let q = t.remote_part;
-            debug_assert_ne!(q, pid);
             match ch.kind {
                 ChannelKind::Push => {
-                    // outbox slice of p → reduce into q's real slots
-                    let (src, dst) = two_states(states, pid, q);
-                    match (&src.arrays[ch.array], &mut dst.arrays[ch.array]) {
+                    // outbox slice of owner → reduce into remote's real slots
+                    match (&owner.arrays[ch.array], &mut remote.arrays[ch.array]) {
                         (StateArray::I32(v), StateArray::I32(dv)) => {
                             for (i, &m) in v[t.slot_base..t.slot_base + n].iter().enumerate() {
                                 state::apply_i32(
@@ -370,7 +510,7 @@ fn comm_single(pg: &PartitionedGraph, states: &mut [AlgState], ch: Channel) -> (
                         _ => unreachable!("channel dtype mismatch"),
                     }
                     if ch.reset_after_send {
-                        match &mut states[pid].arrays[ch.array] {
+                        match &mut owner.arrays[ch.array] {
                             StateArray::I32(v) => v[t.slot_base..t.slot_base + n]
                                 .fill(ch.reduce.identity_i32()),
                             StateArray::F32(v) => v[t.slot_base..t.slot_base + n]
@@ -379,9 +519,8 @@ fn comm_single(pg: &PartitionedGraph, states: &mut [AlgState], ch: Channel) -> (
                     }
                 }
                 ChannelKind::Pull => {
-                    // gather q's real values → overwrite p's ghost slots
-                    let (src, dst) = two_states(states, q, pid);
-                    match (&src.arrays[ch.array], &mut dst.arrays[ch.array]) {
+                    // gather remote's real values → overwrite owner's ghost slots
+                    match (&remote.arrays[ch.array], &mut owner.arrays[ch.array]) {
                         (StateArray::I32(v), StateArray::I32(dv)) => {
                             for (i, &l) in t.remote_locals.iter().enumerate() {
                                 dv[t.slot_base + i] = v[l as usize];
@@ -396,77 +535,64 @@ fn comm_single(pg: &PartitionedGraph, states: &mut [AlgState], ch: Channel) -> (
                     }
                 }
             }
-            bytes += 4 * n as u64;
-            msgs += n as u64;
+            (4 * n as u64, n as u64)
+        }
+        CommOp::DistSigma { dist, sigma } => {
+            if pull_only {
+                return (0, 0);
+            }
+            comm_dist_sigma_table(t, owner, remote, dist, sigma)
         }
     }
-    (bytes, msgs)
 }
 
-/// BC forward paired scatter: a σ contribution is valid only for the level
-/// it was generated at. `msg_dist < dist[w]` means w was just discovered
-/// through this boundary → σ replaces (w had none); `==` means another
-/// shortest path of the same length → σ adds; `>` means a stale candidate
-/// (w is actually closer) → both are dropped.
-fn comm_dist_sigma(
-    pg: &PartitionedGraph,
-    states: &mut [AlgState],
+/// BC forward paired scatter for one table: a σ contribution is valid only
+/// for the level it was generated at. `msg_dist < dist[w]` means w was
+/// just discovered through this boundary → σ replaces (w had none); `==`
+/// means another shortest path of the same length → σ adds; `>` means a
+/// stale candidate (w is actually closer) → both are dropped.
+fn comm_dist_sigma_table(
+    t: &GhostTable,
+    owner: &mut AlgState,
+    remote: &mut AlgState,
     dist_idx: usize,
     sigma_idx: usize,
 ) -> (u64, u64) {
-    let mut bytes = 0u64;
-    let mut msgs = 0u64;
-    for pid in 0..pg.parts.len() {
-        let p = &pg.parts[pid];
-        for t in &p.ghosts {
-            let n = t.len();
-            if n == 0 {
-                continue;
+    let n = t.len();
+    let dist_out: Vec<i32> = {
+        let v = owner.arrays[dist_idx].as_i32();
+        v[t.slot_base..t.slot_base + n].to_vec()
+    };
+    let sigma_out: Vec<f32> = {
+        let v = owner.arrays[sigma_idx].as_f32();
+        v[t.slot_base..t.slot_base + n].to_vec()
+    };
+    {
+        // two disjoint arrays of the remote state
+        let (dist_arr, sigma_arr) = if dist_idx < sigma_idx {
+            let (x, y) = remote.arrays.split_at_mut(sigma_idx);
+            (&mut x[dist_idx], &mut y[0])
+        } else {
+            let (x, y) = remote.arrays.split_at_mut(dist_idx);
+            (&mut y[0], &mut x[sigma_idx])
+        };
+        let dv = dist_arr.as_i32_mut();
+        let sv = sigma_arr.as_f32_mut();
+        for i in 0..n {
+            let w = t.remote_locals[i] as usize;
+            let (md, ms) = (dist_out[i], sigma_out[i]);
+            if md < dv[w] {
+                dv[w] = md;
+                sv[w] = ms;
+            } else if md == dv[w] && md != crate::alg::INF_I32 {
+                sv[w] += ms;
             }
-            let q = t.remote_part;
-            let dist_out: Vec<i32> = {
-                let v = states[pid].arrays[dist_idx].as_i32();
-                v[t.slot_base..t.slot_base + n].to_vec()
-            };
-            let sigma_out: Vec<f32> = {
-                let v = states[pid].arrays[sigma_idx].as_f32();
-                v[t.slot_base..t.slot_base + n].to_vec()
-            };
-            {
-                let (dst_state, _) = {
-                    // two disjoint arrays of the remote state
-                    let st = &mut states[q];
-                    let (a, b) = if dist_idx < sigma_idx {
-                        let (x, y) = st.arrays.split_at_mut(sigma_idx);
-                        (&mut x[dist_idx], &mut y[0])
-                    } else {
-                        let (x, y) = st.arrays.split_at_mut(dist_idx);
-                        (&mut y[0], &mut x[sigma_idx])
-                    };
-                    ((a, b), ())
-                };
-                let (dist_arr, sigma_arr) = dst_state;
-                let dv = dist_arr.as_i32_mut();
-                let sv = sigma_arr.as_f32_mut();
-                for i in 0..n {
-                    let w = t.remote_locals[i] as usize;
-                    let (md, ms) = (dist_out[i], sigma_out[i]);
-                    if md < dv[w] {
-                        dv[w] = md;
-                        sv[w] = ms;
-                    } else if md == dv[w] && md != crate::alg::INF_I32 {
-                        sv[w] += ms;
-                    }
-                }
-            }
-            // reset σ slots (add semantics); dist slots stay (min).
-            let sv = states[pid].arrays[sigma_idx].as_f32_mut();
-            sv[t.slot_base..t.slot_base + n].fill(0.0);
-            bytes += 8 * n as u64;
-            msgs += n as u64;
         }
     }
-    (bytes, msgs)
+    // reset σ slots (add semantics); dist slots stay (min).
+    let sv = owner.arrays[sigma_idx].as_f32_mut();
+    sv[t.slot_base..t.slot_base + n].fill(0.0);
+    (8 * n as u64, n as u64)
 }
 
 /// Gather the `idx`-th state array of every partition into a global array.

@@ -1,0 +1,281 @@
+//! Pipelined superstep executor (DESIGN.md §4.2): overlap communication
+//! with computation inside a BSP superstep.
+//!
+//! The synchronous executor serializes `compute(all) → communicate(all)`.
+//! This executor splits the superstep into per-partition tasks:
+//!
+//! - every CPU partition computes on its own scoped thread;
+//! - accelerator partitions step on the coordinator thread while the CPU
+//!   threads run;
+//! - the coordinator drains compute completions and, as soon as **both**
+//!   endpoints of a ghost-table exchange have finished computing, runs
+//!   that exchange — while other partitions are still computing.
+//!
+//! Communication executed before the last compute completion is *hidden*
+//! behind computation; [`StepMetrics::comm_overlapped`] records it and
+//! `Metrics::makespan_secs` subtracts it from the critical path.
+//!
+//! ## Bit-identical outputs
+//!
+//! The exchange itself is the same [`comm_op_table`] code the synchronous
+//! engine runs; what could differ is only *ordering*. Three cases:
+//!
+//! 1. `min` reductions are commutative and idempotent (also in f32, since
+//!    no NaNs occur) — any delivery order yields the same bits.
+//! 2. pull (`set`) ghost slots have exactly one writer each — order-free.
+//! 3. f32 *additive* deliveries (push-add channels, the BC dist+σ pair)
+//!    are order-sensitive ([`CommOp::order_sensitive`]), as are op lists
+//!    sharing a state array. For those the scheduler falls back to strict
+//!    canonical order (op, then owner partition, then table index — the
+//!    synchronous engine's exact order), releasing each exchange only
+//!    when every earlier exchange has run. Overlap still happens whenever
+//!    the canonical prefix is ready early.
+//!
+//! Double buffering: each partition's inbox writes land in its state
+//! arrays only after its own compute finished (readiness condition), so a
+//! partition's superstep-`s` kernel never races its superstep-`s` inbox —
+//! the sealed-inbox invariant that makes the overlap safe.
+//!
+//! Threads are spawned fresh each superstep (scoped threads make the
+//! borrow story trivially sound); spawn cost is microseconds against
+//! millisecond-scale supersteps at bench sizes. A persistent per-cycle
+//! worker pool — and hoisting the exchange plan, which must currently be
+//! re-derived because a migration can reshape `pg` between supersteps —
+//! is deliberate future work.
+
+use super::state::{AlgState, CommOp};
+use super::{comm_op_table, Element, Metrics, StepMetrics, SuperstepOutcome};
+use crate::alg::{Algorithm, ComputeOut, StepCtx};
+use crate::partition::PartitionedGraph;
+use crate::util::timer::timed;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One scheduled exchange: communication op `op` applied over ghost table
+/// `ti` of partition `p`, pointing at partition `q`. Ready once `p` and
+/// `q` both finished computing. Units are ordered op-major, then owner,
+/// then table — the synchronous engine's exact order — so strict-mode
+/// release reproduces it verbatim.
+struct Unit {
+    op: usize,
+    p: usize,
+    ti: usize,
+    q: usize,
+    ran: bool,
+}
+
+/// Conservative strictness: fall back to canonical-order release when any
+/// op is order-sensitive, or when two ops touch the same state array (in
+/// that case even op-insensitive reductions could observe each other's
+/// intermediate values in a schedule-dependent way).
+fn needs_strict_order(ops: &[CommOp]) -> bool {
+    if ops.iter().any(|op| op.order_sensitive()) {
+        return true;
+    }
+    let mut seen: Vec<usize> = Vec::new();
+    for op in ops {
+        let mut arrs = [0usize; 2];
+        let k = match *op {
+            CommOp::Single(ch) => {
+                arrs[0] = ch.array;
+                1
+            }
+            CommOp::DistSigma { dist, sigma } => {
+                arrs[0] = dist;
+                arrs[1] = sigma;
+                2
+            }
+        };
+        for &a in &arrs[..k] {
+            if seen.contains(&a) {
+                return true;
+            }
+            seen.push(a);
+        }
+    }
+    false
+}
+
+/// Execute one pipelined superstep. Semantics (outputs, `any_changed`)
+/// are identical to `run_superstep_sync`; only the schedule differs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_superstep<A: Algorithm>(
+    alg: &A,
+    pg: &PartitionedGraph,
+    states: &mut Vec<AlgState>,
+    elements: &mut [Element],
+    ops: &[CommOp],
+    cycle: usize,
+    superstep: usize,
+    instrument: bool,
+    metrics: &mut Metrics,
+) -> Result<SuperstepOutcome> {
+    let nparts = pg.parts.len();
+    let mut step = StepMetrics::empty(nparts);
+    let mut any_changed = false;
+
+    // Plan the exchanges in canonical (op, owner, table) order.
+    let mut units: Vec<Unit> = Vec::new();
+    for (op, _) in ops.iter().enumerate() {
+        for (p, part) in pg.parts.iter().enumerate() {
+            for (ti, t) in part.ghosts.iter().enumerate() {
+                if !t.is_empty() {
+                    units.push(Unit { op, p, ti, q: t.remote_part, ran: false });
+                }
+            }
+        }
+    }
+    let strict = needs_strict_order(ops);
+
+    // Each partition's state is moved into its compute task and moved back
+    // on completion; `done[p]` marks both "compute finished" and "state
+    // returned" (the inbox is sealed until then).
+    let mut slots: Vec<Option<AlgState>> = states.drain(..).map(Some).collect();
+    let mut done = vec![false; nparts];
+
+    let (tx, rx) = mpsc::channel::<(usize, AlgState, ComputeOut, f64)>();
+    let mut live = 0usize;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // -- spawn CPU compute tasks ---------------------------------------
+        for (pid, el) in elements.iter_mut().enumerate() {
+            if let Element::Cpu { threads } = el {
+                let threads = *threads;
+                let mut st = slots[pid].take().expect("state present at superstep start");
+                let tx = tx.clone();
+                let part = &pg.parts[pid];
+                live += 1;
+                scope.spawn(move || {
+                    let ctx = StepCtx { cycle, superstep, threads, instrument };
+                    let (out, secs) = timed(|| alg.compute_cpu(part, &mut st, &ctx));
+                    // Receiver dropping early (accelerator error) is fine.
+                    let _ = tx.send((pid, st, out, secs));
+                });
+            }
+        }
+        drop(tx);
+
+        // -- accelerator steps on the coordinator, overlapping the CPUs ----
+        for pid in 0..elements.len() {
+            if !matches!(elements[pid], Element::Accel(_)) {
+                continue;
+            }
+            let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
+            let si32 = alg.scalars_i32(&ctx);
+            let sf32 = alg.scalars_f32(&ctx);
+            if let Element::Accel(acc) = &mut elements[pid] {
+                let st = slots[pid].as_mut().expect("accelerator state is never moved");
+                let out = acc.step(st, &si32, &sf32)?;
+                step.compute[pid] = out.exec_secs;
+                let transfer = out.upload_secs + out.readback_secs;
+                step.comm += transfer;
+                if live > 0 {
+                    // host↔device transfer runs while CPU elements compute
+                    // — the paper's PCIe-hiding overlap.
+                    step.comm_overlapped += transfer;
+                }
+                step.bytes += out.transfer_bytes;
+                metrics.accel_transfer_bytes[pid] += out.transfer_bytes;
+                any_changed |= out.changed;
+                done[pid] = true;
+                run_ready_units(
+                    &mut units, strict, &done, &mut slots, pg, ops, &mut step, live > 0,
+                );
+            }
+        }
+
+        // -- drain completions; exchanges fire as endpoints finish ----------
+        let mut remaining = live;
+        while remaining > 0 {
+            let (pid, st, out, secs) = rx
+                .recv()
+                .map_err(|_| anyhow!("pipelined compute worker disappeared"))?;
+            slots[pid] = Some(st);
+            step.compute[pid] = secs;
+            any_changed |= out.changed;
+            metrics.mem[pid].reads += out.reads;
+            metrics.mem[pid].writes += out.writes;
+            done[pid] = true;
+            remaining -= 1;
+            run_ready_units(
+                &mut units, strict, &done, &mut slots, pg, ops, &mut step, remaining > 0,
+            );
+        }
+        Ok(())
+    })?;
+
+    // Everything is done; sweep any exchange still pending (possible only
+    // if the loop above never ran, e.g. an all-accelerator configuration).
+    run_ready_units(&mut units, strict, &done, &mut slots, pg, ops, &mut step, false);
+    debug_assert!(units.iter().all(|u| u.ran));
+
+    // Move the states back into the engine's dense vector.
+    states.extend(slots.into_iter().map(|s| s.expect("all states returned")));
+
+    Ok(SuperstepOutcome { step, any_changed })
+}
+
+/// Run every not-yet-run exchange whose endpoints both finished computing.
+/// In `strict` mode (order-sensitive f32 additions present) exchanges are
+/// released only in canonical order. `overlapping` marks the executed
+/// seconds as hidden behind still-running compute.
+#[allow(clippy::too_many_arguments)]
+fn run_ready_units(
+    units: &mut [Unit],
+    strict: bool,
+    done: &[bool],
+    slots: &mut [Option<AlgState>],
+    pg: &PartitionedGraph,
+    ops: &[CommOp],
+    step: &mut StepMetrics,
+    overlapping: bool,
+) {
+    for i in 0..units.len() {
+        if units[i].ran {
+            continue;
+        }
+        let (p, q, ti, op) = (units[i].p, units[i].q, units[i].ti, units[i].op);
+        if !(done[p] && done[q]) {
+            if strict {
+                // canonical-order barrier: nothing later may jump the queue
+                break;
+            }
+            continue;
+        }
+        let t = &pg.parts[p].ghosts[ti];
+        let (owner, remote) = two_slots(slots, p, q);
+        let t0 = Instant::now();
+        let (bytes, msgs) = comm_op_table(&ops[op], false, t, owner, remote);
+        let secs = t0.elapsed().as_secs_f64();
+        step.comm += secs;
+        if overlapping {
+            step.comm_overlapped += secs;
+        }
+        step.bytes += bytes;
+        step.messages += msgs;
+        units[i].ran = true;
+    }
+}
+
+/// Split-borrow two distinct partitions' returned states.
+fn two_slots(
+    slots: &mut [Option<AlgState>],
+    a: usize,
+    b: usize,
+) -> (&mut AlgState, &mut AlgState) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (x, y) = slots.split_at_mut(b);
+        (
+            x[a].as_mut().expect("owner state returned"),
+            y[0].as_mut().expect("remote state returned"),
+        )
+    } else {
+        let (x, y) = slots.split_at_mut(a);
+        (
+            y[0].as_mut().expect("owner state returned"),
+            x[b].as_mut().expect("remote state returned"),
+        )
+    }
+}

@@ -1,0 +1,301 @@
+//! Dynamic α re-balancing (DESIGN.md §5).
+//!
+//! The launch-time edge shares (α) come from the performance model, but
+//! realized per-element rates drift with the workload phase (frontier
+//! shape, cache residency, accelerator padding). The controller watches
+//! per-element busy time from [`StepMetrics`] and, when the slowest
+//! element has been `imbalance_threshold` busier than the fastest for
+//! `patience` consecutive supersteps, migrates a **band** of the donor's
+//! lowest-degree vertices to the recipient — the same degree-ordered
+//! machinery the HIGH/LOW assignment strategies use (`partition::assign`):
+//! partitions keep their members sorted by descending degree, so the band
+//! is cut from the tail of `local_to_global`.
+//!
+//! A migration rebuilds the partitioned graph for the new assignment and
+//! remaps all per-partition state:
+//!
+//! - **real vertices** carry their values over through the global id maps
+//!   (`part_of` / `local_of` round-trip);
+//! - **ghost and dummy slots** are re-initialized to each array's
+//!   background value (the dummy slot's value — kernels never write it),
+//!   which is the reduce identity for every push channel, so re-sent
+//!   `min` messages are idempotent and `add` outboxes restart from zero;
+//! - **pull channels** are refreshed with a pull-only exchange (the same
+//!   machinery as the cycle-initial synchronization), so the next compute
+//!   sees exactly the remote values it would have seen without migration;
+//! - **algorithm scratch** (e.g. the BFS visited bitmap) is rebuilt via
+//!   [`Algorithm::rebuild_scratch`].
+//!
+//! Migration points sit *between* supersteps (after the communication
+//! phase), where every outbox is clean — that is what makes the remap
+//! exact rather than approximate.
+
+use super::comm_phase;
+use super::config::RebalanceConfig;
+use super::state::{AlgState, CommOp, StateArray};
+use crate::alg::Algorithm;
+use crate::graph::CsrGraph;
+use crate::partition::{low_degree_band, Partition, PartitionedGraph};
+
+/// Imbalance tracker: decides *when* to migrate and between whom.
+pub(crate) struct Controller {
+    cfg: RebalanceConfig,
+    streak: usize,
+    migrations: usize,
+}
+
+impl Controller {
+    pub(crate) fn new(cfg: RebalanceConfig) -> Controller {
+        Controller { cfg, streak: 0, migrations: 0 }
+    }
+
+    /// Edge-share band moved per migration.
+    pub(crate) fn band(&self) -> f64 {
+        self.cfg.migration_band
+    }
+
+    /// Feed one superstep's per-partition busy seconds; returns
+    /// `Some((donor, recipient))` when a migration should fire.
+    pub(crate) fn observe(&mut self, busy: &[f64]) -> Option<(usize, usize)> {
+        if self.migrations >= self.cfg.max_migrations || busy.len() < 2 {
+            return None;
+        }
+        let mut slow = 0usize;
+        let mut fast = 0usize;
+        for (p, &b) in busy.iter().enumerate() {
+            if b > busy[slow] {
+                slow = p;
+            }
+            if b < busy[fast] {
+                fast = p;
+            }
+        }
+        let (hi, lo) = (busy[slow], busy[fast]);
+        if hi <= 0.0 {
+            self.streak = 0;
+            return None;
+        }
+        let imbalance = (hi - lo) / hi;
+        if imbalance <= self.cfg.imbalance_threshold {
+            self.streak = 0;
+            return None;
+        }
+        self.streak += 1;
+        if self.streak < self.cfg.patience {
+            return None;
+        }
+        self.streak = 0;
+        self.migrations += 1;
+        Some((slow, fast))
+    }
+}
+
+/// A fully prepared migration, not yet committed: the engine installs
+/// `pg`/`states` only after re-binding accelerator partitions against the
+/// candidate succeeds, so a band that no longer fits the device skips the
+/// migration instead of aborting a healthy run.
+pub(crate) struct Migration {
+    pub pg: PartitionedGraph,
+    pub states: Vec<AlgState>,
+    /// (bytes, messages) of the post-migration pull refresh.
+    pub refresh: (u64, u64),
+}
+
+/// Prepare the migration of a band of `donor`'s lowest-degree vertices to
+/// `recipient`: rebuild the partitioned graph and remap all state exactly.
+/// Returns `None` when there is nothing to move (donor too small).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn migrate_band<A: Algorithm>(
+    alg: &A,
+    graph: &CsrGraph,
+    pg: &PartitionedGraph,
+    states: &[AlgState],
+    channels: &[CommOp],
+    donor: usize,
+    recipient: usize,
+    band: f64,
+) -> Option<Migration> {
+    debug_assert_ne!(donor, recipient);
+    let moved = select_band(graph, &pg.parts[donor], band);
+    if moved.is_empty() {
+        return None;
+    }
+
+    let nparts = pg.parts.len();
+    let mut assignment = pg.part_of.clone();
+    for &gv in &moved {
+        assignment[gv as usize] = recipient as u8;
+    }
+    let new_pg = PartitionedGraph::build(graph, &assignment, nparts);
+    let mut new_states = remap_states(pg, states, &new_pg);
+
+    // Algorithm-private scratch is partition-shaped; rebuild it.
+    for (part, st) in new_pg.parts.iter().zip(new_states.iter_mut()) {
+        alg.rebuild_scratch(part, st);
+    }
+
+    // Refresh pull channels so the next compute sees the same remote
+    // values it would have without the migration.
+    let refresh = comm_phase(&new_pg, &mut new_states, channels, true);
+    Some(Migration { pg: new_pg, states: new_states, refresh })
+}
+
+/// Pick the band: walk the donor's members from the low-degree tail until
+/// the band's edge share is covered, bounded by a proportional vertex cap
+/// so zero-degree tails can't drain the partition. Never empties the
+/// donor. Returns global vertex ids.
+pub(crate) fn select_band(g: &CsrGraph, donor: &Partition, band: f64) -> Vec<u32> {
+    if donor.nv <= 1 {
+        return Vec::new();
+    }
+    let target_edges = (band * donor.edge_count() as f64).max(1.0);
+    let max_vertices =
+        ((band * donor.nv as f64).ceil() as usize).clamp(1, donor.nv - 1);
+    low_degree_band(g, &donor.local_to_global, target_edges, max_vertices)
+}
+
+/// Remap every partition's state arrays onto the freshly built
+/// partitioning: real vertices carry over via global ids; ghost and dummy
+/// slots take the array's background value (read from the old dummy slot,
+/// which kernels never touch).
+fn remap_states(
+    old_pg: &PartitionedGraph,
+    old_states: &[AlgState],
+    new_pg: &PartitionedGraph,
+) -> Vec<AlgState> {
+    new_pg
+        .parts
+        .iter()
+        .map(|part| {
+            let template = &old_states[part.id];
+            let arrays = template
+                .arrays
+                .iter()
+                .enumerate()
+                .map(|(k, arr)| remap_array(old_pg, old_states, part, k, arr, false))
+                .collect();
+            let aux = template
+                .aux
+                .iter()
+                .enumerate()
+                .map(|(k, arr)| remap_array(old_pg, old_states, part, k, arr, true))
+                .collect();
+            AlgState { arrays, aux, scratch: Vec::new() }
+        })
+        .collect()
+}
+
+fn remap_array(
+    old_pg: &PartitionedGraph,
+    old_states: &[AlgState],
+    part: &Partition,
+    k: usize,
+    template: &StateArray,
+    aux: bool,
+) -> StateArray {
+    let n = part.state_len();
+    match template {
+        StateArray::I32(old) => {
+            let fill = *old.last().expect("state arrays are never empty");
+            let mut out = vec![fill; n];
+            for (l, &gv) in part.local_to_global.iter().enumerate() {
+                let op = old_pg.part_of[gv as usize] as usize;
+                let ol = old_pg.local_of[gv as usize] as usize;
+                let src = if aux { &old_states[op].aux[k] } else { &old_states[op].arrays[k] };
+                out[l] = src.as_i32()[ol];
+            }
+            StateArray::I32(out)
+        }
+        StateArray::F32(old) => {
+            let fill = *old.last().expect("state arrays are never empty");
+            let mut out = vec![fill; n];
+            for (l, &gv) in part.local_to_global.iter().enumerate() {
+                let op = old_pg.part_of[gv as usize] as usize;
+                let ol = old_pg.local_of[gv as usize] as usize;
+                let src = if aux { &old_states[op].aux[k] } else { &old_states[op].arrays[k] };
+                out[l] = src.as_f32()[ol];
+            }
+            StateArray::F32(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{rmat, RmatParams};
+    use crate::graph::CsrGraph;
+    use crate::partition::Strategy;
+
+    fn controller(threshold: f64, patience: usize, max: usize) -> Controller {
+        Controller::new(RebalanceConfig {
+            imbalance_threshold: threshold,
+            patience,
+            migration_band: 0.1,
+            max_migrations: max,
+        })
+    }
+
+    #[test]
+    fn controller_waits_for_patience() {
+        let mut c = controller(0.3, 2, 10);
+        assert_eq!(c.observe(&[1.0, 0.5]), None); // streak 1
+        assert_eq!(c.observe(&[1.0, 0.5]), Some((0, 1))); // streak 2 fires
+        // streak resets after firing
+        assert_eq!(c.observe(&[1.0, 0.5]), None);
+    }
+
+    #[test]
+    fn controller_resets_on_balance() {
+        let mut c = controller(0.3, 2, 10);
+        assert_eq!(c.observe(&[1.0, 0.5]), None);
+        assert_eq!(c.observe(&[1.0, 0.95]), None); // balanced: reset
+        assert_eq!(c.observe(&[1.0, 0.5]), None); // streak restarts at 1
+    }
+
+    #[test]
+    fn controller_respects_max_migrations_and_direction() {
+        let mut c = controller(0.3, 1, 1);
+        assert_eq!(c.observe(&[0.2, 1.0]), Some((1, 0))); // donor = slowest
+        assert_eq!(c.observe(&[0.2, 1.0]), None); // cap reached
+        let mut c = controller(0.3, 1, 5);
+        assert_eq!(c.observe(&[0.0, 0.0]), None); // no busy time: no signal
+        assert_eq!(c.observe(&[1.0]), None); // single partition
+    }
+
+    #[test]
+    fn band_respects_caps_and_degree_order() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 3)));
+        let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.5, 0.5], 1);
+        let donor = &pg.parts[0];
+        let moved = select_band(&g, donor, 0.1);
+        assert!(!moved.is_empty());
+        assert!(moved.len() < donor.nv);
+        // the band comes from the low-degree tail: every moved vertex has
+        // degree <= every kept vertex's degree
+        let max_moved = moved.iter().map(|&v| g.out_degree(v)).max().unwrap();
+        let kept_min = donor
+            .local_to_global
+            .iter()
+            .take(donor.nv - moved.len())
+            .map(|&v| g.out_degree(v))
+            .min()
+            .unwrap();
+        assert!(max_moved <= kept_min, "moved max {max_moved} kept min {kept_min}");
+        // tiny partitions refuse to move anything
+        let single = Partition {
+            id: 0,
+            nv: 1,
+            local_to_global: vec![0],
+            csr: crate::partition::LocalCsr {
+                row_offsets: vec![0, 0],
+                targets: vec![],
+                weights: None,
+                local_counts: vec![0],
+            },
+            ghosts: vec![],
+            n_ghost: 0,
+        };
+        assert!(select_band(&g, &single, 0.5).is_empty());
+    }
+}

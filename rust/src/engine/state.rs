@@ -178,6 +178,20 @@ impl CommOp {
             CommOp::DistSigma { .. } => 8,
         }
     }
+
+    /// Whether the bitwise result depends on the order in which different
+    /// senders' deliveries reach a receiver cell. `min` is idempotent and
+    /// commutative even in f32; pull/`set` slots have exactly one writer;
+    /// but f32 *additions* from multiple senders (push-add channels and
+    /// the BC dist+σ pair) only reproduce the synchronous engine bit-for-
+    /// bit when applied in the same sender order. The pipelined executor
+    /// serializes deliveries of such ops per receiver (DESIGN.md §4.2).
+    pub fn order_sensitive(&self) -> bool {
+        match self {
+            CommOp::Single(ch) => ch.reduce == Reduce::AddF32 && ch.kind == ChannelKind::Push,
+            CommOp::DistSigma { .. } => true,
+        }
+    }
 }
 
 /// Apply `reduce(dst, msg)` to one i32 cell; returns true if it changed.
@@ -273,5 +287,15 @@ mod tests {
     #[should_panic(expected = "expected f32")]
     fn wrong_type_panics() {
         StateArray::I32(vec![1]).as_f32();
+    }
+
+    #[test]
+    fn order_sensitivity_classification() {
+        assert!(!CommOp::Single(Channel::push_min_i32(0)).order_sensitive());
+        assert!(!CommOp::Single(Channel::push_min_f32(0)).order_sensitive());
+        assert!(!CommOp::Single(Channel::pull_f32(0)).order_sensitive());
+        assert!(!CommOp::Single(Channel::pull_i32(0)).order_sensitive());
+        assert!(CommOp::Single(Channel::push_add_f32(0)).order_sensitive());
+        assert!(CommOp::DistSigma { dist: 0, sigma: 1 }.order_sensitive());
     }
 }

@@ -127,6 +127,11 @@ pub struct Measured {
     pub bottleneck_secs: f64,
     /// Communication seconds (mean).
     pub comm_secs: f64,
+    /// Realized communication-overlap factor, mean over reps (0 for the
+    /// synchronous engine; DESIGN.md §4.2).
+    pub overlap_factor: f64,
+    /// Vertex migrations by the dynamic α controller (last rep).
+    pub migrations: usize,
     /// Last run's full result (partition stats etc. are deterministic
     /// given the seed, so any rep's copy is representative).
     pub last: RunResult,
@@ -142,6 +147,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
     let mut bottleneck = Vec::with_capacity(reps);
     let mut comm = Vec::with_capacity(reps);
     let mut teps = Vec::with_capacity(reps);
+    let mut overlap = Vec::with_capacity(reps);
     let mut last: Option<(RunResult, u64)> = None;
     for _ in 0..reps {
         let (r, tr) = run_alg(g, spec, cfg)?;
@@ -149,6 +155,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         makespans.push(mk);
         bottleneck.push(r.metrics.bottleneck_compute_secs());
         comm.push(r.metrics.comm_secs());
+        overlap.push(r.metrics.overlap_factor());
         teps.push(tr as f64 / mk);
         last = Some((r, tr));
     }
@@ -159,6 +166,8 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         teps: stats::mean(&teps),
         bottleneck_secs: stats::mean(&bottleneck),
         comm_secs: stats::mean(&comm),
+        overlap_factor: stats::mean(&overlap),
+        migrations: last.metrics.migrations,
         last,
         traversed,
     })
@@ -195,5 +204,16 @@ mod tests {
         let m = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, 2).unwrap();
         assert!(m.comm_secs >= 0.0);
         assert!((m.last.shares[0] - 0.6).abs() < 0.1);
+        assert_eq!(m.overlap_factor, 0.0, "synchronous engine never overlaps");
+        assert_eq!(m.migrations, 0);
+    }
+
+    #[test]
+    fn measure_pipelined_reports_overlap_fields() {
+        let g = build_workload(Workload::Rmat(8), 7, AlgKind::Bfs);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand).pipelined();
+        let m = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, 1).unwrap();
+        assert!((0.0..=1.0).contains(&m.overlap_factor));
+        assert!(m.teps > 0.0);
     }
 }

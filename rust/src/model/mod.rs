@@ -83,6 +83,36 @@ pub fn comm_rate_for_message_bytes(c_base: f64, msg_bytes: f64) -> f64 {
     c_base * 4.0 / msg_bytes
 }
 
+/// Eq. 1 extended with an overlap factor ω ∈ [0, 1]: the fraction of the
+/// partition's communication hidden behind computation by the pipelined
+/// executor (DESIGN.md §4.2). ω = 0 degenerates to the paper's Eq. 1;
+/// ω = 1 is perfect hiding (the §3 model's implicit assumption). The
+/// realized counterpart is `Metrics::overlap_factor`.
+pub fn partition_time_overlapped(load: &PartitionLoad, rate: f64, c: f64, omega: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&omega));
+    (1.0 - omega) * load.boundary_share / c + load.edge_share / rate
+}
+
+/// Eq. 2 with overlap: makespan of a two-element platform at overlap ω.
+pub fn makespan_overlapped(
+    cpu: &PartitionLoad,
+    acc: &PartitionLoad,
+    p: &ModelParams,
+    omega: f64,
+) -> f64 {
+    partition_time_overlapped(cpu, p.r_cpu, p.c, omega)
+        .max(partition_time_overlapped(acc, p.r_acc, p.c, omega))
+}
+
+/// Eq. 4 with overlap: predicted speedup vs host-only processing when a
+/// fraction ω of communication is hidden behind compute.
+pub fn speedup_overlapped(alpha: f64, beta: f64, p: &ModelParams, omega: f64) -> f64 {
+    let host_only = 1.0 / p.r_cpu;
+    let cpu = PartitionLoad { edge_share: alpha, boundary_share: beta };
+    let acc = PartitionLoad { edge_share: 1.0 - alpha, boundary_share: beta };
+    host_only / makespan_overlapped(&cpu, &acc, p, omega)
+}
+
 /// Predicted speedup series over a range of α values (a figure column).
 pub fn speedup_series(alphas: &[f64], beta: f64, p: &ModelParams) -> Vec<f64> {
     alphas.iter().map(|&a| speedup(a, beta, p)).collect()
@@ -147,5 +177,33 @@ mod tests {
         let p = ModelParams::paper_reference();
         let s = speedup_series(&[0.9, 0.7, 0.5], 0.05, &p);
         assert!(s[0] < s[1] && s[1] < s[2]);
+    }
+
+    #[test]
+    fn zero_overlap_degenerates_to_base_model() {
+        let p = ModelParams::paper_reference();
+        for (alpha, beta) in [(0.6, 0.05), (0.8, 0.4)] {
+            let a = speedup(alpha, beta, &p);
+            let b = speedup_overlapped(alpha, beta, &p, 0.0);
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn overlap_monotonically_raises_speedup() {
+        let p = ModelParams::paper_reference();
+        let s0 = speedup_overlapped(0.6, 0.4, &p, 0.0);
+        let s5 = speedup_overlapped(0.6, 0.4, &p, 0.5);
+        let s1 = speedup_overlapped(0.6, 0.4, &p, 1.0);
+        assert!(s0 < s5 && s5 < s1, "{s0} {s5} {s1}");
+    }
+
+    #[test]
+    fn full_overlap_hides_all_communication() {
+        // at ω = 1 the boundary term vanishes: speedup = 1/α when the CPU
+        // partition dominates
+        let p = ModelParams { r_cpu: 1e9, r_acc: 1e12, c: 3e9 };
+        let s = speedup_overlapped(0.7, 0.9, &p, 1.0);
+        assert!((s - 1.0 / 0.7).abs() < 1e-9, "s={s}");
     }
 }

@@ -92,6 +92,31 @@ pub fn assign(g: &CsrGraph, strategy: Strategy, shares: &[f64], seed: u64) -> Ve
     assignment
 }
 
+/// Cut a band from the low-degree tail of a descending-degree member
+/// list: take vertices from the end until their cumulative out-degree
+/// reaches `target_edges`, but never more than `max_vertices`. This is
+/// the runtime re-balancing counterpart of the HIGH/LOW greedy prefix
+/// fill above — `engine`'s dynamic α controller migrates such bands
+/// between processing elements (partitions keep `local_to_global` sorted
+/// by descending degree, so the tail is exactly the low-degree band).
+pub fn low_degree_band(
+    g: &CsrGraph,
+    members_desc: &[u32],
+    target_edges: f64,
+    max_vertices: usize,
+) -> Vec<u32> {
+    let mut band = Vec::new();
+    let mut edges = 0f64;
+    for &v in members_desc.iter().rev().take(max_vertices) {
+        band.push(v);
+        edges += g.out_degree(v) as f64;
+        if edges >= target_edges {
+            break;
+        }
+    }
+    band
+}
+
 /// Realized statistics of an assignment: per-partition vertex and edge
 /// counts (Figure 13's |V_cpu| plot is `vertices[0] / |V|`).
 #[derive(Debug, Clone)]
@@ -204,5 +229,23 @@ mod tests {
         assert_eq!(Strategy::parse("HIGH").unwrap(), Strategy::High);
         assert_eq!(Strategy::parse("random").unwrap(), Strategy::Rand);
         assert!(Strategy::parse("metis").is_err());
+    }
+
+    #[test]
+    fn low_degree_band_cuts_the_tail() {
+        let g = g_rmat();
+        let mut members: Vec<u32> = (0..g.vertex_count as u32).collect();
+        members.sort_by_key(|&v| std::cmp::Reverse(g.out_degree(v)));
+        let total: f64 = g.edge_count() as f64;
+        let band = low_degree_band(&g, &members, 0.05 * total, members.len());
+        assert!(!band.is_empty());
+        // band members are exactly the list's suffix, walked tail-first
+        let mut suffix: Vec<u32> = members[members.len() - band.len()..].to_vec();
+        suffix.reverse();
+        assert_eq!(suffix, band);
+        // vertex cap is respected even when the edge target is unreachable
+        let capped = low_degree_band(&g, &members, f64::INFINITY, 7);
+        assert_eq!(capped.len(), 7);
+        assert!(low_degree_band(&g, &members, 1.0, 0).is_empty());
     }
 }

@@ -25,7 +25,7 @@
 
 pub mod assignment;
 
-pub use assignment::{assign, assignment_stats, AssignmentStats, Strategy};
+pub use assignment::{assign, assignment_stats, low_degree_band, AssignmentStats, Strategy};
 
 use crate::graph::CsrGraph;
 

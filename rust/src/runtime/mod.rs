@@ -208,6 +208,23 @@ impl PjrtRuntime {
             scratch_f32: vec![pad_f32; n_cap],
         })
     }
+
+    /// Re-bind a partition to its program after the dynamic α controller
+    /// re-shaped the partitioning (`engine`'s vertex migration) or a BSP
+    /// cycle switched programs. Functionally a fresh [`Self::instantiate`]
+    /// against the new geometry; the compiled executable comes from the
+    /// per-file cache, so the cost is re-uploading the device-resident
+    /// edge/aux arrays — the incremental part of migration on the
+    /// accelerator side.
+    pub fn rebind(
+        &mut self,
+        prog: &ProgramSpec,
+        part: &Partition,
+        state: &AlgState,
+        budget_bytes: u64,
+    ) -> Result<AccelPartition> {
+        self.instantiate(prog, part, state, budget_bytes)
+    }
 }
 
 /// Outcome of one accelerator superstep.

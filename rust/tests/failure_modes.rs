@@ -4,9 +4,9 @@
 
 use std::path::PathBuf;
 use totem::alg::{bfs::Bfs, sssp::Sssp};
-use totem::engine::{self, EngineConfig};
+use totem::engine::{self, EngineConfig, RebalanceConfig};
 use totem::graph::generator::{rmat, RmatParams};
-use totem::graph::{io as gio, CsrGraph};
+use totem::graph::{io as gio, CsrGraph, EdgeList};
 use totem::partition::Strategy;
 use totem::runtime::{Manifest, PjrtRuntime};
 
@@ -155,4 +155,81 @@ fn zero_share_partition_is_empty_but_valid() {
     let mut alg = Bfs::new(0);
     let r = engine::run(&g, &mut alg, &cfg).unwrap();
     assert_eq!(r.output.as_i32().len(), g.vertex_count);
+}
+
+#[test]
+fn rebalance_rejects_nonpositive_threshold() {
+    let g = small_graph();
+    for thr in [0.0, -0.5] {
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand).with_rebalance(
+            RebalanceConfig { imbalance_threshold: thr, ..RebalanceConfig::default() },
+        );
+        let mut alg = Bfs::new(0);
+        let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("imbalance_threshold"), "thr={thr}: {msg}");
+    }
+}
+
+#[test]
+fn rebalance_rejects_single_partition_run() {
+    let g = small_graph();
+    let cfg = EngineConfig::host_only(1).with_rebalance(RebalanceConfig::default());
+    let mut alg = Bfs::new(0);
+    let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("2 partitions"), "{msg}");
+}
+
+#[test]
+fn rebalance_rejects_bad_patience_and_band() {
+    let g = small_graph();
+    let base = RebalanceConfig::default();
+    let cases = [
+        RebalanceConfig { patience: 0, ..base },
+        RebalanceConfig { migration_band: 0.0, ..base },
+        RebalanceConfig { migration_band: 1.0, ..base },
+        RebalanceConfig { imbalance_threshold: 2.0, ..base },
+    ];
+    for rb in cases {
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand).with_rebalance(rb);
+        let mut alg = Bfs::new(0);
+        assert!(
+            engine::run(&g, &mut alg, &cfg).map(|_| ()).is_err(),
+            "accepted invalid {rb:?}"
+        );
+    }
+}
+
+#[test]
+fn pipelined_with_zero_boundary_edges_is_clean() {
+    // edgeless graph: partitions exist but no ghost tables at all — the
+    // pipelined scheduler must terminate without exchanges, not panic.
+    let g = CsrGraph::from_edge_list(&EdgeList::new(64));
+    let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand).pipelined();
+    let mut alg = Bfs::new(0);
+    let r = engine::run(&g, &mut alg, &cfg).unwrap();
+    assert_eq!(r.output.as_i32()[0], 0);
+    assert_eq!(r.metrics.total_messages(), 0);
+    assert_eq!(r.metrics.overlap_factor(), 0.0);
+}
+
+#[test]
+fn rebalance_with_zero_boundary_edges_is_clean() {
+    // migrations on a disconnected graph must not corrupt anything; the
+    // run completes with every vertex keeping its own component label.
+    let g = CsrGraph::from_edge_list(&EdgeList::new(64));
+    let rb = RebalanceConfig {
+        imbalance_threshold: 0.01,
+        patience: 1,
+        migration_band: 0.2,
+        max_migrations: 3,
+    };
+    let cfg = EngineConfig::cpu_partitions(&[0.9, 0.1], Strategy::Rand)
+        .pipelined()
+        .with_rebalance(rb);
+    let mut alg = Bfs::new(5);
+    let r = engine::run(&g, &mut alg, &cfg).unwrap();
+    assert_eq!(r.output.as_i32()[5], 0);
+    assert_eq!(r.output.as_i32().iter().filter(|&&l| l == 0).count(), 1);
 }

@@ -5,7 +5,7 @@
 
 use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp};
 use totem::baseline;
-use totem::engine::{self, EngineConfig};
+use totem::engine::{self, EngineConfig, RebalanceConfig};
 use totem::graph::generator::{rmat, with_random_weights, RmatParams};
 use totem::graph::CsrGraph;
 use totem::partition::Strategy;
@@ -31,6 +31,33 @@ fn configs() -> Vec<(String, EngineConfig)> {
     out.push((
         "3p-RAND".into(),
         EngineConfig::cpu_partitions(&[0.5, 0.25, 0.25], Strategy::Rand),
+    ));
+    // pipelined executor: must reproduce every output exactly
+    out.push((
+        "2p-HIGH-pipelined".into(),
+        EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::High).pipelined(),
+    ));
+    out.push((
+        "3p-RAND-pipelined".into(),
+        EngineConfig::cpu_partitions(&[0.5, 0.25, 0.25], Strategy::Rand).pipelined(),
+    ));
+    // dynamic α re-balancing on a deliberately skewed launch split, with
+    // an aggressive policy so migrations actually fire mid-run
+    let aggressive = RebalanceConfig {
+        imbalance_threshold: 0.05,
+        patience: 1,
+        migration_band: 0.15,
+        max_migrations: 4,
+    };
+    out.push((
+        "2p-HIGH-rebalance".into(),
+        EngineConfig::cpu_partitions(&[0.85, 0.15], Strategy::High).with_rebalance(aggressive),
+    ));
+    out.push((
+        "2p-RAND-pipelined-rebalance".into(),
+        EngineConfig::cpu_partitions(&[0.85, 0.15], Strategy::Rand)
+            .pipelined()
+            .with_rebalance(aggressive),
     ));
     out
 }

@@ -5,9 +5,10 @@
 
 use totem::alg::{bfs::Bfs, cc::Cc, sssp::Sssp};
 use totem::baseline;
-use totem::engine::{self, EngineConfig};
+use totem::engine::{self, EngineConfig, StateArray};
 use totem::graph::generator::{rmat, uniform, with_random_weights, RmatParams};
 use totem::graph::CsrGraph;
+use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
 use totem::partition::{assign, PartitionedGraph, Strategy};
 use totem::util::rng::Rng;
 
@@ -153,6 +154,77 @@ fn prop_cc_labels_are_component_minima() {
         // reachable in its undirected component — check label ≤ own id
         for (v, &l) in got.iter().enumerate() {
             assert!(l <= v as i32, "trial {trial} vertex {v}");
+        }
+    }
+}
+
+/// f32 results are compared on bit patterns: tolerance-free equality is
+/// the pipelined executor's contract (DESIGN.md §4.2).
+fn assert_bit_identical(a: &StateArray, b: &StateArray, ctx: &str) {
+    match (a, b) {
+        (StateArray::I32(x), StateArray::I32(y)) => assert_eq!(x, y, "{ctx}"),
+        (StateArray::F32(x), StateArray::F32(y)) => {
+            assert_eq!(x.len(), y.len(), "{ctx}: length");
+            for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{ctx} vertex {i}: {p} vs {q}");
+            }
+        }
+        _ => panic!("{ctx}: output dtype mismatch"),
+    }
+}
+
+/// The pipelined executor must produce bit-identical outputs — and the
+/// same superstep count — as the synchronous executor for every
+/// algorithm, across random graphs (R-MAT and uniform), seeds, partition
+/// counts, and partition strategies.
+#[test]
+fn prop_pipelined_bit_identical_to_synchronous() {
+    let mut rng = Rng::new(0x0E1A);
+    for trial in 0..6 {
+        let g = random_graph(&mut rng, true); // weighted so SSSP runs too
+        let shares = random_shares(&mut rng);
+        let strat = random_strategy(&mut rng);
+        let seed = rng.next_u64();
+        let src = rng.below(g.vertex_count as u64) as u32;
+        for alg in ALL_ALGS {
+            let spec = RunSpec::new(alg).with_source(src).with_rounds(4);
+            let sync_cfg = EngineConfig::cpu_partitions(&shares, strat).with_seed(seed);
+            let pipe_cfg = sync_cfg.clone().pipelined();
+            let (rs, _) = run_alg(&g, spec, &sync_cfg).unwrap();
+            let (rp, _) = run_alg(&g, spec, &pipe_cfg).unwrap();
+            let ctx = format!("trial {trial} alg {} src {src}", alg.name());
+            assert_bit_identical(&rs.output, &rp.output, &ctx);
+            assert_eq!(rs.supersteps, rp.supersteps, "{ctx}: superstep count");
+            // overlap accounting invariants
+            for (k, s) in rp.metrics.steps.iter().enumerate() {
+                assert!(
+                    s.comm_overlapped <= s.comm + 1e-12,
+                    "{ctx}: step {k} overlapped {} > comm {}",
+                    s.comm_overlapped,
+                    s.comm
+                );
+            }
+            let of = rp.metrics.overlap_factor();
+            assert!((0.0..=1.0).contains(&of), "{ctx}: overlap factor {of}");
+        }
+    }
+}
+
+/// Single-partition runs must be pipelined-safe (no exchanges at all) and
+/// equal to the sequential oracle.
+#[test]
+fn prop_pipelined_single_partition_and_threads() {
+    let mut rng = Rng::new(0x51A61E);
+    for _ in 0..6 {
+        let g = random_graph(&mut rng, false);
+        let src = rng.below(g.vertex_count as u64) as u32;
+        let expect = baseline::bfs(&g, src);
+        for threads in [1usize, 3] {
+            let cfg = EngineConfig::host_only(threads).pipelined();
+            let mut alg = Bfs::new(src);
+            let r = engine::run(&g, &mut alg, &cfg).unwrap();
+            assert_eq!(r.output.as_i32(), expect.as_slice(), "threads {threads}");
+            assert_eq!(r.metrics.overlap_factor(), 0.0, "nothing to overlap");
         }
     }
 }

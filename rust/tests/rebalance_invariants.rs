@@ -1,0 +1,180 @@
+//! Invariants of the dynamic α controller (engine::rebalance): vertex
+//! migration must preserve the global vertex/edge sets, keep the
+//! `part_of`/`local_of` maps and ghost tables exactly consistent, and
+//! leave `RunResult`'s share/footprint/comm-slot accounting exact — while
+//! never changing algorithm outputs.
+
+use totem::baseline;
+use totem::engine::{self, EngineConfig, RebalanceConfig};
+use totem::graph::generator::{rmat, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::harness::{build_workload, run_alg, AlgKind, RunSpec};
+use totem::graph::Workload;
+use totem::partition::{low_degree_band, PartitionedGraph, Strategy};
+
+/// A policy aggressive enough that migrations reliably fire on a skewed
+/// launch split.
+fn aggressive() -> RebalanceConfig {
+    RebalanceConfig {
+        imbalance_threshold: 0.05,
+        patience: 1,
+        migration_band: 0.15,
+        max_migrations: 4,
+    }
+}
+
+fn skewed_cfg(strategy: Strategy) -> EngineConfig {
+    EngineConfig::cpu_partitions(&[0.9, 0.1], strategy).with_rebalance(aggressive())
+}
+
+#[test]
+fn migrations_fire_and_accounting_stays_exact() {
+    // PageRank with a fixed round count: compute per superstep is
+    // edge-proportional, so a 0.9/0.1 split shows ~9x imbalance — far
+    // above the 5% threshold on every superstep.
+    let g = build_workload(Workload::Rmat(11), 3, AlgKind::Pagerank);
+    let spec = RunSpec::new(AlgKind::Pagerank).with_rounds(6);
+    let (r, _) = run_alg(&g, spec, &skewed_cfg(Strategy::High)).unwrap();
+    assert!(
+        r.metrics.migrations >= 1,
+        "controller never fired on a 9x-imbalanced run"
+    );
+
+    // global vertex set preserved across migrations
+    assert_eq!(r.vertices.iter().sum::<usize>(), g.vertex_count);
+    // edge accounting: realized shares sum to 1, footprint edges to |E|
+    assert!((r.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{:?}", r.shares);
+    assert!(r.shares.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    let fp_edges: usize = r.footprints.iter().map(|f| f.edges).sum();
+    assert_eq!(fp_edges, g.edge_count());
+    let fp_vertices: usize = r.footprints.iter().map(|f| f.vertices).sum();
+    assert_eq!(fp_vertices, g.vertex_count);
+    // footprint totals are the exact sum of their categories
+    for f in &r.footprints {
+        assert_eq!(
+            f.total(),
+            f.graph_bytes + f.inbox_bytes + f.outbox_bytes + f.state_bytes
+        );
+        assert!(f.graph_bytes > 0 && f.state_bytes > 0);
+    }
+    // comm_slots counts every ghost slot once on each side of its pair
+    let slot_sum: u64 = r.comm_slots.iter().sum();
+    assert_eq!(slot_sum, 2 * r.beta.reduced_messages);
+
+    // and the output still matches the oracle
+    let expect = baseline::pagerank(&g, 6);
+    for (v, (a, b)) in r.output.as_f32().iter().zip(&expect).enumerate() {
+        let tol = 1e-4 * b.abs().max(1e-6);
+        assert!((a - b).abs() <= tol.max(1e-7), "vertex {v}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn band_migration_preserves_partition_maps_and_ghosts() {
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 7)));
+    let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.7, 0.3], 1);
+    let donor = &pg.parts[0];
+    let band = low_degree_band(
+        &g,
+        &donor.local_to_global,
+        0.1 * donor.edge_count() as f64,
+        donor.nv - 1,
+    );
+    assert!(!band.is_empty());
+
+    let mut assignment = pg.part_of.clone();
+    for &v in &band {
+        assignment[v as usize] = 1;
+    }
+    let pg2 = PartitionedGraph::build(&g, &assignment, 2);
+
+    // vertex and edge multisets preserved
+    assert_eq!(pg2.parts.iter().map(|p| p.nv).sum::<usize>(), g.vertex_count);
+    assert_eq!(
+        pg2.parts.iter().map(|p| p.edge_count()).sum::<usize>(),
+        g.edge_count()
+    );
+    assert_eq!(pg2.parts[1].nv, pg.parts[1].nv + band.len());
+
+    // part_of / local_of round-trip is exact for every vertex
+    for v in 0..g.vertex_count {
+        let p = pg2.part_of[v] as usize;
+        let l = pg2.local_of[v] as usize;
+        assert_eq!(pg2.parts[p].local_to_global[l], v as u32, "vertex {v}");
+    }
+
+    // ghost tables: contiguous slot ranges, sorted, in-range
+    for p in &pg2.parts {
+        let mut base = p.nv;
+        for t in &p.ghosts {
+            assert_eq!(t.slot_base, base);
+            base += t.len();
+            assert!(t.remote_locals.windows(2).all(|w| w[0] < w[1]));
+            let rp = &pg2.parts[t.remote_part];
+            assert!(t.remote_locals.iter().all(|&l| (l as usize) < rp.nv));
+        }
+        assert_eq!(base, p.nv + p.n_ghost);
+    }
+}
+
+#[test]
+fn min_reduction_outputs_exact_across_migrations() {
+    // BFS / CC / SSSP use min reductions: outputs must be *exactly* the
+    // oracle's even when migrations reshuffle partitions mid-run.
+    for seed in [5u64, 17, 23] {
+        let mut el = rmat(&RmatParams::paper(9, seed));
+        with_random_weights(&mut el, 64, seed + 1);
+        let g = CsrGraph::from_edge_list(&el);
+        let src = 3u32;
+
+        for mode in [false, true] {
+            let mut cfg = skewed_cfg(Strategy::Rand).with_seed(seed);
+            if mode {
+                cfg = cfg.pipelined();
+            }
+            let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Bfs).with_source(src), &cfg).unwrap();
+            assert_eq!(
+                r.output.as_i32(),
+                baseline::bfs(&g, src).as_slice(),
+                "bfs seed {seed} pipelined {mode}"
+            );
+
+            let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Cc), &cfg).unwrap();
+            assert_eq!(
+                r.output.as_i32(),
+                baseline::cc(&g).as_slice(),
+                "cc seed {seed} pipelined {mode}"
+            );
+
+            let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Sssp).with_source(src), &cfg).unwrap();
+            assert_eq!(
+                r.output.as_f32(),
+                baseline::sssp(&g, src).as_slice(),
+                "sssp seed {seed} pipelined {mode}"
+            );
+        }
+    }
+}
+
+#[test]
+fn migrations_respect_the_cap() {
+    let g = build_workload(Workload::Rmat(10), 9, AlgKind::Pagerank);
+    let rb = RebalanceConfig { max_migrations: 2, ..aggressive() };
+    let cfg = EngineConfig::cpu_partitions(&[0.9, 0.1], Strategy::High).with_rebalance(rb);
+    let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Pagerank).with_rounds(8), &cfg).unwrap();
+    assert!(r.metrics.migrations <= 2, "{} migrations", r.metrics.migrations);
+}
+
+#[test]
+fn bc_two_cycle_run_survives_migrations() {
+    // BC spans two BSP cycles with different channel sets (the paired
+    // dist+σ push, then pulls); migrations must be safe in both.
+    let g = build_workload(Workload::Rmat(9), 13, AlgKind::Bc);
+    let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Bc).with_source(1), &skewed_cfg(Strategy::Rand))
+        .unwrap();
+    let expect = baseline::bc(&g, 1);
+    for (v, (a, b)) in r.output.as_f32().iter().zip(&expect).enumerate() {
+        let tol = 1e-3 * b.abs().max(1.0);
+        assert!((a - b).abs() <= tol, "vertex {v}: {a} vs {b}");
+    }
+}

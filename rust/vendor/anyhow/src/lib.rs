@@ -1,0 +1,208 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the small slice of `anyhow` the codebase uses is vendored here as a
+//! path dependency (DESIGN.md §6): [`Error`] as a message chain,
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, [`Context`] for both
+//! `Result` and `Option`, and `From` conversions for standard error types.
+//!
+//! Semantics match upstream where it matters to this codebase:
+//! `format!("{err}")` prints the outermost message, `format!("{err:#}")`
+//! prints the whole chain joined with `": "`, and `.context(c)` makes `c`
+//! the new outermost message.
+
+use std::fmt;
+
+/// An error: an outermost message plus an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with a new outermost context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let joined: Vec<&str> = self.chain().collect();
+            write!(f, "{}", joined.join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`, same
+// as upstream anyhow — that is what makes the blanket conversion below
+// coherent with the identity `From`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as message links.
+        let mut msgs = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(err) = cur {
+            msgs.push(err.to_string());
+            cur = err.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut acc = Error { msg: it.next().unwrap_or_default(), source: None };
+        for m in it {
+            acc = acc.context(m);
+        }
+        acc
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, as in upstream anyhow.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading manifest: "), "{full}");
+        assert!(full.contains("no such file"), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing field");
+        assert_eq!(Some(7u32).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_and_bail() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {}", flag);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        let e = f(true).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was true");
+        let e2 = anyhow!("code {}", 42);
+        assert_eq!(format!("{e2}"), "code 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("inner"));
+    }
+
+    #[test]
+    fn root_cause_is_innermost() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 3);
+    }
+}
