@@ -1,17 +1,33 @@
-//! Breadth-First Search — the paper's level-synchronous kernel (Figure 11).
+//! Breadth-First Search — the paper's level-synchronous kernel (Figure 11)
+//! plus a direction-optimized bottom-up variant (DESIGN.md §8).
 //!
-//! Per superstep `cur`, every vertex at level `cur` relaxes its edges:
-//! unvisited local neighbors get level `cur+1`; remote neighbors get a
-//! `min` into their ghost slot, which the communication phase reduces into
-//! the owning partition (one message per unique remote neighbor — §3.4).
+//! **Top-down (push)**: per superstep `cur`, every vertex at level `cur`
+//! relaxes its edges: unvisited local neighbors get level `cur+1`; remote
+//! neighbors get a `min` into their ghost slot, which the communication
+//! phase reduces into the owning partition (one message per unique remote
+//! neighbor — §3.4).
+//!
+//! **Bottom-up (pull)**: when the engine's α/β policy flips this element
+//! to `Direction::Pull` (Beamer et al. 2012; Sallinen et al. 2015 for the
+//! hybrid setting), each *unexplored* local vertex probes its in-neighbors
+//! through the partition's transpose CSR and adopts `cur+1` on the first
+//! frontier parent — early exit instead of frontier expansion. Frontier
+//! vertices still `min` `cur+1` into their boundary ghost slots (the tail
+//! of their forward adjacency): remote partitions cannot probe this
+//! element's levels, so cross-partition edges keep push semantics in both
+//! directions. Discoveries, ghost-slot writes, and the `changed` vote are
+//! exactly the push kernel's — levels are identical bits either way, which
+//! is what lets the golden conformance suite compare the two byte-for-byte.
 //!
 //! The CPU kernel uses the cache-resident **visited bitmap** (Chhugani et
 //! al. 2012; paper §6.3.2): a bit per local vertex answers "already has a
 //! level?" without touching the 4-byte level entry. The bitmap is exactly
 //! why the HIGH partitioning strategy super-linearly accelerates the CPU
-//! side — fewer CPU vertices → the bitmap fits in LLC (Figure 12).
+//! side — fewer CPU vertices → the bitmap fits in LLC (Figure 12). The
+//! bottom-up sweep reuses it as its frontier-membership filter.
 
 use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
+use crate::engine::direction::{Direction, FrontierStats};
 use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
 use crate::partition::{Partition, PartitionedGraph};
 use crate::util::atomic::as_atomic_i32_cells;
@@ -94,7 +110,49 @@ impl Algorithm for Bfs {
         state.scratch = bitmap;
     }
 
+    fn supports_pull(&self) -> bool {
+        true
+    }
+
+    /// Frontier shape ahead of superstep `next_superstep`: one scan of the
+    /// local levels counting the frontier (`level == cur`) and unexplored
+    /// (`level == INF`) vertices with their out-degree sums — the `m_f` /
+    /// `m_u` inputs of the α/β policy. `O(nv)` per superstep, dwarfed by
+    /// the edge work it steers.
+    fn frontier_stats(
+        &self,
+        part: &Partition,
+        state: &AlgState,
+        next_superstep: usize,
+    ) -> Option<FrontierStats> {
+        let cur = next_superstep as i32;
+        let levels = state.arrays[LEVELS].as_i32();
+        let ro = &part.csr.row_offsets;
+        let mut s = FrontierStats { total_verts: part.nv as u64, ..Default::default() };
+        for (v, &l) in levels.iter().take(part.nv).enumerate() {
+            let deg = ro[v + 1] - ro[v];
+            if l == cur {
+                s.frontier_verts += 1;
+                s.frontier_edges += deg;
+            } else if l == INF_I32 {
+                s.unexplored_verts += 1;
+                s.unexplored_edges += deg;
+            }
+        }
+        Some(s)
+    }
+
     fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        match ctx.direction {
+            Direction::Push => self.compute_push(part, state, ctx),
+            Direction::Pull => self.compute_pull(part, state, ctx),
+        }
+    }
+}
+
+impl Bfs {
+    /// Top-down kernel (Figure 11): the frontier expands its out-edges.
+    fn compute_push(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
         let cur = ctx.superstep as i32;
         let nv = part.nv;
         let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
@@ -164,16 +222,112 @@ impl Algorithm for Bfs {
         );
         ComputeOut { changed, reads, writes }
     }
+
+    /// Bottom-up kernel (DESIGN.md §8). One pass over the local vertices:
+    ///
+    /// - a **frontier** vertex (`level == cur`) relaxes only its boundary
+    ///   tail (ghost slots) — its local out-neighbors are discovered from
+    ///   the probe side instead;
+    /// - an **unexplored** vertex probes its in-neighbors through the
+    ///   transpose CSR and claims `cur + 1` on the first parent at `cur`,
+    ///   then stops probing (the early exit that makes bottom-up win on
+    ///   dense frontiers).
+    ///
+    /// A vertex is discovered here iff it has a frontier in-neighbor —
+    /// exactly the push kernel's local-discovery set — and ghost slots
+    /// receive the same `min(cur + 1)` writes, so levels, the `changed`
+    /// vote, and the superstep count are bit-identical to push mode.
+    fn compute_pull(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let cur = ctx.superstep as i32;
+        let nv = part.nv;
+        let tr = part.transpose();
+        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
+        let levels = arrays[LEVELS].as_i32_mut();
+        let cells = as_atomic_i32_cells(levels);
+        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
+        // layout as u64.
+        let bitmap: &[AtomicU64] = unsafe {
+            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
+        };
+
+        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                let lv = cells[v].load(Ordering::Relaxed);
+                if ctx.instrument {
+                    reads += 1; // level[v]
+                }
+                if lv == cur {
+                    // frontier vertex: boundary edges keep push semantics
+                    // (remote partitions cannot probe our levels).
+                    let nl = part.csr.local_counts[v] as usize;
+                    for &t in &part.targets(v as u32)[nl..] {
+                        let prev = cells[t as usize].fetch_min(cur + 1, Ordering::Relaxed);
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        if prev > cur + 1 {
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    }
+                    continue;
+                }
+                // unexplored vertex: probe in-neighbors, early-exit on the
+                // first frontier parent. The bitmap check mirrors the push
+                // kernel's claim protocol: a bit-set vertex is never
+                // re-discovered, a bit-unset vertex with an inbox-delivered
+                // level still gets the idempotent `min(cur + 1)`.
+                //
+                // Deliberate trade-off: an inbox-discovered vertex keeps
+                // its bit unset until a local parent aligns with `cur`, so
+                // sustained pull mode may re-scan its transpose row across
+                // supersteps — the price of keeping the `changed` vote (and
+                // therefore superstep counts) bit-identical to push mode,
+                // whose claim protocol emits the same spurious first-claim
+                // event. Marking bits on inbox delivery would need the comm
+                // phase to know about algorithm-private scratch.
+                let bit = 1u64 << (v % 64);
+                if ctx.instrument {
+                    reads += 1; // bitmap word
+                }
+                if bitmap[v / 64].load(Ordering::Relaxed) & bit != 0 {
+                    continue;
+                }
+                for &u in tr.sources_of(v as u32) {
+                    if ctx.instrument {
+                        reads += 1; // level[u]
+                    }
+                    if cells[u as usize].load(Ordering::Relaxed) == cur {
+                        bitmap[v / 64].fetch_or(bit, Ordering::Relaxed);
+                        cells[v].fetch_min(cur + 1, Ordering::Relaxed);
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                        changed = true;
+                        break;
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (false, 0u64, 0u64),
+            fold,
+            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
+        );
+        ComputeOut { changed, reads, writes }
+    }
 }
 
-/// Direction-optimized BFS variant (Beamer et al. 2013; paper §10): when
-/// the frontier is large, switch from top-down edge expansion to a
-/// bottom-up sweep where unvisited vertices probe their *incoming*
-/// neighbors. Ablation bench `bench ablation_dobfs`. CPU-only partitions:
-/// the bottom-up sweep needs the reverse adjacency, so this variant keeps
-/// a reversed copy and is exposed as a standalone whole-graph routine in
-/// `baseline`; inside the hybrid engine the standard top-down kernel is
-/// used (as in the paper's headline results, §8).
+/// Frontier density of a levels array — the whole-graph threshold form of
+/// the per-element α/β policy (`engine::direction`); kept for the
+/// `baseline::bfs_direction_optimized` comparison path and the ablation
+/// bench.
 pub fn frontier_density(levels: &[i32], cur: i32) -> f64 {
     let total = levels.len().max(1);
     let in_frontier = levels.iter().filter(|&&l| l == cur).count();
@@ -183,7 +337,7 @@ pub fn frontier_density(levels: &[i32], cur: i32) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{self, EngineConfig};
+    use crate::engine::{self, DirectionConfig, EngineConfig};
     use crate::graph::{CsrGraph, EdgeList};
     use crate::partition::Strategy;
 
@@ -193,6 +347,12 @@ mod tests {
             el.push(i as u32, i as u32 + 1);
         }
         CsrGraph::from_edge_list(&el)
+    }
+
+    /// α/β knobs that flip every CPU element to bottom-up on the first
+    /// non-empty frontier and keep it there.
+    fn force_pull() -> DirectionConfig {
+        DirectionConfig { alpha: 1e12, beta: 1e12 }
     }
 
     #[test]
@@ -231,5 +391,58 @@ mod tests {
     #[test]
     fn frontier_density_counts() {
         assert!((frontier_density(&[0, 1, 1, INF_I32], 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pull_mode_chain_matches_push() {
+        let g = chain(16);
+        let mut push = Bfs::new(0);
+        let r1 = engine::run(&g, &mut push, &EngineConfig::host_only(1)).unwrap();
+        let mut pull = Bfs::new(0);
+        let cfg = EngineConfig::host_only(1).with_direction(force_pull());
+        let r2 = engine::run(&g, &mut pull, &cfg).unwrap();
+        assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+        assert_eq!(r1.supersteps, r2.supersteps);
+        assert!(r2.metrics.pull_steps() >= 1, "forced-pull run never pulled");
+        assert_eq!(r1.metrics.pull_steps(), 0, "push-only run recorded a pull");
+    }
+
+    #[test]
+    fn pull_mode_partitioned_bit_identical() {
+        let g = crate::graph::generator::rmat(&crate::graph::generator::RmatParams::paper(8, 5));
+        let g = CsrGraph::from_edge_list(&g);
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            let mut push = Bfs::new(0);
+            let base = EngineConfig::cpu_partitions(&[0.5, 0.5], strat);
+            let r1 = engine::run(&g, &mut push, &base).unwrap();
+            let mut pull = Bfs::new(0);
+            let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], strat)
+                .with_direction(force_pull());
+            let r2 = engine::run(&g, &mut pull, &cfg).unwrap();
+            assert_eq!(r1.output.as_i32(), r2.output.as_i32(), "{strat:?}");
+            assert_eq!(r1.supersteps, r2.supersteps, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn frontier_stats_report_shape() {
+        let g = chain(8);
+        let mut alg = Bfs::new(0);
+        // hand-build the single-partition state to probe stats directly
+        let pg = crate::partition::PartitionedGraph::partition(
+            &g,
+            Strategy::Rand,
+            &[1.0],
+            1,
+        );
+        let st = alg.init_state(&pg, &pg.parts[0]);
+        let s = alg.frontier_stats(&pg.parts[0], &st, 0).unwrap();
+        assert_eq!(s.total_verts, 8);
+        assert_eq!(s.frontier_verts, 1); // the source
+        // the source's out-degree (local ids are degree-ordered, but
+        // out-degree of the level-0 vertex is 1 in a chain)
+        assert_eq!(s.frontier_edges, 1);
+        assert_eq!(s.unexplored_verts, 7);
+        assert_eq!(s.unexplored_edges, 6); // tail vertex has out-degree 0
     }
 }

@@ -22,6 +22,7 @@ pub mod cc;
 pub mod pagerank;
 pub mod sssp;
 
+use crate::engine::direction::{Direction, FrontierStats};
 use crate::engine::state::{AlgState, CommOp};
 use crate::graph::CsrGraph;
 use crate::partition::{Partition, PartitionedGraph};
@@ -56,6 +57,11 @@ pub struct StepCtx {
     pub threads: usize,
     /// Memory-access counters on?
     pub instrument: bool,
+    /// Traversal direction chosen by the engine's α/β policy for this
+    /// element (DESIGN.md §8). Always `Push` unless the algorithm declares
+    /// `supports_pull` and the run enables `EngineConfig::direction`;
+    /// accelerator elements always receive `Push`.
+    pub direction: Direction,
 }
 
 /// Result of a CPU compute phase.
@@ -141,6 +147,27 @@ pub trait Algorithm: Sync {
     }
     fn scalars_f32(&self, _ctx: &StepCtx) -> Vec<f32> {
         vec![]
+    }
+
+    /// Does `compute_cpu` honor `StepCtx::direction == Pull` (a bottom-up
+    /// kernel over the partition's transpose CSR)? Algorithms answering
+    /// `false` (the default) always receive `Push`, even when the run
+    /// enables direction optimization.
+    fn supports_pull(&self) -> bool {
+        false
+    }
+
+    /// Frontier-shape estimate for one partition ahead of
+    /// `next_superstep`, feeding the engine's α/β direction policy
+    /// (DESIGN.md §8). `None` (the default) opts the partition out of
+    /// direction decisions for that superstep.
+    fn frontier_stats(
+        &self,
+        _part: &Partition,
+        _state: &AlgState,
+        _next_superstep: usize,
+    ) -> Option<FrontierStats> {
+        None
     }
 
     /// The CPU element's compute phase for one partition.

@@ -1,14 +1,24 @@
-//! PageRank — pull-based (paper §7.1, Figure 14).
+//! PageRank — pull-based by default (paper §7.1, Figure 14), with a
+//! push-mode comparison variant (DESIGN.md §8).
 //!
-//! Each vertex *pulls* its in-neighbors' rank contributions (faster than
-//! push: no atomics — the paper cites Nguyen et al. 2013 for this), so the
-//! engine partitions the **reversed** graph: a partition's local CSR lists
-//! each vertex's in-neighbors, remote in-neighbors become ghost-in slots.
+//! **Pull mode** ([`PrMode::Pull`], the default): each vertex *pulls* its
+//! in-neighbors' rank contributions (faster than push: no atomics — the
+//! paper cites Nguyen et al. 2013 for this), so the engine partitions the
+//! **reversed** graph: a partition's local CSR lists each vertex's
+//! in-neighbors, remote in-neighbors become ghost-in slots. The
+//! communicated quantity is `contrib[u] = rank[u] / outdeg(u)` — a single
+//! value per unique remote source vertex per superstep on a **pull
+//! channel**. Pull slots have exactly one writer, so the op list is never
+//! order-sensitive and the pipelined executor keeps full exchange freedom
+//! (no canonical-order fallback) while staying bit-identical to the
+//! synchronous engine.
 //!
-//! The communicated quantity is `contrib[u] = rank[u] / outdeg(u)` — a
-//! single value per unique remote source vertex per superstep (a pull
-//! channel), matching the paper's observation that PageRank communicates
-//! via every boundary edge every round.
+//! **Push mode** ([`PrMode::Push`]): the forward graph is partitioned and
+//! every vertex scatters `rank/outdeg` along its out-edges; remote partial
+//! sums travel on a **push-add channel**, which is order-sensitive
+//! (`CommOp::order_sensitive`) and forces the pipelined executor into
+//! canonical-order release. Kept as the measurable counterexample that
+//! motivates the pull gather; CPU-only (no AOT program is shipped for it).
 //!
 //! `rank_{t+1}[v] = (1-d)/|V| + d · Σ_{u→v} contrib_t[u]`, d = 0.85, run
 //! for a fixed number of rounds (paper: 5 in Figure 16, 1 in Table 4).
@@ -17,13 +27,26 @@ use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, S
 use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
 use crate::graph::CsrGraph;
 use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::{as_atomic_f32_cells, atomic_add_f32};
 use crate::util::threadpool::parallel_reduce;
 
 pub const DAMPING: f32 = 0.85;
 pub const DEFAULT_ROUNDS: usize = 5;
 
+/// Communication mode (module docs; DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrMode {
+    /// Gather over the reversed graph's local CSR; contributions travel on
+    /// a pull channel. Default, fully pipelinable.
+    Pull,
+    /// Scatter over the forward graph; partial sums travel on a push-add
+    /// channel (order-sensitive). CPU-only comparison variant.
+    Push,
+}
+
 pub struct Pagerank {
     pub rounds: usize,
+    pub mode: PrMode,
     /// Global vertex count (set in `prepare`).
     n_global: usize,
     /// Original out-degrees, indexed by global id (set in `prepare`).
@@ -31,8 +54,14 @@ pub struct Pagerank {
 }
 
 impl Pagerank {
+    /// Pull-mode PageRank (the default used by the harness).
     pub fn new(rounds: usize) -> Pagerank {
-        Pagerank { rounds, n_global: 0, outdeg: Vec::new() }
+        Pagerank { rounds, mode: PrMode::Pull, n_global: 0, outdeg: Vec::new() }
+    }
+
+    /// Push-mode comparison variant (module docs).
+    pub fn push_mode(rounds: usize) -> Pagerank {
+        Pagerank { rounds, mode: PrMode::Push, n_global: 0, outdeg: Vec::new() }
     }
 
     fn base(&self) -> f32 {
@@ -41,6 +70,7 @@ impl Pagerank {
 }
 
 const RANK: usize = 0;
+/// Pull mode: published contribution. Push mode: incoming-sum accumulator.
 const CONTRIB: usize = 1;
 const AUX_INV_OUTDEG: usize = 0;
 const AUX_MASK: usize = 1;
@@ -51,8 +81,16 @@ impl Algorithm for Pagerank {
             name: "pagerank",
             needs_weights: false,
             undirected: false,
-            reversed: true,
-            fixed_rounds: Some(self.rounds),
+            // pull gathers over in-edges → partition the reversed graph;
+            // push scatters over out-edges → keep the forward graph.
+            reversed: self.mode == PrMode::Pull,
+            // push mode needs one extra superstep: the final round's remote
+            // partial sums land during communication and are folded into
+            // ranks by a trailing fold-only compute.
+            fixed_rounds: Some(match self.mode {
+                PrMode::Pull => self.rounds,
+                PrMode::Push => self.rounds + 1,
+            }),
         }
     }
 
@@ -72,7 +110,12 @@ impl Algorithm for Pagerank {
             let d = self.outdeg[g as usize];
             rank[l] = r0;
             inv_outdeg[l] = if d > 0 { 1.0 / d as f32 } else { 0.0 };
-            contrib[l] = rank[l] * inv_outdeg[l];
+            // pull: publish the initial contribution; push: CONTRIB is the
+            // incoming-sum accumulator and must start at the add identity
+            // (0), ghost slots included.
+            if self.mode == PrMode::Pull {
+                contrib[l] = rank[l] * inv_outdeg[l];
+            }
             mask[l] = 1.0;
         }
         let mut st = AlgState::new(vec![StateArray::F32(rank), StateArray::F32(contrib)]);
@@ -81,19 +124,35 @@ impl Algorithm for Pagerank {
     }
 
     fn channels(&self, _cycle: usize) -> Vec<CommOp> {
-        vec![CommOp::Single(Channel::pull_f32(CONTRIB))]
+        match self.mode {
+            // single writer per ghost slot → never order-sensitive: the
+            // pipelined executor keeps full exchange freedom.
+            PrMode::Pull => vec![CommOp::Single(Channel::pull_f32(CONTRIB))],
+            // remote partial sums: order-sensitive push-add, the pipelined
+            // executor falls back to canonical-order release.
+            PrMode::Push => vec![CommOp::Single(Channel::push_add_f32(CONTRIB))],
+        }
     }
 
     fn program(&self, _cycle: usize) -> ProgramSpec {
         ProgramSpec {
-            name: "pagerank",
+            // push mode is a CPU-only comparison variant: no AOT program is
+            // shipped for it, so an accelerator run fails at manifest
+            // lookup with an actionable message.
+            name: match self.mode {
+                PrMode::Pull => "pagerank",
+                PrMode::Push => "pagerank_push",
+            },
             arrays: vec![RANK, CONTRIB],
             pads: vec![Pad::F32(0.0), Pad::F32(0.0)],
             aux: vec![AUX_INV_OUTDEG, AUX_MASK],
             needs_weights: false,
             n_si32: 0,
             n_sf32: 2,
-            orientation: EdgeOrientation::Reversed,
+            orientation: match self.mode {
+                PrMode::Pull => EdgeOrientation::Reversed,
+                PrMode::Push => EdgeOrientation::Forward,
+            },
         }
     }
 
@@ -102,6 +161,19 @@ impl Algorithm for Pagerank {
     }
 
     fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        match self.mode {
+            PrMode::Pull => self.compute_pull(part, state, ctx),
+            PrMode::Push => self.compute_push(part, state, ctx),
+        }
+    }
+
+    fn output_array(&self) -> usize {
+        RANK
+    }
+}
+
+impl Pagerank {
+    fn compute_pull(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
         let nv = part.nv;
         let base = self.base();
         // split: contrib is read (including ghost slots), rank written,
@@ -144,8 +216,64 @@ impl Algorithm for Pagerank {
         ComputeOut { changed: true, reads, writes: writes + nv as u64 }
     }
 
-    fn output_array(&self) -> usize {
-        RANK
+    /// Push-mode superstep over the forward graph:
+    ///
+    /// - **fold** (supersteps ≥ 1): the accumulator now holds every local
+    ///   scatter from the previous superstep plus the remote partial sums
+    ///   the communication phase added — fold it into ranks and reset;
+    /// - **scatter** (supersteps < rounds): add `rank/outdeg` into each
+    ///   out-target — local targets via an f32 CAS-add, ghost slots
+    ///   likewise (the outbox the push-add channel flushes).
+    ///
+    /// The trailing superstep (`== rounds`) is fold-only, which is why
+    /// `spec()` reports `rounds + 1` fixed rounds for push mode.
+    fn compute_push(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        let nv = part.nv;
+        let base = self.base();
+        let (rank_arr, accum_arr) = state.arrays.split_at_mut(CONTRIB);
+        let rank = rank_arr[RANK].as_f32_mut();
+        let accum = accum_arr[0].as_f32_mut();
+        let inv_outdeg = state.aux[AUX_INV_OUTDEG].as_f32();
+
+        let mut writes_seq = 0u64;
+        if ctx.superstep > 0 {
+            for v in 0..nv {
+                rank[v] = base + DAMPING * accum[v];
+                accum[v] = 0.0;
+            }
+            writes_seq += 2 * nv as u64;
+        }
+        if ctx.superstep >= self.rounds {
+            return ComputeOut { changed: true, reads: 0, writes: writes_seq };
+        }
+
+        let rank_ro: &[f32] = rank;
+        let cells = as_atomic_f32_cells(accum);
+        let (reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (0u64, 0u64),
+            |lo, hi, acc| {
+                let (mut reads, mut writes) = acc;
+                for v in lo..hi {
+                    let c = rank_ro[v] * inv_outdeg[v];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    for &t in part.targets(v as u32) {
+                        atomic_add_f32(&cells[t as usize], c);
+                    }
+                    if ctx.instrument {
+                        let deg = part.targets(v as u32).len() as u64;
+                        reads += 1 + deg;
+                        writes += deg;
+                    }
+                }
+                (reads, writes)
+            },
+            |a, b| (a.0 + b.0, a.1 + b.1),
+        );
+        ComputeOut { changed: true, reads, writes: writes + writes_seq }
     }
 }
 
@@ -206,5 +334,45 @@ mod tests {
         // 3 compute supersteps + 1 initial sync step record
         assert_eq!(r.metrics.supersteps(), 4);
         assert_eq!(r.supersteps, 3);
+    }
+
+    #[test]
+    fn push_mode_matches_pull_mode() {
+        let g = triangle_plus_sink();
+        let mut pull = Pagerank::new(5);
+        let r1 = engine::run(&g, &mut pull, &EngineConfig::host_only(1)).unwrap();
+        let mut push = Pagerank::push_mode(5);
+        let r2 = engine::run(&g, &mut push, &EngineConfig::host_only(1)).unwrap();
+        for (v, (a, b)) in r1.output.as_f32().iter().zip(r2.output.as_f32()).enumerate() {
+            assert!((a - b).abs() < 1e-6, "vertex {v}: pull {a} vs push {b}");
+        }
+        // push mode pays one extra (fold-only) superstep
+        assert_eq!(r2.supersteps, r1.supersteps + 1);
+    }
+
+    #[test]
+    fn push_mode_partitioned_matches_host() {
+        let g = triangle_plus_sink();
+        let mut a = Pagerank::push_mode(4);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for shares in [[0.5, 0.5], [0.3, 0.7]] {
+            let mut b = Pagerank::push_mode(4);
+            let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            for (v, (x, y)) in r1.output.as_f32().iter().zip(r2.output.as_f32()).enumerate() {
+                assert!((x - y).abs() < 1e-6, "vertex {v}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn channel_order_sensitivity_by_mode() {
+        // The whole point of the pull gather: its op list is never
+        // order-sensitive, so pipelined PageRank needs no canonical-order
+        // fallback; the push variant is the counterexample.
+        let pull = Pagerank::new(5);
+        assert!(pull.channels(0).iter().all(|op| !op.order_sensitive()));
+        let push = Pagerank::push_mode(5);
+        assert!(push.channels(0).iter().any(|op| op.order_sensitive()));
     }
 }

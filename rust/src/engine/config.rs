@@ -1,6 +1,7 @@
 //! Engine configuration — the paper's `totem_attr_t` (§4.2) plus the
 //! hardware-configuration notation `xSyG` (§5: x CPU sockets, y GPUs).
 
+use super::direction::DirectionConfig;
 use crate::partition::Strategy;
 use std::path::PathBuf;
 
@@ -116,6 +117,11 @@ pub struct EngineConfig {
     pub mode: ExecMode,
     /// Dynamic α re-balancing; `None` keeps launch-time shares fixed.
     pub rebalance: Option<RebalanceConfig>,
+    /// Beamer-style direction optimization (DESIGN.md §8); `None` keeps
+    /// every compute phase top-down (push). Only algorithms that declare
+    /// `supports_pull` react; CPU partitions may switch to bottom-up
+    /// sweeps per superstep, accelerator partitions always stay top-down.
+    pub direction: Option<DirectionConfig>,
 }
 
 impl EngineConfig {
@@ -132,6 +138,7 @@ impl EngineConfig {
             accel_memory_budget: 256 << 20, // 256 MB default "device"
             mode: ExecMode::Synchronous,
             rebalance: None,
+            direction: None,
         }
     }
 
@@ -239,6 +246,18 @@ impl EngineConfig {
         self
     }
 
+    /// Enable direction optimization with the given α/β policy
+    /// (DESIGN.md §8).
+    pub fn with_direction(mut self, d: DirectionConfig) -> Self {
+        self.direction = Some(d);
+        self
+    }
+
+    /// Enable direction optimization with Beamer's published defaults.
+    pub fn direction_optimized(self) -> Self {
+        self.with_direction(DirectionConfig::default())
+    }
+
     pub fn num_partitions(&self) -> usize {
         self.elements.len()
     }
@@ -292,9 +311,14 @@ mod tests {
         let c = EngineConfig::host_only(1);
         assert_eq!(c.mode, ExecMode::Synchronous);
         assert!(c.rebalance.is_none());
+        assert!(c.direction.is_none(), "push-only by default");
         let c = c.pipelined().with_rebalance(RebalanceConfig::default());
         assert_eq!(c.mode, ExecMode::Pipelined);
         assert!(c.rebalance.is_some());
+        let c = c.direction_optimized();
+        assert_eq!(c.direction, Some(DirectionConfig::default()));
+        let c = c.with_direction(DirectionConfig { alpha: 4.0, beta: 8.0 });
+        assert_eq!(c.direction.unwrap().alpha, 4.0);
     }
 
     #[test]

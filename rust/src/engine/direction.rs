@@ -1,0 +1,203 @@
+//! Direction-optimized traversal policy (DESIGN.md §8).
+//!
+//! Beamer et al. 2012 ("Direction-Optimizing Breadth-First Search") showed
+//! that on scale-free graphs the middle BFS supersteps — where the frontier
+//! covers most of the graph — are far cheaper bottom-up (every unexplored
+//! vertex probes its *in*-edges and early-exits on the first frontier
+//! parent) than top-down (the frontier expands every out-edge). Sallinen
+//! et al. 2015 carried the idea to the hybrid CPU+GPU setting: the switch
+//! is decided **per processing element**, so a CPU partition can sweep
+//! bottom-up while an accelerator partition stays top-down (its bulk model
+//! has no early exit to exploit).
+//!
+//! This module holds the policy only; the mechanism lives in
+//! `partition::TransposeCsr` (the in-edge CSR) and in each algorithm's
+//! pull kernel (`StepCtx::direction`). The engine evaluates the policy
+//! before every superstep for every CPU partition of an algorithm that
+//! reports [`Algorithm::frontier_stats`](crate::alg::Algorithm); chosen
+//! directions and the frontier estimates they were based on are recorded
+//! in [`StepMetrics`](super::StepMetrics).
+
+/// Traversal direction of one partition's compute phase for one superstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Direction {
+    /// Top-down: frontier vertices expand their out-edges.
+    #[default]
+    Push,
+    /// Bottom-up: unexplored vertices probe their in-edges through the
+    /// partition's transpose CSR.
+    Pull,
+}
+
+impl Direction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Direction::Push => "push",
+            Direction::Pull => "pull",
+        }
+    }
+}
+
+/// Frontier-shape estimate for one partition at one superstep boundary,
+/// reported by the algorithm (BFS scans its levels array). Edge counts are
+/// out-degree sums over the partition's local CSR — the `m_f` / `m_u`
+/// quantities of Beamer's heuristic, restricted to this element.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontierStats {
+    /// Vertices active in the coming superstep (`n_f`).
+    pub frontier_verts: u64,
+    /// Σ out-degree over the frontier (`m_f`).
+    pub frontier_edges: u64,
+    /// Vertices not yet explored (`n_u`).
+    pub unexplored_verts: u64,
+    /// Σ out-degree over unexplored vertices (`m_u` proxy).
+    pub unexplored_edges: u64,
+    /// Real local vertices in the partition (`n`).
+    pub total_verts: u64,
+}
+
+/// Beamer α/β switch heuristic knobs.
+///
+/// - Push→Pull when `m_f > m_u / alpha` — the frontier is about to touch
+///   more edges than a bottom-up sweep would scan.
+/// - Pull→Push when `n_f < n / beta` — the frontier shrank enough that
+///   scanning all unexplored vertices is wasteful again.
+///
+/// Defaults are Beamer's published `α = 15`, `β = 18`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DirectionConfig {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Default for DirectionConfig {
+    fn default() -> DirectionConfig {
+        DirectionConfig { alpha: 15.0, beta: 18.0 }
+    }
+}
+
+impl DirectionConfig {
+    /// Validate the knobs; the engine calls this before the first
+    /// superstep so operator mistakes fail loudly, not mid-run.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.alpha.is_finite() && self.alpha > 0.0) {
+            return Err(format!(
+                "direction: alpha must be finite and > 0, got {}",
+                self.alpha
+            ));
+        }
+        if !(self.beta.is_finite() && self.beta > 0.0) {
+            return Err(format!(
+                "direction: beta must be finite and > 0, got {}",
+                self.beta
+            ));
+        }
+        Ok(())
+    }
+
+    /// Per-element decision for the coming superstep, given the previous
+    /// direction and the partition's frontier estimate. Hysteresis comes
+    /// from conditioning on `prev` — exactly Beamer's two-threshold form.
+    pub fn next(&self, prev: Direction, s: &FrontierStats) -> Direction {
+        match prev {
+            Direction::Push
+                if (s.frontier_edges as f64) > s.unexplored_edges as f64 / self.alpha =>
+            {
+                Direction::Pull
+            }
+            Direction::Pull
+                if (s.frontier_verts as f64) < s.total_verts as f64 / self.beta =>
+            {
+                Direction::Push
+            }
+            _ => prev,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(nf: u64, mf: u64, nu: u64, mu: u64, n: u64) -> FrontierStats {
+        FrontierStats {
+            frontier_verts: nf,
+            frontier_edges: mf,
+            unexplored_verts: nu,
+            unexplored_edges: mu,
+            total_verts: n,
+        }
+    }
+
+    #[test]
+    fn defaults_are_beamers() {
+        let d = DirectionConfig::default();
+        assert_eq!(d.alpha, 15.0);
+        assert_eq!(d.beta, 18.0);
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert!(DirectionConfig { alpha: 0.0, beta: 18.0 }.validate().is_err());
+        assert!(DirectionConfig { alpha: -1.0, beta: 18.0 }.validate().is_err());
+        assert!(DirectionConfig { alpha: 15.0, beta: 0.0 }.validate().is_err());
+        assert!(DirectionConfig { alpha: f64::NAN, beta: 18.0 }.validate().is_err());
+        assert!(DirectionConfig { alpha: 15.0, beta: f64::INFINITY }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn push_switches_to_pull_on_heavy_frontier() {
+        let d = DirectionConfig::default();
+        // m_f = 200 > m_u / 15 = 100: switch
+        assert_eq!(
+            d.next(Direction::Push, &stats(50, 200, 500, 1500, 1000)),
+            Direction::Pull
+        );
+        // m_f = 50 <= 100: stay
+        assert_eq!(
+            d.next(Direction::Push, &stats(50, 50, 500, 1500, 1000)),
+            Direction::Push
+        );
+    }
+
+    #[test]
+    fn pull_switches_back_on_small_frontier() {
+        let d = DirectionConfig::default();
+        // n_f = 10 < n / 18 = 55.5: switch back
+        assert_eq!(
+            d.next(Direction::Pull, &stats(10, 20, 100, 400, 1000)),
+            Direction::Push
+        );
+        // n_f = 100 >= 55.5: stay bottom-up
+        assert_eq!(
+            d.next(Direction::Pull, &stats(100, 300, 100, 400, 1000)),
+            Direction::Pull
+        );
+    }
+
+    #[test]
+    fn empty_frontier_always_lands_push() {
+        let d = DirectionConfig::default();
+        assert_eq!(d.next(Direction::Push, &stats(0, 0, 0, 0, 8)), Direction::Push);
+        assert_eq!(d.next(Direction::Pull, &stats(0, 0, 0, 0, 8)), Direction::Push);
+    }
+
+    #[test]
+    fn hysteresis_holds_between_thresholds() {
+        // A frontier in the dead band keeps whatever direction it had.
+        let d = DirectionConfig { alpha: 2.0, beta: 2.0 };
+        let s = stats(600, 300, 400, 1000, 1000); // m_f < m_u/2, n_f > n/2
+        assert_eq!(d.next(Direction::Push, &s), Direction::Push);
+        assert_eq!(d.next(Direction::Pull, &s), Direction::Pull);
+    }
+
+    #[test]
+    fn direction_names() {
+        assert_eq!(Direction::Push.name(), "push");
+        assert_eq!(Direction::Pull.name(), "pull");
+        assert_eq!(Direction::default(), Direction::Push);
+    }
+}

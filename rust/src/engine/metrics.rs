@@ -15,6 +15,8 @@
 //! over partitions; the makespan is the faithful concurrent-platform
 //! number (DESIGN.md §2).
 
+use super::direction::Direction;
+
 /// Metrics for one BSP superstep.
 #[derive(Debug, Clone, Default)]
 pub struct StepMetrics {
@@ -31,12 +33,35 @@ pub struct StepMetrics {
     pub bytes: u64,
     /// Messages (ghost-slot values) delivered this step.
     pub messages: u64,
+    /// Traversal direction each partition computed with this step
+    /// (DESIGN.md §8). Push-only runs record `Push` everywhere.
+    pub directions: Vec<Direction>,
+    /// Per-partition frontier-size estimate at the start of the step —
+    /// populated only when direction optimization is enabled and the
+    /// algorithm reports frontier stats (zeros otherwise).
+    pub frontier_verts: Vec<u64>,
+    /// Per-partition Σ out-degree over the frontier (`m_f`).
+    pub frontier_edges: Vec<u64>,
+    /// Per-partition Σ out-degree over unexplored vertices (`m_u` proxy).
+    pub unexplored_edges: Vec<u64>,
 }
 
 impl StepMetrics {
     /// Empty record for a step over `partitions` elements.
     pub fn empty(partitions: usize) -> StepMetrics {
-        StepMetrics { compute: vec![0.0; partitions], ..Default::default() }
+        StepMetrics {
+            compute: vec![0.0; partitions],
+            directions: vec![Direction::Push; partitions],
+            frontier_verts: vec![0; partitions],
+            frontier_edges: vec![0; partitions],
+            unexplored_edges: vec![0; partitions],
+            ..Default::default()
+        }
+    }
+
+    /// Did any partition run bottom-up this step?
+    pub fn any_pull(&self) -> bool {
+        self.directions.iter().any(|&d| d == Direction::Pull)
     }
 
     /// Communication seconds on the critical path (not hidden by compute).
@@ -134,6 +159,13 @@ impl Metrics {
         }
     }
 
+    /// Supersteps in which at least one partition ran bottom-up — the
+    /// run-level summary of the §8 direction policy (0 for push-only
+    /// runs). Surfaced by the harness and the CLI.
+    pub fn pull_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.any_pull()).count()
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.steps.iter().map(|s| s.bytes).sum()
     }
@@ -163,16 +195,16 @@ mod tests {
         m.steps.push(StepMetrics {
             compute: vec![2.0, 1.0],
             comm: 0.5,
-            comm_overlapped: 0.0,
             bytes: 100,
             messages: 10,
+            ..StepMetrics::empty(2)
         });
         m.steps.push(StepMetrics {
             compute: vec![1.0, 3.0],
             comm: 0.5,
-            comm_overlapped: 0.0,
             bytes: 50,
             messages: 5,
+            ..StepMetrics::empty(2)
         });
         m
     }
@@ -204,6 +236,18 @@ mod tests {
         assert_eq!(s.compute, vec![0.0; 3]);
         assert_eq!(s.comm, 0.0);
         assert_eq!(s.comm_exposed(), 0.0);
+        assert_eq!(s.directions, vec![Direction::Push; 3]);
+        assert_eq!(s.frontier_verts, vec![0; 3]);
+        assert!(!s.any_pull());
+    }
+
+    #[test]
+    fn pull_step_counting() {
+        let mut m = sample();
+        assert_eq!(m.pull_steps(), 0);
+        m.steps[1].directions = vec![Direction::Push, Direction::Pull];
+        assert!(m.steps[1].any_pull());
+        assert_eq!(m.pull_steps(), 1);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! element when imbalance persists (DESIGN.md §5).
 
 pub mod config;
+pub mod direction;
 pub mod metrics;
 mod pipeline;
 mod rebalance;
@@ -31,6 +32,7 @@ pub mod state;
 
 pub use crate::alg::INF_I32;
 pub use config::{ElementKind, EngineConfig, ExecMode, RebalanceConfig};
+pub use direction::{Direction, DirectionConfig, FrontierStats};
 pub use metrics::{MemCounters, Metrics, StepMetrics};
 pub use state::{AlgState, Channel, ChannelKind, CommOp, Reduce, StateArray};
 
@@ -112,6 +114,9 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     if let Some(rb) = &cfg.rebalance {
         rb.validate(nparts).map_err(anyhow::Error::msg)?;
     }
+    if let Some(d) = &cfg.direction {
+        d.validate().map_err(anyhow::Error::msg)?;
+    }
 
     // --- graph preparation (§4.2: the engine owns the data layout) -------
     let mut prepared: Option<CsrGraph> = None;
@@ -166,6 +171,9 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     let mut metrics = Metrics::new(nparts);
     let mut total_steps = 0usize;
     let mut controller = cfg.rebalance.map(rebalance::Controller::new);
+    // Per-element traversal directions (DESIGN.md §8), carried across
+    // supersteps so the α/β policy has hysteresis.
+    let mut directions = vec![Direction::Push; nparts];
 
     for cycle in 0..alg.cycles() {
         alg.begin_cycle(cycle, &pg, &mut states);
@@ -192,16 +200,49 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
 
         let mut superstep = 0usize;
         loop {
-            let outcome = match cfg.mode {
+            // -- per-element direction decision (DESIGN.md §8) --------------
+            // Accelerator partitions always stay top-down: their bulk
+            // kernels have no early exit for a bottom-up sweep to exploit,
+            // and the AOT programs are push-oriented. CPU partitions of a
+            // pull-capable algorithm consult the α/β policy against their
+            // own frontier shape — directions are per element, so the CPU
+            // can sweep bottom-up while an accelerator keeps pushing.
+            let mut dir_stats: Vec<Option<FrontierStats>> = vec![None; nparts];
+            if let Some(dc) = &cfg.direction {
+                if alg.supports_pull() {
+                    for pid in 0..nparts {
+                        if matches!(elements[pid], Element::Cpu { .. }) {
+                            if let Some(fs) =
+                                alg.frontier_stats(&pg.parts[pid], &states[pid], superstep)
+                            {
+                                directions[pid] = dc.next(directions[pid], &fs);
+                                dir_stats[pid] = Some(fs);
+                            }
+                        } else {
+                            directions[pid] = Direction::Push;
+                        }
+                    }
+                }
+            }
+
+            let mut outcome = match cfg.mode {
                 ExecMode::Synchronous => run_superstep_sync(
-                    &*alg, &pg, &mut states, &mut elements, &channels, cycle, superstep,
-                    cfg.instrument, &mut metrics,
+                    &*alg, &pg, &mut states, &mut elements, &channels, &directions, cycle,
+                    superstep, cfg.instrument, &mut metrics,
                 )?,
                 ExecMode::Pipelined => pipeline::run_superstep(
-                    &*alg, &pg, &mut states, &mut elements, &channels, cycle, superstep,
-                    cfg.instrument, &mut metrics,
+                    &*alg, &pg, &mut states, &mut elements, &channels, &directions, cycle,
+                    superstep, cfg.instrument, &mut metrics,
                 )?,
             };
+            outcome.step.directions.copy_from_slice(&directions);
+            for (pid, fs) in dir_stats.iter().enumerate() {
+                if let Some(fs) = fs {
+                    outcome.step.frontier_verts[pid] = fs.frontier_verts;
+                    outcome.step.frontier_edges[pid] = fs.frontier_edges;
+                    outcome.step.unexplored_edges[pid] = fs.unexplored_edges;
+                }
+            }
             let any_changed = outcome.any_changed;
             metrics.steps.push(outcome.step);
             superstep += 1;
@@ -297,6 +338,7 @@ fn run_superstep_sync<A: Algorithm>(
     states: &mut [AlgState],
     elements: &mut [Element],
     channels: &[CommOp],
+    directions: &[Direction],
     cycle: usize,
     superstep: usize,
     instrument: bool,
@@ -317,6 +359,7 @@ fn run_superstep_sync<A: Algorithm>(
                     superstep,
                     threads: *threads,
                     instrument,
+                    direction: directions[pid],
                 };
                 let (out, secs) = timed(|| alg.compute_cpu(part, &mut states[pid], &ctx));
                 step.compute[pid] = secs;
@@ -325,7 +368,13 @@ fn run_superstep_sync<A: Algorithm>(
                 metrics.mem[pid].writes += out.writes;
             }
             Element::Accel(acc) => {
-                let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
+                let ctx = StepCtx {
+                    cycle,
+                    superstep,
+                    threads: 1,
+                    instrument: false,
+                    direction: Direction::Push,
+                };
                 let si32 = alg.scalars_i32(&ctx);
                 let sf32 = alg.scalars_f32(&ctx);
                 let out = acc.step(&mut states[pid], &si32, &sf32)?;

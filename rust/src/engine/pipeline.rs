@@ -43,6 +43,7 @@
 //! re-derived because a migration can reshape `pg` between supersteps —
 //! is deliberate future work.
 
+use super::direction::Direction;
 use super::state::{AlgState, CommOp};
 use super::{comm_op_table, Element, Metrics, StepMetrics, SuperstepOutcome};
 use crate::alg::{Algorithm, ComputeOut, StepCtx};
@@ -106,6 +107,7 @@ pub(crate) fn run_superstep<A: Algorithm>(
     states: &mut Vec<AlgState>,
     elements: &mut [Element],
     ops: &[CommOp],
+    directions: &[Direction],
     cycle: usize,
     superstep: usize,
     instrument: bool,
@@ -142,12 +144,13 @@ pub(crate) fn run_superstep<A: Algorithm>(
         for (pid, el) in elements.iter_mut().enumerate() {
             if let Element::Cpu { threads } = el {
                 let threads = *threads;
+                let direction = directions[pid];
                 let mut st = slots[pid].take().expect("state present at superstep start");
                 let tx = tx.clone();
                 let part = &pg.parts[pid];
                 live += 1;
                 scope.spawn(move || {
-                    let ctx = StepCtx { cycle, superstep, threads, instrument };
+                    let ctx = StepCtx { cycle, superstep, threads, instrument, direction };
                     let (out, secs) = timed(|| alg.compute_cpu(part, &mut st, &ctx));
                     // Receiver dropping early (accelerator error) is fine.
                     let _ = tx.send((pid, st, out, secs));
@@ -161,7 +164,13 @@ pub(crate) fn run_superstep<A: Algorithm>(
             if !matches!(elements[pid], Element::Accel(_)) {
                 continue;
             }
-            let ctx = StepCtx { cycle, superstep, threads: 1, instrument: false };
+            let ctx = StepCtx {
+                cycle,
+                superstep,
+                threads: 1,
+                instrument: false,
+                direction: Direction::Push,
+            };
             let si32 = alg.scalars_i32(&ctx);
             let sf32 = alg.scalars_f32(&ctx);
             if let Element::Accel(acc) = &mut elements[pid] {

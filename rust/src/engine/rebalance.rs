@@ -295,6 +295,7 @@ mod tests {
             },
             ghosts: vec![],
             n_ghost: 0,
+            transpose_cache: std::sync::OnceLock::new(),
         };
         assert!(select_band(&g, &single, 0.5).is_empty());
     }

@@ -151,25 +151,75 @@ pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Header bytes of the binary CSR format: magic + version + weighted flag
+/// + |V| + |E|.
+const CSR_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+
 /// Read the binary CSR snapshot.
+///
+/// Defensive against corrupt or truncated files: the declared |V|/|E| are
+/// checked against the actual file length *before* any allocation (a
+/// corrupted count would otherwise attempt an absurd allocation and
+/// abort), truncation mid-array is a typed error, and out-of-range vertex
+/// ids are rejected by the structural validation — never a panic.
 pub fn read_csr(path: &Path) -> Result<CsrGraph> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{path:?}: truncated header"))?;
     if &magic != MAGIC {
         bail!("{path:?}: not a totem CSR file");
     }
-    let ver = read_u32(&mut r)?;
+    let ver = read_u32(&mut r).with_context(|| format!("{path:?}: truncated header"))?;
     if ver != VERSION {
         bail!("{path:?}: unsupported version {ver}");
     }
-    let weighted = read_u32(&mut r)? == 1;
-    let v = read_u64(&mut r)? as usize;
-    let e = read_u64(&mut r)? as usize;
-    let row_offsets: Vec<u64> = read_vec(&mut r, v + 1)?;
-    let col_indices: Vec<u32> = read_vec(&mut r, e)?;
-    let weights = if weighted { Some(read_vec::<f32>(&mut r, e)?) } else { None };
+    let weighted =
+        read_u32(&mut r).with_context(|| format!("{path:?}: truncated header"))? == 1;
+    let v64 = read_u64(&mut r).with_context(|| format!("{path:?}: truncated header"))?;
+    let e64 = read_u64(&mut r).with_context(|| format!("{path:?}: truncated header"))?;
+
+    // Size sanity before any allocation, in checked u64 arithmetic.
+    let body = v64
+        .checked_add(1)
+        .and_then(|rows| rows.checked_mul(8))
+        .and_then(|b| b.checked_add(e64.checked_mul(4)?))
+        .and_then(|b| b.checked_add(if weighted { e64.checked_mul(4)? } else { 0 }))
+        .ok_or_else(|| {
+            anyhow::anyhow!("{path:?}: corrupt header (|V|={v64}, |E|={e64} overflow)")
+        })?;
+    let expected = CSR_HEADER_BYTES
+        .checked_add(body)
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: corrupt header"))?;
+    if file_len < expected {
+        bail!(
+            "{path:?}: truncated CSR file — header declares |V|={v64}, |E|={e64} \
+             ({expected} bytes) but the file holds {file_len}"
+        );
+    }
+    if file_len > expected {
+        bail!("{path:?}: {} trailing bytes after CSR payload", file_len - expected);
+    }
+
+    let v = v64 as usize;
+    let e = e64 as usize;
+    let row_offsets: Vec<u64> = read_vec(&mut r, v + 1)
+        .with_context(|| format!("{path:?}: truncated row offsets"))?;
+    let col_indices: Vec<u32> =
+        read_vec(&mut r, e).with_context(|| format!("{path:?}: truncated column indices"))?;
+    let weights = if weighted {
+        Some(
+            read_vec::<f32>(&mut r, e)
+                .with_context(|| format!("{path:?}: truncated weights"))?,
+        )
+    } else {
+        None
+    };
     let g = CsrGraph { vertex_count: v, row_offsets, col_indices, weights };
     g.validate().map_err(|e| anyhow::anyhow!("{path:?}: corrupt CSR: {e}"))?;
     Ok(g)
@@ -226,6 +276,105 @@ mod tests {
         let p = tmp("d.tcsr");
         std::fs::write(&p, b"NOTMAGIC????????").unwrap();
         assert!(read_csr(&p).is_err());
+    }
+
+    #[test]
+    fn csr_rejects_truncated_payload() {
+        // write a valid snapshot, then chop bytes off the tail: every
+        // prefix must fail with a "truncated" error, not a panic.
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(6, 8)));
+        let p = tmp("trunc.tcsr");
+        write_csr(&g, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        for keep in [full.len() - 1, full.len() / 2, 40, 20, 9, 0] {
+            let q = tmp("trunc_cut.tcsr");
+            std::fs::write(&q, &full[..keep]).unwrap();
+            let err = read_csr(&q).expect_err(&format!("accepted {keep}-byte prefix"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("not a totem"),
+                "keep={keep}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn csr_rejects_absurd_header_counts_before_allocating() {
+        // header declares |V| = u64::MAX: must fail on the size check —
+        // never attempt the corresponding allocation.
+        let p = tmp("absurd.tcsr");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // unweighted
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // |V|
+        bytes.extend_from_slice(&8u64.to_le_bytes()); // |E|
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_csr(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("corrupt header"), "{msg}");
+
+        // large-but-not-overflowing count with a tiny file: truncation
+        let mut bytes2 = Vec::new();
+        bytes2.extend_from_slice(MAGIC);
+        bytes2.extend_from_slice(&VERSION.to_le_bytes());
+        bytes2.extend_from_slice(&0u32.to_le_bytes());
+        bytes2.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes2.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&p, &bytes2).unwrap();
+        let msg = format!("{:#}", read_csr(&p).unwrap_err());
+        assert!(msg.contains("truncated"), "{msg}");
+    }
+
+    #[test]
+    fn csr_rejects_trailing_garbage() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(6, 9)));
+        let p = tmp("trailing.tcsr");
+        write_csr(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&p, &bytes).unwrap();
+        let msg = format!("{:#}", read_csr(&p).unwrap_err());
+        assert!(msg.contains("trailing"), "{msg}");
+    }
+
+    #[test]
+    fn csr_rejects_out_of_range_column_index() {
+        // structurally valid sizes, but a column index >= |V|: caught by
+        // validation with an error, not a panic downstream.
+        let p = tmp("oor.tcsr");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // |V| = 2
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // |E| = 1
+        for off in [0u64, 1, 1] {
+            bytes.extend_from_slice(&off.to_le_bytes());
+        }
+        bytes.extend_from_slice(&99u32.to_le_bytes()); // dst 99 out of range
+        std::fs::write(&p, &bytes).unwrap();
+        let msg = format!("{:#}", read_csr(&p).unwrap_err());
+        assert!(msg.contains("corrupt CSR"), "{msg}");
+    }
+
+    #[test]
+    fn edge_list_rejects_out_of_range_vertex_ids() {
+        let p = tmp("range.el");
+        std::fs::write(&p, "p 4 2\n0 1\n2 9\n").unwrap();
+        let msg = format!("{:#}", read_edge_list(&p).unwrap_err());
+        assert!(msg.contains("out of declared range"), "{msg}");
+    }
+
+    #[test]
+    fn edge_list_rejects_malformed_lines() {
+        let p = tmp("malformed.el");
+        std::fs::write(&p, "0\n").unwrap(); // missing dst
+        assert!(read_edge_list(&p).is_err());
+        std::fs::write(&p, "0 x\n").unwrap(); // non-numeric dst
+        assert!(read_edge_list(&p).is_err());
+        std::fs::write(&p, "0 1 notaweight\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
     }
 
     #[test]

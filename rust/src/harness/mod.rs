@@ -132,6 +132,9 @@ pub struct Measured {
     pub overlap_factor: f64,
     /// Vertex migrations by the dynamic α controller (last rep).
     pub migrations: usize,
+    /// Supersteps in which some element ran bottom-up (last rep; 0 unless
+    /// the config enables direction optimization — DESIGN.md §8).
+    pub pull_steps: usize,
     /// Last run's full result (partition stats etc. are deterministic
     /// given the seed, so any rep's copy is representative).
     pub last: RunResult,
@@ -168,6 +171,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         comm_secs: stats::mean(&comm),
         overlap_factor: stats::mean(&overlap),
         migrations: last.metrics.migrations,
+        pull_steps: last.metrics.pull_steps(),
         last,
         traversed,
     })
@@ -206,6 +210,25 @@ mod tests {
         assert!((m.last.shares[0] - 0.6).abs() < 0.1);
         assert_eq!(m.overlap_factor, 0.0, "synchronous engine never overlaps");
         assert_eq!(m.migrations, 0);
+    }
+
+    #[test]
+    fn measure_direction_optimized_bfs() {
+        // A hub-sourced star switches to pull at the first decision point
+        // (m_f = hub degree > m_u / α), so pull_steps must be reported.
+        let mut el = crate::graph::EdgeList::new(64);
+        for i in 1..64u32 {
+            el.push(0, i);
+            el.push(i, 0);
+        }
+        let g = crate::graph::CsrGraph::from_edge_list(&el);
+        let cfg = EngineConfig::host_only(1).direction_optimized();
+        let m = measure(&g, RunSpec::new(AlgKind::Bfs).with_source(0), &cfg, 1).unwrap();
+        assert!(m.pull_steps >= 1, "direction heuristic never switched");
+        // and push-only runs report zero
+        let m2 = measure(&g, RunSpec::new(AlgKind::Bfs).with_source(0), &EngineConfig::host_only(1), 1)
+            .unwrap();
+        assert_eq!(m2.pull_steps, 0);
     }
 
     #[test]

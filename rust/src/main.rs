@@ -66,6 +66,7 @@ COMMANDS:
              --hw xS[yG] --alpha F --strategy rand|high|low [--source N]
              [--rounds N] [--reps N] [--seed N] [--instrument]
              [--artifacts DIR] [--threads N] [--budget-mb N]
+             [--direction] [--dir-alpha F] [--dir-beta F]
   model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
   calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
   generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
@@ -109,6 +110,14 @@ fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
     if alg == AlgKind::Pagerank {
         cfg.rounds = Some(args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?);
     }
+    // Direction-optimized traversal (DESIGN.md §8): Beamer α/β heuristic
+    // per CPU element; accelerator partitions always stay top-down.
+    if args.has("direction") {
+        cfg = cfg.with_direction(totem::engine::DirectionConfig {
+            alpha: args.f64_or("dir-alpha", 15.0).map_err(anyhow::Error::msg)?,
+            beta: args.f64_or("dir-beta", 18.0).map_err(anyhow::Error::msg)?,
+        });
+    }
     Ok(cfg)
 }
 
@@ -140,6 +149,14 @@ fn run_cmd(args: &Args) -> Result<()> {
         reps
     );
     println!("traversal rate   : {}", fmt_teps(m.teps));
+    if cfg.direction.is_some() {
+        println!(
+            "direction        : {} of {} supersteps ran bottom-up",
+            m.pull_steps, r.supersteps
+        );
+    } else {
+        println!("direction        : push-only");
+    }
     println!("bottleneck comp. : {}", fmt_secs(m.bottleneck_secs));
     println!("communication    : {}", fmt_secs(m.comm_secs));
     println!(

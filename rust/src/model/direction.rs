@@ -1,0 +1,126 @@
+//! Direction-aware per-step cost term (DESIGN.md §8), extending the §3
+//! model to direction-optimized traversal.
+//!
+//! The base model prices a partition's whole workload at `|E_p| / r_p`.
+//! For level-synchronous traversal that over-charges the dense middle
+//! supersteps: a bottom-up (pull) step does not expand the frontier's
+//! `m_f` out-edges — it scans the unexplored vertices' in-edges (≤ `m_u`)
+//! and early-exits on the first frontier parent. Per superstep:
+//!
+//! ```text
+//! cost_push = m_f · s_e             (s_e = seconds/edge = 1 / r_p)
+//! cost_pull = m_u · φ · s_e         (φ = expected scanned fraction)
+//! ```
+//!
+//! Summing `min(cost_push, cost_pull)` over a run's recorded
+//! `(m_f, m_u)` series gives the model-side counterpart of the engine's
+//! α/β switch — comparable against the measured per-step compute times in
+//! [`StepMetrics`](crate::engine::StepMetrics), whose `frontier_edges` /
+//! `unexplored_edges` columns are exactly this module's inputs.
+
+use crate::engine::Direction;
+
+/// Per-edge cost parameters of one processing element.
+#[derive(Debug, Clone, Copy)]
+pub struct DirectionCost {
+    /// Seconds per expanded edge in top-down mode (`1 / r_p`).
+    pub push_edge_secs: f64,
+    /// Seconds per probed in-edge in bottom-up mode (usually ≈ the push
+    /// cost; bottom-up wins by probing fewer edges, not cheaper ones).
+    pub pull_edge_secs: f64,
+    /// Expected fraction of a vertex's in-edges probed before the early
+    /// exit hits. Beamer reports the sweep typically touches well under
+    /// half the candidate edges on scale-free graphs; 0.5 is conservative.
+    pub scan_fraction: f64,
+}
+
+impl DirectionCost {
+    /// Reference element at rate `r` edges/second.
+    pub fn from_rate(r: f64) -> DirectionCost {
+        DirectionCost { push_edge_secs: 1.0 / r, pull_edge_secs: 1.0 / r, scan_fraction: 0.5 }
+    }
+
+    /// Cost of one superstep executed in `dir`, given the frontier's
+    /// out-edge count `m_f` and the unexplored out-edge count `m_u`.
+    pub fn step_cost(&self, dir: Direction, m_f: u64, m_u: u64) -> f64 {
+        match dir {
+            Direction::Push => m_f as f64 * self.push_edge_secs,
+            Direction::Pull => m_u as f64 * self.scan_fraction * self.pull_edge_secs,
+        }
+    }
+
+    /// The cheaper direction for one superstep and its cost. Ties go to
+    /// push (no transpose traffic).
+    pub fn best(&self, m_f: u64, m_u: u64) -> (Direction, f64) {
+        let push = self.step_cost(Direction::Push, m_f, m_u);
+        let pull = self.step_cost(Direction::Pull, m_f, m_u);
+        if pull < push {
+            (Direction::Pull, pull)
+        } else {
+            (Direction::Push, push)
+        }
+    }
+
+    /// Predicted compute cost of a whole traversal under a fixed
+    /// direction, from a per-step `(m_f, m_u)` series.
+    pub fn traversal_cost_fixed(&self, dir: Direction, steps: &[(u64, u64)]) -> f64 {
+        steps.iter().map(|&(mf, mu)| self.step_cost(dir, mf, mu)).sum()
+    }
+
+    /// Predicted compute cost with the optimal per-step direction — the
+    /// lower bound the engine's α/β heuristic approximates.
+    pub fn traversal_cost_optimized(&self, steps: &[(u64, u64)]) -> f64 {
+        steps.iter().map(|&(mf, mu)| self.best(mf, mu).1).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> DirectionCost {
+        DirectionCost { push_edge_secs: 1.0, pull_edge_secs: 1.0, scan_fraction: 0.5 }
+    }
+
+    #[test]
+    fn pull_wins_on_dense_frontier() {
+        // m_f = 1000 out-edges to expand, only 100 unexplored edges left
+        let (dir, cost) = c().best(1000, 100);
+        assert_eq!(dir, Direction::Pull);
+        assert!((cost - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_wins_on_sparse_frontier() {
+        let (dir, cost) = c().best(10, 10_000);
+        assert_eq!(dir, Direction::Push);
+        assert!((cost - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimized_never_exceeds_fixed() {
+        // a BFS-like profile: tiny frontier, explosive middle, tiny tail
+        let steps = [(5u64, 10_000u64), (4_000, 6_000), (9_000, 900), (50, 20)];
+        let m = c();
+        let opt = m.traversal_cost_optimized(&steps);
+        let push = m.traversal_cost_fixed(Direction::Push, &steps);
+        let pull = m.traversal_cost_fixed(Direction::Pull, &steps);
+        assert!(opt <= push + 1e-12, "opt {opt} push {push}");
+        assert!(opt <= pull + 1e-12, "opt {opt} pull {pull}");
+        // and on this profile it strictly beats both fixed policies
+        assert!(opt < push && opt < pull);
+    }
+
+    #[test]
+    fn from_rate_inverts() {
+        let m = DirectionCost::from_rate(2.0);
+        assert!((m.step_cost(Direction::Push, 4, 0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_go_to_push() {
+        // m_f = m_u * φ → equal costs → push
+        let (dir, _) = c().best(50, 100);
+        assert_eq!(dir, Direction::Push);
+    }
+}

@@ -18,6 +18,7 @@
 //! be compared with achieved speedups (Figure 7 / Table 3).
 
 pub mod calibrate;
+pub mod direction;
 
 /// Model parameters.
 #[derive(Debug, Clone, Copy)]

@@ -28,6 +28,78 @@ pub mod assignment;
 pub use assignment::{assign, assignment_stats, low_degree_band, AssignmentStats, Strategy};
 
 use crate::graph::CsrGraph;
+use std::sync::OnceLock;
+
+/// In-edge (transpose) CSR of a partition's local CSR (DESIGN.md §8).
+///
+/// Rows are **state indices** `[0, state_len())` — real local vertices,
+/// then ghost slots, then the dummy sink — the same layout the forward
+/// `LocalCsr::targets` entries address, so pull-mode kernels read and
+/// write the very same per-partition state arrays as push-mode kernels.
+/// `sources[row_offsets[t]..row_offsets[t+1]]` lists the local vertices
+/// that have a forward edge into state index `t`, in ascending local id
+/// (stable counting sort), so iteration order is deterministic.
+///
+/// Every forward edge appears exactly once (edge conservation and
+/// in-degree sums are property-tested in `rebalance_invariants.rs`).
+/// Rows for ghost slots record which local vertices feed that outbox slot
+/// — useful for boundary-aware sweeps; the dummy row is always empty.
+///
+/// Weights are not mirrored: the only pull-mode consumer today is BFS's
+/// bottom-up sweep (unweighted); SSSP stays push-mode.
+#[derive(Debug, Clone, Default)]
+pub struct TransposeCsr {
+    /// `state_len + 1` offsets into `sources`.
+    pub row_offsets: Vec<u64>,
+    /// Local source vertex of each in-edge.
+    pub sources: Vec<u32>,
+}
+
+impl TransposeCsr {
+    /// Build from a partition's forward CSR by counting sort —
+    /// `O(|V_p| + |E_p|)`, same recipe as `CsrGraph::from_edge_list`.
+    pub fn build(csr: &LocalCsr, state_len: usize) -> TransposeCsr {
+        let nv = csr.local_counts.len();
+        let mut deg = vec![0u64; state_len + 1];
+        for &t in &csr.targets {
+            deg[t as usize + 1] += 1;
+        }
+        for i in 0..state_len {
+            deg[i + 1] += deg[i];
+        }
+        let row_offsets = deg.clone();
+        let mut cursor = deg;
+        let mut sources = vec![0u32; csr.targets.len()];
+        for v in 0..nv {
+            let lo = csr.row_offsets[v] as usize;
+            let hi = csr.row_offsets[v + 1] as usize;
+            for &t in &csr.targets[lo..hi] {
+                let slot = cursor[t as usize] as usize;
+                sources[slot] = v as u32;
+                cursor[t as usize] += 1;
+            }
+        }
+        TransposeCsr { row_offsets, sources }
+    }
+
+    /// Local in-neighbors of state index `t`.
+    #[inline]
+    pub fn sources_of(&self, t: u32) -> &[u32] {
+        let lo = self.row_offsets[t as usize] as usize;
+        let hi = self.row_offsets[t as usize + 1] as usize;
+        &self.sources[lo..hi]
+    }
+
+    /// In-degree of state index `t` (local edges only).
+    #[inline]
+    pub fn in_degree(&self, t: u32) -> u64 {
+        self.row_offsets[t as usize + 1] - self.row_offsets[t as usize]
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.sources.len()
+    }
+}
 
 /// Ghost (boundary) table towards one remote partition.
 #[derive(Debug, Clone)]
@@ -74,9 +146,21 @@ pub struct Partition {
     pub csr: LocalCsr,
     pub ghosts: Vec<GhostTable>,
     pub n_ghost: usize,
+    /// Lazily built in-edge CSR for pull/bottom-up kernels (DESIGN.md §8).
+    /// Migrations rebuild the whole `Partition`, so the cache can never go
+    /// stale; construct with `OnceLock::new()`.
+    pub transpose_cache: OnceLock<TransposeCsr>,
 }
 
 impl Partition {
+    /// The in-edge (transpose) CSR, built on first use and cached. Safe to
+    /// call concurrently from per-partition compute threads.
+    #[inline]
+    pub fn transpose(&self) -> &TransposeCsr {
+        self.transpose_cache
+            .get_or_init(|| TransposeCsr::build(&self.csr, self.state_len()))
+    }
+
     /// Length of the unified state arrays (real + ghosts + dummy).
     #[inline]
     pub fn state_len(&self) -> usize {
@@ -290,6 +374,7 @@ impl PartitionedGraph {
                 csr: LocalCsr { row_offsets, targets, weights, local_counts },
                 ghosts,
                 n_ghost,
+                transpose_cache: OnceLock::new(),
             });
         }
 
@@ -493,6 +578,54 @@ mod tests {
         orig.sort_unstable();
         rebuilt.sort_unstable();
         assert_eq!(orig, rebuilt);
+    }
+
+    #[test]
+    fn transpose_inverts_local_csr() {
+        let g = small();
+        let pg = PartitionedGraph::build(&g, &[0, 0, 1, 1], 2);
+        for p in &pg.parts {
+            let tr = p.transpose();
+            // edge conservation: every forward edge appears exactly once
+            assert_eq!(tr.edge_count(), p.edge_count());
+            assert_eq!(tr.row_offsets.len(), p.state_len() + 1);
+            // forward multiset == transpose multiset
+            let mut fwd: Vec<(u32, u32)> = Vec::new();
+            for v in 0..p.nv as u32 {
+                for &t in p.targets(v) {
+                    fwd.push((v, t));
+                }
+            }
+            let mut rev: Vec<(u32, u32)> = Vec::new();
+            for t in 0..p.state_len() as u32 {
+                for &u in tr.sources_of(t) {
+                    rev.push((u, t));
+                }
+            }
+            fwd.sort_unstable();
+            rev.sort_unstable();
+            assert_eq!(fwd, rev);
+            // dummy row is empty; sources ascend within a row
+            assert_eq!(tr.in_degree(p.dummy_index() as u32), 0);
+            for t in 0..p.state_len() as u32 {
+                let s = tr.sources_of(t);
+                assert!(s.windows(2).all(|w| w[0] <= w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_cached_and_cloned() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 21)));
+        let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.5, 0.5], 3);
+        let p = &pg.parts[0];
+        let a = p.transpose() as *const TransposeCsr;
+        let b = p.transpose() as *const TransposeCsr;
+        assert_eq!(a, b, "second call must hit the cache");
+        // a clone carries (or rebuilds) an equivalent transpose
+        let c = p.clone();
+        assert_eq!(c.transpose().sources, p.transpose().sources);
+        assert_eq!(c.transpose().row_offsets, p.transpose().row_offsets);
     }
 
     #[test]

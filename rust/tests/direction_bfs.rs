@@ -1,0 +1,170 @@
+//! Direction-optimized BFS integration tests (DESIGN.md §8).
+//!
+//! The acceptance bar for the traversal subsystem: direction-optimized
+//! runs must be **bit-identical** to push-only BFS in every configuration
+//! (same levels, same superstep count), and the α/β heuristic must
+//! actually choose bottom-up at least once on a seeded R-MAT scale-14
+//! graph under Beamer's default knobs.
+
+use totem::baseline;
+use totem::engine::{self, Direction, DirectionConfig, EngineConfig, RebalanceConfig};
+use totem::alg::bfs::Bfs;
+use totem::graph::{CsrGraph, EdgeList, Workload};
+use totem::harness::{build_workload, run_alg, AlgKind, RunSpec};
+use totem::partition::Strategy;
+
+/// Hub-and-spoke graph: the first direction decision sees
+/// `m_f = n - 1 > m_u / α`, so the switch to pull is a deterministic
+/// arithmetic fact, not a workload accident.
+fn star(n: usize) -> CsrGraph {
+    let mut el = EdgeList::new(n);
+    for i in 1..n as u32 {
+        el.push(0, i);
+        el.push(i, 0);
+    }
+    CsrGraph::from_edge_list(&el)
+}
+
+#[test]
+fn rmat14_switches_to_pull_and_stays_bit_exact() {
+    let g = build_workload(Workload::Rmat(14), 42, AlgKind::Bfs);
+    let spec = RunSpec::new(AlgKind::Bfs); // AUTO → the max-degree hub
+    let (push, _) = run_alg(&g, spec, &EngineConfig::host_only(1)).unwrap();
+    assert_eq!(push.metrics.pull_steps(), 0);
+
+    let cfg = EngineConfig::host_only(1).direction_optimized();
+    let (dir, _) = run_alg(&g, spec, &cfg).unwrap();
+    assert_eq!(
+        push.output.as_i32(),
+        dir.output.as_i32(),
+        "direction-optimized BFS must be bit-identical to push-only"
+    );
+    assert_eq!(push.supersteps, dir.supersteps, "superstep counts must agree");
+    assert!(
+        dir.metrics.pull_steps() >= 1,
+        "α/β heuristic (α=15, β=18) never chose pull on R-MAT-14"
+    );
+    // the heuristic must also switch *back* for the sparse tail: the last
+    // compute superstep (empty-frontier quiescence vote) runs push.
+    let last = dir.metrics.steps.last().unwrap();
+    assert!(
+        last.directions.iter().all(|&d| d == Direction::Push),
+        "tail superstep should have reverted to push: {:?}",
+        last.directions
+    );
+}
+
+#[test]
+fn star_switch_is_deterministic_and_recorded() {
+    let g = star(32);
+    let mut alg = Bfs::new(0);
+    let cfg = EngineConfig::host_only(1).direction_optimized();
+    let r = engine::run(&g, &mut alg, &cfg).unwrap();
+    // levels match the oracle
+    assert_eq!(r.output.as_i32(), baseline::bfs(&g, 0).as_slice());
+    // steps[0] is the cycle-initial sync record; steps[1] the first
+    // compute superstep, where m_f = 31 > m_u / 15 forces pull.
+    let first = &r.metrics.steps[1];
+    assert_eq!(first.directions, vec![Direction::Pull]);
+    assert_eq!(first.frontier_verts, vec![1], "frontier = the hub");
+    assert_eq!(first.frontier_edges, vec![31]);
+    assert_eq!(first.unexplored_edges, vec![31]);
+    assert!(r.metrics.pull_steps() >= 1);
+}
+
+#[test]
+fn direction_partitioned_bit_exact_across_modes_and_strategies() {
+    let g = build_workload(Workload::Rmat(10), 9, AlgKind::Bfs);
+    let src = 3u32;
+    let expect = baseline::bfs(&g, src);
+    let spec = RunSpec::new(AlgKind::Bfs).with_source(src);
+    for shares in [vec![0.5, 0.5], vec![0.4, 0.3, 0.3]] {
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            for pipelined in [false, true] {
+                let mut cfg = EngineConfig::cpu_partitions(&shares, strat)
+                    .with_seed(11)
+                    .direction_optimized();
+                if pipelined {
+                    cfg = cfg.pipelined();
+                }
+                let (r, _) = run_alg(&g, spec, &cfg).unwrap();
+                assert_eq!(
+                    r.output.as_i32(),
+                    expect.as_slice(),
+                    "{strat:?} {shares:?} pipelined={pipelined}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_pull_knobs_match_oracle_on_uneven_graphs() {
+    // alpha huge → pull from the first non-empty frontier; beta huge →
+    // never switch back. The bottom-up kernel alone must still reproduce
+    // the oracle exactly.
+    let force = DirectionConfig { alpha: 1e12, beta: 1e12 };
+    for (scale, seed) in [(9u32, 5u64), (10, 17)] {
+        let g = build_workload(Workload::Rmat(scale), seed, AlgKind::Bfs);
+        // the max-degree hub: guaranteed out-edges, so the first decision
+        // point sees m_f >= 1 and must flip partition 0 (HIGH puts the
+        // hub there) to pull immediately.
+        let src = totem::harness::resolve_source(&g, &RunSpec::new(AlgKind::Bfs));
+        let expect = baseline::bfs(&g, src);
+        let cfg = EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::High)
+            .with_direction(force);
+        let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Bfs).with_source(src), &cfg).unwrap();
+        assert_eq!(r.output.as_i32(), expect.as_slice(), "scale {scale} seed {seed}");
+        assert!(r.metrics.pull_steps() >= 1);
+    }
+}
+
+#[test]
+fn direction_composes_with_rebalance_and_pipeline() {
+    // the α/β direction policy and the dynamic α controller must not
+    // interfere: migrations rebuild partitions (fresh transpose caches,
+    // rebuilt bitmaps) mid-run while directions keep flipping.
+    let g = build_workload(Workload::Rmat(11), 3, AlgKind::Bfs);
+    let src = 1u32;
+    let expect = baseline::bfs(&g, src);
+    let rb = RebalanceConfig {
+        imbalance_threshold: 0.05,
+        patience: 1,
+        migration_band: 0.15,
+        max_migrations: 4,
+    };
+    let cfg = EngineConfig::cpu_partitions(&[0.9, 0.1], Strategy::High)
+        .pipelined()
+        .with_rebalance(rb)
+        .direction_optimized();
+    let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Bfs).with_source(src), &cfg).unwrap();
+    assert_eq!(r.output.as_i32(), expect.as_slice());
+}
+
+#[test]
+fn non_pull_algorithms_ignore_direction_config() {
+    // CC never declares supports_pull: a direction-enabled run must be
+    // push-only and identical to the plain run.
+    let g = build_workload(Workload::Rmat(9), 13, AlgKind::Cc);
+    let base = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand);
+    let (r1, _) = run_alg(&g, RunSpec::new(AlgKind::Cc), &base).unwrap();
+    let (r2, _) = run_alg(&g, RunSpec::new(AlgKind::Cc), &base.clone().direction_optimized())
+        .unwrap();
+    assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+    assert_eq!(r2.metrics.pull_steps(), 0, "CC must never pull");
+}
+
+#[test]
+fn invalid_direction_knobs_fail_loudly() {
+    let g = star(8);
+    for d in [
+        DirectionConfig { alpha: 0.0, beta: 18.0 },
+        DirectionConfig { alpha: 15.0, beta: -3.0 },
+        DirectionConfig { alpha: f64::NAN, beta: 18.0 },
+    ] {
+        let cfg = EngineConfig::host_only(1).with_direction(d);
+        let mut alg = Bfs::new(0);
+        let err = engine::run(&g, &mut alg, &cfg).map(|_| ()).unwrap_err();
+        assert!(format!("{err:#}").contains("direction"), "{err:#}");
+    }
+}

@@ -1,0 +1,9 @@
+# golden fixture chain8 (weighted; see gen_fixtures.py)
+p 8 7
+0 1 1
+1 2 2
+2 3 3
+3 4 4
+4 5 5
+5 6 6
+6 7 7

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Bootstrap generator for the golden conformance fixtures.
+
+Writes the four fixture graphs (weighted text edge lists) and the expected
+per-algorithm outputs as one-value-per-line text files. The *.el files are
+the source of truth for the graphs; the expected outputs were computed by
+this reference implementation (plain BFS/CC/Dijkstra, float64 PageRank and
+Brandes BC mirroring `baseline/`) and cross-checked by the engine itself —
+`GOLDEN_REGEN=1 cargo test --test golden_conformance` rewrites the
+expected files from the engine's host-only synchronous run (see DESIGN.md
+"Testing").
+
+Integer-valued outputs (BFS levels, CC labels, SSSP distances under
+integer weights) are exact in f32 and asserted bit-for-bit; PageRank and
+BC are asserted within an f32 summation tolerance.
+"""
+
+import heapq
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+INF_I32 = 1 << 30
+DAMPING = 0.85
+PR_ROUNDS = 5
+
+
+# --- deterministic RNG (xorshift64*, independent of the repo's PRNG) ----
+class Rng:
+    def __init__(self, seed):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF or 0x9E3779B97F4A7C15
+
+    def next(self):
+        s = self.s
+        s ^= (s >> 12) & 0xFFFFFFFFFFFFFFFF
+        s ^= (s << 25) & 0xFFFFFFFFFFFFFFFF
+        s ^= (s >> 27) & 0xFFFFFFFFFFFFFFFF
+        self.s = s & 0xFFFFFFFFFFFFFFFF
+        return (self.s * 0x2545F4914F6CDD1D) & 0xFFFFFFFFFFFFFFFF
+
+    def f64(self):
+        return (self.next() >> 11) / float(1 << 53)
+
+    def below(self, n):
+        return self.next() % n
+
+
+# --- fixture graphs -----------------------------------------------------
+def chain8():
+    edges = [(i, i + 1, float(i + 1)) for i in range(7)]
+    return 8, edges
+
+
+def star8():
+    edges = [(0, i, 1.0) for i in range(1, 8)] + [(i, 0, 2.0) for i in range(1, 8)]
+    return 8, edges
+
+
+def twocomm16():
+    edges = []
+    for i in range(8):  # community A: ring + even chords
+        edges.append((i, (i + 1) % 8, 1.0))
+    for i in (0, 2, 4, 6):
+        edges.append((i, (i + 2) % 8, 3.0))
+    for j in range(8):  # community B: ring + sparse chords
+        edges.append((8 + j, 8 + (j + 1) % 8, 2.0))
+    for j in (0, 3, 6):
+        edges.append((8 + j, 8 + (j + 3) % 8, 1.0))
+    return 16, edges
+
+
+def rmat64():
+    n, m, scale = 64, 320, 6
+    a, b, c = 0.57, 0.19, 0.19
+    rng = Rng(0xC0FFEE)
+    edges = []
+    for _ in range(m):
+        x = y = 0
+        for level in reversed(range(scale)):
+            r = rng.f64()
+            bit = 1 << level
+            if r < a:
+                pass
+            elif r < a + b:
+                y |= bit
+            elif r < a + b + c:
+                x |= bit
+            else:
+                x |= bit
+                y |= bit
+        w = float(1 + rng.below(8))
+        edges.append((x, y, w))
+    return n, edges
+
+
+# --- reference algorithms (mirror baseline/) ----------------------------
+def adjacency(n, edges):
+    out = [[] for _ in range(n)]
+    for s, d, w in edges:
+        out[s].append((d, w))
+    return out
+
+
+def bfs(n, edges, src):
+    out = adjacency(n, edges)
+    lev = [INF_I32] * n
+    lev[src] = 0
+    q = [src]
+    while q:
+        nxt = []
+        for v in q:
+            for d, _ in out[v]:
+                if lev[d] == INF_I32:
+                    lev[d] = lev[v] + 1
+                    nxt.append(d)
+        q = nxt
+    return lev
+
+
+def cc(n, edges):
+    und = [[] for _ in range(n)]
+    for s, d, _ in edges:
+        und[s].append(d)
+        und[d].append(s)
+    label = list(range(n))
+    for v in range(n):
+        if label[v] != v:
+            continue
+        stack, comp = [v], [v]
+        seen = {v}
+        while stack:
+            u = stack.pop()
+            for w in und[u]:
+                if w not in seen:
+                    seen.add(w)
+                    comp.append(w)
+                    stack.append(w)
+        m = min(comp)
+        for w in comp:
+            label[w] = m
+    return label
+
+
+def sssp(n, edges, src):
+    out = adjacency(n, edges)
+    dist = [float("inf")] * n
+    dist[src] = 0.0
+    pq = [(0.0, src)]
+    while pq:
+        d, v = heapq.heappop(pq)
+        if d > dist[v]:
+            continue
+        for t, w in out[v]:
+            nd = d + w
+            if nd < dist[t]:
+                dist[t] = nd
+                heapq.heappush(pq, (nd, t))
+    return dist
+
+
+def pagerank(n, edges, rounds):
+    out = adjacency(n, edges)
+    outdeg = [len(out[v]) for v in range(n)]
+    rev = [[] for _ in range(n)]
+    for s, d, _ in edges:
+        rev[d].append(s)
+    base = (1.0 - DAMPING) / n
+    rank = [1.0 / n] * n
+    for _ in range(rounds):
+        contrib = [rank[v] / outdeg[v] if outdeg[v] > 0 else 0.0 for v in range(n)]
+        rank = [base + DAMPING * sum(contrib[u] for u in rev[v]) for v in range(n)]
+    return rank
+
+
+def bc(n, edges, src):
+    out = [[] for _ in range(n)]
+    for s, d, _ in edges:
+        out[s].append(d)
+    dist = [-1] * n
+    sigma = [0.0] * n
+    order = []
+    dist[src] = 0
+    sigma[src] = 1.0
+    q = [src]
+    head = 0
+    while head < len(q):
+        v = q[head]
+        head += 1
+        order.append(v)
+        for w in out[v]:
+            if dist[w] < 0:
+                dist[w] = dist[v] + 1
+                q.append(w)
+            if dist[w] == dist[v] + 1:
+                sigma[w] += sigma[v]
+    delta = [0.0] * n
+    scores = [0.0] * n
+    for v in reversed(order):
+        for w in out[v]:
+            if dist[w] == dist[v] + 1 and sigma[w] > 0.0:
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+        if v != src:
+            scores[v] = delta[v]
+    return scores
+
+
+# --- emit ---------------------------------------------------------------
+def fmt(x):
+    if x == float("inf"):
+        return "inf"
+    if float(x) == int(x):
+        return str(int(x))
+    return repr(float(x))
+
+
+def write_fixture(name, n, edges, src):
+    with open(os.path.join(HERE, name + ".el"), "w") as f:
+        f.write("# golden fixture %s (weighted; see gen_fixtures.py)\n" % name)
+        f.write("p %d %d\n" % (n, len(edges)))
+        for s, d, w in edges:
+            f.write("%d %d %s\n" % (s, d, fmt(w)))
+    results = {
+        "bfs": bfs(n, edges, src),
+        "cc": cc(n, edges),
+        "sssp": sssp(n, edges, src),
+        "pagerank": pagerank(n, edges, PR_ROUNDS),
+        "bc": bc(n, edges, src),
+    }
+    for alg, vals in results.items():
+        with open(os.path.join(HERE, "%s.%s.txt" % (name, alg)), "w") as f:
+            for x in vals:
+                f.write(fmt(x) + "\n")
+    reach = sum(1 for x in results["bfs"] if x != INF_I32)
+    print("%s: |V|=%d |E|=%d src=%d reachable=%d" % (name, n, len(edges), src, reach))
+
+
+def main():
+    for name, (n, edges) in (
+        ("chain8", chain8()),
+        ("star8", star8()),
+        ("twocomm16", twocomm16()),
+    ):
+        write_fixture(name, n, edges, 0)
+    n, edges = rmat64()
+    outdeg = [0] * n
+    for s, _, _ in edges:
+        outdeg[s] += 1
+    src = max(range(n), key=lambda v: (outdeg[v], -v))
+    write_fixture("rmat64", n, edges, src)
+    print("rmat64 source =", src, "out-degree", outdeg[src])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+# golden fixture star8 (weighted; see gen_fixtures.py)
+p 8 14
+0 1 1
+0 2 1
+0 3 1
+0 4 1
+0 5 1
+0 6 1
+0 7 1
+1 0 2
+2 0 2
+3 0 2
+4 0 2
+5 0 2
+6 0 2
+7 0 2

@@ -1,0 +1,314 @@
+//! Golden conformance suite (DESIGN.md "Testing").
+//!
+//! Tiny deterministic fixture graphs live in `rust/tests/golden/` as
+//! weighted text edge lists, next to the expected output of every
+//! algorithm (one value per line). Each test sweeps every engine
+//! configuration — {Synchronous, Pipelined} × {1, 2, 3 partitions} ×
+//! {RAND, HIGH, LOW} — and checks the run against the fixture:
+//!
+//! - BFS, CC, SSSP are **bit-exact** against the golden files in every
+//!   configuration (min reductions are order-free; the fixtures carry
+//!   integer weights, so SSSP distances are exact in f32);
+//! - direction-optimized BFS must also be bit-exact against the same
+//!   push-only golden files (DESIGN.md §8);
+//! - PageRank and BC are order-sensitive f32 summations, so their
+//!   partition-dependent results are checked within an f32 summation
+//!   tolerance against the golden files, while Synchronous vs Pipelined
+//!   at the *same* partitioning must agree bit-for-bit (the pipelined
+//!   executor's contract).
+//!
+//! On mismatch the failing output is dumped under `target/golden-diff/`
+//! (CI uploads it as an artifact). Regenerate the expected files
+//! deliberately with `GOLDEN_REGEN=1 cargo test --test golden_conformance`
+//! — golden files are then rewritten from the host-only synchronous run;
+//! inspect the diff before committing (DESIGN.md "Testing").
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use totem::engine::{EngineConfig, ExecMode, StateArray};
+use totem::graph::{io as gio, CsrGraph};
+use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
+use totem::partition::Strategy;
+
+const PR_ROUNDS: usize = 5;
+
+struct Fixture {
+    name: &'static str,
+    /// BFS/SSSP/BC source (rmat64's is its max-out-degree hub).
+    source: u32,
+}
+
+const FIXTURES: &[Fixture] = &[
+    Fixture { name: "chain8", source: 0 },
+    Fixture { name: "star8", source: 0 },
+    Fixture { name: "twocomm16", source: 0 },
+    Fixture { name: "rmat64", source: 0 },
+];
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn diff_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("target/golden-diff")
+}
+
+fn regen() -> bool {
+    std::env::var("GOLDEN_REGEN").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+fn load_graph(name: &str) -> CsrGraph {
+    let path = golden_dir().join(format!("{name}.el"));
+    let el = gio::read_edge_list(&path).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+    CsrGraph::from_edge_list(&el)
+}
+
+fn golden_path(fixture: &str, alg: AlgKind) -> PathBuf {
+    golden_dir().join(format!("{fixture}.{}.txt", alg.name()))
+}
+
+fn is_i32_output(alg: AlgKind) -> bool {
+    matches!(alg, AlgKind::Bfs | AlgKind::Cc)
+}
+
+fn load_golden(fixture: &str, alg: AlgKind) -> StateArray {
+    let path = golden_path(fixture, alg);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    let lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+    if is_i32_output(alg) {
+        StateArray::I32(
+            lines
+                .map(|l| l.parse::<i32>().unwrap_or_else(|e| panic!("{path:?} '{l}': {e}")))
+                .collect(),
+        )
+    } else {
+        StateArray::F32(
+            lines
+                .map(|l| l.parse::<f32>().unwrap_or_else(|e| panic!("{path:?} '{l}': {e}")))
+                .collect(),
+        )
+    }
+}
+
+fn render(out: &StateArray) -> String {
+    let mut s = String::new();
+    match out {
+        StateArray::I32(v) => {
+            for x in v {
+                let _ = writeln!(s, "{x}");
+            }
+        }
+        StateArray::F32(v) => {
+            for x in v {
+                let _ = writeln!(s, "{x}");
+            }
+        }
+    }
+    s
+}
+
+/// Dump got-vs-want to `target/golden-diff/` so CI can attach it.
+fn dump_diff(fixture: &str, alg: AlgKind, label: &str, got: &StateArray, want: &StateArray) {
+    let dir = diff_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let fname = format!("{fixture}.{}.{}.diff", alg.name(), label.replace('/', "-"));
+    let mut body = format!("# {fixture} {} {label}\n# idx got want\n", alg.name());
+    let (gs, ws) = (render(got), render(want));
+    for (i, (g, w)) in gs.lines().zip(ws.lines()).enumerate() {
+        if g != w {
+            let _ = writeln!(body, "{i} {g} {w}");
+        }
+    }
+    let _ = std::fs::write(dir.join(fname), body);
+}
+
+/// The full configuration matrix.
+fn configs() -> Vec<(String, EngineConfig)> {
+    let mut out = Vec::new();
+    for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+        for parts in [1usize, 2, 3] {
+            for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+                let shares = vec![1.0 / parts as f64; parts];
+                let cfg = EngineConfig::cpu_partitions(&shares, strat)
+                    .with_mode(mode)
+                    .with_seed(7);
+                out.push((format!("{mode:?}/{parts}p/{}", strat.name()), cfg));
+            }
+        }
+    }
+    out
+}
+
+fn spec_for(alg: AlgKind, fx: &Fixture) -> RunSpec {
+    RunSpec::new(alg).with_source(fx.source).with_rounds(PR_ROUNDS)
+}
+
+fn assert_bit_exact(
+    fixture: &str,
+    alg: AlgKind,
+    label: &str,
+    got: &StateArray,
+    want: &StateArray,
+) {
+    let ok = match (got, want) {
+        (StateArray::I32(g), StateArray::I32(w)) => g == w,
+        (StateArray::F32(g), StateArray::F32(w)) => {
+            g.len() == w.len()
+                && g.iter().zip(w).all(|(a, b)| a.to_bits() == b.to_bits())
+        }
+        _ => false,
+    };
+    if !ok {
+        dump_diff(fixture, alg, label, got, want);
+        panic!(
+            "{fixture}/{}/{label}: output differs from golden (diff in {:?})",
+            alg.name(),
+            diff_dir()
+        );
+    }
+}
+
+fn assert_within_tolerance(
+    fixture: &str,
+    alg: AlgKind,
+    label: &str,
+    got: &StateArray,
+    want: &StateArray,
+) {
+    let (g, w) = (got.as_f32(), want.as_f32());
+    assert_eq!(g.len(), w.len(), "{fixture}/{}/{label}: length", alg.name());
+    // f32 vs float64-reference summation slack; BC accumulates larger
+    // magnitudes than PageRank, so it gets the looser relative term.
+    let (abs, rel) = match alg {
+        AlgKind::Pagerank => (1e-5f32, 1e-4f32),
+        _ => (1e-3f32, 1e-3f32),
+    };
+    for (i, (a, b)) in g.iter().zip(w).enumerate() {
+        let tol = abs + rel * b.abs();
+        if (a - b).abs() > tol {
+            dump_diff(fixture, alg, label, got, want);
+            panic!(
+                "{fixture}/{}/{label} vertex {i}: {a} vs golden {b} (tol {tol}, diff in {:?})",
+                alg.name(),
+                diff_dir()
+            );
+        }
+    }
+}
+
+/// `GOLDEN_REGEN=1`: rewrite every golden file from the host-only
+/// synchronous run — the deliberate-regeneration workflow (DESIGN.md
+/// "Testing"). All comparison tests no-op under regen so a stale tree
+/// cannot fail mid-rewrite.
+#[test]
+fn golden_regenerate_if_requested() {
+    if !regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        for alg in ALL_ALGS {
+            let (r, _) = run_alg(&g, spec_for(alg, fx), &EngineConfig::host_only(1))
+                .unwrap_or_else(|e| panic!("{}/{}: {e:#}", fx.name, alg.name()));
+            std::fs::write(golden_path(fx.name, alg), render(&r.output)).unwrap();
+        }
+        eprintln!("regenerated golden outputs for {}", fx.name);
+    }
+}
+
+#[test]
+fn golden_bfs_cc_sssp_bit_exact_across_all_configs() {
+    if regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        for alg in [AlgKind::Bfs, AlgKind::Cc, AlgKind::Sssp] {
+            let want = load_golden(fx.name, alg);
+            for (label, cfg) in configs() {
+                let (r, _) = run_alg(&g, spec_for(alg, fx), &cfg)
+                    .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
+                assert_bit_exact(fx.name, alg, &label, &r.output, &want);
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_direction_optimized_bfs_bit_exact() {
+    if regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        let want = load_golden(fx.name, AlgKind::Bfs);
+        for (label, cfg) in configs() {
+            let cfg = cfg.direction_optimized();
+            let label = format!("{label}/dir");
+            let (r, _) = run_alg(&g, spec_for(AlgKind::Bfs, fx), &cfg)
+                .unwrap_or_else(|e| panic!("{}/bfs/{label}: {e:#}", fx.name));
+            assert_bit_exact(fx.name, AlgKind::Bfs, &label, &r.output, &want);
+        }
+    }
+}
+
+#[test]
+fn golden_pagerank_bc_tolerance_and_pipeline_bit_identity() {
+    if regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        for alg in [AlgKind::Pagerank, AlgKind::Bc] {
+            let want = load_golden(fx.name, alg);
+            for parts in [1usize, 2, 3] {
+                for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+                    let shares = vec![1.0 / parts as f64; parts];
+                    let sync_cfg =
+                        EngineConfig::cpu_partitions(&shares, strat).with_seed(7);
+                    let pipe_cfg = sync_cfg.clone().pipelined();
+                    let label = format!("{parts}p/{}", strat.name());
+                    let (rs, _) = run_alg(&g, spec_for(alg, fx), &sync_cfg)
+                        .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
+                    let (rp, _) = run_alg(&g, spec_for(alg, fx), &pipe_cfg)
+                        .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
+                    // pipelined executor contract: identical bits
+                    assert_bit_exact(
+                        fx.name,
+                        alg,
+                        &format!("{label}/sync-vs-pipe"),
+                        &rp.output,
+                        &rs.output,
+                    );
+                    assert_within_tolerance(fx.name, alg, &label, &rs.output, &want);
+                }
+            }
+        }
+    }
+}
+
+/// The committed fixtures themselves stay structurally sane.
+#[test]
+fn golden_fixtures_are_wellformed() {
+    if regen() {
+        // the regeneration test rewrites the same files concurrently
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        g.validate().unwrap_or_else(|e| panic!("{}: {e}", fx.name));
+        assert!(g.weights.is_some(), "{}: fixtures carry weights", fx.name);
+        assert!((fx.source as usize) < g.vertex_count);
+        assert!(g.out_degree(fx.source) > 0, "{}: source must have out-edges", fx.name);
+        for alg in ALL_ALGS {
+            let want = load_golden(fx.name, alg);
+            assert_eq!(
+                want.len(),
+                g.vertex_count,
+                "{}/{}: golden length",
+                fx.name,
+                alg.name()
+            );
+        }
+    }
+}

@@ -165,6 +165,89 @@ fn migrations_respect_the_cap() {
     assert!(r.metrics.migrations <= 2, "{} migrations", r.metrics.migrations);
 }
 
+/// Structural invariants of one partition's transpose CSR against its
+/// forward CSR: edge conservation (every forward edge appears exactly
+/// once), in-degree sums, source ranges, and ghost-slot consistency.
+fn assert_transpose_invariants(pg: &PartitionedGraph) {
+    for p in &pg.parts {
+        let tr = p.transpose();
+        // edge conservation: |E_p| entries, one per forward edge
+        assert_eq!(tr.edge_count(), p.edge_count(), "part {}", p.id);
+        assert_eq!(tr.row_offsets.len(), p.state_len() + 1, "part {}", p.id);
+        // per-state-index in-degree equals the forward target count
+        let mut counts = vec![0u64; p.state_len()];
+        let mut fwd: Vec<(u32, u32)> = Vec::new();
+        for v in 0..p.nv as u32 {
+            for &t in p.targets(v) {
+                counts[t as usize] += 1;
+                fwd.push((v, t));
+            }
+        }
+        let mut rev: Vec<(u32, u32)> = Vec::new();
+        for t in 0..p.state_len() as u32 {
+            assert_eq!(tr.in_degree(t), counts[t as usize], "part {} state {t}", p.id);
+            for &u in tr.sources_of(t) {
+                assert!((u as usize) < p.nv, "part {}: source out of range", p.id);
+                rev.push((u, t));
+            }
+        }
+        fwd.sort_unstable();
+        rev.sort_unstable();
+        assert_eq!(fwd, rev, "part {}: edge multiset mismatch", p.id);
+        // ghost-slot consistency: every ghost slot was created by >= 1
+        // boundary edge, so its transpose row is non-empty; the dummy
+        // sink is never targeted.
+        for t in &p.ghosts {
+            for s in t.slot_base..t.slot_base + t.len() {
+                assert!(tr.in_degree(s as u32) >= 1, "part {} slot {s}", p.id);
+            }
+        }
+        assert_eq!(tr.in_degree(p.dummy_index() as u32), 0, "part {}", p.id);
+    }
+}
+
+#[test]
+fn transpose_conserves_edges_and_degrees() {
+    for seed in [2u64, 11, 31] {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, seed)));
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            let pg = PartitionedGraph::partition(&g, strat, &[0.4, 0.3, 0.3], seed);
+            assert_transpose_invariants(&pg);
+        }
+    }
+}
+
+#[test]
+fn transpose_consistent_after_band_migration() {
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 7)));
+    let pg = PartitionedGraph::partition(&g, Strategy::High, &[0.7, 0.3], 1);
+    // force-build the pre-migration transposes, then migrate a band: the
+    // rebuilt partitions must come with *fresh* (empty) caches whose lazy
+    // build is again exact — a stale transpose would break every
+    // invariant below.
+    assert_transpose_invariants(&pg);
+    let donor = &pg.parts[0];
+    let band = low_degree_band(
+        &g,
+        &donor.local_to_global,
+        0.1 * donor.edge_count() as f64,
+        donor.nv - 1,
+    );
+    assert!(!band.is_empty());
+    let mut assignment = pg.part_of.clone();
+    for &v in &band {
+        assignment[v as usize] = 1;
+    }
+    let pg2 = PartitionedGraph::build(&g, &assignment, 2);
+    assert_transpose_invariants(&pg2);
+    // the transpose sees the migrated vertices on their new side: the
+    // recipient's local edge count grew by exactly what the donor lost
+    assert_eq!(
+        pg2.parts[0].transpose().edge_count() + pg2.parts[1].transpose().edge_count(),
+        g.edge_count()
+    );
+}
+
 #[test]
 fn bc_two_cycle_run_survives_migrations() {
     // BC spans two BSP cycles with different channel sets (the paired
