@@ -191,9 +191,16 @@ impl Bc {
         let dist_cells = as_atomic_i32_cells(dist_arr[DIST].as_i32_mut());
         let numsp_cells = as_atomic_f32_cells(rest[0].as_f32_mut());
 
+        // Frontier scan in canonical (ascending global id) order: within a
+        // superstep the σ adds write only level-(cur+1) cells and read only
+        // settled level-cur values, so the scan order is observable *only*
+        // through the f32 add order into each target — canonical iteration
+        // makes that order placement-invariant (DESIGN.md §9).
+        let canon = &part.canonical_order;
         let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
             let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
+            for i in lo..hi {
+                let v = canon[i] as usize;
                 if ctx.instrument {
                     reads += 1;
                 }
@@ -245,6 +252,16 @@ impl Bc {
     /// Figure 18 backwardPropagation, with the published-ratio formulation.
     fn backward_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
         let cur = self.max_level - 1 - ctx.superstep as i32;
+        // Dependency accumulation runs over the *intermediate* levels
+        // `max_level-1 .. 1` only — Brandes sums δ over w ≠ s, so level 0
+        // (the source) must never accumulate. The engine still mandates
+        // one superstep per cycle, and when `max_level <= 1` (e.g. a star
+        // probed from its hub, or an isolated source) that superstep would
+        // land on `cur <= 0`: make it a no-op instead of crediting the
+        // source with its own shortest paths.
+        if cur < 1 {
+            return ComputeOut { changed: true, reads: 0, writes: 0 };
+        }
         let nv = part.nv;
         let mut reads = 0u64;
         let mut writes = 0u64;
@@ -351,6 +368,28 @@ mod tests {
                 assert!((x - y).abs() < 1e-5, "{strat:?}: {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn star_hub_source_keeps_zero_centrality() {
+        // max_level == 1: the backward cycle's mandatory superstep lands on
+        // cur == 0 and must be a no-op — the source is not an intermediate
+        // vertex of its own shortest paths. (Latent engine bug found by the
+        // differential-fuzz pass of ISSUE 4: bc[hub] came out as 7.0.)
+        let mut el = EdgeList::new(8);
+        for i in 1..8 {
+            el.push(0, i);
+            el.push(i, 0);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Bc::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_f32(), &[0.0; 8]);
+        // and partitioned, where the backward superstep still runs per part
+        let mut alg = Bc::new(0);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand);
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        assert_eq!(r.output.as_f32(), &[0.0; 8]);
     }
 
     #[test]

@@ -249,13 +249,21 @@ impl Pagerank {
 
         let rank_ro: &[f32] = rank;
         let cells = as_atomic_f32_cells(accum);
+        // Scatter in canonical (ascending global id) order: the f32 adds
+        // into shared accumulator cells — local targets and ghost slots
+        // alike — then arrive in a placement-invariant sender order, which
+        // keeps push-mode outputs bit-identical across placements
+        // (DESIGN.md §9; with one worker the order is exact, with more the
+        // chunk boundaries are placement-invariant too).
+        let canon = &part.canonical_order;
         let (reads, writes) = parallel_reduce(
             nv,
             ctx.threads,
             (0u64, 0u64),
             |lo, hi, acc| {
                 let (mut reads, mut writes) = acc;
-                for v in lo..hi {
+                for i in lo..hi {
+                    let v = canon[i] as usize;
                     let c = rank_ro[v] * inv_outdeg[v];
                     if c == 0.0 {
                         continue;

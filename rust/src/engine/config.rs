@@ -2,7 +2,7 @@
 //! hardware-configuration notation `xSyG` (§5: x CPU sockets, y GPUs).
 
 use super::direction::DirectionConfig;
-use crate::partition::Strategy;
+use crate::partition::{Placement, Strategy};
 use std::path::PathBuf;
 
 /// What kind of processing element executes a partition.
@@ -98,6 +98,9 @@ pub struct EngineConfig {
     /// Edge share per partition (α = shares[0]).
     pub shares: Vec<f64>,
     pub strategy: Strategy,
+    /// Intra-partition vertex placement (DESIGN.md §9). Pure layout
+    /// choice: global outputs are bit-identical across placements.
+    pub placement: Placement,
     /// Seed for RAND partitioning and any tie-breaking.
     pub seed: u64,
     /// Safety bound on supersteps per BSP cycle.
@@ -130,6 +133,7 @@ impl EngineConfig {
             elements: vec![ElementKind::Cpu { threads: 1 }],
             shares: vec![1.0],
             strategy: Strategy::Rand,
+            placement: Placement::default(),
             seed: 1,
             max_supersteps: 100_000,
             rounds: None,
@@ -211,6 +215,12 @@ impl EngineConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Select the intra-partition vertex placement (DESIGN.md §9).
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
         self
     }
 
@@ -304,6 +314,14 @@ mod tests {
         let c = EngineConfig::cpu_partitions(&[0.6, 0.4], Strategy::Rand);
         assert_eq!(c.num_partitions(), 2);
         assert!(!c.has_accelerator());
+    }
+
+    #[test]
+    fn placement_default_and_builder() {
+        let c = EngineConfig::host_only(1);
+        assert_eq!(c.placement, Placement::DegreeDesc, "historical layout");
+        let c = c.with_placement(Placement::BfsOrder);
+        assert_eq!(c.placement, Placement::BfsOrder);
     }
 
     #[test]

@@ -31,6 +31,7 @@ mod rebalance;
 pub mod state;
 
 pub use crate::alg::INF_I32;
+pub use crate::partition::Placement;
 pub use config::{ElementKind, EngineConfig, ExecMode, RebalanceConfig};
 pub use direction::{Direction, DirectionConfig, FrontierStats};
 pub use metrics::{MemCounters, Metrics, StepMetrics};
@@ -131,7 +132,13 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     alg.prepare(g, pg_graph);
 
     // --- partition --------------------------------------------------------
-    let mut pg = PartitionedGraph::partition(pg_graph, cfg.strategy, &cfg.shares, cfg.seed);
+    let mut pg = PartitionedGraph::partition_placed(
+        pg_graph,
+        cfg.strategy,
+        &cfg.shares,
+        cfg.seed,
+        cfg.placement,
+    );
 
     // --- state + elements --------------------------------------------------
     let mut states: Vec<AlgState> = pg

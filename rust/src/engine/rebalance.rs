@@ -126,7 +126,11 @@ pub(crate) fn migrate_band<A: Algorithm>(
     for &gv in &moved {
         assignment[gv as usize] = recipient as u8;
     }
-    let new_pg = PartitionedGraph::build(graph, &assignment, nparts);
+    // Rebuild re-places every partition with the run's placement policy
+    // (DESIGN.md §9): migrated vertices land where the layout says, not
+    // appended — the post-migration layout is indistinguishable from a
+    // fresh build of the new assignment.
+    let new_pg = PartitionedGraph::build_placed(graph, &assignment, nparts, pg.placement);
     let mut new_states = remap_states(pg, states, &new_pg);
 
     // Algorithm-private scratch is partition-shaped; rebuild it.
@@ -144,6 +148,11 @@ pub(crate) fn migrate_band<A: Algorithm>(
 /// the band's edge share is covered, bounded by a proportional vertex cap
 /// so zero-degree tails can't drain the partition. Never empties the
 /// donor. Returns global vertex ids.
+///
+/// Placement-agnostic: `local_to_global` is only degree-ordered under the
+/// default [`Placement`](crate::partition::Placement), so the degree-
+/// descending view is rebuilt here explicitly (stable by local id, which
+/// reproduces the historical band byte-for-byte under `DegreeDesc`).
 pub(crate) fn select_band(g: &CsrGraph, donor: &Partition, band: f64) -> Vec<u32> {
     if donor.nv <= 1 {
         return Vec::new();
@@ -151,7 +160,13 @@ pub(crate) fn select_band(g: &CsrGraph, donor: &Partition, band: f64) -> Vec<u32
     let target_edges = (band * donor.edge_count() as f64).max(1.0);
     let max_vertices =
         ((band * donor.nv as f64).ceil() as usize).clamp(1, donor.nv - 1);
-    low_degree_band(g, &donor.local_to_global, target_edges, max_vertices)
+    let mut members_desc = donor.local_to_global.clone();
+    // Tie-break by global id: a stable sort alone would inherit the
+    // placement's tie order (BFS-order layouts shuffle the equal-degree
+    // tail), and the band must not depend on layout. The (degree, id) key
+    // also reproduces the historical DegreeDesc band byte-for-byte.
+    members_desc.sort_by_key(|&v| (std::cmp::Reverse(g.out_degree(v)), v));
+    low_degree_band(g, &members_desc, target_edges, max_vertices)
 }
 
 /// Remap every partition's state arrays onto the freshly built
@@ -295,8 +310,91 @@ mod tests {
             },
             ghosts: vec![],
             n_ghost: 0,
+            canonical_order: vec![0],
             transpose_cache: std::sync::OnceLock::new(),
         };
         assert!(select_band(&g, &single, 0.5).is_empty());
+    }
+
+    #[test]
+    fn migrate_band_rebuilds_with_the_graphs_placement() {
+        // The engine-internal migration path must re-place through
+        // `pg.placement` — migrated vertices land where the layout policy
+        // says, not appended — and remap real-vertex state exactly.
+        use crate::alg::cc::Cc;
+        use crate::partition::{Placement, ALL_PLACEMENTS};
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 15)));
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::partition_placed(
+                &g,
+                Strategy::Rand,
+                &[0.7, 0.3],
+                2,
+                placement,
+            );
+            let mut alg = Cc::new();
+            let states: Vec<AlgState> =
+                pg.parts.iter().map(|p| alg.init_state(&pg, p)).collect();
+            let channels = alg.channels(0);
+            let labels_of = |pg: &PartitionedGraph, states: &[AlgState]| -> Vec<i32> {
+                let locals: Vec<Vec<i32>> =
+                    states.iter().map(|s| s.arrays[0].as_i32().to_vec()).collect();
+                pg.collect_to_global(&locals)
+            };
+            let before = labels_of(&pg, &states);
+            let mig = migrate_band(&alg, &g, &pg, &states, &channels, 0, 1, 0.2)
+                .expect("band must move on a 0.7/0.3 split");
+            assert_eq!(mig.pg.placement, placement, "placement must survive migration");
+            assert!(mig.pg.parts[1].nv > pg.parts[1].nv, "recipient must grow");
+            // layout contract holds in the rebuilt partitions (an appended
+            // band would violate every ordered placement)
+            for p in &mig.pg.parts {
+                match placement {
+                    Placement::AssignmentOrder => {
+                        assert!(p.local_to_global.windows(2).all(|w| w[0] < w[1]))
+                    }
+                    Placement::DegreeDesc => assert!(p
+                        .local_to_global
+                        .windows(2)
+                        .all(|w| g.out_degree(w[0]) >= g.out_degree(w[1]))),
+                    Placement::DegreeAsc => assert!(p
+                        .local_to_global
+                        .windows(2)
+                        .all(|w| g.out_degree(w[0]) <= g.out_degree(w[1]))),
+                    Placement::BfsOrder => {
+                        let max =
+                            p.local_to_global.iter().map(|&v| g.out_degree(v)).max().unwrap();
+                        assert_eq!(g.out_degree(p.local_to_global[0]), max);
+                    }
+                }
+                // canonical order still inverts the new permutation
+                let seq: Vec<u32> = p
+                    .canonical_order
+                    .iter()
+                    .map(|&l| p.local_to_global[l as usize])
+                    .collect();
+                assert!(seq.windows(2).all(|w| w[0] < w[1]), "{placement:?}");
+            }
+            // real-vertex state carried over exactly through the remap
+            assert_eq!(labels_of(&mig.pg, &mig.states), before, "{placement:?}");
+        }
+    }
+
+    #[test]
+    fn band_selection_is_placement_invariant() {
+        // The degree-descending view is rebuilt from the member set, so
+        // the chosen band cannot depend on the partition's layout.
+        use crate::partition::ALL_PLACEMENTS;
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 3)));
+        let a = crate::partition::assign(&g, Strategy::High, &[0.5, 0.5], 1);
+        let base = {
+            let pg = PartitionedGraph::build(&g, &a, 2);
+            select_band(&g, &pg.parts[0], 0.1)
+        };
+        assert!(!base.is_empty());
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 2, placement);
+            assert_eq!(select_band(&g, &pg.parts[0], 0.1), base, "{placement:?}");
+        }
     }
 }

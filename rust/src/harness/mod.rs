@@ -4,6 +4,7 @@
 
 use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, traversed_edges};
 use crate::engine::{self, EngineConfig, RunResult};
+use crate::partition::Placement;
 use crate::graph::generator::with_random_weights;
 use crate::graph::{CsrGraph, Workload};
 use crate::stats;
@@ -135,6 +136,9 @@ pub struct Measured {
     /// Supersteps in which some element ran bottom-up (last rep; 0 unless
     /// the config enables direction optimization — DESIGN.md §8).
     pub pull_steps: usize,
+    /// Intra-partition vertex placement the run used (DESIGN.md §9) —
+    /// surfaced so benchmark reports can label per-placement rows.
+    pub placement: Placement,
     /// Last run's full result (partition stats etc. are deterministic
     /// given the seed, so any rep's copy is representative).
     pub last: RunResult,
@@ -172,6 +176,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         overlap_factor: stats::mean(&overlap),
         migrations: last.metrics.migrations,
         pull_steps: last.metrics.pull_steps(),
+        placement: cfg.placement,
         last,
         traversed,
     })
@@ -210,6 +215,16 @@ mod tests {
         assert!((m.last.shares[0] - 0.6).abs() < 0.1);
         assert_eq!(m.overlap_factor, 0.0, "synchronous engine never overlaps");
         assert_eq!(m.migrations, 0);
+        assert_eq!(m.placement, Placement::DegreeDesc, "default layout");
+    }
+
+    #[test]
+    fn measure_reports_configured_placement() {
+        let g = build_workload(Workload::Rmat(8), 11, AlgKind::Bfs);
+        let cfg = EngineConfig::host_only(1).with_placement(Placement::BfsOrder);
+        let m = measure(&g, RunSpec::new(AlgKind::Bfs), &cfg, 1).unwrap();
+        assert_eq!(m.placement, Placement::BfsOrder);
+        assert!(m.teps > 0.0);
     }
 
     #[test]

@@ -64,6 +64,7 @@ USAGE: totem <command> [--flags]
 COMMANDS:
   run        --alg bfs|pagerank|sssp|bc|cc --workload rmatN|uniformN|twitter|ukweb|csr:PATH
              --hw xS[yG] --alpha F --strategy rand|high|low [--source N]
+             [--placement assign|degree-desc|degree-asc|bfs]
              [--rounds N] [--reps N] [--seed N] [--instrument]
              [--artifacts DIR] [--threads N] [--budget-mb N]
              [--direction] [--dir-alpha F] [--dir-beta F]
@@ -99,10 +100,15 @@ fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
     let threads = args.usize_or("threads", 1).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::from_notation(&hw, alpha, strategy, threads)
         .map_err(anyhow::Error::msg)?;
+    // Intra-partition vertex placement (DESIGN.md §9): a pure layout
+    // knob — outputs are bit-identical across placements.
+    let placement = totem::partition::Placement::parse(&args.str_or("placement", "degree-desc"))
+        .map_err(anyhow::Error::msg)?;
     cfg = cfg
         .with_seed(args.u64_or("seed", 42).map_err(anyhow::Error::msg)?)
         .with_instrument(args.has("instrument"))
-        .with_artifacts(args.str_or("artifacts", "artifacts"));
+        .with_artifacts(args.str_or("artifacts", "artifacts"))
+        .with_placement(placement);
     let mb = args.usize_or("budget-mb", 0).map_err(anyhow::Error::msg)?;
     if mb > 0 {
         cfg.accel_memory_budget = (mb as u64) << 20;
@@ -157,6 +163,7 @@ fn run_cmd(args: &Args) -> Result<()> {
     } else {
         println!("direction        : push-only");
     }
+    println!("placement        : {}", m.placement.name());
     println!("bottleneck comp. : {}", fmt_secs(m.bottleneck_secs));
     println!("communication    : {}", fmt_secs(m.comm_secs));
     println!(

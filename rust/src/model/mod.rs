@@ -19,6 +19,7 @@
 
 pub mod calibrate;
 pub mod direction;
+pub mod locality;
 
 /// Model parameters.
 #[derive(Debug, Clone, Copy)]

@@ -22,6 +22,15 @@
 //! [nv, nv + n_ghost)      ghost slots, grouped by remote partition
 //! [nv + n_ghost]          dummy sink (accelerator padding edges land here)
 //! ```
+//!
+//! **Vertex placement** (DESIGN.md §9): which member occupies which local
+//! id inside a partition is a free choice — the state layout contract and
+//! the ghost-table invariants hold for *any* bijection — and it decides
+//! the CPU kernels' memory-access locality (paper §6.3.2, Figs 12–13).
+//! [`Placement`] selects that intra-partition order; global outputs are
+//! bit-identical across placements (the permutation is invisible after
+//! `collect_to_global`, enforced by the golden + differential-fuzz
+//! suites).
 
 pub mod assignment;
 
@@ -29,6 +38,113 @@ pub use assignment::{assign, assignment_stats, low_degree_band, AssignmentStats,
 
 use crate::graph::CsrGraph;
 use std::sync::OnceLock;
+
+/// Intra-partition vertex placement: the order in which a partition's
+/// members are renumbered into its dense local id space (DESIGN.md §9).
+///
+/// Every placement is a bijection over the same member set, so partition
+/// structure (edge/weight multisets, ghost-table sorting, transpose
+/// in-degrees) and global algorithm outputs are placement-invariant; what
+/// changes is the *layout* — and with it cache locality and the probe
+/// order of bottom-up sweeps (measured in `benches/fig12_13_cache.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Raw assignment order: local ids ascend with global ids.
+    AssignmentOrder,
+    /// Descending out-degree, ties in assignment order (stable sort).
+    /// The historical layout — hubs first gives the accelerator's SIMD
+    /// batches uniform work and keeps the hot vertices' state contiguous —
+    /// and therefore the default.
+    #[default]
+    DegreeDesc,
+    /// Ascending out-degree, ties in assignment order. The adversarial
+    /// counterpart of [`Placement::DegreeDesc`], kept for measurement.
+    DegreeAsc,
+    /// Per-partition pseudo-BFS over the partition-induced subgraph:
+    /// repeatedly seed from the highest-degree unvisited member and run a
+    /// BFS over *local* edges, so traversal neighborhoods land near each
+    /// other in the local id space (Sallinen et al. 2015's layout
+    /// sensitivity argument).
+    BfsOrder,
+}
+
+/// All placements, in measurement order.
+pub const ALL_PLACEMENTS: [Placement; 4] = [
+    Placement::AssignmentOrder,
+    Placement::DegreeDesc,
+    Placement::DegreeAsc,
+    Placement::BfsOrder,
+];
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "assign" | "assignment" => Ok(Placement::AssignmentOrder),
+            "degree-desc" | "degdesc" => Ok(Placement::DegreeDesc),
+            "degree-asc" | "degasc" => Ok(Placement::DegreeAsc),
+            "bfs" | "bfs-order" => Ok(Placement::BfsOrder),
+            _ => Err(format!(
+                "unknown placement '{s}' (assign|degree-desc|degree-asc|bfs)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::AssignmentOrder => "assign",
+            Placement::DegreeDesc => "degree-desc",
+            Placement::DegreeAsc => "degree-asc",
+            Placement::BfsOrder => "bfs",
+        }
+    }
+
+    /// Order one partition's members (collected in ascending global id)
+    /// into local-id order. Input `members` is the assignment-order list;
+    /// the result is a permutation of it. Deterministic for every variant.
+    fn order_members(&self, g: &CsrGraph, assignment: &[u8], pid: usize, members: &mut Vec<u32>) {
+        match self {
+            Placement::AssignmentOrder => {}
+            Placement::DegreeDesc => {
+                members.sort_by_key(|&x| std::cmp::Reverse(g.out_degree(x)));
+            }
+            Placement::DegreeAsc => {
+                members.sort_by_key(|&x| g.out_degree(x));
+            }
+            Placement::BfsOrder => {
+                *members = bfs_order(g, assignment, pid, members);
+            }
+        }
+    }
+}
+
+/// Pseudo-BFS member order (see [`Placement::BfsOrder`]): seeds are taken
+/// in descending degree (assignment-order ties); each BFS visits local
+/// out-neighbors in adjacency order. Every member appears exactly once.
+fn bfs_order(g: &CsrGraph, assignment: &[u8], pid: usize, members: &[u32]) -> Vec<u32> {
+    let mut seeds: Vec<u32> = members.to_vec();
+    seeds.sort_by_key(|&x| std::cmp::Reverse(g.out_degree(x)));
+    let mut visited = vec![false; g.vertex_count];
+    let mut order = Vec::with_capacity(members.len());
+    let mut queue = std::collections::VecDeque::new();
+    for &seed in &seeds {
+        if visited[seed as usize] {
+            continue;
+        }
+        visited[seed as usize] = true;
+        queue.push_back(seed);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &d in g.neighbors(v) {
+                if assignment[d as usize] as usize == pid && !visited[d as usize] {
+                    visited[d as usize] = true;
+                    queue.push_back(d);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), members.len());
+    order
+}
 
 /// In-edge (transpose) CSR of a partition's local CSR (DESIGN.md §8).
 ///
@@ -146,6 +262,15 @@ pub struct Partition {
     pub csr: LocalCsr,
     pub ghosts: Vec<GhostTable>,
     pub n_ghost: usize,
+    /// Local ids in **ascending global id** order — the inverse of the
+    /// placement permutation (DESIGN.md §9): `canonical_order[i]` is the
+    /// local id of the partition's i-th member in assignment order, so
+    /// iterating it visits the same vertex sequence under every
+    /// [`Placement`]. Kernels whose f32 accumulation order is observable
+    /// (push-mode PageRank's scatter, BC's forward σ adds) iterate this
+    /// instead of `0..nv`, which is what makes their global outputs
+    /// bit-identical across placements.
+    pub canonical_order: Vec<u32>,
     /// Lazily built in-edge CSR for pull/bottom-up kernels (DESIGN.md §8).
     /// Migrations rebuild the whole `Partition`, so the cache can never go
     /// stale; construct with `OnceLock::new()`.
@@ -207,7 +332,8 @@ impl Partition {
         (self.csr.row_offsets.len() * 8
             + self.csr.targets.len() * 4
             + self.csr.weights.as_ref().map_or(0, |w| w.len() * 4)
-            + self.local_to_global.len() * 4) as u64
+            + self.local_to_global.len() * 4
+            + self.canonical_order.len() * 4) as u64
     }
 
     /// Bytes of the ghost/communication tables, `(vid + s) × slots` with
@@ -230,6 +356,9 @@ pub struct PartitionedGraph {
     pub local_of: Vec<u32>,
     pub global_vertex_count: usize,
     pub total_edges: usize,
+    /// Intra-partition vertex placement this graph was built with; a
+    /// dynamic-α migration rebuild re-places with the same policy.
+    pub placement: Placement,
 }
 
 /// Communication-volume statistics (Figure 4).
@@ -254,23 +383,34 @@ impl BetaStats {
 }
 
 impl PartitionedGraph {
-    /// Partition `g` according to `assignment` (one partition id per
-    /// vertex; ids must be `< nparts`).
-    ///
-    /// Within each partition, vertices are ordered by descending degree —
-    /// the partition-local analogue of the paper's degree ordering, which
-    /// also gives the accelerator's SIMD batches uniform work.
+    /// Partition `g` according to `assignment` with the default
+    /// [`Placement`] (degree-descending, the historical layout).
     pub fn build(g: &CsrGraph, assignment: &[u8], nparts: usize) -> PartitionedGraph {
+        Self::build_placed(g, assignment, nparts, Placement::default())
+    }
+
+    /// Partition `g` according to `assignment` (one partition id per
+    /// vertex; ids must be `< nparts`), renumbering each partition's local
+    /// id space in `placement` order (DESIGN.md §9).
+    pub fn build_placed(
+        g: &CsrGraph,
+        assignment: &[u8],
+        nparts: usize,
+        placement: Placement,
+    ) -> PartitionedGraph {
         assert_eq!(assignment.len(), g.vertex_count);
         let v_total = g.vertex_count;
 
         // --- local id spaces -------------------------------------------------
+        // Members are collected in ascending global id (assignment order),
+        // then permuted by the placement policy; local id = position in
+        // the permuted list.
         let mut members: Vec<Vec<u32>> = vec![Vec::new(); nparts];
         for v in 0..v_total as u32 {
             members[assignment[v as usize] as usize].push(v);
         }
-        for m in members.iter_mut() {
-            m.sort_by_key(|&x| std::cmp::Reverse(g.out_degree(x)));
+        for (pid, m) in members.iter_mut().enumerate() {
+            placement.order_members(g, assignment, pid, m);
         }
         let mut local_of = vec![0u32; v_total];
         for m in &members {
@@ -367,6 +507,11 @@ impl PartitionedGraph {
                 row_offsets.push(targets.len() as u64);
             }
 
+            // Inverse of the placement permutation: local ids sorted by
+            // global id (members are distinct, so the key is unique).
+            let mut canonical_order: Vec<u32> = (0..nv as u32).collect();
+            canonical_order.sort_by_key(|&l| mem[l as usize]);
+
             parts.push(Partition {
                 id: pid,
                 nv,
@@ -374,6 +519,7 @@ impl PartitionedGraph {
                 csr: LocalCsr { row_offsets, targets, weights, local_counts },
                 ghosts,
                 n_ghost,
+                canonical_order,
                 transpose_cache: OnceLock::new(),
             });
         }
@@ -384,18 +530,30 @@ impl PartitionedGraph {
             local_of,
             global_vertex_count: v_total,
             total_edges: g.edge_count(),
+            placement,
         }
     }
 
-    /// Convenience: assign + build in one call.
+    /// Convenience: assign + build in one call, default placement.
     pub fn partition(
         g: &CsrGraph,
         strategy: Strategy,
         shares: &[f64],
         seed: u64,
     ) -> PartitionedGraph {
+        Self::partition_placed(g, strategy, shares, seed, Placement::default())
+    }
+
+    /// Convenience: assign + build in one call with an explicit placement.
+    pub fn partition_placed(
+        g: &CsrGraph,
+        strategy: Strategy,
+        shares: &[f64],
+        seed: u64,
+        placement: Placement,
+    ) -> PartitionedGraph {
         let a = assign(g, strategy, shares, seed);
-        PartitionedGraph::build(g, &a, shares.len())
+        PartitionedGraph::build_placed(g, &a, shares.len(), placement)
     }
 
     /// Figure 4 statistics.
@@ -640,6 +798,166 @@ mod tests {
             .collect();
         let back = pg.collect_to_global(&locals);
         assert_eq!(back, global);
+    }
+
+    #[test]
+    fn placement_parse_and_names() {
+        assert_eq!(Placement::parse("assign").unwrap(), Placement::AssignmentOrder);
+        assert_eq!(Placement::parse("DEGREE-DESC").unwrap(), Placement::DegreeDesc);
+        assert_eq!(Placement::parse("degasc").unwrap(), Placement::DegreeAsc);
+        assert_eq!(Placement::parse("bfs").unwrap(), Placement::BfsOrder);
+        assert!(Placement::parse("hilbert").is_err());
+        assert_eq!(Placement::default(), Placement::DegreeDesc);
+        for p in ALL_PLACEMENTS {
+            assert_eq!(Placement::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn default_placement_preserves_degree_desc_layout() {
+        // `build` must stay byte-compatible with the pre-placement layout:
+        // members in descending degree, assignment-order ties.
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 4)));
+        let a = assign(&g, Strategy::Rand, &[0.5, 0.5], 3);
+        let pg = PartitionedGraph::build(&g, &a, 2);
+        let pg2 = PartitionedGraph::build_placed(&g, &a, 2, Placement::DegreeDesc);
+        for (p, q) in pg.parts.iter().zip(&pg2.parts) {
+            assert_eq!(p.local_to_global, q.local_to_global);
+            assert_eq!(p.csr.targets, q.csr.targets);
+        }
+        assert_eq!(pg.placement, Placement::DegreeDesc);
+    }
+
+    #[test]
+    fn placements_are_bijections_with_expected_order() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 8)));
+        let a = assign(&g, Strategy::Rand, &[0.4, 0.3, 0.3], 5);
+        let base = PartitionedGraph::build_placed(&g, &a, 3, Placement::AssignmentOrder);
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 3, placement);
+            assert_eq!(pg.placement, placement);
+            for (p, b) in pg.parts.iter().zip(&base.parts) {
+                // same member set, different order: a bijection
+                let mut sorted = p.local_to_global.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, b.local_to_global, "{placement:?}");
+                match placement {
+                    Placement::AssignmentOrder => {
+                        assert!(p.local_to_global.windows(2).all(|w| w[0] < w[1]));
+                    }
+                    Placement::DegreeDesc => assert!(p
+                        .local_to_global
+                        .windows(2)
+                        .all(|w| g.out_degree(w[0]) >= g.out_degree(w[1]))),
+                    Placement::DegreeAsc => assert!(p
+                        .local_to_global
+                        .windows(2)
+                        .all(|w| g.out_degree(w[0]) <= g.out_degree(w[1]))),
+                    Placement::BfsOrder => {
+                        if p.nv > 0 {
+                            // the first vertex is a maximum-degree member
+                            let max = p
+                                .local_to_global
+                                .iter()
+                                .map(|&v| g.out_degree(v))
+                                .max()
+                                .unwrap();
+                            assert_eq!(g.out_degree(p.local_to_global[0]), max);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_order_inverts_every_placement() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 6)));
+        let a = assign(&g, Strategy::High, &[0.6, 0.4], 1);
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 2, placement);
+            for p in &pg.parts {
+                assert_eq!(p.canonical_order.len(), p.nv);
+                // canonical iteration visits members in ascending global id
+                let seq: Vec<u32> = p
+                    .canonical_order
+                    .iter()
+                    .map(|&l| p.local_to_global[l as usize])
+                    .collect();
+                assert!(seq.windows(2).all(|w| w[0] < w[1]), "{placement:?}");
+                // and is itself a permutation of the local id space
+                let mut ids = p.canonical_order.clone();
+                ids.sort_unstable();
+                assert_eq!(ids, (0..p.nv as u32).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn placement_preserves_structure_invariants() {
+        // Edge/weight multisets, ghost-table sorting, and β statistics are
+        // placement-invariant; only the local id labels move.
+        let mut el = rmat(&RmatParams::paper(9, 12));
+        with_random_weights(&mut el, 32, 9);
+        let g = CsrGraph::from_edge_list(&el);
+        let a = assign(&g, Strategy::Rand, &[0.5, 0.5], 2);
+        let base = PartitionedGraph::build_placed(&g, &a, 2, Placement::AssignmentOrder);
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 2, placement);
+            assert_eq!(pg.beta_stats().boundary_edges, base.beta_stats().boundary_edges);
+            assert_eq!(pg.beta_stats().reduced_messages, base.beta_stats().reduced_messages);
+            for (p, b) in pg.parts.iter().zip(&base.parts) {
+                assert_eq!(p.edge_count(), b.edge_count(), "{placement:?}");
+                assert_eq!(p.n_ghost, b.n_ghost, "{placement:?}");
+                let sum = |x: &Partition| -> f64 {
+                    x.csr.weights.as_ref().unwrap().iter().map(|&w| w as f64).sum()
+                };
+                assert!((sum(p) - sum(b)).abs() < 1e-6, "{placement:?}");
+                let mut next_base = p.nv;
+                for t in &p.ghosts {
+                    assert_eq!(t.slot_base, next_base);
+                    next_base += t.len();
+                    assert!(t.remote_locals.windows(2).all(|w| w[0] < w[1]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_order_covers_all_members_exactly_once() {
+        // incl. members unreachable from the first seed (multi-seed)
+        let mut el = EdgeList::new(8);
+        // two local components in partition 0: {0,1,2} and {3,4}; isolated 5
+        for &(s, d) in &[(0, 1), (1, 2), (3, 4)] {
+            el.push(s, d);
+        }
+        el.push(6, 7); // partition 1
+        let g = CsrGraph::from_edge_list(&el);
+        let a: Vec<u8> = vec![0, 0, 0, 0, 0, 0, 1, 1];
+        let pg = PartitionedGraph::build_placed(&g, &a, 2, Placement::BfsOrder);
+        let mut got = pg.parts[0].local_to_global.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        // seeds descend by degree: 0 (deg 1) ... all degree-1 seeds tie, so
+        // assignment order breaks them: 0's component first, then 3's, then 5
+        assert_eq!(pg.parts[0].local_to_global, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn map_collect_roundtrip_every_placement() {
+        // collect_to_global ∘ map_vertex_array = id for every placement
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 19)));
+        let a = assign(&g, Strategy::Low, &[0.3, 0.4, 0.3], 4);
+        let global: Vec<u32> = (0..g.vertex_count as u32).map(|v| v ^ 0x5a5a).collect();
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 3, placement);
+            let locals: Vec<Vec<u32>> = pg
+                .parts
+                .iter()
+                .map(|p| p.map_vertex_array(&global, u32::MAX))
+                .collect();
+            assert_eq!(pg.collect_to_global(&locals), global, "{placement:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Differential fuzzing of the hybrid engine against the single-threaded
+//! `baseline/` oracles (ISSUE 4; DESIGN.md "Testing: differential fuzz").
+//!
+//! A seeded sweep samples random engine configurations — workload (R-MAT /
+//! uniform) × algorithm × executor mode × partition count × strategy ×
+//! [`Placement`] × direction on/off — and checks every run against the
+//! baseline: **exact** for the min-reduction algorithms (BFS, CC, SSSP),
+//! within f32-summation tolerance for the order-sensitive ones (PageRank,
+//! BC). A second deterministic sweep pins the placement-invariance
+//! contract: the same configuration run under every placement must produce
+//! bit-identical global outputs.
+//!
+//! Reproduction: every failure message carries the sweep seed and the full
+//! sampled configuration. Re-run just that case with
+//! `DIFF_FUZZ_SEED=<seed> cargo test --test differential_fuzz` — the sweep
+//! is a pure function of the seed, so iteration k samples the same
+//! configuration again. `DIFF_FUZZ_ITERS` widens the sweep (CI uses the
+//! committed defaults).
+
+use totem::baseline;
+use totem::engine::{EngineConfig, ExecMode};
+use totem::graph::generator::{rmat, uniform, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
+use totem::partition::{Placement, Strategy, ALL_PLACEMENTS};
+use totem::util::rng::Rng;
+
+/// Fixed default seed so CI runs are reproducible; override to explore.
+const DEFAULT_SEED: u64 = 0xF0221;
+const DEFAULT_ITERS: usize = 48;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The sampled graph pool: two scale-free and one uniform graph, all
+/// weighted (weights are ignored by everything but SSSP). Small enough
+/// that the full sweep stays fast in debug builds.
+fn graph_pool() -> Vec<(String, CsrGraph)> {
+    let mut pool = Vec::new();
+    for (name, mut el) in [
+        ("rmat7/5".to_string(), rmat(&RmatParams::paper(7, 5))),
+        ("rmat6/9".to_string(), rmat(&RmatParams::paper(6, 9))),
+        ("uniform6/3".to_string(), uniform(6, 8, 3)),
+    ] {
+        with_random_weights(&mut el, 64, 0x5eed);
+        pool.push((name, CsrGraph::from_edge_list(&el)));
+    }
+    pool
+}
+
+/// One sampled engine configuration plus its human-readable label.
+struct Sampled {
+    label: String,
+    cfg: EngineConfig,
+    alg: AlgKind,
+    graph_idx: usize,
+    source: u32,
+    rounds: usize,
+}
+
+/// Sample a configuration from the RNG. Every choice is logged into the
+/// label so a failure is reproducible by eye as well as by seed.
+fn sample(rng: &mut Rng, pool: &[(String, CsrGraph)]) -> Sampled {
+    let graph_idx = rng.below(pool.len() as u64) as usize;
+    let g = &pool[graph_idx].1;
+    let alg = ALL_ALGS[rng.below(ALL_ALGS.len() as u64) as usize];
+    let mode = if rng.below(2) == 0 { ExecMode::Synchronous } else { ExecMode::Pipelined };
+    let parts = 1 + rng.below(3) as usize;
+    let strategy = [Strategy::Rand, Strategy::High, Strategy::Low]
+        [rng.below(3) as usize];
+    let placement = ALL_PLACEMENTS[rng.below(ALL_PLACEMENTS.len() as u64) as usize];
+    let direction = rng.below(2) == 1;
+    let part_seed = rng.below(1 << 20);
+    // shares: random split, normalized
+    let mut shares: Vec<f64> = (0..parts).map(|_| 0.2 + rng.next_f64()).collect();
+    let total: f64 = shares.iter().sum();
+    for s in shares.iter_mut() {
+        *s /= total;
+    }
+    // a source with out-edges (falls back to 0 on pathological graphs)
+    let source = (0..64)
+        .map(|_| rng.below(g.vertex_count as u64) as u32)
+        .find(|&v| g.out_degree(v) > 0)
+        .unwrap_or(0);
+    let rounds = 2 + rng.below(4) as usize;
+
+    let mut cfg = EngineConfig::cpu_partitions(&shares, strategy)
+        .with_mode(mode)
+        .with_placement(placement)
+        .with_seed(part_seed);
+    if direction {
+        cfg = cfg.direction_optimized();
+    }
+    let label = format!(
+        "graph={} alg={} mode={mode:?} parts={parts} strategy={} placement={} \
+         direction={direction} part_seed={part_seed} source={source} rounds={rounds} \
+         shares={shares:?}",
+        pool[graph_idx].0,
+        alg.name(),
+        strategy.name(),
+        placement.name(),
+    );
+    Sampled { label, cfg, alg, graph_idx, source, rounds }
+}
+
+fn check_against_baseline(g: &CsrGraph, s: &Sampled, sweep_seed: u64, iter: usize, iters: usize) {
+    // The repro line must carry BOTH env vars: the local default sweep is
+    // shorter than CI's, so a failure at iter >= DEFAULT_ITERS would never
+    // be reached by `DIFF_FUZZ_SEED=… cargo test` alone.
+    let repro = format!("DIFF_FUZZ_SEED={sweep_seed} DIFF_FUZZ_ITERS={iters} iter={iter}");
+    let spec = RunSpec::new(s.alg).with_source(s.source).with_rounds(s.rounds);
+    let (r, _) = run_alg(g, spec, &s.cfg)
+        .unwrap_or_else(|e| panic!("{repro}: {} failed to run: {e:#}", s.label));
+    let ctx = |v: usize, a: String, b: String| {
+        format!("{repro} [{}] vertex {v}: engine {a} vs baseline {b}", s.label)
+    };
+    match s.alg {
+        AlgKind::Bfs => {
+            let want = baseline::bfs(g, s.source);
+            for (v, (&a, &b)) in r.output.as_i32().iter().zip(&want).enumerate() {
+                assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Cc => {
+            let want = baseline::cc(g);
+            for (v, (&a, &b)) in r.output.as_i32().iter().zip(&want).enumerate() {
+                assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Sssp => {
+            let want = baseline::sssp(g, s.source);
+            for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{}",
+                    ctx(v, a.to_string(), b.to_string())
+                );
+            }
+        }
+        AlgKind::Pagerank => {
+            let want = baseline::pagerank(g, s.rounds);
+            for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
+                let tol = (1e-4 * b.abs()).max(1e-7);
+                assert!((a - b).abs() <= tol, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Bc => {
+            let want = baseline::bc(g, s.source);
+            for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
+                let tol = 1e-3 * b.abs().max(1.0);
+                assert!((a - b).abs() <= tol, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+    }
+}
+
+/// The randomized sweep: engine vs baseline across the whole sampled
+/// configuration space.
+#[test]
+fn fuzz_engine_against_baseline() {
+    let sweep_seed = env_u64("DIFF_FUZZ_SEED", DEFAULT_SEED);
+    let iters = env_u64("DIFF_FUZZ_ITERS", DEFAULT_ITERS as u64) as usize;
+    let pool = graph_pool();
+    let mut rng = Rng::new(sweep_seed);
+    for iter in 0..iters {
+        let s = sample(&mut rng, &pool);
+        check_against_baseline(&pool[s.graph_idx].1, &s, sweep_seed, iter, iters);
+    }
+}
+
+/// Deterministic placement-invariance sweep: the same configuration under
+/// every [`Placement`] must produce bit-identical global outputs — the
+/// tentpole contract of ISSUE 4 (the permutation is invisible after
+/// `collect_to_global`), including the order-sensitive f32 algorithms
+/// (canonical-order kernels, DESIGN.md §9).
+#[test]
+fn outputs_bit_identical_across_placements() {
+    let pool = graph_pool();
+    for (gname, g) in &pool {
+        let source = (0..g.vertex_count as u32).find(|&v| g.out_degree(v) > 0).unwrap_or(0);
+        for alg in ALL_ALGS {
+            for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+                for parts in [2usize, 3] {
+                    let shares = vec![1.0 / parts as f64; parts];
+                    let mut reference: Option<(Placement, Vec<u32>)> = None;
+                    for placement in ALL_PLACEMENTS {
+                        let mut cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand)
+                            .with_mode(mode)
+                            .with_seed(13)
+                            .with_placement(placement);
+                        if alg == AlgKind::Bfs {
+                            cfg = cfg.direction_optimized();
+                        }
+                        let spec = RunSpec::new(alg).with_source(source).with_rounds(3);
+                        let (r, _) = run_alg(g, spec, &cfg).unwrap_or_else(|e| {
+                            panic!("{gname}/{}/{mode:?}/{parts}p/{}: {e:#}",
+                                alg.name(), placement.name())
+                        });
+                        // compare raw bits regardless of dtype
+                        let bits: Vec<u32> = match &r.output {
+                            totem::engine::StateArray::I32(v) => {
+                                v.iter().map(|&x| x as u32).collect()
+                            }
+                            totem::engine::StateArray::F32(v) => {
+                                v.iter().map(|x| x.to_bits()).collect()
+                            }
+                        };
+                        match &reference {
+                            None => reference = Some((placement, bits)),
+                            Some((p0, want)) => assert_eq!(
+                                &bits, want,
+                                "{gname}/{}/{mode:?}/{parts}p: {} differs from {}",
+                                alg.name(),
+                                placement.name(),
+                                p0.name()
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Push-mode PageRank is the kernel whose scatter order the placement
+/// layer made canonical (DESIGN.md §9.2) — pin its bit-identity directly,
+/// since the harness only dispatches the pull-mode default.
+#[test]
+fn push_mode_pagerank_bit_identical_across_placements() {
+    let pool = graph_pool();
+    for (gname, g) in &pool {
+        for parts in [2usize, 3] {
+            let shares = vec![1.0 / parts as f64; parts];
+            for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+                let mut reference: Option<Vec<u32>> = None;
+                for placement in ALL_PLACEMENTS {
+                    let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand)
+                        .with_mode(mode)
+                        .with_seed(13)
+                        .with_placement(placement);
+                    let mut alg = totem::alg::pagerank::Pagerank::push_mode(4);
+                    let r = totem::engine::run(g, &mut alg, &cfg)
+                        .unwrap_or_else(|e| panic!("{gname}/{placement:?}: {e:#}"));
+                    let bits: Vec<u32> =
+                        r.output.as_f32().iter().map(|x| x.to_bits()).collect();
+                    match &reference {
+                        None => reference = Some(bits),
+                        Some(want) => assert_eq!(
+                            &bits, want,
+                            "{gname}/{mode:?}/{parts}p: push-PR differs under {}",
+                            placement.name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The sweep is a pure function of its seed: same seed, same samples.
+#[test]
+fn sampling_is_seed_deterministic() {
+    let pool = graph_pool();
+    let labels = |seed: u64| -> Vec<String> {
+        let mut rng = Rng::new(seed);
+        (0..8).map(|_| sample(&mut rng, &pool).label).collect()
+    };
+    assert_eq!(labels(42), labels(42));
+    assert_ne!(labels(42), labels(43));
+}

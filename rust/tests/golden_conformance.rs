@@ -4,7 +4,8 @@
 //! weighted text edge lists, next to the expected output of every
 //! algorithm (one value per line). Each test sweeps every engine
 //! configuration — {Synchronous, Pipelined} × {1, 2, 3 partitions} ×
-//! {RAND, HIGH, LOW} — and checks the run against the fixture:
+//! {RAND, HIGH, LOW} × every vertex [`Placement`] — and checks the run
+//! against the fixture:
 //!
 //! - BFS, CC, SSSP are **bit-exact** against the golden files in every
 //!   configuration (min reductions are order-free; the fixtures carry
@@ -15,7 +16,9 @@
 //!   partition-dependent results are checked within an f32 summation
 //!   tolerance against the golden files, while Synchronous vs Pipelined
 //!   at the *same* partitioning must agree bit-for-bit (the pipelined
-//!   executor's contract).
+//!   executor's contract) — and so must every placement at the same
+//!   partitioning (the canonical-order contract, DESIGN.md §9: a vertex
+//!   placement is pure layout, invisible after `collect_to_global`).
 //!
 //! On mismatch the failing output is dumped under `target/golden-diff/`
 //! (CI uploads it as an artifact). Regenerate the expected files
@@ -28,7 +31,7 @@ use std::path::{Path, PathBuf};
 use totem::engine::{EngineConfig, ExecMode, StateArray};
 use totem::graph::{io as gio, CsrGraph};
 use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
-use totem::partition::Strategy;
+use totem::partition::{Strategy, ALL_PLACEMENTS};
 
 const PR_ROUNDS: usize = 5;
 
@@ -122,17 +125,24 @@ fn dump_diff(fixture: &str, alg: AlgKind, label: &str, got: &StateArray, want: &
     let _ = std::fs::write(dir.join(fname), body);
 }
 
-/// The full configuration matrix.
+/// The full configuration matrix, including the placement axis
+/// (DESIGN.md §9).
 fn configs() -> Vec<(String, EngineConfig)> {
     let mut out = Vec::new();
     for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
         for parts in [1usize, 2, 3] {
             for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
-                let shares = vec![1.0 / parts as f64; parts];
-                let cfg = EngineConfig::cpu_partitions(&shares, strat)
-                    .with_mode(mode)
-                    .with_seed(7);
-                out.push((format!("{mode:?}/{parts}p/{}", strat.name()), cfg));
+                for placement in ALL_PLACEMENTS {
+                    let shares = vec![1.0 / parts as f64; parts];
+                    let cfg = EngineConfig::cpu_partitions(&shares, strat)
+                        .with_mode(mode)
+                        .with_seed(7)
+                        .with_placement(placement);
+                    out.push((
+                        format!("{mode:?}/{parts}p/{}/{}", strat.name(), placement.name()),
+                        cfg,
+                    ));
+                }
             }
         }
     }
@@ -263,24 +273,47 @@ fn golden_pagerank_bc_tolerance_and_pipeline_bit_identity() {
             let want = load_golden(fx.name, alg);
             for parts in [1usize, 2, 3] {
                 for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
-                    let shares = vec![1.0 / parts as f64; parts];
-                    let sync_cfg =
-                        EngineConfig::cpu_partitions(&shares, strat).with_seed(7);
-                    let pipe_cfg = sync_cfg.clone().pipelined();
-                    let label = format!("{parts}p/{}", strat.name());
-                    let (rs, _) = run_alg(&g, spec_for(alg, fx), &sync_cfg)
-                        .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
-                    let (rp, _) = run_alg(&g, spec_for(alg, fx), &pipe_cfg)
-                        .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
-                    // pipelined executor contract: identical bits
-                    assert_bit_exact(
-                        fx.name,
-                        alg,
-                        &format!("{label}/sync-vs-pipe"),
-                        &rp.output,
-                        &rs.output,
-                    );
-                    assert_within_tolerance(fx.name, alg, &label, &rs.output, &want);
+                    // first placement's synchronous output anchors the
+                    // cross-placement bit-identity check
+                    let mut anchor: Option<StateArray> = None;
+                    for placement in ALL_PLACEMENTS {
+                        let shares = vec![1.0 / parts as f64; parts];
+                        let sync_cfg = EngineConfig::cpu_partitions(&shares, strat)
+                            .with_seed(7)
+                            .with_placement(placement);
+                        let pipe_cfg = sync_cfg.clone().pipelined();
+                        let label =
+                            format!("{parts}p/{}/{}", strat.name(), placement.name());
+                        let (rs, _) = run_alg(&g, spec_for(alg, fx), &sync_cfg)
+                            .unwrap_or_else(|e| {
+                                panic!("{}/{}/{label}: {e:#}", fx.name, alg.name())
+                            });
+                        let (rp, _) = run_alg(&g, spec_for(alg, fx), &pipe_cfg)
+                            .unwrap_or_else(|e| {
+                                panic!("{}/{}/{label}: {e:#}", fx.name, alg.name())
+                            });
+                        // pipelined executor contract: identical bits
+                        assert_bit_exact(
+                            fx.name,
+                            alg,
+                            &format!("{label}/sync-vs-pipe"),
+                            &rp.output,
+                            &rs.output,
+                        );
+                        // placement contract (DESIGN.md §9): identical bits
+                        // across layouts at the same partitioning
+                        match &anchor {
+                            None => anchor = Some(rs.output.clone()),
+                            Some(a) => assert_bit_exact(
+                                fx.name,
+                                alg,
+                                &format!("{label}/placement-invariance"),
+                                &rs.output,
+                                a,
+                            ),
+                        }
+                        assert_within_tolerance(fx.name, alg, &label, &rs.output, &want);
+                    }
                 }
             }
         }

@@ -10,7 +10,9 @@ use totem::graph::generator::{rmat, with_random_weights, RmatParams};
 use totem::graph::CsrGraph;
 use totem::harness::{build_workload, run_alg, AlgKind, RunSpec};
 use totem::graph::Workload;
-use totem::partition::{low_degree_band, PartitionedGraph, Strategy};
+use totem::partition::{
+    assign, low_degree_band, PartitionedGraph, Placement, Strategy, ALL_PLACEMENTS,
+};
 
 /// A policy aggressive enough that migrations reliably fire on a skewed
 /// launch split.
@@ -246,6 +248,191 @@ fn transpose_consistent_after_band_migration() {
         pg2.parts[0].transpose().edge_count() + pg2.parts[1].transpose().edge_count(),
         g.edge_count()
     );
+}
+
+/// Does a partition's member order satisfy `placement`'s layout contract?
+fn assert_placement_layout(g: &CsrGraph, pg: &PartitionedGraph, placement: Placement) {
+    for p in &pg.parts {
+        match placement {
+            Placement::AssignmentOrder => {
+                assert!(
+                    p.local_to_global.windows(2).all(|w| w[0] < w[1]),
+                    "part {}: not in assignment order",
+                    p.id
+                );
+            }
+            Placement::DegreeDesc => assert!(
+                p.local_to_global
+                    .windows(2)
+                    .all(|w| g.out_degree(w[0]) >= g.out_degree(w[1])),
+                "part {}: not degree-descending",
+                p.id
+            ),
+            Placement::DegreeAsc => assert!(
+                p.local_to_global
+                    .windows(2)
+                    .all(|w| g.out_degree(w[0]) <= g.out_degree(w[1])),
+                "part {}: not degree-ascending",
+                p.id
+            ),
+            Placement::BfsOrder => {
+                if p.nv > 0 {
+                    let max = p.local_to_global.iter().map(|&v| g.out_degree(v)).max().unwrap();
+                    assert_eq!(
+                        g.out_degree(p.local_to_global[0]),
+                        max,
+                        "part {}: BFS order must seed at a max-degree member",
+                        p.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_permutation_is_a_bijection_preserving_structure() {
+    // The placement permutes each partition's local id space: member sets,
+    // edge/weight multisets and the part_of/local_of round-trip must be
+    // exactly those of the assignment-order build.
+    let mut el = rmat(&RmatParams::paper(9, 21));
+    with_random_weights(&mut el, 64, 22);
+    let g = CsrGraph::from_edge_list(&el);
+    for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+        let a = assign(&g, strat, &[0.5, 0.3, 0.2], 7);
+        let base = PartitionedGraph::build_placed(&g, &a, 3, Placement::AssignmentOrder);
+        for placement in ALL_PLACEMENTS {
+            let pg = PartitionedGraph::build_placed(&g, &a, 3, placement);
+            assert_placement_layout(&g, &pg, placement);
+            // bijection: every vertex round-trips through the maps
+            for v in 0..g.vertex_count {
+                let p = pg.part_of[v] as usize;
+                let l = pg.local_of[v] as usize;
+                assert_eq!(pg.parts[p].local_to_global[l], v as u32, "{placement:?} v={v}");
+            }
+            for (p, b) in pg.parts.iter().zip(&base.parts) {
+                // member sets identical
+                let mut m = p.local_to_global.clone();
+                m.sort_unstable();
+                assert_eq!(m, b.local_to_global, "{placement:?}");
+                // edge count and total weight conserved
+                assert_eq!(p.edge_count(), b.edge_count(), "{placement:?}");
+                let wsum = |x: &totem::partition::Partition| -> f64 {
+                    x.csr.weights.as_ref().unwrap().iter().map(|&w| w as f64).sum()
+                };
+                assert!((wsum(p) - wsum(b)).abs() < 1e-6, "{placement:?}");
+                // ghost tables still sorted, contiguous, in-range
+                let mut next_base = p.nv;
+                for t in &p.ghosts {
+                    assert_eq!(t.slot_base, next_base, "{placement:?}");
+                    next_base += t.len();
+                    assert!(t.remote_locals.windows(2).all(|w| w[0] < w[1]), "{placement:?}");
+                    let rp = &pg.parts[t.remote_part];
+                    assert!(t.remote_locals.iter().all(|&l| (l as usize) < rp.nv));
+                }
+                assert_eq!(next_base, p.nv + p.n_ghost, "{placement:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn transpose_in_degrees_are_placement_invariant() {
+    // Per *global* vertex, the local in-degree inside its partition is a
+    // structural quantity — relabeling local ids cannot change it; the
+    // ghost rows' total in-degree is likewise fixed by the assignment.
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(9, 25)));
+    let a = assign(&g, Strategy::Rand, &[0.6, 0.4], 3);
+    let base = PartitionedGraph::build_placed(&g, &a, 2, Placement::AssignmentOrder);
+    let base_ghost_in: Vec<u64> = base
+        .parts
+        .iter()
+        .map(|p| {
+            let tr = p.transpose();
+            (p.nv..p.nv + p.n_ghost).map(|s| tr.in_degree(s as u32)).sum()
+        })
+        .collect();
+    for placement in ALL_PLACEMENTS {
+        let pg = PartitionedGraph::build_placed(&g, &a, 2, placement);
+        for v in 0..g.vertex_count as u32 {
+            let (bp, bl) = (base.part_of[v as usize] as usize, base.local_of[v as usize]);
+            let (pp, pl) = (pg.part_of[v as usize] as usize, pg.local_of[v as usize]);
+            assert_eq!(bp, pp);
+            assert_eq!(
+                base.parts[bp].transpose().in_degree(bl),
+                pg.parts[pp].transpose().in_degree(pl),
+                "{placement:?} vertex {v}"
+            );
+        }
+        for (p, &want) in pg.parts.iter().zip(&base_ghost_in) {
+            let tr = p.transpose();
+            let got: u64 = (p.nv..p.nv + p.n_ghost).map(|s| tr.in_degree(s as u32)).sum();
+            assert_eq!(got, want, "{placement:?} part {}", p.id);
+        }
+        // the structural transpose invariants hold for every layout
+        assert_transpose_invariants(&pg);
+    }
+}
+
+#[test]
+fn collect_after_map_is_identity_for_every_placement() {
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 27)));
+    let a = assign(&g, Strategy::High, &[0.7, 0.3], 1);
+    let global: Vec<i32> = (0..g.vertex_count as i32).map(|v| 3 * v - 7).collect();
+    for placement in ALL_PLACEMENTS {
+        let pg = PartitionedGraph::build_placed(&g, &a, 2, placement);
+        let locals: Vec<Vec<i32>> =
+            pg.parts.iter().map(|p| p.map_vertex_array(&global, i32::MIN)).collect();
+        assert_eq!(pg.collect_to_global(&locals), global, "{placement:?}");
+    }
+}
+
+#[test]
+fn post_migration_reassignment_keeps_placement_layout_fresh() {
+    // After a migration-shaped reassignment, a rebuild under the graph's
+    // placement must still satisfy the layout contract — i.e. the moved
+    // low-degree band is *re-placed* into position, not appended (an
+    // appended band would break the ordering of every ordered placement
+    // and the ascending-global property of AssignmentOrder, since band
+    // vertices have arbitrary ids). The engine-internal migration path
+    // (`migrate_band` re-placing through `pg.placement` and remapping
+    // state exactly) is unit-tested in `engine/rebalance.rs`.
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(10, 7)));
+    for placement in ALL_PLACEMENTS {
+        let pg = PartitionedGraph::partition_placed(&g, Strategy::High, &[0.7, 0.3], 1, placement);
+        assert_eq!(pg.placement, placement);
+        let mut members_desc = pg.parts[0].local_to_global.clone();
+        members_desc.sort_by_key(|&v| (std::cmp::Reverse(g.out_degree(v)), v));
+        let band = low_degree_band(&g, &members_desc, 0.1 * pg.parts[0].edge_count() as f64, 64);
+        assert!(!band.is_empty());
+        let mut assignment = pg.part_of.clone();
+        for &v in &band {
+            assignment[v as usize] = 1;
+        }
+        let pg2 = PartitionedGraph::build_placed(&g, &assignment, 2, pg.placement);
+        assert_eq!(pg2.parts[1].nv, pg.parts[1].nv + band.len());
+        assert_placement_layout(&g, &pg2, placement);
+        // canonical order inverts the rebuilt permutation too
+        for p in &pg2.parts {
+            let seq: Vec<u32> =
+                p.canonical_order.iter().map(|&l| p.local_to_global[l as usize]).collect();
+            assert!(seq.windows(2).all(|w| w[0] < w[1]), "{placement:?}");
+        }
+    }
+}
+
+#[test]
+fn rebalanced_runs_stay_exact_under_every_placement() {
+    // The dynamic α controller composes with the placement layer: BFS
+    // stays bit-exact vs the oracle through migrations, whatever layout
+    // the partitions use (migrate_band rebuilds via pg.placement).
+    let g = build_workload(Workload::Rmat(9), 5, AlgKind::Bfs);
+    let expect = baseline::bfs(&g, 3);
+    for placement in ALL_PLACEMENTS {
+        let cfg = skewed_cfg(Strategy::Rand).with_placement(placement);
+        let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Bfs).with_source(3), &cfg).unwrap();
+        assert_eq!(r.output.as_i32(), expect.as_slice(), "{placement:?}");
+    }
 }
 
 #[test]
