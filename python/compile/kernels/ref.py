@@ -20,6 +20,15 @@ def scatter_min_ref(base, idx, val):
     return out
 
 
+def scatter_max_ref(base, idx, val):
+    out = np.array(base, copy=True)
+    for k in range(len(idx)):
+        i = int(idx[k])
+        if val[k] > out[i]:
+            out[i] = val[k]
+    return out
+
+
 def scatter_add_ref(base, idx, val):
     out = np.array(base, copy=True)
     for k in range(len(idx)):
@@ -47,6 +56,17 @@ def sssp_step_ref(dist, src, dst, w):
         if cand < out[int(dst[k])]:
             out[int(dst[k])] = cand
     changed = int(np.any(out != dist))
+    return out, changed
+
+
+def widest_step_ref(width, src, dst, w):
+    """One all-edge widest-path (max-min) relaxation."""
+    out = np.array(width, copy=True)
+    for k in range(len(src)):
+        cand = min(width[int(src[k])], w[k])
+        if cand > out[int(dst[k])]:
+            out[int(dst[k])] = cand
+    changed = int(np.any(out != width))
     return out, changed
 
 

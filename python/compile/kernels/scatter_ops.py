@@ -58,6 +58,8 @@ def _scatter_kernel(base_ref, idx_ref, val_ref, out_ref, *, op: str):
     val = val_ref[...]
     if op == "min":
         out_ref[...] = acc.at[idx].min(val)
+    elif op == "max":
+        out_ref[...] = acc.at[idx].max(val)
     elif op == "add":
         out_ref[...] = acc.at[idx].add(val)
     else:  # pragma: no cover - guarded by the public wrappers
@@ -92,6 +94,16 @@ def edge_scatter_min(base, idx, val, *, grid: int | None = None, interpret: bool
     return _edge_scatter(base, idx, val, op="min", grid=grid, interpret=interpret)
 
 
+def edge_scatter_max(base, idx, val, *, grid: int | None = None, interpret: bool = True):
+    """``out[i] = max(base[i], max over {val[k] : idx[k] == i})``.
+
+    The atomicMax dual of the min scatter — widest path's bottleneck
+    relaxation. `-inf` is the identity, so dummy-sink padding edges stay
+    inert.
+    """
+    return _edge_scatter(base, idx, val, op="max", grid=grid, interpret=interpret)
+
+
 def edge_scatter_add(base, idx, val, *, grid: int | None = None, interpret: bool = True):
     """``out[i] = base[i] + sum over {val[k] : idx[k] == i}``.
 
@@ -104,6 +116,10 @@ def edge_scatter_add(base, idx, val, *, grid: int | None = None, interpret: bool
 
 def edge_scatter_min_jnp(base, idx, val):
     return base.at[idx].min(val)
+
+
+def edge_scatter_max_jnp(base, idx, val):
+    return base.at[idx].max(val)
 
 
 def edge_scatter_add_jnp(base, idx, val):

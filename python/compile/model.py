@@ -61,6 +61,25 @@ def make_sssp_step(interpret=True, grid=None, use_pallas=True):
     return sssp_step
 
 
+def make_widest_step(interpret=True, grid=None, use_pallas=True):
+    """All-edge widest-path (max-min bottleneck) relaxation — SSSP's dual.
+
+    ``width`` starts at ``-inf`` (the max identity; the dummy sink stays
+    there, so ``min(width[src], w)`` over a padding edge is ``-inf`` and
+    inert), the source at ``+inf``.
+    """
+    smax = k.edge_scatter_max if use_pallas else (
+        lambda b, i, v, **_: k.edge_scatter_max_jnp(b, i, v)
+    )
+
+    def widest_step(width, src, dst, w):
+        cand = jnp.minimum(width[src], w)  # -inf stays -inf: padding inert
+        new = smax(width, dst, cand, grid=grid, interpret=interpret)
+        return new, _changed_any(new > width)
+
+    return widest_step
+
+
 def make_cc_step(interpret=True, grid=None, use_pallas=True):
     """Label-propagation relaxation over the undirected COO."""
     smin = k.edge_scatter_min if use_pallas else (
@@ -157,6 +176,15 @@ PROGRAMS = {
     ),
     "sssp": dict(
         make=make_sssp_step,
+        arrays=["f32"],
+        aux=[],
+        weights=True,
+        si32=0,
+        sf32=0,
+        orientation="fwd",
+    ),
+    "widest": dict(
+        make=make_widest_step,
         arrays=["f32"],
         aux=[],
         weights=True,

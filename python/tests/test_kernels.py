@@ -13,6 +13,8 @@ from compile.kernels import ref
 from compile.kernels.scatter_ops import (
     edge_scatter_add,
     edge_scatter_add_jnp,
+    edge_scatter_max,
+    edge_scatter_max_jnp,
     edge_scatter_min,
     edge_scatter_min_jnp,
 )
@@ -70,6 +72,25 @@ def test_scatter_min_f32_matches_ref(case):
     # atol=0 allclose: IEEE minimum(-0.0, 0.0) = -0.0, the `<` oracle keeps
     # +0.0 — numerically identical, bitwise not.
     np.testing.assert_allclose(out, ref.scatter_min_ref(base, idx, val), rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=scatter_case("f32"))
+def test_scatter_max_f32_matches_ref(case):
+    base, idx, val = case
+    out = _np(edge_scatter_max(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    # atol=0 allclose (not array_equal): IEEE maximum(-0.0, 0.0) vs the `>`
+    # oracle can differ on the sign of zero — numerically identical.
+    np.testing.assert_allclose(out, ref.scatter_max_ref(base, idx, val), rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=scatter_case("f32"))
+def test_scatter_max_pallas_matches_jnp_variant(case):
+    base, idx, val = case
+    a = _np(edge_scatter_max(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    b = _np(edge_scatter_max_jnp(jnp.array(base), jnp.array(idx), jnp.array(val)))
+    np.testing.assert_array_equal(a, b)
 
 
 @st.composite

@@ -61,6 +61,21 @@ def test_sssp_step_matches_ref(g):
 
 @settings(max_examples=15, deadline=None)
 @given(g=coo_graph())
+def test_widest_step_matches_ref(g):
+    n, src, dst = g
+    rng = np.random.default_rng(len(src) + 7)
+    width = rng.choice([-np.inf, 1.0, 2.5, np.inf], size=n).astype(np.float32)
+    width[n - 1] = -np.inf  # dummy sink holds the max identity
+    w = rng.uniform(0.5, 4.0, size=len(src)).astype(np.float32)
+    step = model.make_widest_step()
+    out, changed = step(jnp.array(width), jnp.array(src), jnp.array(dst), jnp.array(w))
+    exp, exp_changed = ref.widest_step_ref(width, src, dst, w)
+    np.testing.assert_allclose(_np(out), exp, rtol=0, atol=0)
+    assert int(_np(changed)[0]) == exp_changed
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=coo_graph())
 def test_cc_step_matches_ref(g):
     n, src, dst = g
     rng = np.random.default_rng(len(src) + 2)

@@ -135,7 +135,7 @@ fn calibrate_alg(
     alg: AlgKind,
     artifacts: &std::path::Path,
 ) -> anyhow::Result<calibrate::Calibration> {
-    use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp};
+    use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
     // same source policy as the harness sweep (max-degree hub)
     let src = totem::harness::resolve_source(g, &RunSpec::new(alg));
     match alg {
@@ -155,5 +155,7 @@ fn calibrate_alg(
             g, &mut Bc::new(src), &mut Bc::new(src), artifacts, 0.7, Strategy::Rand),
         AlgKind::Cc => calibrate::calibrate_with(
             g, &mut Cc::new(), &mut Cc::new(), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Widest => calibrate::calibrate_with(
+            g, &mut Widest::new(src), &mut Widest::new(src), artifacts, 0.7, Strategy::Rand),
     }
 }

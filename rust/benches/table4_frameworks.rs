@@ -38,6 +38,9 @@ fn baseline_secs(alg: AlgKind, g: &CsrGraph, reps: usize) -> f64 {
             AlgKind::Cc => {
                 let _ = baseline::cc(g);
             }
+            AlgKind::Widest => {
+                let _ = baseline::widest(g, 1);
+            }
         }
         best = best.min(t0.elapsed().as_secs_f64());
     }

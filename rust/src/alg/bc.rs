@@ -1,58 +1,60 @@
-//! Betweenness Centrality — Brandes' algorithm (paper §7.2, Figure 18).
+//! Betweenness Centrality — Brandes' algorithm (paper §7.2, Figure 18) on
+//! the typed vertex-program surface. Two BSP cycles:
 //!
-//! Two BSP cycles:
-//!
-//! **Forward** (cycle 0): a level-synchronous BFS that also counts
-//! shortest paths. `dist` propagates with `min`; `numsp` (σ) accumulates
-//! with `add`. The two travel as a *paired* message
-//! ([`CommOp::DistSigma`]): a σ contribution applies only when the
-//! accompanying level matches the receiver's final level — exactly the
+//! **Forward** (cycle 0): [`Kernel::TraversalSigma`] — a level-synchronous
+//! BFS that also counts shortest paths. `dist` propagates with `min`;
+//! `numsp` (σ) accumulates with `add`. The two travel as a *paired*
+//! message ([`CommDecl::DistSigma`]): a σ contribution applies only when
+//! the accompanying level matches the receiver's final level — exactly the
 //! `dist[nbr] == level + 1` guard in Figure 18 line 11, enforced across
-//! the partition boundary.
+//! the partition boundary. The forward cycle ships only `[dist, numsp]`
+//! to the accelerator (the plan's `device` narrowing).
 //!
-//! **Backward** (cycle 1): dependency accumulation in decreasing level
-//! order. Instead of pulling `delta` and `numsp` separately, each
-//! processed level publishes `ratio[v] = (1 + δ(v)) / σ(v)` (zero
-//! everywhere else), so a successor's full term `σ(v)/σ(w) · (1+δ(w))`
-//! becomes `σ(v) · ratio[w]` — one pulled value per unique remote
-//! neighbor, the paper's two-way communication (§4.3.2) with reduction.
+//! **Backward** (cycle 1): [`Kernel::Gather`] in decreasing level order.
+//! Instead of pulling `delta` and `numsp` separately, each processed level
+//! publishes `ratio[v] = (1 + δ(v)) / σ(v)` (zero everywhere else), so a
+//! successor's full term `σ(v)/σ(w) · (1+δ(w))` becomes `σ(v) · ratio[w]`
+//! — one pulled value per unique remote neighbor, the paper's two-way
+//! communication (§4.3.2) with reduction. The driver's `skip_superstep`
+//! hook guards `current_level < 1`: dependency accumulation runs over the
+//! *intermediate* levels only — the source must never be credited with
+//! its own shortest paths (the `max_level <= 1` no-op found by ISSUE 4's
+//! differential fuzz).
 //!
 //! Single-source, like the paper's Table 4 measurements. TEPS counts
 //! forward + backward traversals (×2, §5).
 
-use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
-use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
-use crate::partition::{Partition, PartitionedGraph};
-use crate::util::atomic::{as_atomic_f32_cells, as_atomic_i32_cells, atomic_add_f32};
-use crate::util::threadpool::parallel_reduce;
-use std::sync::atomic::Ordering;
+use super::program::{
+    AccelSpec, Activation, CommDecl, CyclePlan, FieldId, Fields, FieldSpec, InitRow, Kernel,
+    ProgramDriver, ProgramMeta, Role, VertexProgram,
+};
+use super::{StepCtx, INF_I32};
+use crate::engine::state::{AlgState, StateArray};
+use crate::graph::CsrGraph;
+use crate::partition::PartitionedGraph;
 
-pub struct Bc {
+/// Betweenness centrality, as a vertex program.
+pub struct BcProgram {
     pub source: u32,
     /// Maximum finite BFS level, computed between cycles.
     max_level: i32,
 }
 
-impl Bc {
-    pub fn new(source: u32) -> Bc {
-        Bc { source, max_level: 0 }
-    }
-}
+const DIST: FieldId = FieldId(0);
+const NUMSP: FieldId = FieldId(1);
+const DELTA: FieldId = FieldId(2);
+const BC: FieldId = FieldId(3);
+const RATIO: FieldId = FieldId(4);
 
-const DIST: usize = 0;
-const NUMSP: usize = 1;
-const DELTA: usize = 2;
-const BC: usize = 3;
-const RATIO: usize = 4;
-
-impl Algorithm for Bc {
-    fn spec(&self) -> AlgSpec {
-        AlgSpec {
+impl VertexProgram for BcProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
             name: "bc",
             needs_weights: false,
             undirected: false,
             reversed: false,
             fixed_rounds: None,
+            output: BC,
         }
     }
 
@@ -60,22 +62,41 @@ impl Algorithm for Bc {
         2
     }
 
-    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
-        let n = part.state_len();
-        let mut dist = vec![INF_I32; n];
-        let mut numsp = vec![0f32; n];
-        if pg.part_of[self.source as usize] as usize == part.id {
-            let l = pg.local_of[self.source as usize] as usize;
-            dist[l] = 0;
-            numsp[l] = 1.0;
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("dist", Role::Device, INF_I32),
+            FieldSpec::f32("numsp", Role::Device, 0.0),
+            FieldSpec::f32("delta", Role::Device, 0.0),
+            FieldSpec::f32("bc", Role::Device, 0.0),
+            FieldSpec::f32("ratio", Role::Device, 0.0),
+        ]
+    }
+
+    fn plan(&self, cycle: usize) -> CyclePlan {
+        if cycle == 0 {
+            CyclePlan {
+                kernel: Kernel::TraversalSigma { dist: DIST, sigma: NUMSP },
+                comm: vec![CommDecl::DistSigma { dist: DIST, sigma: NUMSP }],
+                // forward only needs the traversal pair on the device
+                device: Some(vec![DIST, NUMSP]),
+                accel: AccelSpec { name: "bc_fwd", n_si32: 1, n_sf32: 0 },
+            }
+        } else {
+            CyclePlan {
+                kernel: Kernel::Gather { src: RATIO, active: Activation::LevelEquals(DIST) },
+                // backward pulls the final levels and the published ratios
+                comm: vec![CommDecl::Pull(DIST), CommDecl::Pull(RATIO)],
+                device: None,
+                accel: AccelSpec { name: "bc_bwd", n_si32: 1, n_sf32: 0 },
+            }
         }
-        AlgState::new(vec![
-            StateArray::I32(dist),
-            StateArray::F32(numsp),
-            StateArray::F32(vec![0f32; n]), // delta
-            StateArray::F32(vec![0f32; n]), // bc
-            StateArray::F32(vec![0f32; n]), // ratio
-        ])
+    }
+
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        if global_id == self.source {
+            row.set_i32(DIST, 0);
+            row.set_f32(NUMSP, 1.0);
+        }
     }
 
     fn begin_cycle(&mut self, cycle: usize, pg: &PartitionedGraph, states: &mut [AlgState]) {
@@ -85,7 +106,7 @@ impl Algorithm for Bc {
         // max finite level across all real vertices
         let mut max_level = 0i32;
         for (p, st) in pg.parts.iter().zip(states.iter()) {
-            let dist = st.arrays[DIST].as_i32();
+            let dist = st.arrays[DIST.0].as_i32();
             for v in 0..p.nv {
                 if dist[v] != INF_I32 {
                     max_level = max_level.max(dist[v]);
@@ -96,9 +117,9 @@ impl Algorithm for Bc {
         // seed ratio for the deepest level: δ = 0 there, so
         // ratio = 1/σ. All other slots zero.
         for (p, st) in pg.parts.iter().zip(states.iter_mut()) {
-            let (head, tail) = st.arrays.split_at_mut(RATIO);
-            let dist = head[DIST].as_i32();
-            let numsp = head[NUMSP].as_f32();
+            let (head, tail) = st.arrays.split_at_mut(RATIO.0);
+            let dist = head[DIST.0].as_i32();
+            let numsp = head[NUMSP.0].as_f32();
             let ratio = tail[0].as_f32_mut();
             ratio.fill(0.0);
             for v in 0..p.nv {
@@ -109,210 +130,75 @@ impl Algorithm for Bc {
         }
     }
 
-    fn channels(&self, cycle: usize) -> Vec<CommOp> {
-        if cycle == 0 {
-            vec![CommOp::DistSigma { dist: DIST, sigma: NUMSP }]
-        } else {
-            // backward pulls the final levels and the published ratios
-            vec![
-                CommOp::Single(Channel::pull_i32(DIST)),
-                CommOp::Single(Channel::pull_f32(RATIO)),
-            ]
-        }
-    }
-
-    fn program(&self, cycle: usize) -> ProgramSpec {
-        if cycle == 0 {
-            ProgramSpec {
-                name: "bc_fwd",
-                arrays: vec![DIST, NUMSP],
-                pads: vec![Pad::I32(INF_I32), Pad::F32(0.0)],
-                aux: vec![],
-                needs_weights: false,
-                n_si32: 1,
-                n_sf32: 0,
-                orientation: EdgeOrientation::Forward,
-            }
-        } else {
-            ProgramSpec {
-                name: "bc_bwd",
-                arrays: vec![DIST, NUMSP, DELTA, BC, RATIO],
-                pads: vec![
-                    Pad::I32(INF_I32),
-                    Pad::F32(0.0),
-                    Pad::F32(0.0),
-                    Pad::F32(0.0),
-                    Pad::F32(0.0),
-                ],
-                aux: vec![],
-                needs_weights: false,
-                n_si32: 1,
-                n_sf32: 0,
-                orientation: EdgeOrientation::Forward,
-            }
-        }
-    }
-
-    fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
+    /// Forward counts up; backward counts down over the intermediate
+    /// levels `max_level-1 .. 1`.
+    fn current_level(&self, ctx: &StepCtx) -> i32 {
         if ctx.cycle == 0 {
-            vec![ctx.superstep as i32]
+            ctx.superstep as i32
         } else {
-            vec![self.max_level - 1 - ctx.superstep as i32]
+            self.max_level - 1 - ctx.superstep as i32
         }
     }
 
-    fn cycle_done(&self, cycle: usize, next_superstep: usize, any_changed: bool) -> bool {
-        if cycle == 0 {
+    /// The engine mandates one superstep per cycle; when `max_level <= 1`
+    /// that superstep would land on `current_level <= 0` — make it a no-op
+    /// instead of crediting the source with its own shortest paths.
+    fn skip_superstep(&self, ctx: &StepCtx) -> bool {
+        ctx.cycle == 1 && self.current_level(ctx) < 1
+    }
+
+    /// δ and centrality for a vertex at the current level (Fig 18
+    /// backwardPropagation): `δ(v) = σ(v) · Σ ratio[succ]`, `bc += δ`.
+    fn gather_apply(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>, sum: f32) -> u64 {
+        let delta = f.f32(NUMSP, v) * sum;
+        f.set_f32(DELTA, v, delta);
+        f.set_f32(BC, v, f.f32(BC, v) + delta);
+        2
+    }
+
+    /// Publish this level's ratios, zero everything else so stale
+    /// deeper-level ratios can't leak into the next superstep.
+    fn publish(&self, ctx: &StepCtx, v: usize, f: &Fields<'_>) {
+        let cur = self.current_level(ctx);
+        let r = if f.i32(DIST, v) == cur && f.f32(NUMSP, v) > 0.0 {
+            (1.0 + f.f32(DELTA, v)) / f.f32(NUMSP, v)
+        } else {
+            0.0
+        };
+        f.set_f32(RATIO, v, r);
+    }
+
+    fn cycle_done(&self, cycle: usize, next_superstep: usize, any_changed: bool) -> Option<bool> {
+        Some(if cycle == 0 {
             !any_changed
         } else {
             // levels max_level-1 .. 1; engine always runs ≥ 1 superstep
             next_superstep as i64 >= (self.max_level as i64 - 1).max(1)
-        }
+        })
     }
 
-    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        if ctx.cycle == 0 {
-            self.forward_cpu(part, state, ctx)
-        } else {
-            self.backward_cpu(part, state, ctx)
-        }
+    fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
+        vec![self.current_level(ctx)]
     }
 
-    fn output_array(&self) -> usize {
-        BC
+    /// 2 × Σ degree(v) over vertices with non-zero score (fwd + bwd, §5).
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        2 * output
+            .as_f32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s > 0.0)
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum::<u64>()
     }
 }
 
+/// The engine-facing BC algorithm.
+pub type Bc = ProgramDriver<BcProgram>;
+
 impl Bc {
-    /// Figure 18 forwardPropagation.
-    fn forward_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let cur = ctx.superstep as i32;
-        let (dist_arr, rest) = state.arrays.split_at_mut(NUMSP);
-        let dist_cells = as_atomic_i32_cells(dist_arr[DIST].as_i32_mut());
-        let numsp_cells = as_atomic_f32_cells(rest[0].as_f32_mut());
-
-        // Frontier scan in canonical (ascending global id) order: within a
-        // superstep the σ adds write only level-(cur+1) cells and read only
-        // settled level-cur values, so the scan order is observable *only*
-        // through the f32 add order into each target — canonical iteration
-        // makes that order placement-invariant (DESIGN.md §9).
-        let canon = &part.canonical_order;
-        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
-            let (mut changed, mut reads, mut writes) = acc;
-            for i in lo..hi {
-                let v = canon[i] as usize;
-                if ctx.instrument {
-                    reads += 1;
-                }
-                if dist_cells[v].load(Ordering::Relaxed) != cur {
-                    continue;
-                }
-                let v_numsp = f32::from_bits(numsp_cells[v].load(Ordering::Relaxed));
-                if ctx.instrument {
-                    reads += 1;
-                }
-                for &t in part.targets(v as u32) {
-                    let t = t as usize;
-                    // discover (Fig 18 lines 7-9): settle the level
-                    let prev = dist_cells[t].fetch_min(cur + 1, Ordering::Relaxed);
-                    if prev > cur + 1 {
-                        changed = true;
-                        if ctx.instrument {
-                            writes += 1;
-                        }
-                    }
-                    if ctx.instrument {
-                        reads += 1;
-                    }
-                    // accumulate σ (Fig 18 lines 11-12): only into
-                    // vertices/slots settled exactly one level deeper.
-                    // Within a superstep all writers write cur+1, so the
-                    // re-read is stable.
-                    if dist_cells[t].load(Ordering::Relaxed) == cur + 1 {
-                        atomic_add_f32(&numsp_cells[t], v_numsp);
-                        changed = true;
-                        if ctx.instrument {
-                            writes += 1;
-                        }
-                    }
-                }
-            }
-            (changed, reads, writes)
-        };
-        let (changed, reads, writes) = parallel_reduce(
-            part.nv,
-            ctx.threads,
-            (false, 0u64, 0u64),
-            fold,
-            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
-        );
-        ComputeOut { changed, reads, writes }
-    }
-
-    /// Figure 18 backwardPropagation, with the published-ratio formulation.
-    fn backward_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let cur = self.max_level - 1 - ctx.superstep as i32;
-        // Dependency accumulation runs over the *intermediate* levels
-        // `max_level-1 .. 1` only — Brandes sums δ over w ≠ s, so level 0
-        // (the source) must never accumulate. The engine still mandates
-        // one superstep per cycle, and when `max_level <= 1` (e.g. a star
-        // probed from its hub, or an isolated source) that superstep would
-        // land on `cur <= 0`: make it a no-op instead of crediting the
-        // source with its own shortest paths.
-        if cur < 1 {
-            return ComputeOut { changed: true, reads: 0, writes: 0 };
-        }
-        let nv = part.nv;
-        let mut reads = 0u64;
-        let mut writes = 0u64;
-
-        // Phase A: δ and centrality for vertices at level `cur`.
-        {
-            let (head, tail) = state.arrays.split_at_mut(DELTA);
-            let dist = head[DIST].as_i32();
-            let numsp = head[NUMSP].as_f32();
-            let (delta_arr, tail2) = tail.split_at_mut(1);
-            let delta = delta_arr[0].as_f32_mut();
-            let (bc_arr, ratio_arr) = tail2.split_at_mut(1);
-            let bc = bc_arr[0].as_f32_mut();
-            let ratio = ratio_arr[0].as_f32();
-            for v in 0..nv {
-                if dist[v] != cur {
-                    continue;
-                }
-                let mut sum = 0f32;
-                for &t in part.targets(v as u32) {
-                    sum += ratio[t as usize];
-                }
-                if ctx.instrument {
-                    reads += 1 + part.targets(v as u32).len() as u64;
-                    writes += 2;
-                }
-                delta[v] = numsp[v] * sum;
-                bc[v] += delta[v];
-            }
-        }
-
-        // Phase B: publish this level's ratios, zero everything else so
-        // stale deeper-level ratios can't leak into the next superstep.
-        {
-            let (head, tail) = state.arrays.split_at_mut(RATIO);
-            let dist = head[DIST].as_i32();
-            let numsp = head[NUMSP].as_f32();
-            let delta = head[DELTA].as_f32();
-            let ratio = tail[0].as_f32_mut();
-            for v in 0..nv {
-                ratio[v] = if dist[v] == cur && numsp[v] > 0.0 {
-                    (1.0 + delta[v]) / numsp[v]
-                } else {
-                    0.0
-                };
-            }
-            if ctx.instrument {
-                writes += nv as u64;
-            }
-        }
-        ComputeOut { changed: true, reads, writes }
+    pub fn new(source: u32) -> Bc {
+        ProgramDriver::build(BcProgram { source, max_level: 0 }).expect("static schema is valid")
     }
 }
 
@@ -373,9 +259,10 @@ mod tests {
     #[test]
     fn star_hub_source_keeps_zero_centrality() {
         // max_level == 1: the backward cycle's mandatory superstep lands on
-        // cur == 0 and must be a no-op — the source is not an intermediate
-        // vertex of its own shortest paths. (Latent engine bug found by the
-        // differential-fuzz pass of ISSUE 4: bc[hub] came out as 7.0.)
+        // current_level == 0 and must be a no-op — the source is not an
+        // intermediate vertex of its own shortest paths. (Latent engine bug
+        // found by the differential-fuzz pass of ISSUE 4: bc[hub] came out
+        // as 7.0; now guarded generically by `skip_superstep`.)
         let mut el = EdgeList::new(8);
         for i in 1..8 {
             el.push(0, i);
@@ -400,5 +287,19 @@ mod tests {
         let mut alg = Bc::new(0);
         let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
         assert_eq!(r.output.as_f32(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn forward_cycle_ships_only_the_traversal_pair() {
+        use crate::alg::Algorithm;
+        let alg = Bc::new(0);
+        let fwd = Algorithm::program(&alg, 0);
+        assert_eq!(fwd.name, "bc_fwd");
+        assert_eq!(fwd.arrays, vec![0, 1], "device narrowing");
+        let bwd = Algorithm::program(&alg, 1);
+        assert_eq!(bwd.name, "bc_bwd");
+        assert_eq!(bwd.arrays, vec![0, 1, 2, 3, 4]);
+        assert!(alg.channels(0).iter().any(|op| op.order_sensitive()));
+        assert!(alg.channels(1).iter().all(|op| !op.order_sensitive()));
     }
 }

@@ -1,326 +1,95 @@
-//! Breadth-First Search — the paper's level-synchronous kernel (Figure 11)
-//! plus a direction-optimized bottom-up variant (DESIGN.md §8).
+//! Breadth-First Search on the typed vertex-program surface (paper
+//! Figure 11; DESIGN.md §8/§10).
 //!
-//! **Top-down (push)**: per superstep `cur`, every vertex at level `cur`
-//! relaxes its edges: unvisited local neighbors get level `cur+1`; remote
-//! neighbors get a `min` into their ghost slot, which the communication
-//! phase reduces into the owning partition (one message per unique remote
-//! neighbor — §3.4).
+//! The program declares a single `levels` field on a push-min channel and
+//! the [`Kernel::Traversal`] family; everything else — the top-down kernel
+//! with the cache-resident visited bitmap (Chhugani et al. 2012; paper
+//! §6.3.2), the bottom-up transpose sweep with early exit (Beamer et al.
+//! 2012; Sallinen et al. 2015), frontier statistics for the α/β policy,
+//! and bitmap rebuilds after α-controller migrations — is derived by the
+//! [`ProgramDriver`]. The per-edge rule is one line: a frontier vertex at
+//! level `cur` offers `cur + 1`.
 //!
-//! **Bottom-up (pull)**: when the engine's α/β policy flips this element
-//! to `Direction::Pull` (Beamer et al. 2012; Sallinen et al. 2015 for the
-//! hybrid setting), each *unexplored* local vertex probes its in-neighbors
-//! through the partition's transpose CSR and adopts `cur+1` on the first
-//! frontier parent — early exit instead of frontier expansion. Frontier
-//! vertices still `min` `cur+1` into their boundary ghost slots (the tail
-//! of their forward adjacency): remote partitions cannot probe this
-//! element's levels, so cross-partition edges keep push semantics in both
-//! directions. Discoveries, ghost-slot writes, and the `changed` vote are
-//! exactly the push kernel's — levels are identical bits either way, which
-//! is what lets the golden conformance suite compare the two byte-for-byte.
-//!
-//! The CPU kernel uses the cache-resident **visited bitmap** (Chhugani et
-//! al. 2012; paper §6.3.2): a bit per local vertex answers "already has a
-//! level?" without touching the 4-byte level entry. The bitmap is exactly
-//! why the HIGH partitioning strategy super-linearly accelerates the CPU
-//! side — fewer CPU vertices → the bitmap fits in LLC (Figure 12). The
-//! bottom-up sweep reuses it as its frontier-membership filter.
+//! Bottom-up and top-down produce bit-identical levels, `changed` votes,
+//! and superstep counts in every configuration (asserted by the golden
+//! conformance suite); see the driver's kernel docs for the argument.
 
-use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
-use crate::engine::direction::{Direction, FrontierStats};
-use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
-use crate::partition::{Partition, PartitionedGraph};
-use crate::util::atomic::as_atomic_i32_cells;
-use crate::util::threadpool::parallel_reduce;
-use std::sync::atomic::{AtomicU64, Ordering};
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, Value, VertexProgram,
+};
+use super::{StepCtx, INF_I32};
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
 
-/// BFS from a single source vertex (global id).
-pub struct Bfs {
+/// BFS from a single source vertex (global id), as a vertex program.
+pub struct BfsProgram {
     pub source: u32,
 }
 
-impl Bfs {
-    pub fn new(source: u32) -> Bfs {
-        Bfs { source }
-    }
-}
+const LEVELS: FieldId = FieldId(0);
 
-const LEVELS: usize = 0;
-
-impl Algorithm for Bfs {
-    fn spec(&self) -> AlgSpec {
-        AlgSpec {
+impl VertexProgram for BfsProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
             name: "bfs",
             needs_weights: false,
             undirected: false,
             reversed: false,
             fixed_rounds: None,
+            output: LEVELS,
         }
     }
 
-    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
-        let n = part.state_len();
-        let mut levels = vec![INF_I32; n];
-        if pg.part_of[self.source as usize] as usize == part.id {
-            levels[pg.local_of[self.source as usize] as usize] = 0;
-        }
-        let mut st = AlgState::new(vec![StateArray::I32(levels)]);
-        // visited bitmap over local vertices (the paper's summary structure)
-        st.scratch = vec![0u64; part.nv.div_ceil(64).max(1)];
-        if pg.part_of[self.source as usize] as usize == part.id {
-            let l = pg.local_of[self.source as usize] as usize;
-            st.scratch[l / 64] |= 1 << (l % 64);
-        }
-        st
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![FieldSpec::i32("levels", Role::Device, INF_I32)]
     }
 
-    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
-        vec![CommOp::Single(Channel::push_min_i32(LEVELS))]
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::Traversal { level: LEVELS },
+            comm: vec![CommDecl::PushMin(LEVELS)],
+            device: None,
+            accel: AccelSpec { name: "bfs", n_si32: 1, n_sf32: 0 },
+        }
     }
 
-    fn program(&self, _cycle: usize) -> ProgramSpec {
-        ProgramSpec {
-            name: "bfs",
-            arrays: vec![LEVELS],
-            pads: vec![Pad::I32(INF_I32)],
-            aux: vec![],
-            needs_weights: false,
-            n_si32: 1,
-            n_sf32: 0,
-            orientation: EdgeOrientation::Forward,
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        if global_id == self.source {
+            row.set_i32(LEVELS, 0);
         }
+    }
+
+    /// A frontier vertex at level `cur` offers `cur + 1` along every
+    /// out-edge — the whole of BFS.
+    fn edge_update(&self, _ctx: &StepCtx, src: Value, _w: f32) -> Option<Value> {
+        Some(Value::I32(src.expect_i32() + 1))
     }
 
     fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
         vec![ctx.superstep as i32]
     }
 
-    /// After a migration the engine remapped `levels` onto the new
-    /// partition; the visited bitmap is derived state — a bit is set iff
-    /// the vertex already holds a level (claims only ever accompany a
-    /// `fetch_min` to a finite level, so bit ⊆ finite always holds).
-    fn rebuild_scratch(&self, part: &Partition, state: &mut AlgState) {
-        let mut bitmap = vec![0u64; part.nv.div_ceil(64).max(1)];
-        let levels = state.arrays[LEVELS].as_i32();
-        for (v, &l) in levels.iter().take(part.nv).enumerate() {
-            if l != INF_I32 {
-                bitmap[v / 64] |= 1 << (v % 64);
-            }
-        }
-        state.scratch = bitmap;
-    }
-
-    fn supports_pull(&self) -> bool {
-        true
-    }
-
-    /// Frontier shape ahead of superstep `next_superstep`: one scan of the
-    /// local levels counting the frontier (`level == cur`) and unexplored
-    /// (`level == INF`) vertices with their out-degree sums — the `m_f` /
-    /// `m_u` inputs of the α/β policy. `O(nv)` per superstep, dwarfed by
-    /// the edge work it steers.
-    fn frontier_stats(
-        &self,
-        part: &Partition,
-        state: &AlgState,
-        next_superstep: usize,
-    ) -> Option<FrontierStats> {
-        let cur = next_superstep as i32;
-        let levels = state.arrays[LEVELS].as_i32();
-        let ro = &part.csr.row_offsets;
-        let mut s = FrontierStats { total_verts: part.nv as u64, ..Default::default() };
-        for (v, &l) in levels.iter().take(part.nv).enumerate() {
-            let deg = ro[v + 1] - ro[v];
-            if l == cur {
-                s.frontier_verts += 1;
-                s.frontier_edges += deg;
-            } else if l == INF_I32 {
-                s.unexplored_verts += 1;
-                s.unexplored_edges += deg;
-            }
-        }
-        Some(s)
-    }
-
-    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        match ctx.direction {
-            Direction::Push => self.compute_push(part, state, ctx),
-            Direction::Pull => self.compute_pull(part, state, ctx),
-        }
+    /// Σ degree(v) over visited vertices (paper §5).
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        output
+            .as_i32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l != INF_I32)
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum()
     }
 }
 
+/// The engine-facing BFS algorithm: the program above behind the generic
+/// driver. Every historical constructor and `Algorithm` behavior is
+/// preserved.
+pub type Bfs = ProgramDriver<BfsProgram>;
+
 impl Bfs {
-    /// Top-down kernel (Figure 11): the frontier expands its out-edges.
-    fn compute_push(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let cur = ctx.superstep as i32;
-        let nv = part.nv;
-        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
-        let levels = arrays[LEVELS].as_i32_mut();
-        let cells = as_atomic_i32_cells(levels);
-        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
-        // layout as u64.
-        let bitmap: &[AtomicU64] = unsafe {
-            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
-        };
-
-        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
-            let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
-                if ctx.instrument {
-                    reads += 1; // level[v]
-                }
-                if cells[v].load(Ordering::Relaxed) != cur {
-                    continue;
-                }
-                for &t in part.targets(v as u32) {
-                    let t = t as usize;
-                    if t < nv {
-                        // visited-bitmap fast path (Fig 11 lines 6-7)
-                        if ctx.instrument {
-                            reads += 1;
-                        }
-                        let bit = 1u64 << (t % 64);
-                        if bitmap[t / 64].load(Ordering::Relaxed) & bit != 0 {
-                            continue;
-                        }
-                        // claim the bit; the level write races benignly
-                        // (all writers this superstep write cur+1).
-                        let prev = bitmap[t / 64].fetch_or(bit, Ordering::Relaxed);
-                        if prev & bit == 0 {
-                            // might already hold a level delivered by the
-                            // inbox (stale bitmap) — min keeps it correct.
-                            cells[t].fetch_min(cur + 1, Ordering::Relaxed);
-                            if ctx.instrument {
-                                writes += 1;
-                            }
-                            changed = true;
-                        }
-                    } else {
-                        // boundary edge: reduce into the ghost slot
-                        let prev = cells[t].fetch_min(cur + 1, Ordering::Relaxed);
-                        if ctx.instrument {
-                            reads += 1;
-                        }
-                        if prev > cur + 1 {
-                            if ctx.instrument {
-                                writes += 1;
-                            }
-                            changed = true;
-                        }
-                    }
-                }
-            }
-            (changed, reads, writes)
-        };
-        let (changed, reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (false, 0u64, 0u64),
-            fold,
-            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
-        );
-        ComputeOut { changed, reads, writes }
-    }
-
-    /// Bottom-up kernel (DESIGN.md §8). One pass over the local vertices:
-    ///
-    /// - a **frontier** vertex (`level == cur`) relaxes only its boundary
-    ///   tail (ghost slots) — its local out-neighbors are discovered from
-    ///   the probe side instead;
-    /// - an **unexplored** vertex probes its in-neighbors through the
-    ///   transpose CSR and claims `cur + 1` on the first parent at `cur`,
-    ///   then stops probing (the early exit that makes bottom-up win on
-    ///   dense frontiers).
-    ///
-    /// A vertex is discovered here iff it has a frontier in-neighbor —
-    /// exactly the push kernel's local-discovery set — and ghost slots
-    /// receive the same `min(cur + 1)` writes, so levels, the `changed`
-    /// vote, and the superstep count are bit-identical to push mode.
-    fn compute_pull(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let cur = ctx.superstep as i32;
-        let nv = part.nv;
-        let tr = part.transpose();
-        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
-        let levels = arrays[LEVELS].as_i32_mut();
-        let cells = as_atomic_i32_cells(levels);
-        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
-        // layout as u64.
-        let bitmap: &[AtomicU64] = unsafe {
-            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
-        };
-
-        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
-            let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
-                let lv = cells[v].load(Ordering::Relaxed);
-                if ctx.instrument {
-                    reads += 1; // level[v]
-                }
-                if lv == cur {
-                    // frontier vertex: boundary edges keep push semantics
-                    // (remote partitions cannot probe our levels).
-                    let nl = part.csr.local_counts[v] as usize;
-                    for &t in &part.targets(v as u32)[nl..] {
-                        let prev = cells[t as usize].fetch_min(cur + 1, Ordering::Relaxed);
-                        if ctx.instrument {
-                            reads += 1;
-                        }
-                        if prev > cur + 1 {
-                            if ctx.instrument {
-                                writes += 1;
-                            }
-                            changed = true;
-                        }
-                    }
-                    continue;
-                }
-                // unexplored vertex: probe in-neighbors, early-exit on the
-                // first frontier parent. The bitmap check mirrors the push
-                // kernel's claim protocol: a bit-set vertex is never
-                // re-discovered, a bit-unset vertex with an inbox-delivered
-                // level still gets the idempotent `min(cur + 1)`.
-                //
-                // Deliberate trade-off: an inbox-discovered vertex keeps
-                // its bit unset until a local parent aligns with `cur`, so
-                // sustained pull mode may re-scan its transpose row across
-                // supersteps — the price of keeping the `changed` vote (and
-                // therefore superstep counts) bit-identical to push mode,
-                // whose claim protocol emits the same spurious first-claim
-                // event. Marking bits on inbox delivery would need the comm
-                // phase to know about algorithm-private scratch.
-                let bit = 1u64 << (v % 64);
-                if ctx.instrument {
-                    reads += 1; // bitmap word
-                }
-                if bitmap[v / 64].load(Ordering::Relaxed) & bit != 0 {
-                    continue;
-                }
-                for &u in tr.sources_of(v as u32) {
-                    if ctx.instrument {
-                        reads += 1; // level[u]
-                    }
-                    if cells[u as usize].load(Ordering::Relaxed) == cur {
-                        bitmap[v / 64].fetch_or(bit, Ordering::Relaxed);
-                        cells[v].fetch_min(cur + 1, Ordering::Relaxed);
-                        if ctx.instrument {
-                            writes += 1;
-                        }
-                        changed = true;
-                        break;
-                    }
-                }
-            }
-            (changed, reads, writes)
-        };
-        let (changed, reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (false, 0u64, 0u64),
-            fold,
-            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
-        );
-        ComputeOut { changed, reads, writes }
+    pub fn new(source: u32) -> Bfs {
+        ProgramDriver::build(BfsProgram { source }).expect("static schema is valid")
     }
 }
 
@@ -337,6 +106,7 @@ pub fn frontier_density(levels: &[i32], cur: i32) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alg::Algorithm;
     use crate::engine::{self, DirectionConfig, EngineConfig};
     use crate::graph::{CsrGraph, EdgeList};
     use crate::partition::Strategy;
@@ -444,5 +214,18 @@ mod tests {
         assert_eq!(s.frontier_edges, 1);
         assert_eq!(s.unexplored_verts, 7);
         assert_eq!(s.unexplored_edges, 6); // tail vertex has out-degree 0
+    }
+
+    #[test]
+    fn driver_derives_the_bfs_contract() {
+        let alg = Bfs::new(0);
+        assert!(alg.supports_pull(), "Traversal programs derive a pull kernel");
+        let spec = Algorithm::program(&alg, 0);
+        assert_eq!(spec.name, "bfs");
+        assert_eq!(spec.arrays, vec![0]);
+        assert_eq!(spec.n_si32, 1);
+        let ops = alg.channels(0);
+        assert_eq!(ops.len(), 1);
+        assert!(!ops[0].order_sensitive());
     }
 }

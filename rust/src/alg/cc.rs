@@ -1,117 +1,82 @@
-//! Connected Components via label propagation (paper §9.4).
+//! Connected Components via label propagation (paper §9.4) on the typed
+//! vertex-program surface.
 //!
 //! Operates on the undirected view (each edge doubled, Table 5 note).
 //! Every vertex starts with its own global id as label; labels propagate
-//! with `min` until quiescence. The reduction operator is `min` — one of
-//! the paper's canonical reduction-friendly algorithms (§3.4: "minimum
-//! label in a connected components algorithm").
-//!
-//! Activation uses the same monotone trick as SSSP: a vertex propagates
-//! when its label dropped since it last propagated (covers inbox updates
-//! without extra channels).
+//! with `min` until quiescence — one of the paper's canonical
+//! reduction-friendly algorithms (§3.4: "minimum label in a connected
+//! components algorithm"). The program is the smallest possible
+//! [`Kernel::MonotoneScatter`] instance: activation uses the same
+//! monotone-shadow trick as SSSP (a vertex propagates when its label
+//! dropped since it last propagated, covering inbox updates without extra
+//! channels) and the per-edge rule forwards the label unchanged.
 
-use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
-use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
-use crate::partition::{Partition, PartitionedGraph};
-use crate::util::atomic::as_atomic_i32_cells;
-use crate::util::threadpool::parallel_reduce;
-use std::sync::atomic::Ordering;
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, Value, VertexProgram,
+};
+use super::{StepCtx, INF_I32};
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
 
+/// Connected components, as a vertex program.
 #[derive(Default)]
-pub struct Cc;
+pub struct CcProgram;
 
-impl Cc {
-    pub fn new() -> Cc {
-        Cc
-    }
-}
+const LABELS: FieldId = FieldId(0);
+/// CPU-only shadow: label at the time of the last propagation.
+const PROPAGATED_AT: FieldId = FieldId(1);
 
-const LABELS: usize = 0;
-/// CPU-only: label at the time of the last propagation.
-const PROPAGATED_AT: usize = 1;
-
-impl Algorithm for Cc {
-    fn spec(&self) -> AlgSpec {
-        AlgSpec {
+impl VertexProgram for CcProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
             name: "cc",
             needs_weights: false,
             undirected: true,
             reversed: false,
             fixed_rounds: None,
+            output: LABELS,
         }
     }
 
-    fn init_state(&mut self, _pg: &PartitionedGraph, part: &Partition) -> AlgState {
-        let n = part.state_len();
-        let mut labels = vec![INF_I32; n];
-        for (l, &g) in part.local_to_global.iter().enumerate() {
-            labels[l] = g as i32;
-        }
-        AlgState::new(vec![
-            StateArray::I32(labels),
-            StateArray::I32(vec![INF_I32; n]),
-        ])
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("labels", Role::Device, INF_I32),
+            FieldSpec::i32("propagated_at", Role::Host, INF_I32),
+        ]
     }
 
-    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
-        vec![CommOp::Single(Channel::push_min_i32(LABELS))]
-    }
-
-    fn program(&self, _cycle: usize) -> ProgramSpec {
-        ProgramSpec {
-            name: "cc",
-            arrays: vec![LABELS],
-            pads: vec![Pad::I32(INF_I32)],
-            aux: vec![],
-            needs_weights: false,
-            n_si32: 0,
-            n_sf32: 0,
-            orientation: EdgeOrientation::Forward,
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::MonotoneScatter { value: LABELS, shadow: PROPAGATED_AT },
+            comm: vec![CommDecl::PushMin(LABELS)],
+            device: None,
+            accel: AccelSpec { name: "cc", n_si32: 0, n_sf32: 0 },
         }
     }
 
-    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let nv = part.nv;
-        let (labels_arr, rest) = state.arrays.split_at_mut(PROPAGATED_AT);
-        let labels = labels_arr[LABELS].as_i32_mut();
-        let cells = as_atomic_i32_cells(labels);
-        // per-vertex, written only by the owning chunk.
-        let propagated_cells = as_atomic_i32_cells(rest[0].as_i32_mut());
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        row.set_i32(LABELS, global_id as i32);
+    }
 
-        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
-            let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
-                let lv = cells[v].load(Ordering::Relaxed);
-                if ctx.instrument {
-                    reads += 2;
-                }
-                if lv >= propagated_cells[v].load(Ordering::Relaxed) {
-                    continue;
-                }
-                propagated_cells[v].store(lv, Ordering::Relaxed);
-                for &t in part.targets(v as u32) {
-                    let old = cells[t as usize].fetch_min(lv, Ordering::Relaxed);
-                    if ctx.instrument {
-                        reads += 1;
-                    }
-                    if lv < old {
-                        changed = true;
-                        if ctx.instrument {
-                            writes += 1;
-                        }
-                    }
-                }
-            }
-            (changed, reads, writes)
-        };
-        let (changed, reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (false, 0u64, 0u64),
-            fold,
-            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
-        );
-        ComputeOut { changed, reads, writes }
+    /// Labels propagate unchanged; the channel's `min` does the rest.
+    fn edge_update(&self, _ctx: &StepCtx, src: Value, _w: f32) -> Option<Value> {
+        Some(src)
+    }
+
+    /// Undirected view doubles the edges (paper §5).
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        2 * g.edge_count() as u64
+    }
+}
+
+/// The engine-facing CC algorithm.
+pub type Cc = ProgramDriver<CcProgram>;
+
+impl Cc {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Cc {
+        ProgramDriver::build(CcProgram).expect("static schema is valid")
     }
 }
 

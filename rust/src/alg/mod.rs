@@ -1,18 +1,29 @@
-//! Algorithm abstraction — the paper's callback API (§4.2, Figure 5).
+//! Algorithm layer — the paper's callback API (§4.2, Figure 5), now split
+//! in two:
 //!
-//! TOTEM's programmer view is a set of callbacks hooked into the BSP cycle
-//! (`alg_init`, `alg_compute`, `alg_scatter`, `alg_finalize`). Here the
-//! same roles appear as the [`Algorithm`] trait:
+//! - [`program::VertexProgram`] is the **typed, declarative surface**
+//!   algorithms are written against: a named state schema (dtype, pad,
+//!   role), per-cycle communication declarations, a kernel family, and a
+//!   handful of small typed callbacks (`edge_update`, `gather_apply`, …).
+//!   All six algorithms (`bfs`, `pagerank`, `sssp`, `bc`, `cc`,
+//!   `widest`) live on this surface; see DESIGN.md §10 for how to add
+//!   one in well under 100 lines.
+//! - [`Algorithm`] is the **engine-facing execution contract** — the
+//!   paper's `alg_init` / `alg_compute` / `alg_scatter` hooks plus the
+//!   direction-optimization and rebalance extensions. It is implemented
+//!   exactly once, by [`program::ProgramDriver`], which derives push/pull
+//!   CPU kernels, channel lists, accelerator marshaling
+//!   ([`ProgramSpec`]), frontier statistics, and scratch rebuilds from
+//!   the program's declarations. (The trait remains public and object-
+//!   friendly so harness tools and ablation benches can still wrap or
+//!   hand-roll an `Algorithm` when they need to.)
 //!
-//! - `init_state`  ↔ `alg_init` (allocate per-partition state);
-//! - `compute_cpu` ↔ the CPU `alg_compute` kernel;
-//! - the accelerator `alg_compute` is the AOT-compiled JAX/Pallas step
-//!   program named by [`ProgramSpec`] (see `python/compile/model.py`);
-//! - `channels`    ↔ `alg_scatter`: each channel declares which state
-//!   array is communicated and with which reduction operator, and the
-//!   engine applies it generically (the paper's "user-defined reduction");
-//! - `collect` is handled by the engine via `output_array`.
-//!
+//! Mapping to the paper's callbacks: `init_state` ↔ `alg_init`;
+//! `compute_cpu` ↔ the CPU `alg_compute` kernel; the accelerator
+//! `alg_compute` is the AOT-compiled JAX/Pallas step program named by
+//! [`ProgramSpec`] (see `python/compile/model.py`); `channels` ↔
+//! `alg_scatter` with the engine applying the declared reduction
+//! generically; `collect` is handled by the engine via `output_array`.
 //! Algorithms with several BSP cycles (Betweenness Centrality's forward +
 //! backward sweeps) declare `cycles() > 1` and get a `begin_cycle` hook.
 
@@ -20,7 +31,9 @@ pub mod bc;
 pub mod bfs;
 pub mod cc;
 pub mod pagerank;
+pub mod program;
 pub mod sssp;
+pub mod widest;
 
 use crate::engine::direction::{Direction, FrontierStats};
 use crate::engine::state::{AlgState, CommOp};
@@ -195,42 +208,19 @@ pub trait Algorithm: Sync {
     /// bitmap), so algorithms that use it must override this. Default:
     /// no scratch.
     fn rebuild_scratch(&self, _part: &Partition, _state: &mut AlgState) {}
-}
 
-/// Traversed-edges-per-second accounting (paper §5 "Evaluation Metrics").
-/// `output` is the collected global result array; `g` the original graph.
-pub fn traversed_edges(alg_name: &str, output: &crate::engine::state::StateArray, g: &CsrGraph, rounds: usize) -> u64 {
-    match alg_name {
-        // Σ degree(v) over visited vertices.
-        "bfs" => output
-            .as_i32()
-            .iter()
-            .enumerate()
-            .filter(|(_, &l)| l != INF_I32)
-            .map(|(v, _)| g.out_degree(v as u32))
-            .sum(),
-        // Σ degree(v) over vertices with finite distance.
-        "sssp" => output
-            .as_f32()
-            .iter()
-            .enumerate()
-            .filter(|(_, &d)| d.is_finite())
-            .map(|(v, _)| g.out_degree(v as u32))
-            .sum(),
-        // 2 × Σ degree(v) over vertices with non-zero score (fwd + bwd).
-        "bc" => {
-            2 * output
-                .as_f32()
-                .iter()
-                .enumerate()
-                .filter(|(_, &s)| s > 0.0)
-                .map(|(v, _)| g.out_degree(v as u32))
-                .sum::<u64>()
-        }
-        // |E| per iteration.
-        "pagerank" => g.edge_count() as u64 * rounds as u64,
-        // undirected view doubles the edges.
-        "cc" => 2 * g.edge_count() as u64,
-        _ => g.edge_count() as u64,
+    /// Traversed-edges accounting for TEPS (paper §5 "Evaluation
+    /// Metrics"). `output` is the collected global result array; `g` the
+    /// original graph. Each algorithm reports its own formula (BFS counts
+    /// the out-degrees of visited vertices, PageRank counts |E| per
+    /// round, …) — this replaced the old stringly-typed
+    /// `alg::traversed_edges(name, …)` dispatch. Default: |E| × rounds.
+    fn traversed_edges(
+        &self,
+        _output: &crate::engine::state::StateArray,
+        g: &CsrGraph,
+        rounds: usize,
+    ) -> u64 {
+        g.edge_count() as u64 * rounds.max(1) as u64
     }
 }

@@ -1,34 +1,36 @@
 //! PageRank — pull-based by default (paper §7.1, Figure 14), with a
-//! push-mode comparison variant (DESIGN.md §8).
+//! push-mode comparison variant (DESIGN.md §8) — on the typed
+//! vertex-program surface.
 //!
 //! **Pull mode** ([`PrMode::Pull`], the default): each vertex *pulls* its
 //! in-neighbors' rank contributions (faster than push: no atomics — the
 //! paper cites Nguyen et al. 2013 for this), so the engine partitions the
-//! **reversed** graph: a partition's local CSR lists each vertex's
-//! in-neighbors, remote in-neighbors become ghost-in slots. The
-//! communicated quantity is `contrib[u] = rank[u] / outdeg(u)` — a single
-//! value per unique remote source vertex per superstep on a **pull
-//! channel**. Pull slots have exactly one writer, so the op list is never
-//! order-sensitive and the pipelined executor keeps full exchange freedom
-//! (no canonical-order fallback) while staying bit-identical to the
-//! synchronous engine.
+//! **reversed** graph. The program declares [`Kernel::Gather`] over the
+//! `contrib` field on a **pull channel**: pull slots have exactly one
+//! writer, so the op list is never order-sensitive and the pipelined
+//! executor keeps full exchange freedom while staying bit-identical to
+//! the synchronous engine.
 //!
-//! **Push mode** ([`PrMode::Push`]): the forward graph is partitioned and
-//! every vertex scatters `rank/outdeg` along its out-edges; remote partial
-//! sums travel on a **push-add channel**, which is order-sensitive
-//! (`CommOp::order_sensitive`) and forces the pipelined executor into
-//! canonical-order release. Kept as the measurable counterexample that
-//! motivates the pull gather; CPU-only (no AOT program is shipped for it).
+//! **Push mode** ([`PrMode::Push`]): [`Kernel::FoldScatter`] over the
+//! forward graph — every vertex scatters `rank/outdeg` along its
+//! out-edges; remote partial sums travel on a **push-add channel**, which
+//! is order-sensitive and forces canonical-order iteration and exchange
+//! release. Kept as the measurable counterexample that motivates the pull
+//! gather; CPU-only (no AOT program is shipped for it, so accelerator
+//! runs fail at manifest lookup with an actionable message).
 //!
 //! `rank_{t+1}[v] = (1-d)/|V| + d · Σ_{u→v} contrib_t[u]`, d = 0.85, run
 //! for a fixed number of rounds (paper: 5 in Figure 16, 1 in Table 4).
+//! Push mode pays one extra trailing fold-only superstep (the last
+//! round's remote partial sums land during communication).
 
-use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx};
-use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
+use super::program::{
+    AccelSpec, Activation, CommDecl, CyclePlan, FieldId, Fields, FieldSpec, InitRow, Kernel,
+    ProgramDriver, ProgramMeta, Role, VertexProgram,
+};
+use super::StepCtx;
+use crate::engine::state::StateArray;
 use crate::graph::CsrGraph;
-use crate::partition::{Partition, PartitionedGraph};
-use crate::util::atomic::{as_atomic_f32_cells, atomic_add_f32};
-use crate::util::threadpool::parallel_reduce;
 
 pub const DAMPING: f32 = 0.85;
 pub const DEFAULT_ROUNDS: usize = 5;
@@ -44,7 +46,8 @@ pub enum PrMode {
     Push,
 }
 
-pub struct Pagerank {
+/// PageRank as a vertex program.
+pub struct PagerankProgram {
     pub rounds: usize,
     pub mode: PrMode,
     /// Global vertex count (set in `prepare`).
@@ -53,31 +56,21 @@ pub struct Pagerank {
     outdeg: Vec<u64>,
 }
 
-impl Pagerank {
-    /// Pull-mode PageRank (the default used by the harness).
-    pub fn new(rounds: usize) -> Pagerank {
-        Pagerank { rounds, mode: PrMode::Pull, n_global: 0, outdeg: Vec::new() }
-    }
-
-    /// Push-mode comparison variant (module docs).
-    pub fn push_mode(rounds: usize) -> Pagerank {
-        Pagerank { rounds, mode: PrMode::Push, n_global: 0, outdeg: Vec::new() }
-    }
-
+impl PagerankProgram {
     fn base(&self) -> f32 {
         (1.0 - DAMPING) / self.n_global.max(1) as f32
     }
 }
 
-const RANK: usize = 0;
+const RANK: FieldId = FieldId(0);
 /// Pull mode: published contribution. Push mode: incoming-sum accumulator.
-const CONTRIB: usize = 1;
-const AUX_INV_OUTDEG: usize = 0;
-const AUX_MASK: usize = 1;
+const CONTRIB: FieldId = FieldId(1);
+const INV_OUTDEG: FieldId = FieldId(2);
+const MASK: FieldId = FieldId(3);
 
-impl Algorithm for Pagerank {
-    fn spec(&self) -> AlgSpec {
-        AlgSpec {
+impl VertexProgram for PagerankProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
             name: "pagerank",
             needs_weights: false,
             undirected: false,
@@ -86,11 +79,42 @@ impl Algorithm for Pagerank {
             reversed: self.mode == PrMode::Pull,
             // push mode needs one extra superstep: the final round's remote
             // partial sums land during communication and are folded into
-            // ranks by a trailing fold-only compute.
+            // ranks by a trailing fold-only compute (driver rule).
             fixed_rounds: Some(match self.mode {
                 PrMode::Pull => self.rounds,
                 PrMode::Push => self.rounds + 1,
             }),
+            output: RANK,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::f32("rank", Role::Device, 0.0),
+            FieldSpec::f32("contrib", Role::Device, 0.0),
+            FieldSpec::f32("inv_outdeg", Role::Aux, 0.0),
+            FieldSpec::f32("mask", Role::Aux, 0.0),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        match self.mode {
+            // single writer per ghost slot → never order-sensitive: the
+            // pipelined executor keeps full exchange freedom.
+            PrMode::Pull => CyclePlan {
+                kernel: Kernel::Gather { src: CONTRIB, active: Activation::Always },
+                comm: vec![CommDecl::Pull(CONTRIB)],
+                device: None,
+                accel: AccelSpec { name: "pagerank", n_si32: 0, n_sf32: 2 },
+            },
+            // remote partial sums: order-sensitive push-add, the pipelined
+            // executor falls back to canonical-order release.
+            PrMode::Push => CyclePlan {
+                kernel: Kernel::FoldScatter { accum: CONTRIB },
+                comm: vec![CommDecl::PushAdd(CONTRIB)],
+                device: None,
+                accel: AccelSpec { name: "pagerank_push", n_si32: 0, n_sf32: 2 },
+            },
         }
     }
 
@@ -99,201 +123,88 @@ impl Algorithm for Pagerank {
         self.outdeg = original.out_degrees();
     }
 
-    fn init_state(&mut self, _pg: &PartitionedGraph, part: &Partition) -> AlgState {
-        let n = part.state_len();
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
         let r0 = 1.0f32 / self.n_global.max(1) as f32;
-        let mut rank = vec![0f32; n];
-        let mut contrib = vec![0f32; n];
-        let mut inv_outdeg = vec![0f32; n];
-        let mut mask = vec![0f32; n];
-        for (l, &g) in part.local_to_global.iter().enumerate() {
-            let d = self.outdeg[g as usize];
-            rank[l] = r0;
-            inv_outdeg[l] = if d > 0 { 1.0 / d as f32 } else { 0.0 };
-            // pull: publish the initial contribution; push: CONTRIB is the
-            // incoming-sum accumulator and must start at the add identity
-            // (0), ghost slots included.
-            if self.mode == PrMode::Pull {
-                contrib[l] = rank[l] * inv_outdeg[l];
-            }
-            mask[l] = 1.0;
+        let d = self.outdeg[global_id as usize];
+        let inv = if d > 0 { 1.0 / d as f32 } else { 0.0 };
+        row.set_f32(RANK, r0);
+        row.set_f32(INV_OUTDEG, inv);
+        // pull: publish the initial contribution; push: CONTRIB is the
+        // incoming-sum accumulator and must start at the add identity
+        // (its pad, 0), ghost slots included.
+        if self.mode == PrMode::Pull {
+            row.set_f32(CONTRIB, r0 * inv);
         }
-        let mut st = AlgState::new(vec![StateArray::F32(rank), StateArray::F32(contrib)]);
-        st.aux = vec![StateArray::F32(inv_outdeg), StateArray::F32(mask)];
-        st
+        row.set_f32(MASK, 1.0);
     }
 
-    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
-        match self.mode {
-            // single writer per ghost slot → never order-sensitive: the
-            // pipelined executor keeps full exchange freedom.
-            PrMode::Pull => vec![CommOp::Single(Channel::pull_f32(CONTRIB))],
-            // remote partial sums: order-sensitive push-add, the pipelined
-            // executor falls back to canonical-order release.
-            PrMode::Push => vec![CommOp::Single(Channel::push_add_f32(CONTRIB))],
-        }
+    /// Pull phase apply (Fig 14): no atomics needed — each `v` writes only
+    /// `rank[v]`, which is the whole point of pull-based PageRank.
+    fn gather_apply(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>, sum: f32) -> u64 {
+        f.set_f32(RANK, v, self.base() + DAMPING * sum);
+        1
     }
 
-    fn program(&self, _cycle: usize) -> ProgramSpec {
-        ProgramSpec {
-            // push mode is a CPU-only comparison variant: no AOT program is
-            // shipped for it, so an accelerator run fails at manifest
-            // lookup with an actionable message.
-            name: match self.mode {
-                PrMode::Pull => "pagerank",
-                PrMode::Push => "pagerank_push",
-            },
-            arrays: vec![RANK, CONTRIB],
-            pads: vec![Pad::F32(0.0), Pad::F32(0.0)],
-            aux: vec![AUX_INV_OUTDEG, AUX_MASK],
-            needs_weights: false,
-            n_si32: 0,
-            n_sf32: 2,
-            orientation: match self.mode {
-                PrMode::Pull => EdgeOrientation::Reversed,
-                PrMode::Push => EdgeOrientation::Forward,
-            },
-        }
+    /// Refresh contributions for the next superstep.
+    fn publish(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>) {
+        f.set_f32(CONTRIB, v, f.f32(RANK, v) * f.f32(INV_OUTDEG, v));
+    }
+
+    /// Push-mode fold: the accumulator holds every local scatter from the
+    /// previous superstep plus the remote partial sums the communication
+    /// phase added — fold it into ranks and reset.
+    fn fold(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>) -> u64 {
+        f.set_f32(RANK, v, self.base() + DAMPING * f.f32(CONTRIB, v));
+        f.set_f32(CONTRIB, v, 0.0);
+        2
+    }
+
+    /// Push-mode scatter value: `rank/outdeg` into every out-target.
+    fn scatter_value(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>) -> f32 {
+        f.f32(RANK, v) * f.f32(INV_OUTDEG, v)
     }
 
     fn scalars_f32(&self, _ctx: &StepCtx) -> Vec<f32> {
         vec![self.base(), DAMPING]
     }
 
-    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        match self.mode {
-            PrMode::Pull => self.compute_pull(part, state, ctx),
-            PrMode::Push => self.compute_push(part, state, ctx),
-        }
-    }
-
-    fn output_array(&self) -> usize {
-        RANK
+    /// |E| per iteration (paper §5).
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        g.edge_count() as u64 * rounds.max(1) as u64
     }
 }
+
+/// The engine-facing PageRank algorithm.
+pub type Pagerank = ProgramDriver<PagerankProgram>;
 
 impl Pagerank {
-    fn compute_pull(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let nv = part.nv;
-        let base = self.base();
-        // split: contrib is read (including ghost slots), rank written,
-        // then contrib refreshed for the next round.
-        let (rank_arr, contrib_arr) = state.arrays.split_at_mut(CONTRIB);
-        let rank = rank_arr[RANK].as_f32_mut();
-        let contrib = contrib_arr[0].as_f32_mut();
-        let inv_outdeg = state.aux[AUX_INV_OUTDEG].as_f32();
-
-        // Pull phase: no atomics needed — each v writes only rank[v]
-        // (Fig 14; this is the whole point of pull-based PageRank).
-        let rank_ptr = SendPtr(rank.as_mut_ptr());
-        let (reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (0u64, 0u64),
-            |lo, hi, acc| {
-                let (mut reads, mut writes) = acc;
-                let rank = rank_ptr;
-                for v in lo..hi {
-                    let mut sum = 0f32;
-                    for &t in part.targets(v as u32) {
-                        sum += contrib[t as usize];
-                    }
-                    if ctx.instrument {
-                        reads += part.targets(v as u32).len() as u64;
-                        writes += 1;
-                    }
-                    // SAFETY: disjoint v per chunk.
-                    unsafe { *rank.0.add(v) = base + DAMPING * sum };
-                }
-                (reads, writes)
-            },
-            |a, b| (a.0 + b.0, a.1 + b.1),
-        );
-        // refresh contributions for the next superstep
-        for v in 0..nv {
-            contrib[v] = rank[v] * inv_outdeg[v];
-        }
-        ComputeOut { changed: true, reads, writes: writes + nv as u64 }
+    /// Pull-mode PageRank (the default used by the harness).
+    pub fn new(rounds: usize) -> Pagerank {
+        ProgramDriver::build(PagerankProgram {
+            rounds,
+            mode: PrMode::Pull,
+            n_global: 0,
+            outdeg: Vec::new(),
+        })
+        .expect("static schema is valid")
     }
 
-    /// Push-mode superstep over the forward graph:
-    ///
-    /// - **fold** (supersteps ≥ 1): the accumulator now holds every local
-    ///   scatter from the previous superstep plus the remote partial sums
-    ///   the communication phase added — fold it into ranks and reset;
-    /// - **scatter** (supersteps < rounds): add `rank/outdeg` into each
-    ///   out-target — local targets via an f32 CAS-add, ghost slots
-    ///   likewise (the outbox the push-add channel flushes).
-    ///
-    /// The trailing superstep (`== rounds`) is fold-only, which is why
-    /// `spec()` reports `rounds + 1` fixed rounds for push mode.
-    fn compute_push(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let nv = part.nv;
-        let base = self.base();
-        let (rank_arr, accum_arr) = state.arrays.split_at_mut(CONTRIB);
-        let rank = rank_arr[RANK].as_f32_mut();
-        let accum = accum_arr[0].as_f32_mut();
-        let inv_outdeg = state.aux[AUX_INV_OUTDEG].as_f32();
-
-        let mut writes_seq = 0u64;
-        if ctx.superstep > 0 {
-            for v in 0..nv {
-                rank[v] = base + DAMPING * accum[v];
-                accum[v] = 0.0;
-            }
-            writes_seq += 2 * nv as u64;
-        }
-        if ctx.superstep >= self.rounds {
-            return ComputeOut { changed: true, reads: 0, writes: writes_seq };
-        }
-
-        let rank_ro: &[f32] = rank;
-        let cells = as_atomic_f32_cells(accum);
-        // Scatter in canonical (ascending global id) order: the f32 adds
-        // into shared accumulator cells — local targets and ghost slots
-        // alike — then arrive in a placement-invariant sender order, which
-        // keeps push-mode outputs bit-identical across placements
-        // (DESIGN.md §9; with one worker the order is exact, with more the
-        // chunk boundaries are placement-invariant too).
-        let canon = &part.canonical_order;
-        let (reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (0u64, 0u64),
-            |lo, hi, acc| {
-                let (mut reads, mut writes) = acc;
-                for i in lo..hi {
-                    let v = canon[i] as usize;
-                    let c = rank_ro[v] * inv_outdeg[v];
-                    if c == 0.0 {
-                        continue;
-                    }
-                    for &t in part.targets(v as u32) {
-                        atomic_add_f32(&cells[t as usize], c);
-                    }
-                    if ctx.instrument {
-                        let deg = part.targets(v as u32).len() as u64;
-                        reads += 1 + deg;
-                        writes += deg;
-                    }
-                }
-                (reads, writes)
-            },
-            |a, b| (a.0 + b.0, a.1 + b.1),
-        );
-        ComputeOut { changed: true, reads, writes: writes + writes_seq }
+    /// Push-mode comparison variant (module docs).
+    pub fn push_mode(rounds: usize) -> Pagerank {
+        ProgramDriver::build(PagerankProgram {
+            rounds,
+            mode: PrMode::Push,
+            n_global: 0,
+            outdeg: Vec::new(),
+        })
+        .expect("static schema is valid")
     }
 }
-
-/// Tiny Send wrapper for the disjoint-chunk write pattern above.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alg::Algorithm;
     use crate::engine::{self, EngineConfig};
     use crate::graph::{CsrGraph, EdgeList};
     use crate::partition::Strategy;
@@ -382,5 +293,12 @@ mod tests {
         assert!(pull.channels(0).iter().all(|op| !op.order_sensitive()));
         let push = Pagerank::push_mode(5);
         assert!(push.channels(0).iter().any(|op| op.order_sensitive()));
+        // and the derived accelerator specs keep their historical shapes
+        let spec = Algorithm::program(&pull, 0);
+        assert_eq!(spec.name, "pagerank");
+        assert_eq!(spec.arrays, vec![0, 1]);
+        assert_eq!(spec.aux, vec![0, 1]);
+        assert_eq!(spec.n_sf32, 2);
+        assert_eq!(Algorithm::program(&push, 0).name, "pagerank_push");
     }
 }

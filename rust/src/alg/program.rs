@@ -1,0 +1,1717 @@
+//! The typed vertex-program layer — TOTEM's declarative programming
+//! surface (paper §4.2, Fig. 5; DESIGN.md §10).
+//!
+//! An algorithm is written once as a [`VertexProgram`]: a **typed state
+//! schema** (named fields with dtype, pad/identity value, and role), a
+//! per-cycle **plan** (which fields are communicated and with which
+//! reduction, and which generic **kernel family** drives the superstep),
+//! and a handful of small typed callbacks (`edge_update`, `gather_apply`,
+//! …). The generic [`ProgramDriver`] then implements the engine-facing
+//! [`Algorithm`] trait *once* for every program:
+//!
+//! - it builds per-partition [`AlgState`] from the schema (locals
+//!   initialized by [`VertexProgram::init_vertex`], ghost/dummy slots at
+//!   the field's pad value — which the driver validates to be the reduce
+//!   identity of the field's channel);
+//! - it derives the **push kernel**, and for traversal programs the
+//!   transpose **pull kernel** with early exit, from the declared kernel
+//!   family — including the visited-bitmap claim protocol, canonical-order
+//!   iteration whenever the cycle's communication is order-sensitive
+//!   (DESIGN.md §9), and instrumentation read/write counting;
+//! - it marshals the [`ProgramSpec`] for the accelerator element, the
+//!   engine [`CommOp`] list, `frontier_stats` for the α/β direction
+//!   policy, and `rebuild_scratch` after α-controller migrations —
+//!   so both executors, the re-balancer, and the harness run unmodified.
+//!
+//! Schema/plan mistakes (dtype mismatches, aux fields on channels, pads
+//! that are not reduce identities) are **typed errors at construction
+//! time** ([`ProgramDriver::build`]), not panics deep inside a kernel.
+//!
+//! See `alg/widest.rs` for the canonical "add an algorithm in well under
+//! 100 lines" example, and DESIGN.md §10 for the walkthrough.
+
+use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx, INF_I32};
+use crate::engine::direction::{Direction, FrontierStats};
+use crate::engine::state::{AlgState, Channel, CommOp, FieldType, StateArray};
+use crate::graph::CsrGraph;
+use crate::partition::{Partition, PartitionedGraph};
+use crate::util::atomic::{
+    as_atomic_f32_cells, as_atomic_i32_cells, atomic_add_f32, atomic_max_f32, atomic_min_f32,
+};
+use crate::util::split_two_mut;
+use crate::util::threadpool::parallel_reduce;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicI32, AtomicU32, AtomicU64, Ordering};
+
+/// Handle to a schema field: its position in [`VertexProgram::schema`].
+/// Programs define these as `const` alongside the schema.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FieldId(pub usize);
+
+/// A typed scalar — the value vocabulary of the schema layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I32(i32),
+    F32(f32),
+}
+
+impl Value {
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            Value::I32(_) => FieldType::I32,
+            Value::F32(_) => FieldType::F32,
+        }
+    }
+    /// Extract the i32 payload. Only called by driver kernels after the
+    /// schema validated the field dtype, so a mismatch is a program bug.
+    pub fn expect_i32(self) -> i32 {
+        match self {
+            Value::I32(x) => x,
+            Value::F32(x) => panic!("expected i32 update, program produced f32 {x}"),
+        }
+    }
+    pub fn expect_f32(self) -> f32 {
+        match self {
+            Value::F32(x) => x,
+            Value::I32(x) => panic!("expected f32 update, program produced i32 {x}"),
+        }
+    }
+    fn to_pad(self) -> Pad {
+        match self {
+            Value::I32(x) => Pad::I32(x),
+            Value::F32(x) => Pad::F32(x),
+        }
+    }
+}
+
+/// Where a schema field lives and who sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Mutable per-vertex state, marshaled across the PJRT boundary every
+    /// superstep (unless the cycle's [`CyclePlan::device`] narrows the
+    /// set). Stored in [`AlgState::arrays`].
+    Device,
+    /// Mutable per-vertex state the accelerator never sees — activation
+    /// shadows like SSSP's `relaxed_at`. Stored in [`AlgState::arrays`]
+    /// (after the device fields), so α-controller migrations remap it
+    /// exactly like any other state.
+    Host,
+    /// Constant per-vertex input uploaded to the accelerator once
+    /// (PageRank's `1/outdeg`). Stored in [`AlgState::aux`]; read-only to
+    /// kernels.
+    Aux,
+}
+
+/// One named field of a program's typed state schema.
+#[derive(Debug, Clone, Copy)]
+pub struct FieldSpec {
+    pub name: &'static str,
+    pub ty: FieldType,
+    pub role: Role,
+    /// The field's background value: ghost slots, the dummy sink, every
+    /// local vertex [`VertexProgram::init_vertex`] leaves untouched, and
+    /// the accelerator's `[state_len, n_cap)` pad region. For fields on a
+    /// push channel the driver validates this to be the channel's reduce
+    /// identity (re-sent `min`/`max` messages stay idempotent, `add`
+    /// outboxes restart from zero).
+    pub pad: Value,
+}
+
+impl FieldSpec {
+    pub fn i32(name: &'static str, role: Role, pad: i32) -> FieldSpec {
+        FieldSpec { name, ty: FieldType::I32, role, pad: Value::I32(pad) }
+    }
+    pub fn f32(name: &'static str, role: Role, pad: f32) -> FieldSpec {
+        FieldSpec { name, ty: FieldType::F32, role, pad: Value::F32(pad) }
+    }
+}
+
+/// Declarative communication op over schema fields. The driver resolves
+/// these to engine [`CommOp`]s with array indices and dtype-checked
+/// reductions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommDecl {
+    /// Push channel with a `min` reduction (dtype from the field).
+    PushMin(FieldId),
+    /// Push channel with a `max` reduction (f32 — widest path).
+    PushMax(FieldId),
+    /// Push channel with an f32 `add` reduction. Order-sensitive: the
+    /// engine falls back to canonical-order release (DESIGN.md §4.2) and
+    /// the driver's scatter kernels iterate in canonical vertex order
+    /// (DESIGN.md §9).
+    PushAdd(FieldId),
+    /// Pull channel: ghost slots are overwritten with remote real values
+    /// before each compute.
+    Pull(FieldId),
+    /// BC's paired level+σ scatter ([`CommOp::DistSigma`]).
+    DistSigma { dist: FieldId, sigma: FieldId },
+}
+
+/// Which vertices a kernel visits in a superstep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// Every vertex, every superstep (fixed-round programs).
+    Always,
+    /// Vertices whose i32 field equals [`VertexProgram::current_level`]
+    /// (level-synchronous programs).
+    LevelEquals(FieldId),
+}
+
+/// The kernel family the driver derives a cycle's compute phase from.
+/// Families cover the paper's algorithm classes; adding a family extends
+/// every program at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Monotone value propagation (SSSP, CC, widest path): a vertex whose
+    /// `value` improved past its `shadow` since it last relaxed scatters
+    /// [`VertexProgram::edge_update`] along its out-edges with the
+    /// channel's `min`/`max` reduction. Activation is the monotone trick
+    /// of paper Fig. 20: inbox improvements re-activate without flags.
+    MonotoneScatter { value: FieldId, shadow: FieldId },
+    /// Level-synchronous traversal (BFS): frontier vertices (`level ==
+    /// current_level`) expand out-edges, claiming unvisited local targets
+    /// through the cache-resident visited bitmap (paper Fig. 11/12). The
+    /// driver also derives the bottom-up **pull** kernel over the
+    /// partition transpose with early exit (DESIGN.md §8), frontier
+    /// stats for the α/β policy, and bitmap rebuilds after migrations.
+    ///
+    /// Contract: a traversal program's [`VertexProgram::edge_update`] must
+    /// be **edge-uniform** — `Some`, weight-independent, and a function of
+    /// the frontier level only (BFS: `cur + 1`). The claim protocol and
+    /// the derived pull kernel apply one update value per superstep; the
+    /// driver evaluates `edge_update` once per superstep with weight 0.
+    Traversal { level: FieldId },
+    /// BC's forward sweep: traversal that additionally accumulates
+    /// shortest-path counts (σ) into targets settled exactly one level
+    /// deeper, iterated in canonical order (the σ adds are f32). The
+    /// per-edge behavior is fixed by the paired [`CommDecl::DistSigma`].
+    TraversalSigma { dist: FieldId, sigma: FieldId },
+    /// Gather (pull-based PageRank, BC backward): each active vertex sums
+    /// `src` over its adjacency and applies the result via
+    /// [`VertexProgram::gather_apply`]; afterwards every vertex runs
+    /// [`VertexProgram::publish`] (contribution/ratio refresh).
+    Gather { src: FieldId, active: Activation },
+    /// Push-mode PageRank: fold the accumulated sums into the value
+    /// ([`VertexProgram::fold`]), then scatter
+    /// [`VertexProgram::scatter_value`] into `accum` along out-edges in
+    /// canonical order. The final fixed superstep is fold-only (the last
+    /// round's remote partial sums land during communication).
+    FoldScatter { accum: FieldId },
+}
+
+/// Accelerator program binding for one cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelSpec {
+    /// Program name in the AOT manifest (`python/compile/model.py`).
+    /// Naming a program that is not lowered (e.g. `pagerank_push`) keeps
+    /// the algorithm CPU-only: accelerator runs fail at manifest lookup
+    /// with an actionable message.
+    pub name: &'static str,
+    pub n_si32: usize,
+    pub n_sf32: usize,
+}
+
+/// One BSP cycle's declarative plan.
+#[derive(Debug, Clone)]
+pub struct CyclePlan {
+    pub kernel: Kernel,
+    pub comm: Vec<CommDecl>,
+    /// Fields shipped to the accelerator this cycle, in program order.
+    /// `None` = every [`Role::Device`] field in schema order (BC's forward
+    /// cycle narrows this to `[dist, numsp]`).
+    pub device: Option<Vec<FieldId>>,
+    pub accel: AccelSpec,
+}
+
+/// Static program description — the typed counterpart of [`AlgSpec`].
+#[derive(Debug, Clone, Copy)]
+pub struct ProgramMeta {
+    pub name: &'static str,
+    /// Requires edge weights (SSSP, widest path).
+    pub needs_weights: bool,
+    /// Operates on the undirected view (CC).
+    pub undirected: bool,
+    /// Operates on the reversed graph (pull-based PageRank); also selects
+    /// the accelerator's [`EdgeOrientation`].
+    pub reversed: bool,
+    /// Fixed superstep count per cycle; `None` → run to quiescence.
+    pub fixed_rounds: Option<usize>,
+    /// Which field carries the per-vertex result.
+    pub output: FieldId,
+}
+
+/// The typed vertex-program interface. Implementations declare *what* the
+/// algorithm is; the [`ProgramDriver`] owns *how* it executes.
+pub trait VertexProgram: Sync {
+    fn meta(&self) -> ProgramMeta;
+    fn schema(&self) -> Vec<FieldSpec>;
+    fn plan(&self, cycle: usize) -> CyclePlan;
+
+    /// BSP cycles (1 for everything except BC's forward+backward).
+    fn cycles(&self) -> usize {
+        1
+    }
+
+    /// One-time hook before partitioning (PageRank captures |V| and the
+    /// original out-degrees here).
+    fn prepare(&mut self, _original: &CsrGraph, _prepared: &CsrGraph) {}
+
+    /// Initialize one local vertex's fields. The driver pre-fills every
+    /// array with the field pads, so programs only write what differs
+    /// (the source's level/distance, a vertex's own label, …).
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>);
+
+    /// Hook at the start of each cycle (BC computes the max level and
+    /// seeds the deepest ratios here). `states` follows the schema layout:
+    /// `arrays[i]` is state field `i` (device fields first — schema order
+    /// restricted to [`Role::Device`]/[`Role::Host`]).
+    fn begin_cycle(&mut self, _cycle: usize, _pg: &PartitionedGraph, _states: &mut [AlgState]) {}
+
+    /// The level that [`Activation::LevelEquals`] and the traversal
+    /// kernels compare against (BC's backward sweep counts down).
+    fn current_level(&self, ctx: &StepCtx) -> i32 {
+        ctx.superstep as i32
+    }
+
+    /// Per-edge update for the scatter families: given the source vertex's
+    /// value (of the kernel's `value`/`level` field) and the edge weight,
+    /// produce the value delivered to the target — applied with the
+    /// field's declared reduction. `None` skips the edge.
+    fn edge_update(&self, _ctx: &StepCtx, _src: Value, _w: f32) -> Option<Value> {
+        None
+    }
+
+    /// [`Kernel::Gather`]: apply the adjacency sum to vertex `v`; returns
+    /// the number of state writes performed (instrumentation).
+    fn gather_apply(&self, _ctx: &StepCtx, _v: usize, _f: &Fields<'_>, _sum: f32) -> u64 {
+        panic!("program declared Kernel::Gather but does not implement gather_apply")
+    }
+
+    /// [`Kernel::Gather`]: per-vertex publish sweep after the gather
+    /// (PageRank refreshes contributions, BC publishes ratios).
+    fn publish(&self, _ctx: &StepCtx, _v: usize, _f: &Fields<'_>) {}
+
+    /// [`Kernel::FoldScatter`]: fold the accumulator into the value for
+    /// vertex `v` (runs for supersteps ≥ 1); returns writes performed.
+    fn fold(&self, _ctx: &StepCtx, _v: usize, _f: &Fields<'_>) -> u64 {
+        panic!("program declared Kernel::FoldScatter but does not implement fold")
+    }
+
+    /// [`Kernel::FoldScatter`]: the value vertex `v` scatters along its
+    /// out-edges this superstep (`0.0` skips the vertex).
+    fn scatter_value(&self, _ctx: &StepCtx, _v: usize, _f: &Fields<'_>) -> f32 {
+        panic!("program declared Kernel::FoldScatter but does not implement scatter_value")
+    }
+
+    /// Skip this superstep's compute entirely (BC's backward cycle guards
+    /// `current_level < 1`: the source must never accumulate dependency).
+    /// Skipped supersteps report `changed = true` so fixed-length cycles
+    /// keep their superstep count.
+    fn skip_superstep(&self, _ctx: &StepCtx) -> bool {
+        false
+    }
+
+    /// Custom cycle termination; `None` uses the default (fixed rounds, or
+    /// quiescence). BC overrides both cycles.
+    fn cycle_done(&self, _cycle: usize, _next_superstep: usize, _any_changed: bool) -> Option<bool> {
+        None
+    }
+
+    /// Scalar inputs for the accelerator program (lengths must match the
+    /// plan's [`AccelSpec`]).
+    fn scalars_i32(&self, _ctx: &StepCtx) -> Vec<i32> {
+        vec![]
+    }
+    fn scalars_f32(&self, _ctx: &StepCtx) -> Vec<f32> {
+        vec![]
+    }
+
+    /// Traversed-edges accounting for TEPS (paper §5) — each program owns
+    /// its own formula instead of a stringly-typed dispatch.
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        g.edge_count() as u64 * rounds.max(1) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed state access
+// ---------------------------------------------------------------------------
+
+/// Where a schema field resolved to in the built [`AlgState`].
+#[derive(Debug, Clone, Copy)]
+enum Slot {
+    State(usize),
+    Aux(usize),
+}
+
+/// Typed per-vertex writer handed to [`VertexProgram::init_vertex`].
+pub struct InitRow<'a> {
+    arrays: &'a mut [StateArray],
+    aux: &'a mut [StateArray],
+    slots: &'a [Slot],
+    v: usize,
+}
+
+impl InitRow<'_> {
+    fn slot_mut(&mut self, f: FieldId) -> &mut StateArray {
+        match self.slots[f.0] {
+            Slot::State(i) => &mut self.arrays[i],
+            Slot::Aux(i) => &mut self.aux[i],
+        }
+    }
+    pub fn set_i32(&mut self, f: FieldId, x: i32) {
+        let v = self.v;
+        self.slot_mut(f).as_i32_mut()[v] = x;
+    }
+    pub fn set_f32(&mut self, f: FieldId, x: f32) {
+        let v = self.v;
+        self.slot_mut(f).as_f32_mut()[v] = x;
+    }
+}
+
+/// Typed view over one partition's state during a superstep, indexed by
+/// schema [`FieldId`]. State fields are atomic cells (relaxed ordering —
+/// the BSP barrier provides synchronization); aux fields are read-only.
+pub struct Fields<'a> {
+    cells: Vec<StateCells<'a>>,
+    aux: Vec<AuxSlice<'a>>,
+    slots: &'a [Slot],
+}
+
+enum StateCells<'a> {
+    I32(&'a [AtomicI32]),
+    F32(&'a [AtomicU32]),
+}
+
+enum AuxSlice<'a> {
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+impl<'a> Fields<'a> {
+    fn new(state: &'a mut AlgState, slots: &'a [Slot]) -> Fields<'a> {
+        let AlgState { arrays, aux, .. } = state;
+        let cells = arrays
+            .iter_mut()
+            .map(|a| match a {
+                StateArray::I32(v) => StateCells::I32(as_atomic_i32_cells(v)),
+                StateArray::F32(v) => StateCells::F32(as_atomic_f32_cells(v)),
+            })
+            .collect();
+        let aux = aux
+            .iter()
+            .map(|a| match a {
+                StateArray::I32(v) => AuxSlice::I32(v),
+                StateArray::F32(v) => AuxSlice::F32(v),
+            })
+            .collect();
+        Fields { cells, aux, slots }
+    }
+
+    fn state_cells(&self, f: FieldId) -> &StateCells<'a> {
+        match self.slots[f.0] {
+            Slot::State(i) => &self.cells[i],
+            Slot::Aux(_) => panic!("field {} is aux (read via aux accessors)", f.0),
+        }
+    }
+
+    pub fn i32(&self, f: FieldId, v: usize) -> i32 {
+        match self.slots[f.0] {
+            Slot::State(i) => match &self.cells[i] {
+                StateCells::I32(c) => c[v].load(Ordering::Relaxed),
+                StateCells::F32(_) => panic!("field {} is f32", f.0),
+            },
+            Slot::Aux(i) => match &self.aux[i] {
+                AuxSlice::I32(s) => s[v],
+                AuxSlice::F32(_) => panic!("field {} is f32", f.0),
+            },
+        }
+    }
+
+    pub fn f32(&self, f: FieldId, v: usize) -> f32 {
+        match self.slots[f.0] {
+            Slot::State(i) => match &self.cells[i] {
+                StateCells::F32(c) => f32::from_bits(c[v].load(Ordering::Relaxed)),
+                StateCells::I32(_) => panic!("field {} is i32", f.0),
+            },
+            Slot::Aux(i) => match &self.aux[i] {
+                AuxSlice::F32(s) => s[v],
+                AuxSlice::I32(_) => panic!("field {} is i32", f.0),
+            },
+        }
+    }
+
+    pub fn set_i32(&self, f: FieldId, v: usize, x: i32) {
+        match self.state_cells(f) {
+            StateCells::I32(c) => c[v].store(x, Ordering::Relaxed),
+            StateCells::F32(_) => panic!("field {} is f32", f.0),
+        }
+    }
+
+    pub fn set_f32(&self, f: FieldId, v: usize, x: f32) {
+        match self.state_cells(f) {
+            StateCells::F32(c) => c[v].store(x.to_bits(), Ordering::Relaxed),
+            StateCells::I32(_) => panic!("field {} is i32", f.0),
+        }
+    }
+
+    pub fn add_f32(&self, f: FieldId, v: usize, x: f32) {
+        match self.state_cells(f) {
+            StateCells::F32(c) => {
+                atomic_add_f32(&c[v], x);
+            }
+            StateCells::I32(_) => panic!("field {} is i32", f.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// The generic adapter that runs any [`VertexProgram`] through the engine's
+/// [`Algorithm`] interface. Construct with [`ProgramDriver::build`] — schema
+/// and plan validation happens there, once, with typed errors.
+pub struct ProgramDriver<P: VertexProgram> {
+    program: P,
+    schema: Vec<FieldSpec>,
+    /// Schema index → storage slot.
+    slots: Vec<Slot>,
+    n_state: usize,
+    /// Per-cycle kernel, cached at construction so the per-superstep
+    /// dispatch never re-derives the plan.
+    kernels: Vec<Kernel>,
+    /// Per-cycle monotone improvement direction (`Some(upward)` for
+    /// [`Kernel::MonotoneScatter`] cycles), cached at construction.
+    monotone_upward: Vec<Option<bool>>,
+}
+
+impl<P: VertexProgram> ProgramDriver<P> {
+    /// Validate the program's schema and every cycle plan; a mis-declared
+    /// program fails here — before any graph is partitioned or state
+    /// built — with an error naming the offending field.
+    pub fn build(program: P) -> Result<ProgramDriver<P>> {
+        let schema = program.schema();
+        let meta = program.meta();
+        if schema.is_empty() {
+            bail!("program '{}': empty schema", meta.name);
+        }
+        for (i, f) in schema.iter().enumerate() {
+            if f.pad.field_type() != f.ty {
+                bail!(
+                    "program '{}': field '{}' is {} but its pad is {}",
+                    meta.name,
+                    f.name,
+                    f.ty.name(),
+                    f.pad.field_type().name()
+                );
+            }
+            if schema[..i].iter().any(|g| g.name == f.name) {
+                bail!("program '{}': duplicate field name '{}'", meta.name, f.name);
+            }
+        }
+        let mut slots = Vec::with_capacity(schema.len());
+        let (mut n_state, mut n_aux) = (0usize, 0usize);
+        for f in &schema {
+            match f.role {
+                Role::Device | Role::Host => {
+                    slots.push(Slot::State(n_state));
+                    n_state += 1;
+                }
+                Role::Aux => {
+                    slots.push(Slot::Aux(n_aux));
+                    n_aux += 1;
+                }
+            }
+        }
+        let mut driver = ProgramDriver {
+            program,
+            schema,
+            slots,
+            n_state,
+            kernels: Vec::new(),
+            monotone_upward: Vec::new(),
+        };
+        for cycle in 0..driver.program.cycles() {
+            driver.validate_plan(cycle)?;
+            let plan = driver.program.plan(cycle);
+            let upward = match plan.kernel {
+                Kernel::MonotoneScatter { value, .. } => {
+                    Some(driver.monotone_direction(&plan, value)?)
+                }
+                _ => None,
+            };
+            driver.monotone_upward.push(upward);
+            driver.kernels.push(plan.kernel);
+        }
+        let out = meta.output;
+        driver.check_field(out, "output", None)?;
+        if !matches!(driver.slots.get(out.0), Some(Slot::State(_))) {
+            bail!(
+                "program '{}': output field '{}' must be state, not aux",
+                meta.name,
+                driver.field_name(out)
+            );
+        }
+        Ok(driver)
+    }
+
+    /// The wrapped program (read access for tests and tools). Named
+    /// `inner` so it cannot shadow [`Algorithm::program`] on concrete
+    /// driver types.
+    pub fn inner(&self) -> &P {
+        &self.program
+    }
+
+    fn field_name(&self, f: FieldId) -> &'static str {
+        self.schema.get(f.0).map_or("<out of range>", |s| s.name)
+    }
+
+    fn check_field(&self, f: FieldId, what: &str, want: Option<FieldType>) -> Result<()> {
+        let meta = self.program.meta();
+        let Some(spec) = self.schema.get(f.0) else {
+            bail!(
+                "program '{}': {what} references field {} but the schema has {} fields",
+                meta.name,
+                f.0,
+                self.schema.len()
+            );
+        };
+        if let Some(ty) = want {
+            if spec.ty != ty {
+                bail!(
+                    "program '{}': {what} needs a {} field, but '{}' is {}",
+                    meta.name,
+                    ty.name(),
+                    spec.name,
+                    spec.ty.name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn check_state_field(&self, f: FieldId, what: &str, want: Option<FieldType>) -> Result<()> {
+        self.check_field(f, what, want)?;
+        if self.schema[f.0].role == Role::Aux {
+            bail!(
+                "program '{}': {what} may not use aux field '{}' (aux is constant)",
+                self.program.meta().name,
+                self.field_name(f)
+            );
+        }
+        Ok(())
+    }
+
+    /// Pad must be the push reduction's identity: ghost slots are
+    /// initialized from it and re-sent messages must be no-ops.
+    fn check_identity(&self, f: FieldId, want: Value, chan: &str) -> Result<()> {
+        let spec = &self.schema[f.0];
+        let ok = match (spec.pad, want) {
+            (Value::I32(a), Value::I32(b)) => a == b,
+            (Value::F32(a), Value::F32(b)) => a.to_bits() == b.to_bits(),
+            _ => false,
+        };
+        if !ok {
+            bail!(
+                "program '{}': field '{}' is on a {chan} channel, so its pad must be the \
+                 reduce identity {want:?}, got {:?}",
+                self.program.meta().name,
+                spec.name,
+                spec.pad
+            );
+        }
+        Ok(())
+    }
+
+    fn validate_plan(&self, cycle: usize) -> Result<()> {
+        let meta = self.program.meta();
+        let plan = self.program.plan(cycle);
+        for decl in &plan.comm {
+            match *decl {
+                CommDecl::PushMin(f) => {
+                    self.check_state_field(f, "PushMin", None)?;
+                    let id = match self.schema[f.0].ty {
+                        FieldType::I32 => Value::I32(INF_I32),
+                        FieldType::F32 => Value::F32(f32::INFINITY),
+                    };
+                    self.check_identity(f, id, "push-min")?;
+                }
+                CommDecl::PushMax(f) => {
+                    self.check_state_field(f, "PushMax", Some(FieldType::F32))?;
+                    self.check_identity(f, Value::F32(f32::NEG_INFINITY), "push-max")?;
+                }
+                CommDecl::PushAdd(f) => {
+                    self.check_state_field(f, "PushAdd", Some(FieldType::F32))?;
+                    self.check_identity(f, Value::F32(0.0), "push-add")?;
+                }
+                CommDecl::Pull(f) => self.check_state_field(f, "Pull", None)?,
+                CommDecl::DistSigma { dist, sigma } => {
+                    self.check_state_field(dist, "DistSigma.dist", Some(FieldType::I32))?;
+                    self.check_state_field(sigma, "DistSigma.sigma", Some(FieldType::F32))?;
+                    self.check_identity(dist, Value::I32(INF_I32), "dist-sigma")?;
+                    self.check_identity(sigma, Value::F32(0.0), "dist-sigma")?;
+                }
+            }
+        }
+        match plan.kernel {
+            Kernel::MonotoneScatter { value, shadow } => {
+                self.check_state_field(value, "MonotoneScatter.value", None)?;
+                self.check_state_field(shadow, "MonotoneScatter.shadow", None)?;
+                if value == shadow {
+                    bail!(
+                        "program '{}': MonotoneScatter value and shadow must be distinct \
+                         fields (both are '{}')",
+                        meta.name,
+                        self.field_name(value)
+                    );
+                }
+                if self.schema[value.0].ty != self.schema[shadow.0].ty {
+                    bail!(
+                        "program '{}': MonotoneScatter value '{}' and shadow '{}' must share a dtype",
+                        meta.name,
+                        self.field_name(value),
+                        self.field_name(shadow)
+                    );
+                }
+                // direction comes from the value field's push channel
+                self.monotone_direction(&plan, value)?;
+            }
+            Kernel::Traversal { level } => {
+                self.check_state_field(level, "Traversal.level", Some(FieldType::I32))?;
+                if !plan.comm.contains(&CommDecl::PushMin(level)) {
+                    bail!(
+                        "program '{}': Traversal level '{}' must travel on a PushMin channel",
+                        meta.name,
+                        self.field_name(level)
+                    );
+                }
+            }
+            Kernel::TraversalSigma { dist, sigma } => {
+                if !plan.comm.iter().any(|d| *d == CommDecl::DistSigma { dist, sigma }) {
+                    bail!(
+                        "program '{}': TraversalSigma must pair with a DistSigma channel",
+                        meta.name
+                    );
+                }
+            }
+            Kernel::Gather { src, active } => {
+                self.check_state_field(src, "Gather.src", Some(FieldType::F32))?;
+                if let Activation::LevelEquals(f) = active {
+                    self.check_state_field(f, "Gather activation", Some(FieldType::I32))?;
+                }
+            }
+            Kernel::FoldScatter { accum } => {
+                self.check_state_field(accum, "FoldScatter.accum", Some(FieldType::F32))?;
+                if !plan.comm.contains(&CommDecl::PushAdd(accum)) {
+                    bail!(
+                        "program '{}': FoldScatter accumulator '{}' must travel on a PushAdd channel",
+                        meta.name,
+                        self.field_name(accum)
+                    );
+                }
+                if meta.fixed_rounds.is_none() {
+                    bail!(
+                        "program '{}': FoldScatter requires fixed_rounds (the trailing \
+                         superstep is fold-only)",
+                        meta.name
+                    );
+                }
+            }
+        }
+        if let Some(device) = &plan.device {
+            for &f in device {
+                self.check_field(f, "device list", None)?;
+                if self.schema[f.0].role != Role::Device {
+                    bail!(
+                        "program '{}': device list includes '{}' whose role is {:?}",
+                        meta.name,
+                        self.field_name(f),
+                        self.schema[f.0].role
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Which way a monotone value improves, derived from its push channel.
+    fn monotone_direction(&self, plan: &CyclePlan, value: FieldId) -> Result<bool> {
+        for decl in &plan.comm {
+            match *decl {
+                CommDecl::PushMin(f) if f == value => return Ok(false), // improves downward
+                CommDecl::PushMax(f) if f == value => return Ok(true),  // improves upward
+                _ => {}
+            }
+        }
+        bail!(
+            "program '{}': MonotoneScatter value '{}' needs a PushMin or PushMax channel \
+             to derive its improvement direction",
+            self.program.meta().name,
+            self.field_name(value)
+        )
+    }
+
+    fn state_index(&self, f: FieldId) -> usize {
+        match self.slots[f.0] {
+            Slot::State(i) => i,
+            Slot::Aux(_) => unreachable!("validated as state field"),
+        }
+    }
+
+    fn aux_index(&self, f: FieldId) -> usize {
+        match self.slots[f.0] {
+            Slot::Aux(i) => i,
+            Slot::State(_) => unreachable!("validated as aux field"),
+        }
+    }
+
+    /// Does any cycle derive a pull kernel? (Traversal programs only.)
+    fn is_traversal(&self) -> Option<FieldId> {
+        match self.kernels.first() {
+            Some(&Kernel::Traversal { level }) if self.kernels.len() == 1 => Some(level),
+            _ => None,
+        }
+    }
+
+    /// Rebuild the visited bitmap from the level field: a bit is set iff
+    /// the vertex already holds a level (claims only ever accompany a
+    /// settle to a finite level, so bit ⊆ finite always holds).
+    fn build_bitmap(&self, level: FieldId, part: &Partition, state: &mut AlgState) {
+        let mut bitmap = vec![0u64; part.nv.div_ceil(64).max(1)];
+        let levels = state.arrays[self.state_index(level)].as_i32();
+        for (v, &l) in levels.iter().take(part.nv).enumerate() {
+            if l != INF_I32 {
+                bitmap[v / 64] |= 1 << (v % 64);
+            }
+        }
+        state.scratch = bitmap;
+    }
+}
+
+impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
+    fn spec(&self) -> AlgSpec {
+        let m = self.program.meta();
+        AlgSpec {
+            name: m.name,
+            needs_weights: m.needs_weights,
+            undirected: m.undirected,
+            reversed: m.reversed,
+            fixed_rounds: m.fixed_rounds,
+        }
+    }
+
+    fn cycles(&self) -> usize {
+        self.program.cycles()
+    }
+
+    fn prepare(&mut self, original: &CsrGraph, prepared: &CsrGraph) {
+        self.program.prepare(original, prepared);
+    }
+
+    fn init_state(&mut self, _pg: &PartitionedGraph, part: &Partition) -> AlgState {
+        let n = part.state_len();
+        let mut arrays = vec![StateArray::I32(Vec::new()); self.n_state];
+        let mut aux: Vec<StateArray> = Vec::new();
+        for (f, &slot) in self.schema.iter().zip(&self.slots) {
+            let arr = match f.pad {
+                Value::I32(x) => StateArray::I32(vec![x; n]),
+                Value::F32(x) => StateArray::F32(vec![x; n]),
+            };
+            match slot {
+                Slot::State(i) => arrays[i] = arr,
+                Slot::Aux(_) => aux.push(arr),
+            }
+        }
+        let mut st = AlgState { arrays, aux, scratch: Vec::new() };
+        for (l, &g) in part.local_to_global.iter().enumerate() {
+            let mut row = InitRow {
+                arrays: &mut st.arrays,
+                aux: &mut st.aux,
+                slots: &self.slots,
+                v: l,
+            };
+            self.program.init_vertex(g, &mut row);
+        }
+        if let Some(level) = self.is_traversal() {
+            self.build_bitmap(level, part, &mut st);
+        }
+        st
+    }
+
+    fn begin_cycle(&mut self, cycle: usize, pg: &PartitionedGraph, states: &mut [AlgState]) {
+        self.program.begin_cycle(cycle, pg, states);
+    }
+
+    fn channels(&self, cycle: usize) -> Vec<CommOp> {
+        self.program
+            .plan(cycle)
+            .comm
+            .iter()
+            .map(|decl| match *decl {
+                CommDecl::PushMin(f) => {
+                    let i = self.state_index(f);
+                    CommOp::Single(match self.schema[f.0].ty {
+                        FieldType::I32 => Channel::push_min_i32(i),
+                        FieldType::F32 => Channel::push_min_f32(i),
+                    })
+                }
+                CommDecl::PushMax(f) => CommOp::Single(Channel::push_max_f32(self.state_index(f))),
+                CommDecl::PushAdd(f) => CommOp::Single(Channel::push_add_f32(self.state_index(f))),
+                CommDecl::Pull(f) => {
+                    let i = self.state_index(f);
+                    CommOp::Single(match self.schema[f.0].ty {
+                        FieldType::I32 => Channel::pull_i32(i),
+                        FieldType::F32 => Channel::pull_f32(i),
+                    })
+                }
+                CommDecl::DistSigma { dist, sigma } => CommOp::DistSigma {
+                    dist: self.state_index(dist),
+                    sigma: self.state_index(sigma),
+                },
+            })
+            .collect()
+    }
+
+    fn program(&self, cycle: usize) -> ProgramSpec {
+        let plan = self.program.plan(cycle);
+        let meta = self.program.meta();
+        let device: Vec<FieldId> = plan.device.clone().unwrap_or_else(|| {
+            self.schema
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| f.role == Role::Device)
+                .map(|(i, _)| FieldId(i))
+                .collect()
+        });
+        ProgramSpec {
+            name: plan.accel.name,
+            arrays: device.iter().map(|&f| self.state_index(f)).collect(),
+            pads: device.iter().map(|&f| self.schema[f.0].pad.to_pad()).collect(),
+            aux: self
+                .schema
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| f.role == Role::Aux)
+                .map(|(i, _)| self.aux_index(FieldId(i)))
+                .collect(),
+            needs_weights: meta.needs_weights,
+            n_si32: plan.accel.n_si32,
+            n_sf32: plan.accel.n_sf32,
+            orientation: if meta.reversed {
+                EdgeOrientation::Reversed
+            } else {
+                EdgeOrientation::Forward
+            },
+        }
+    }
+
+    fn scalars_i32(&self, ctx: &StepCtx) -> Vec<i32> {
+        self.program.scalars_i32(ctx)
+    }
+
+    fn scalars_f32(&self, ctx: &StepCtx) -> Vec<f32> {
+        self.program.scalars_f32(ctx)
+    }
+
+    fn supports_pull(&self) -> bool {
+        self.is_traversal().is_some()
+    }
+
+    /// Frontier shape ahead of superstep `next_superstep` for traversal
+    /// programs: one scan of the local levels counting the frontier
+    /// (`level == next`) and unexplored (`level == INF`) vertices with
+    /// their out-degree sums — the `m_f` / `m_u` inputs of the α/β policy.
+    fn frontier_stats(
+        &self,
+        part: &Partition,
+        state: &AlgState,
+        next_superstep: usize,
+    ) -> Option<FrontierStats> {
+        let level = self.is_traversal()?;
+        // classify against the same level the kernels will compare with
+        // (current_level of the coming superstep), not the raw counter —
+        // keeps custom level mappings consistent with their kernels.
+        let probe = StepCtx {
+            cycle: 0,
+            superstep: next_superstep,
+            threads: 1,
+            instrument: false,
+            direction: Direction::Push,
+        };
+        let cur = self.program.current_level(&probe);
+        let levels = state.arrays[self.state_index(level)].as_i32();
+        let ro = &part.csr.row_offsets;
+        let mut s = FrontierStats { total_verts: part.nv as u64, ..Default::default() };
+        for (v, &l) in levels.iter().take(part.nv).enumerate() {
+            let deg = ro[v + 1] - ro[v];
+            if l == cur {
+                s.frontier_verts += 1;
+                s.frontier_edges += deg;
+            } else if l == INF_I32 {
+                s.unexplored_verts += 1;
+                s.unexplored_edges += deg;
+            }
+        }
+        Some(s)
+    }
+
+    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
+        if self.program.skip_superstep(ctx) {
+            return ComputeOut { changed: true, reads: 0, writes: 0 };
+        }
+        match self.kernels[ctx.cycle] {
+            Kernel::MonotoneScatter { value, shadow } => {
+                self.monotone_scatter(part, state, ctx, value, shadow)
+            }
+            Kernel::Traversal { level } => match ctx.direction {
+                Direction::Push => self.traversal_push(part, state, ctx, level),
+                Direction::Pull => self.traversal_pull(part, state, ctx, level),
+            },
+            Kernel::TraversalSigma { dist, sigma } => {
+                self.traversal_sigma(part, state, ctx, dist, sigma)
+            }
+            Kernel::Gather { src, active } => self.gather(part, state, ctx, src, active),
+            Kernel::FoldScatter { accum } => self.fold_scatter(part, state, ctx, accum),
+        }
+    }
+
+    fn cycle_done(&self, cycle: usize, next_superstep: usize, any_changed: bool) -> bool {
+        if let Some(done) = self.program.cycle_done(cycle, next_superstep, any_changed) {
+            return done;
+        }
+        if let Some(r) = self.program.meta().fixed_rounds {
+            next_superstep >= r
+        } else {
+            !any_changed
+        }
+    }
+
+    fn output_array(&self) -> usize {
+        self.state_index(self.program.meta().output)
+    }
+
+    fn rebuild_scratch(&self, part: &Partition, state: &mut AlgState) {
+        if let Some(level) = self.is_traversal() {
+            self.build_bitmap(level, part, state);
+        }
+    }
+
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        self.program.traversed_edges(output, g, rounds)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Derived kernels
+// ---------------------------------------------------------------------------
+
+type Acc = (bool, u64, u64);
+
+fn merge(a: Acc, b: Acc) -> Acc {
+    (a.0 || b.0, a.1 + b.1, a.2 + b.2)
+}
+
+impl<P: VertexProgram> ProgramDriver<P> {
+    /// Monotone relaxation (paper Fig. 20's `active` pattern): a vertex
+    /// relaxes its out-edges when its value improved past the shadow —
+    /// which covers both local and inbox updates without explicit flags.
+    fn monotone_scatter(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        value: FieldId,
+        shadow: FieldId,
+    ) -> ComputeOut {
+        let upward = self.monotone_upward[ctx.cycle].expect("cached at construction");
+        let (vi, si) = (self.state_index(value), self.state_index(shadow));
+        let needs_w = self.program.meta().needs_weights;
+        match self.schema[value.0].ty {
+            FieldType::I32 => {
+                let (lo_arr, hi_arr) = split_two_mut(&mut state.arrays, vi, si);
+                let cells = as_atomic_i32_cells(lo_arr.as_i32_mut());
+                let shadow_cells = as_atomic_i32_cells(hi_arr.as_i32_mut());
+                let fold = |lo: usize, hi: usize, acc: Acc| {
+                    let (mut changed, mut reads, mut writes) = acc;
+                    for v in lo..hi {
+                        let dv = cells[v].load(Ordering::Relaxed);
+                        if ctx.instrument {
+                            reads += 2; // value[v], shadow[v]
+                        }
+                        let sh = shadow_cells[v].load(Ordering::Relaxed);
+                        if (!upward && dv >= sh) || (upward && dv <= sh) {
+                            continue;
+                        }
+                        shadow_cells[v].store(dv, Ordering::Relaxed);
+                        let ts = part.targets(v as u32);
+                        let ws = if needs_w { part.weights(v as u32) } else { &[] };
+                        for (k, &t) in ts.iter().enumerate() {
+                            let w = if needs_w { ws[k] } else { 0.0 };
+                            let Some(up) = self.program.edge_update(ctx, Value::I32(dv), w)
+                            else {
+                                continue;
+                            };
+                            let msg = up.expect_i32();
+                            // only min-reduce exists for i32 values
+                            let old = cells[t as usize].fetch_min(msg, Ordering::Relaxed);
+                            if ctx.instrument {
+                                reads += 1;
+                            }
+                            if msg < old {
+                                changed = true;
+                                if ctx.instrument {
+                                    writes += 1;
+                                }
+                            }
+                        }
+                    }
+                    (changed, reads, writes)
+                };
+                let (changed, reads, writes) =
+                    parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
+                ComputeOut { changed, reads, writes }
+            }
+            FieldType::F32 => {
+                let (lo_arr, hi_arr) = split_two_mut(&mut state.arrays, vi, si);
+                let cells = as_atomic_f32_cells(lo_arr.as_f32_mut());
+                let shadow_cells = as_atomic_f32_cells(hi_arr.as_f32_mut());
+                let fold = |lo: usize, hi: usize, acc: Acc| {
+                    let (mut changed, mut reads, mut writes) = acc;
+                    for v in lo..hi {
+                        let dv = f32::from_bits(cells[v].load(Ordering::Relaxed));
+                        if ctx.instrument {
+                            reads += 2;
+                        }
+                        let sh = f32::from_bits(shadow_cells[v].load(Ordering::Relaxed));
+                        if (!upward && dv >= sh) || (upward && dv <= sh) {
+                            continue;
+                        }
+                        shadow_cells[v].store(dv.to_bits(), Ordering::Relaxed);
+                        let ts = part.targets(v as u32);
+                        let ws = if needs_w { part.weights(v as u32) } else { &[] };
+                        for (k, &t) in ts.iter().enumerate() {
+                            let w = if needs_w { ws[k] } else { 0.0 };
+                            let Some(up) = self.program.edge_update(ctx, Value::F32(dv), w)
+                            else {
+                                continue;
+                            };
+                            let msg = up.expect_f32();
+                            let old = if upward {
+                                atomic_max_f32(&cells[t as usize], msg)
+                            } else {
+                                atomic_min_f32(&cells[t as usize], msg)
+                            };
+                            if ctx.instrument {
+                                reads += 1;
+                            }
+                            if (upward && msg > old) || (!upward && msg < old) {
+                                changed = true;
+                                if ctx.instrument {
+                                    writes += 1;
+                                }
+                            }
+                        }
+                    }
+                    (changed, reads, writes)
+                };
+                let (changed, reads, writes) =
+                    parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
+                ComputeOut { changed, reads, writes }
+            }
+        }
+    }
+
+    /// Top-down traversal (paper Figure 11): the frontier expands its
+    /// out-edges; local targets go through the cache-resident visited
+    /// bitmap's claim protocol, boundary targets reduce into ghost slots.
+    fn traversal_push(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        level: FieldId,
+    ) -> ComputeOut {
+        let cur = self.program.current_level(ctx);
+        let up = self
+            .program
+            .edge_update(ctx, Value::I32(cur), 0.0)
+            .expect("traversal programs must produce a frontier update")
+            .expect_i32();
+        let nv = part.nv;
+        let li = self.state_index(level);
+        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
+        let cells = as_atomic_i32_cells(arrays[li].as_i32_mut());
+        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
+        // layout as u64.
+        let bitmap: &[AtomicU64] = unsafe {
+            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
+        };
+
+        let fold = |lo: usize, hi: usize, acc: Acc| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                if ctx.instrument {
+                    reads += 1; // level[v]
+                }
+                if cells[v].load(Ordering::Relaxed) != cur {
+                    continue;
+                }
+                for &t in part.targets(v as u32) {
+                    let t = t as usize;
+                    if t < nv {
+                        // visited-bitmap fast path (Fig 11 lines 6-7)
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        let bit = 1u64 << (t % 64);
+                        if bitmap[t / 64].load(Ordering::Relaxed) & bit != 0 {
+                            continue;
+                        }
+                        // claim the bit; the level write races benignly
+                        // (all writers this superstep write the same value).
+                        let prev = bitmap[t / 64].fetch_or(bit, Ordering::Relaxed);
+                        if prev & bit == 0 {
+                            // might already hold a level delivered by the
+                            // inbox (stale bitmap) — min keeps it correct.
+                            cells[t].fetch_min(up, Ordering::Relaxed);
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    } else {
+                        // boundary edge: reduce into the ghost slot
+                        let prev = cells[t].fetch_min(up, Ordering::Relaxed);
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        if prev > up {
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) =
+            parallel_reduce(nv, ctx.threads, (false, 0, 0), fold, merge);
+        ComputeOut { changed, reads, writes }
+    }
+
+    /// Bottom-up traversal (DESIGN.md §8), derived from the same program:
+    ///
+    /// - a **frontier** vertex relaxes only its boundary tail (ghost
+    ///   slots) — its local out-neighbors are discovered from the probe
+    ///   side instead;
+    /// - an **unexplored** vertex probes its in-neighbors through the
+    ///   transpose CSR and claims the frontier update on the first parent
+    ///   at `current_level`, then stops probing (the early exit that makes
+    ///   bottom-up win on dense frontiers).
+    ///
+    /// Discoveries, ghost-slot writes, and the `changed` vote are exactly
+    /// the push kernel's — levels are identical bits either way, which is
+    /// what lets the golden conformance suite compare the two
+    /// byte-for-byte.
+    fn traversal_pull(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        level: FieldId,
+    ) -> ComputeOut {
+        let cur = self.program.current_level(ctx);
+        let up = self
+            .program
+            .edge_update(ctx, Value::I32(cur), 0.0)
+            .expect("traversal programs must produce a frontier update")
+            .expect_i32();
+        let nv = part.nv;
+        let tr = part.transpose();
+        let li = self.state_index(level);
+        let (arrays, scratch) = (&mut state.arrays, &mut state.scratch);
+        let cells = as_atomic_i32_cells(arrays[li].as_i32_mut());
+        // SAFETY: scratch is exclusively borrowed; AtomicU64 has the same
+        // layout as u64.
+        let bitmap: &[AtomicU64] = unsafe {
+            std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
+        };
+
+        let fold = |lo: usize, hi: usize, acc: Acc| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for v in lo..hi {
+                let lv = cells[v].load(Ordering::Relaxed);
+                if ctx.instrument {
+                    reads += 1; // level[v]
+                }
+                if lv == cur {
+                    // frontier vertex: boundary edges keep push semantics
+                    // (remote partitions cannot probe our levels).
+                    let nl = part.csr.local_counts[v] as usize;
+                    for &t in &part.targets(v as u32)[nl..] {
+                        let prev = cells[t as usize].fetch_min(up, Ordering::Relaxed);
+                        if ctx.instrument {
+                            reads += 1;
+                        }
+                        if prev > up {
+                            if ctx.instrument {
+                                writes += 1;
+                            }
+                            changed = true;
+                        }
+                    }
+                    continue;
+                }
+                // unexplored vertex: probe in-neighbors, early-exit on the
+                // first frontier parent. The bitmap check mirrors the push
+                // kernel's claim protocol: a bit-set vertex is never
+                // re-discovered, a bit-unset vertex with an inbox-delivered
+                // level still gets the idempotent `min`.
+                //
+                // Deliberate trade-off (DESIGN.md §8): an inbox-discovered
+                // vertex keeps its bit unset until a local parent aligns
+                // with `cur`, so sustained pull mode may re-scan its
+                // transpose row across supersteps — the price of keeping
+                // the `changed` vote (and therefore superstep counts)
+                // bit-identical to push mode.
+                let bit = 1u64 << (v % 64);
+                if ctx.instrument {
+                    reads += 1; // bitmap word
+                }
+                if bitmap[v / 64].load(Ordering::Relaxed) & bit != 0 {
+                    continue;
+                }
+                for &u in tr.sources_of(v as u32) {
+                    if ctx.instrument {
+                        reads += 1; // level[u]
+                    }
+                    if cells[u as usize].load(Ordering::Relaxed) == cur {
+                        bitmap[v / 64].fetch_or(bit, Ordering::Relaxed);
+                        cells[v].fetch_min(up, Ordering::Relaxed);
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                        changed = true;
+                        break;
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) =
+            parallel_reduce(nv, ctx.threads, (false, 0, 0), fold, merge);
+        ComputeOut { changed, reads, writes }
+    }
+
+    /// BC forward (paper Figure 18 forwardPropagation): settle levels with
+    /// `min`, then accumulate σ into targets settled exactly one level
+    /// deeper. Frontier scan in canonical (ascending global id) order: the
+    /// scan order is observable *only* through the f32 add order into each
+    /// target — canonical iteration makes that order placement-invariant
+    /// (DESIGN.md §9).
+    fn traversal_sigma(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        dist: FieldId,
+        sigma: FieldId,
+    ) -> ComputeOut {
+        let cur = self.program.current_level(ctx);
+        let (di, si) = (self.state_index(dist), self.state_index(sigma));
+        let (d_arr, s_arr) = split_two_mut(&mut state.arrays, di, si);
+        let dist_cells = as_atomic_i32_cells(d_arr.as_i32_mut());
+        let numsp_cells = as_atomic_f32_cells(s_arr.as_f32_mut());
+
+        let canon = &part.canonical_order;
+        let fold = |lo: usize, hi: usize, acc: Acc| {
+            let (mut changed, mut reads, mut writes) = acc;
+            for i in lo..hi {
+                let v = canon[i] as usize;
+                if ctx.instrument {
+                    reads += 1;
+                }
+                if dist_cells[v].load(Ordering::Relaxed) != cur {
+                    continue;
+                }
+                let v_numsp = f32::from_bits(numsp_cells[v].load(Ordering::Relaxed));
+                if ctx.instrument {
+                    reads += 1;
+                }
+                for &t in part.targets(v as u32) {
+                    let t = t as usize;
+                    // discover (Fig 18 lines 7-9): settle the level
+                    let prev = dist_cells[t].fetch_min(cur + 1, Ordering::Relaxed);
+                    if prev > cur + 1 {
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                    if ctx.instrument {
+                        reads += 1;
+                    }
+                    // accumulate σ (Fig 18 lines 11-12): only into
+                    // vertices/slots settled exactly one level deeper.
+                    // Within a superstep all writers write cur+1, so the
+                    // re-read is stable.
+                    if dist_cells[t].load(Ordering::Relaxed) == cur + 1 {
+                        atomic_add_f32(&numsp_cells[t], v_numsp);
+                        changed = true;
+                        if ctx.instrument {
+                            writes += 1;
+                        }
+                    }
+                }
+            }
+            (changed, reads, writes)
+        };
+        let (changed, reads, writes) =
+            parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
+        ComputeOut { changed, reads, writes }
+    }
+
+    /// Gather: each active vertex sums `src` over its adjacency (local CSR
+    /// order, so f32 sums are placement-invariant per vertex) and applies
+    /// it; then every vertex runs the publish sweep. Per-vertex writes are
+    /// disjoint, so the parallel phase is bit-identical at any thread
+    /// count. Always reports `changed` (gather programs terminate by
+    /// fixed rounds or a custom `cycle_done`).
+    fn gather(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        src: FieldId,
+        active: Activation,
+    ) -> ComputeOut {
+        let nv = part.nv;
+        let lvl = self.program.current_level(ctx);
+        let fields = Fields::new(state, &self.slots);
+        let program = &self.program;
+        let (reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (0u64, 0u64),
+            |lo, hi, acc| {
+                let (mut reads, mut writes) = acc;
+                for v in lo..hi {
+                    match active {
+                        Activation::Always => {}
+                        Activation::LevelEquals(f) => {
+                            if ctx.instrument {
+                                reads += 1;
+                            }
+                            if fields.i32(f, v) != lvl {
+                                continue;
+                            }
+                        }
+                    }
+                    let ts = part.targets(v as u32);
+                    let mut sum = 0f32;
+                    for &t in ts {
+                        sum += fields.f32(src, t as usize);
+                    }
+                    let w = program.gather_apply(ctx, v, &fields, sum);
+                    if ctx.instrument {
+                        reads += ts.len() as u64;
+                        writes += w;
+                    }
+                }
+                (reads, writes)
+            },
+            |a, b| (a.0 + b.0, a.1 + b.1),
+        );
+        // publish sweep (sequential: per-vertex, order-free)
+        for v in 0..nv {
+            program.publish(ctx, v, &fields);
+        }
+        let publish_writes = if ctx.instrument { nv as u64 } else { 0 };
+        ComputeOut { changed: true, reads, writes: writes + publish_writes }
+    }
+
+    /// Fold-then-scatter (push-mode PageRank): fold the previous round's
+    /// accumulated sums (local scatters + the remote partial sums the
+    /// communication phase delivered), then scatter this round's values in
+    /// canonical (ascending global id) order — the f32 adds into shared
+    /// accumulator cells then arrive in a placement-invariant sender order
+    /// (DESIGN.md §9). The trailing fixed superstep is fold-only.
+    fn fold_scatter(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        accum: FieldId,
+    ) -> ComputeOut {
+        let nv = part.nv;
+        let rounds = self
+            .program
+            .meta()
+            .fixed_rounds
+            .expect("validated at construction")
+            .saturating_sub(1);
+        let fields = Fields::new(state, &self.slots);
+        let program = &self.program;
+
+        let mut writes_seq = 0u64;
+        if ctx.superstep > 0 {
+            for v in 0..nv {
+                writes_seq += program.fold(ctx, v, &fields);
+            }
+        }
+        if ctx.superstep >= rounds {
+            return ComputeOut { changed: true, reads: 0, writes: writes_seq };
+        }
+
+        let canon = &part.canonical_order;
+        let (reads, writes) = parallel_reduce(
+            nv,
+            ctx.threads,
+            (0u64, 0u64),
+            |lo, hi, acc| {
+                let (mut reads, mut writes) = acc;
+                for i in lo..hi {
+                    let v = canon[i] as usize;
+                    let c = program.scatter_value(ctx, v, &fields);
+                    if c == 0.0 {
+                        continue;
+                    }
+                    for &t in part.targets(v as u32) {
+                        fields.add_f32(accum, t as usize, c);
+                    }
+                    if ctx.instrument {
+                        let deg = part.targets(v as u32).len() as u64;
+                        reads += 1 + deg;
+                        writes += deg;
+                    }
+                }
+                (reads, writes)
+            },
+            |a, b| (a.0 + b.0, a.1 + b.1),
+        );
+        ComputeOut { changed: true, reads, writes: writes + writes_seq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal well-formed program for driver-level tests: single i32
+    /// min-field monotone propagation (a degenerate CC).
+    struct MiniProgram;
+
+    const VAL: FieldId = FieldId(0);
+    const SHADOW: FieldId = FieldId(1);
+
+    impl VertexProgram for MiniProgram {
+        fn meta(&self) -> ProgramMeta {
+            ProgramMeta {
+                name: "mini",
+                needs_weights: false,
+                undirected: false,
+                reversed: false,
+                fixed_rounds: None,
+                output: VAL,
+            }
+        }
+        fn schema(&self) -> Vec<FieldSpec> {
+            vec![
+                FieldSpec::i32("val", Role::Device, INF_I32),
+                FieldSpec::i32("shadow", Role::Host, INF_I32),
+            ]
+        }
+        fn plan(&self, _cycle: usize) -> CyclePlan {
+            CyclePlan {
+                kernel: Kernel::MonotoneScatter { value: VAL, shadow: SHADOW },
+                comm: vec![CommDecl::PushMin(VAL)],
+                device: None,
+                accel: AccelSpec { name: "mini", n_si32: 0, n_sf32: 0 },
+            }
+        }
+        fn init_vertex(&self, g: u32, row: &mut InitRow<'_>) {
+            row.set_i32(VAL, g as i32);
+        }
+        fn edge_update(&self, _ctx: &StepCtx, src: Value, _w: f32) -> Option<Value> {
+            Some(src)
+        }
+    }
+
+    #[test]
+    fn valid_program_constructs_and_derives_spec() {
+        let d = ProgramDriver::build(MiniProgram).unwrap();
+        assert_eq!(d.spec().name, "mini");
+        assert!(!d.supports_pull());
+        let ops = d.channels(0);
+        assert_eq!(ops.len(), 1);
+        assert!(!ops[0].order_sensitive());
+        let prog = Algorithm::program(&d, 0);
+        assert_eq!(prog.arrays, vec![0], "host shadow must not ship");
+        assert_eq!(prog.name, "mini");
+        assert_eq!(d.output_array(), 0);
+    }
+
+    #[test]
+    fn mini_program_propagates_minima_end_to_end() {
+        use crate::engine::{self, EngineConfig};
+        use crate::graph::{CsrGraph, EdgeList};
+        let mut el = EdgeList::new(4);
+        el.push(3, 2);
+        el.push(2, 1);
+        el.push(1, 0);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut d = ProgramDriver::build(MiniProgram).unwrap();
+        let r = engine::run(&g, &mut d, &EngineConfig::host_only(1)).unwrap();
+        // edges point toward smaller ids, so every delivered label is
+        // larger than the receiver's own: the min-propagation quiesces
+        // after one superstep with each vertex keeping its own id
+        assert_eq!(r.output.as_i32(), &[0, 1, 2, 3]);
+    }
+
+    /// A program whose pad is not the channel's reduce identity.
+    struct BadPad;
+    impl VertexProgram for BadPad {
+        fn meta(&self) -> ProgramMeta {
+            ProgramMeta {
+                name: "badpad",
+                needs_weights: false,
+                undirected: false,
+                reversed: false,
+                fixed_rounds: None,
+                output: FieldId(0),
+            }
+        }
+        fn schema(&self) -> Vec<FieldSpec> {
+            vec![
+                FieldSpec::i32("val", Role::Device, 0), // must be INF_I32
+                FieldSpec::i32("shadow", Role::Host, INF_I32),
+            ]
+        }
+        fn plan(&self, _c: usize) -> CyclePlan {
+            CyclePlan {
+                kernel: Kernel::MonotoneScatter { value: FieldId(0), shadow: FieldId(1) },
+                comm: vec![CommDecl::PushMin(FieldId(0))],
+                device: None,
+                accel: AccelSpec { name: "badpad", n_si32: 0, n_sf32: 0 },
+            }
+        }
+        fn init_vertex(&self, _g: u32, _row: &mut InitRow<'_>) {}
+    }
+
+    #[test]
+    fn pad_identity_mismatch_is_a_typed_error() {
+        let err = ProgramDriver::build(BadPad).map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reduce identity"), "{msg}");
+        assert!(msg.contains("val"), "{msg}");
+    }
+
+    /// Comm channel on an aux (constant) field.
+    struct AuxComm;
+    impl VertexProgram for AuxComm {
+        fn meta(&self) -> ProgramMeta {
+            ProgramMeta {
+                name: "auxcomm",
+                needs_weights: false,
+                undirected: false,
+                reversed: false,
+                fixed_rounds: Some(1),
+                output: FieldId(0),
+            }
+        }
+        fn schema(&self) -> Vec<FieldSpec> {
+            vec![
+                FieldSpec::f32("rank", Role::Device, 0.0),
+                FieldSpec::f32("inv", Role::Aux, 0.0),
+            ]
+        }
+        fn plan(&self, _c: usize) -> CyclePlan {
+            CyclePlan {
+                kernel: Kernel::Gather { src: FieldId(0), active: Activation::Always },
+                comm: vec![CommDecl::Pull(FieldId(1))], // aux on a channel!
+                device: None,
+                accel: AccelSpec { name: "auxcomm", n_si32: 0, n_sf32: 0 },
+            }
+        }
+        fn init_vertex(&self, _g: u32, _row: &mut InitRow<'_>) {}
+    }
+
+    #[test]
+    fn aux_field_on_channel_is_a_typed_error() {
+        let err = ProgramDriver::build(AuxComm).map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("aux"), "{msg}");
+    }
+
+    /// f32 add channel on an i32 field (the old `as_f32` panic scenario).
+    struct DtypeClash;
+    impl VertexProgram for DtypeClash {
+        fn meta(&self) -> ProgramMeta {
+            ProgramMeta {
+                name: "clash",
+                needs_weights: false,
+                undirected: false,
+                reversed: false,
+                fixed_rounds: Some(2),
+                output: FieldId(0),
+            }
+        }
+        fn schema(&self) -> Vec<FieldSpec> {
+            vec![FieldSpec::i32("acc", Role::Device, 0)]
+        }
+        fn plan(&self, _c: usize) -> CyclePlan {
+            CyclePlan {
+                kernel: Kernel::FoldScatter { accum: FieldId(0) },
+                comm: vec![CommDecl::PushAdd(FieldId(0))],
+                device: None,
+                accel: AccelSpec { name: "clash", n_si32: 0, n_sf32: 0 },
+            }
+        }
+        fn init_vertex(&self, _g: u32, _row: &mut InitRow<'_>) {}
+    }
+
+    #[test]
+    fn add_channel_on_i32_field_is_a_typed_error() {
+        let err = ProgramDriver::build(DtypeClash).map(|_| ()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("f32"), "{msg}");
+        assert!(msg.contains("acc"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_field_is_a_typed_error() {
+        struct OutOfRange;
+        impl VertexProgram for OutOfRange {
+            fn meta(&self) -> ProgramMeta {
+                ProgramMeta {
+                    name: "oor",
+                    needs_weights: false,
+                    undirected: false,
+                    reversed: false,
+                    fixed_rounds: None,
+                    output: FieldId(7),
+                }
+            }
+            fn schema(&self) -> Vec<FieldSpec> {
+                vec![
+                    FieldSpec::i32("val", Role::Device, INF_I32),
+                    FieldSpec::i32("shadow", Role::Host, INF_I32),
+                ]
+            }
+            fn plan(&self, _c: usize) -> CyclePlan {
+                CyclePlan {
+                    kernel: Kernel::MonotoneScatter { value: FieldId(0), shadow: FieldId(1) },
+                    comm: vec![CommDecl::PushMin(FieldId(0))],
+                    device: None,
+                    accel: AccelSpec { name: "oor", n_si32: 0, n_sf32: 0 },
+                }
+            }
+            fn init_vertex(&self, _g: u32, _row: &mut InitRow<'_>) {}
+        }
+        let err = ProgramDriver::build(OutOfRange).map(|_| ()).unwrap_err();
+        assert!(format!("{err:#}").contains("2 fields"), "{err:#}");
+    }
+}

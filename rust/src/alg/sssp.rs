@@ -1,127 +1,93 @@
-//! Single-Source Shortest Path — Bellman-Ford (paper §7.3, Figure 20).
+//! Single-Source Shortest Path — Bellman-Ford (paper §7.3, Figure 20) on
+//! the typed vertex-program surface.
 //!
 //! The paper picks Bellman-Ford over Dijkstra/Δ-stepping because every
 //! active vertex can relax its edges in parallel — a good fit for the
-//! accelerator's bulk model. The CPU kernel keeps the paper's `active`
-//! optimization (a vertex relaxes only when its distance improved); the
-//! accelerator program relaxes **all** edges each superstep (Harish et al.
-//! 2007 style), which is exactly how the original CUDA kernels behave.
+//! accelerator's bulk model. The program declares a `dist` field on a
+//! push-min channel plus a host-only `relaxed_at` shadow and the
+//! [`Kernel::MonotoneScatter`] family; the driver derives the paper's
+//! `active` optimization from the shadow (a vertex relaxes only when its
+//! distance improved — locally or via the inbox — since it last relaxed:
+//! remote activation falls out of monotonicity, no explicit flags). The
+//! per-edge rule is one line: offer `dist[v] + w`.
 //!
-//! Remote activation falls out of monotonicity: instead of explicit active
-//! flags that the communication phase would have to maintain, each vertex
-//! remembers the distance it last relaxed at (`relaxed_at`); any vertex
-//! whose current distance is lower — whether improved locally or by an
-//! inbox message — is active.
+//! The accelerator program relaxes **all** edges each superstep (Harish et
+//! al. 2007 style), which is exactly how the original CUDA kernels behave.
 
-use super::{AlgSpec, Algorithm, ComputeOut, EdgeOrientation, Pad, ProgramSpec, StepCtx};
-use crate::engine::state::{AlgState, Channel, CommOp, StateArray};
-use crate::partition::{Partition, PartitionedGraph};
-use crate::util::atomic::{as_atomic_f32_cells, atomic_min_f32};
-use crate::util::threadpool::parallel_reduce;
-use std::sync::atomic::Ordering;
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, Value, VertexProgram,
+};
+use super::StepCtx;
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
 
-pub struct Sssp {
+/// SSSP from a single source vertex (global id), as a vertex program.
+pub struct SsspProgram {
     pub source: u32,
 }
 
-impl Sssp {
-    pub fn new(source: u32) -> Sssp {
-        Sssp { source }
-    }
-}
+const DIST: FieldId = FieldId(0);
+/// CPU-only shadow: distance at which the vertex last relaxed its edges.
+const RELAXED_AT: FieldId = FieldId(1);
 
-const DIST: usize = 0;
-/// CPU-only: distance at which the vertex last relaxed its edges.
-const RELAXED_AT: usize = 1;
-
-impl Algorithm for Sssp {
-    fn spec(&self) -> AlgSpec {
-        AlgSpec {
+impl VertexProgram for SsspProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
             name: "sssp",
             needs_weights: true,
             undirected: false,
             reversed: false,
             fixed_rounds: None,
+            output: DIST,
         }
     }
 
-    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
-        let n = part.state_len();
-        let mut dist = vec![f32::INFINITY; n];
-        if pg.part_of[self.source as usize] as usize == part.id {
-            dist[pg.local_of[self.source as usize] as usize] = 0.0;
-        }
-        AlgState::new(vec![
-            StateArray::F32(dist),
-            StateArray::F32(vec![f32::INFINITY; n]),
-        ])
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::f32("dist", Role::Device, f32::INFINITY),
+            FieldSpec::f32("relaxed_at", Role::Host, f32::INFINITY),
+        ]
     }
 
-    fn channels(&self, _cycle: usize) -> Vec<CommOp> {
-        vec![CommOp::Single(Channel::push_min_f32(DIST))]
-    }
-
-    fn program(&self, _cycle: usize) -> ProgramSpec {
-        ProgramSpec {
-            name: "sssp",
-            arrays: vec![DIST],
-            pads: vec![Pad::F32(f32::INFINITY)],
-            aux: vec![],
-            needs_weights: true,
-            n_si32: 0,
-            n_sf32: 0,
-            orientation: EdgeOrientation::Forward,
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::MonotoneScatter { value: DIST, shadow: RELAXED_AT },
+            comm: vec![CommDecl::PushMin(DIST)],
+            device: None,
+            accel: AccelSpec { name: "sssp", n_si32: 0, n_sf32: 0 },
         }
     }
 
-    fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
-        let nv = part.nv;
-        let (dist_arr, rest) = state.arrays.split_at_mut(RELAXED_AT);
-        let dist = dist_arr[DIST].as_f32_mut();
-        let dist_cells = as_atomic_f32_cells(dist);
-        // per-vertex, written only by the owning chunk — atomic view just
-        // satisfies the shared-closure borrow.
-        let relaxed_cells = as_atomic_f32_cells(rest[0].as_f32_mut());
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        if global_id == self.source {
+            row.set_f32(DIST, 0.0);
+        }
+    }
 
-        let fold = |lo: usize, hi: usize, acc: (bool, u64, u64)| {
-            let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
-                let dv = f32::from_bits(dist_cells[v].load(Ordering::Relaxed));
-                if ctx.instrument {
-                    reads += 2; // dist[v], relaxed_at[v]
-                }
-                // active test (Fig 20 line 4): distance improved since the
-                // last relaxation — covers both local and inbox updates.
-                if dv >= f32::from_bits(relaxed_cells[v].load(Ordering::Relaxed)) {
-                    continue;
-                }
-                relaxed_cells[v].store(dv.to_bits(), Ordering::Relaxed);
-                let ts = part.targets(v as u32);
-                let ws = part.weights(v as u32);
-                for (k, &t) in ts.iter().enumerate() {
-                    let nd = dv + ws[k];
-                    let old = atomic_min_f32(&dist_cells[t as usize], nd);
-                    if ctx.instrument {
-                        reads += 1;
-                    }
-                    if nd < old {
-                        changed = true;
-                        if ctx.instrument {
-                            writes += 1;
-                        }
-                    }
-                }
-            }
-            (changed, reads, writes)
-        };
-        let (changed, reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
-            (false, 0u64, 0u64),
-            fold,
-            |a, b| (a.0 || b.0, a.1 + b.1, a.2 + b.2),
-        );
-        ComputeOut { changed, reads, writes }
+    /// Relaxation (Fig 20 line 6): offer `dist[v] + w` to the target.
+    fn edge_update(&self, _ctx: &StepCtx, src: Value, w: f32) -> Option<Value> {
+        Some(Value::F32(src.expect_f32() + w))
+    }
+
+    /// Σ degree(v) over vertices with finite distance (paper §5).
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        output
+            .as_f32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d.is_finite())
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum()
+    }
+}
+
+/// The engine-facing SSSP algorithm.
+pub type Sssp = ProgramDriver<SsspProgram>;
+
+impl Sssp {
+    pub fn new(source: u32) -> Sssp {
+        ProgramDriver::build(SsspProgram { source }).expect("static schema is valid")
     }
 }
 
@@ -169,5 +135,14 @@ mod tests {
         let g = CsrGraph::from_edge_list(&el);
         let mut alg = Sssp::new(0);
         assert!(engine::run(&g, &mut alg, &EngineConfig::host_only(1)).is_err());
+    }
+
+    #[test]
+    fn shadow_field_stays_host_side() {
+        use crate::alg::Algorithm;
+        let alg = Sssp::new(0);
+        let spec = Algorithm::program(&alg, 0);
+        assert_eq!(spec.arrays, vec![0], "relaxed_at must not ship");
+        assert!(spec.needs_weights);
     }
 }

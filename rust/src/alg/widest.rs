@@ -1,0 +1,174 @@
+//! Single-source widest path (maximum-bottleneck path) — the sixth
+//! algorithm, written to prove the typed vertex-program API (ISSUE 5).
+//!
+//! `width[v]` is the best bottleneck capacity of any path from the source:
+//! the maximum over paths of the minimum edge weight along the path. The
+//! source has width `+inf` (the empty path has no bottleneck); unreachable
+//! vertices stay at the max-reduce identity `-inf`. With the repo's
+//! positive integer weight fixtures every width is an exact copy of some
+//! edge weight (or ±inf) — pure selection, no arithmetic — so outputs are
+//! **bit-exact** in f32 and the golden/differential suites compare them
+//! like BFS/CC/SSSP.
+//!
+//! The entire algorithm is this file: a two-field schema (`width` on a
+//! push-**max** channel plus the monotone-activation shadow) and a
+//! one-line `edge_update` (`min(width[v], w)`), riding the driver's
+//! [`Kernel::MonotoneScatter`] family — the same derived kernel, comm,
+//! instrumentation, and migration machinery SSSP and CC use. The AOT
+//! side ships too: `python/compile/model.py` registers a `widest` step
+//! (the max dual of the SSSP relaxation), so `make artifacts` lowers it;
+//! on a checkout without built artifacts, accelerator runs fail at
+//! manifest lookup with an actionable message.
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, Value, VertexProgram,
+};
+use super::StepCtx;
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
+
+/// Widest path from a single source vertex (global id).
+pub struct WidestProgram {
+    pub source: u32,
+}
+
+const WIDTH: FieldId = FieldId(0);
+/// CPU-only shadow: width at which the vertex last relaxed its edges.
+const RELAXED_AT: FieldId = FieldId(1);
+
+impl VertexProgram for WidestProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "widest",
+            needs_weights: true,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+            output: WIDTH,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::f32("width", Role::Device, f32::NEG_INFINITY),
+            FieldSpec::f32("relaxed_at", Role::Host, f32::NEG_INFINITY),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::MonotoneScatter { value: WIDTH, shadow: RELAXED_AT },
+            comm: vec![CommDecl::PushMax(WIDTH)],
+            device: None,
+            accel: AccelSpec { name: "widest", n_si32: 0, n_sf32: 0 },
+        }
+    }
+
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        if global_id == self.source {
+            row.set_f32(WIDTH, f32::INFINITY);
+        }
+    }
+
+    /// Bottleneck relaxation: a path through `v` over this edge has
+    /// capacity `min(width[v], w)`; the channel's `max` keeps the best.
+    fn edge_update(&self, _ctx: &StepCtx, src: Value, w: f32) -> Option<Value> {
+        Some(Value::F32(src.expect_f32().min(w)))
+    }
+
+    /// Σ degree(v) over reached vertices (width above the identity).
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        output
+            .as_f32()
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d > f32::NEG_INFINITY)
+            .map(|(v, _)| g.out_degree(v as u32))
+            .sum()
+    }
+}
+
+/// The engine-facing widest-path algorithm.
+pub type Widest = ProgramDriver<WidestProgram>;
+
+impl Widest {
+    pub fn new(source: u32) -> Widest {
+        ProgramDriver::build(WidestProgram { source }).expect("static schema is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn weighted_diamond() -> CsrGraph {
+        // 0 -1-> 1 -4-> 3 ; 0 -3-> 2 -2-> 3
+        // widest 0->3: via 1 = min(1,4)=1, via 2 = min(3,2)=2 → 2
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        el.weights = Some(vec![1.0, 3.0, 4.0, 2.0]);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn widest_paths_host_only() {
+        let g = weighted_diamond();
+        let mut alg = Widest::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_f32(), &[f32::INFINITY, 1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn unreachable_stays_neg_inf() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.weights = Some(vec![7.0]);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Widest::new(0);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        let out = r.output.as_f32();
+        assert_eq!(out[0], f32::INFINITY);
+        assert_eq!(out[1], 7.0);
+        assert_eq!(out[2], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn partitioned_matches_host_bitwise() {
+        let mut el = crate::graph::generator::rmat(&crate::graph::generator::RmatParams::paper(
+            7, 3,
+        ));
+        crate::graph::generator::with_random_weights(&mut el, 64, 9);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut a = Widest::new(0);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
+            for mode_pipelined in [false, true] {
+                let mut cfg = EngineConfig::cpu_partitions(&[0.6, 0.4], strat);
+                if mode_pipelined {
+                    cfg = cfg.pipelined();
+                }
+                let mut b = Widest::new(0);
+                let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+                for (x, y) in r1.output.as_f32().iter().zip(r2.output.as_f32()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{strat:?}/{mode_pipelined}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requires_weights() {
+        let mut el = EdgeList::new(2);
+        el.push(0, 1);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut alg = Widest::new(0);
+        assert!(engine::run(&g, &mut alg, &EngineConfig::host_only(1)).is_err());
+    }
+}

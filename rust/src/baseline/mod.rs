@@ -143,6 +143,40 @@ pub fn sssp(g: &CsrGraph, source: u32) -> Vec<f32> {
     dist
 }
 
+/// Sequential single-source widest path (maximum-bottleneck path) with a
+/// worklist. Returns per-vertex path widths: `+inf` at the source (the
+/// empty path has no bottleneck), `-inf` if unreachable. Widths are pure
+/// selections among edge weights (no arithmetic), so the hybrid engine
+/// must reproduce them bit-for-bit — the differential-fuzz oracle for the
+/// `widest` vertex program.
+pub fn widest(g: &CsrGraph, source: u32) -> Vec<f32> {
+    let mut width = vec![f32::NEG_INFINITY; g.vertex_count];
+    if g.vertex_count == 0 {
+        return width;
+    }
+    width[source as usize] = f32::INFINITY;
+    let mut queue = VecDeque::new();
+    let mut queued = vec![false; g.vertex_count];
+    queue.push_back(source);
+    queued[source as usize] = true;
+    while let Some(v) = queue.pop_front() {
+        queued[v as usize] = false;
+        let wv = width[v as usize];
+        let ws = g.edge_weights(v);
+        for (k, &dn) in g.neighbors(v).iter().enumerate() {
+            let cand = wv.min(ws[k]);
+            if cand > width[dn as usize] {
+                width[dn as usize] = cand;
+                if !queued[dn as usize] {
+                    queue.push_back(dn);
+                    queued[dn as usize] = true;
+                }
+            }
+        }
+    }
+    width
+}
+
 /// Brandes' single-source betweenness centrality (f32 accumulation, like
 /// the GPU kernels). Returns per-vertex dependency scores.
 pub fn bc(g: &CsrGraph, source: u32) -> Vec<f32> {
@@ -259,6 +293,35 @@ mod tests {
             let ws = g.edge_weights(u);
             for (k, &v) in g.neighbors(u).iter().enumerate() {
                 assert!(dist[v as usize] <= dist[u as usize] + ws[k] + 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn widest_bottleneck_diamond() {
+        // 0 -1-> 1 -4-> 3 ; 0 -3-> 2 -2-> 3 : widest 0->3 = min(3,2) = 2
+        let mut el = EdgeList::new(5);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        el.weights = Some(vec![1.0, 3.0, 4.0, 2.0]);
+        let g = CsrGraph::from_edge_list(&el);
+        let w = widest(&g, 0);
+        assert_eq!(w, vec![f32::INFINITY, 1.0, 3.0, 2.0, f32::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn widest_is_monotone_under_relaxation() {
+        // for each edge (u,v,w): width[v] >= min(width[u], w)
+        let mut el = rmat(&RmatParams::paper(7, 5));
+        with_random_weights(&mut el, 16, 11);
+        let g = CsrGraph::from_edge_list(&el);
+        let w = widest(&g, 0);
+        for u in 0..g.vertex_count as u32 {
+            let ws = g.edge_weights(u);
+            for (k, &v) in g.neighbors(u).iter().enumerate() {
+                assert!(w[v as usize] >= w[u as usize].min(ws[k]));
             }
         }
     }

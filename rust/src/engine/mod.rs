@@ -15,11 +15,11 @@
 //! - [`ExecMode::Pipelined`]: partitions compute concurrently on their own
 //!   threads and each pairwise exchange starts as soon as both endpoints
 //!   finished computing, overlapping communication with the compute of
-//!   still-running partitions ([`pipeline`]). Output is bit-identical to
-//!   the synchronous executor.
+//!   still-running partitions (the `pipeline` module). Output is
+//!   bit-identical to the synchronous executor.
 //!
 //! On top of either executor, an optional dynamic α controller
-//! ([`rebalance`], [`RebalanceConfig`]) watches per-element busy time and
+//! (the `rebalance` module, [`RebalanceConfig`]) watches per-element busy time and
 //! migrates bands of boundary vertices from the slowest to the fastest
 //! element when imbalance persists (DESIGN.md §5).
 
@@ -35,7 +35,7 @@ pub use crate::partition::Placement;
 pub use config::{ElementKind, EngineConfig, ExecMode, RebalanceConfig};
 pub use direction::{Direction, DirectionConfig, FrontierStats};
 pub use metrics::{MemCounters, Metrics, StepMetrics};
-pub use state::{AlgState, Channel, ChannelKind, CommOp, Reduce, StateArray};
+pub use state::{AlgState, Channel, ChannelKind, CommOp, FieldType, Reduce, StateArray, TypeMismatch};
 
 use crate::alg::{Algorithm, StepCtx};
 use crate::graph::CsrGraph;
@@ -508,16 +508,10 @@ pub(crate) fn comm_phase(
 
 /// Split-borrow two distinct partitions' states. Zero-copy — the comm
 /// phase's hot path (perf pass §Perf-L3-1: removed the per-table message
-/// `Vec` allocations).
+/// `Vec` allocations). The disjoint-split arithmetic lives in
+/// [`crate::util::split_two_mut`], shared with the vertex-program driver.
 fn two_states(states: &mut [AlgState], a: usize, b: usize) -> (&mut AlgState, &mut AlgState) {
-    debug_assert_ne!(a, b);
-    if a < b {
-        let (x, y) = states.split_at_mut(b);
-        (&mut x[a], &mut y[0])
-    } else {
-        let (x, y) = states.split_at_mut(a);
-        (&mut y[0], &mut x[b])
-    }
+    crate::util::split_two_mut(states, a, b)
 }
 
 /// Apply one communication op across one ghost table. `owner` is the
@@ -625,13 +619,8 @@ fn comm_dist_sigma_table(
     };
     {
         // two disjoint arrays of the remote state
-        let (dist_arr, sigma_arr) = if dist_idx < sigma_idx {
-            let (x, y) = remote.arrays.split_at_mut(sigma_idx);
-            (&mut x[dist_idx], &mut y[0])
-        } else {
-            let (x, y) = remote.arrays.split_at_mut(dist_idx);
-            (&mut y[0], &mut x[sigma_idx])
-        };
+        let (dist_arr, sigma_arr) =
+            crate::util::split_two_mut(&mut remote.arrays, dist_idx, sigma_idx);
         let dv = dist_arr.as_i32_mut();
         let sv = sigma_arr.as_f32_mut();
         for i in 0..n {

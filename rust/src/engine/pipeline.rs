@@ -20,8 +20,8 @@
 //! The exchange itself is the same [`comm_op_table`] code the synchronous
 //! engine runs; what could differ is only *ordering*. Three cases:
 //!
-//! 1. `min` reductions are commutative and idempotent (also in f32, since
-//!    no NaNs occur) — any delivery order yields the same bits.
+//! 1. `min`/`max` reductions are commutative and idempotent (also in f32,
+//!    since no NaNs occur) — any delivery order yields the same bits.
 //! 2. pull (`set`) ghost slots have exactly one writer each — order-free.
 //! 3. f32 *additive* deliveries (push-add channels, the BC dist+σ pair)
 //!    are order-sensitive ([`CommOp::order_sensitive`]), as are op lists

@@ -7,6 +7,47 @@
 //! accelerator marshaling all operate on this one layout, which is what
 //! makes the hybrid engine algorithm-agnostic.
 
+/// Element type of a [`StateArray`] — the only two dtypes that exist on
+/// both sides of the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    I32,
+    F32,
+}
+
+impl FieldType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FieldType::I32 => "i32",
+            FieldType::F32 => "f32",
+        }
+    }
+}
+
+/// A dtype mismatch between what a caller expected of a [`StateArray`] and
+/// what it holds. The vertex-program layer (`alg::program`) validates every
+/// declared field/channel dtype at driver-construction time, so this error
+/// surfaces through `anyhow` *before* any state is built — the panicking
+/// `as_i32`/`as_f32` accessors are then provably unreachable in kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TypeMismatch {
+    pub expected: FieldType,
+    pub actual: FieldType,
+}
+
+impl std::fmt::Display for TypeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "state-array dtype mismatch: expected {}, found {}",
+            self.expected.name(),
+            self.actual.name()
+        )
+    }
+}
+
+impl std::error::Error for TypeMismatch {}
+
 /// A single state array. Only `i32` and `f32` exist on both sides of the
 /// PJRT boundary, so everything is expressed in those.
 #[derive(Debug, Clone)]
@@ -24,6 +65,26 @@ impl StateArray {
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            StateArray::I32(_) => FieldType::I32,
+            StateArray::F32(_) => FieldType::F32,
+        }
+    }
+    /// Typed (non-panicking) accessor — see [`TypeMismatch`].
+    pub fn try_as_i32(&self) -> Result<&[i32], TypeMismatch> {
+        match self {
+            StateArray::I32(v) => Ok(v),
+            _ => Err(TypeMismatch { expected: FieldType::I32, actual: self.field_type() }),
+        }
+    }
+    /// Typed (non-panicking) accessor — see [`TypeMismatch`].
+    pub fn try_as_f32(&self) -> Result<&[f32], TypeMismatch> {
+        match self {
+            StateArray::F32(v) => Ok(v),
+            _ => Err(TypeMismatch { expected: FieldType::F32, actual: self.field_type() }),
+        }
     }
     pub fn as_i32(&self) -> &[i32] {
         match self {
@@ -77,12 +138,16 @@ impl AlgState {
     }
 }
 
-/// Message reduction operator (paper §3.4: min for BFS/SSSP/CC, sum for
-/// PageRank-style rank aggregation, set for pull channels).
+/// Message reduction operator (paper §3.4: min for BFS/SSSP/CC, max for
+/// widest-path's bottleneck relaxation, sum for PageRank-style rank
+/// aggregation, set for pull channels).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Reduce {
     MinI32,
     MinF32,
+    /// Max-reduce (widest path). Like `min`, idempotent and commutative
+    /// even in f32, so never order-sensitive.
+    MaxF32,
     AddF32,
     SetI32,
     SetF32,
@@ -100,13 +165,17 @@ impl Reduce {
     pub fn identity_f32(&self) -> f32 {
         match self {
             Reduce::MinF32 => f32::INFINITY,
+            Reduce::MaxF32 => f32::NEG_INFINITY,
             Reduce::AddF32 => 0.0,
             Reduce::SetF32 => 0.0,
             _ => panic!("not an f32 reduce"),
         }
     }
     pub fn is_f32(&self) -> bool {
-        matches!(self, Reduce::MinF32 | Reduce::AddF32 | Reduce::SetF32)
+        matches!(
+            self,
+            Reduce::MinF32 | Reduce::MaxF32 | Reduce::AddF32 | Reduce::SetF32
+        )
     }
 }
 
@@ -144,6 +213,9 @@ impl Channel {
     }
     pub fn push_min_f32(array: usize) -> Channel {
         Channel { array, reduce: Reduce::MinF32, kind: ChannelKind::Push, reset_after_send: false }
+    }
+    pub fn push_max_f32(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::MaxF32, kind: ChannelKind::Push, reset_after_send: false }
     }
     pub fn push_add_f32(array: usize) -> Channel {
         Channel { array, reduce: Reduce::AddF32, kind: ChannelKind::Push, reset_after_send: true }
@@ -227,6 +299,14 @@ pub fn apply_f32(reduce: Reduce, dst: &mut f32, msg: f32) -> bool {
                 false
             }
         }
+        Reduce::MaxF32 => {
+            if msg > *dst {
+                *dst = msg;
+                true
+            } else {
+                false
+            }
+        }
         Reduce::AddF32 => {
             if msg != 0.0 {
                 *dst += msg;
@@ -271,6 +351,33 @@ mod tests {
         assert_eq!(Reduce::MinI32.identity_i32(), super::super::INF_I32);
         assert_eq!(Reduce::AddF32.identity_f32(), 0.0);
         assert_eq!(Reduce::MinF32.identity_f32(), f32::INFINITY);
+        assert_eq!(Reduce::MaxF32.identity_f32(), f32::NEG_INFINITY);
+        assert!(Reduce::MaxF32.is_f32());
+    }
+
+    #[test]
+    fn max_reduce_apply_semantics() {
+        let mut x = f32::NEG_INFINITY;
+        assert!(apply_f32(Reduce::MaxF32, &mut x, 2.0));
+        assert_eq!(x, 2.0);
+        assert!(!apply_f32(Reduce::MaxF32, &mut x, 1.0));
+        assert_eq!(x, 2.0);
+        assert!(apply_f32(Reduce::MaxF32, &mut x, f32::INFINITY));
+        assert_eq!(x, f32::INFINITY);
+    }
+
+    #[test]
+    fn typed_accessors_report_mismatch() {
+        let a = StateArray::I32(vec![1]);
+        assert_eq!(a.field_type(), FieldType::I32);
+        assert!(a.try_as_i32().is_ok());
+        let err = a.try_as_f32().unwrap_err();
+        assert_eq!(err.expected, FieldType::F32);
+        assert_eq!(err.actual, FieldType::I32);
+        assert!(err.to_string().contains("expected f32"));
+        let b = StateArray::F32(vec![0.5]);
+        assert!(b.try_as_f32().is_ok());
+        assert!(b.try_as_i32().is_err());
     }
 
     #[test]
@@ -293,6 +400,7 @@ mod tests {
     fn order_sensitivity_classification() {
         assert!(!CommOp::Single(Channel::push_min_i32(0)).order_sensitive());
         assert!(!CommOp::Single(Channel::push_min_f32(0)).order_sensitive());
+        assert!(!CommOp::Single(Channel::push_max_f32(0)).order_sensitive());
         assert!(!CommOp::Single(Channel::pull_f32(0)).order_sensitive());
         assert!(!CommOp::Single(Channel::pull_i32(0)).order_sensitive());
         assert!(CommOp::Single(Channel::push_add_f32(0)).order_sensitive());

@@ -2,7 +2,8 @@
 //! workload under any engine configuration, with repeated measurements and
 //! TEPS accounting (paper §5 "Evaluation Metrics" / "Data Collection").
 
-use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, traversed_edges};
+use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
+use crate::alg::Algorithm;
 use crate::engine::{self, EngineConfig, RunResult};
 use crate::partition::Placement;
 use crate::graph::generator::with_random_weights;
@@ -10,7 +11,9 @@ use crate::graph::{CsrGraph, Workload};
 use crate::stats;
 use anyhow::Result;
 
-/// The five evaluated algorithms (paper §5 + §9.4).
+/// The evaluated algorithms: the paper's five (§5 + §9.4) plus the
+/// widest-path program that proves the typed vertex-program API
+/// (DESIGN.md §10).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AlgKind {
     Bfs,
@@ -18,14 +21,16 @@ pub enum AlgKind {
     Sssp,
     Bc,
     Cc,
+    Widest,
 }
 
-pub const ALL_ALGS: [AlgKind; 5] = [
+pub const ALL_ALGS: [AlgKind; 6] = [
     AlgKind::Bfs,
     AlgKind::Pagerank,
     AlgKind::Sssp,
     AlgKind::Bc,
     AlgKind::Cc,
+    AlgKind::Widest,
 ];
 
 impl AlgKind {
@@ -36,7 +41,10 @@ impl AlgKind {
             "sssp" => Ok(AlgKind::Sssp),
             "bc" => Ok(AlgKind::Bc),
             "cc" => Ok(AlgKind::Cc),
-            _ => Err(format!("unknown algorithm '{name}' (bfs|pagerank|sssp|bc|cc)")),
+            "widest" | "wsp" => Ok(AlgKind::Widest),
+            _ => Err(format!(
+                "unknown algorithm '{name}' (bfs|pagerank|sssp|bc|cc|widest)"
+            )),
         }
     }
 
@@ -47,11 +55,12 @@ impl AlgKind {
             AlgKind::Sssp => "sssp",
             AlgKind::Bc => "bc",
             AlgKind::Cc => "cc",
+            AlgKind::Widest => "widest",
         }
     }
 
     pub fn needs_weights(&self) -> bool {
-        matches!(self, AlgKind::Sssp)
+        matches!(self, AlgKind::Sssp | AlgKind::Widest)
     }
 }
 
@@ -101,20 +110,33 @@ pub fn resolve_source(g: &CsrGraph, spec: &RunSpec) -> u32 {
         .unwrap_or(0)
 }
 
+/// Run one algorithm and let it account its own traversed edges — TEPS
+/// dispatch now lives on the [`Algorithm`] trait (each vertex program
+/// reports its formula), not in a stringly-typed match.
+fn run_counted<A: Algorithm>(
+    g: &CsrGraph,
+    alg: &mut A,
+    cfg: &EngineConfig,
+    rounds: usize,
+) -> Result<(RunResult, u64)> {
+    let r = engine::run(g, alg, cfg)?;
+    let traversed = alg.traversed_edges(&r.output, g, rounds);
+    Ok((r, traversed))
+}
+
 /// Dispatch one engine run by algorithm kind. Returns the run result and
 /// the traversed-edge count for TEPS.
 pub fn run_alg(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig) -> Result<(RunResult, u64)> {
     let spec = RunSpec { source: resolve_source(g, &spec), ..spec };
-    let r = match spec.alg {
-        AlgKind::Bfs => engine::run(g, &mut Bfs::new(spec.source), cfg)?,
-        AlgKind::Pagerank => engine::run(g, &mut Pagerank::new(spec.rounds), cfg)?,
-        AlgKind::Sssp => engine::run(g, &mut Sssp::new(spec.source), cfg)?,
-        AlgKind::Bc => engine::run(g, &mut Bc::new(spec.source), cfg)?,
-        AlgKind::Cc => engine::run(g, &mut Cc::new(), cfg)?,
-    };
     let rounds = if spec.alg == AlgKind::Pagerank { spec.rounds } else { 1 };
-    let traversed = traversed_edges(spec.alg.name(), &r.output, g, rounds);
-    Ok((r, traversed))
+    match spec.alg {
+        AlgKind::Bfs => run_counted(g, &mut Bfs::new(spec.source), cfg, rounds),
+        AlgKind::Pagerank => run_counted(g, &mut Pagerank::new(spec.rounds), cfg, rounds),
+        AlgKind::Sssp => run_counted(g, &mut Sssp::new(spec.source), cfg, rounds),
+        AlgKind::Bc => run_counted(g, &mut Bc::new(spec.source), cfg, rounds),
+        AlgKind::Cc => run_counted(g, &mut Cc::new(), cfg, rounds),
+        AlgKind::Widest => run_counted(g, &mut Widest::new(spec.source), cfg, rounds),
+    }
 }
 
 /// Repeated measurement of one configuration.
@@ -191,7 +213,10 @@ mod tests {
     fn parse_alg_names() {
         assert_eq!(AlgKind::parse("BFS").unwrap(), AlgKind::Bfs);
         assert_eq!(AlgKind::parse("pr").unwrap(), AlgKind::Pagerank);
+        assert_eq!(AlgKind::parse("widest").unwrap(), AlgKind::Widest);
+        assert_eq!(AlgKind::parse("WSP").unwrap(), AlgKind::Widest);
         assert!(AlgKind::parse("dijkstra").is_err());
+        assert!(AlgKind::Widest.needs_weights());
     }
 
     #[test]

@@ -62,7 +62,7 @@ totem — hybrid (CPU + accelerator) graph processing engine
 USAGE: totem <command> [--flags]
 
 COMMANDS:
-  run        --alg bfs|pagerank|sssp|bc|cc --workload rmatN|uniformN|twitter|ukweb|csr:PATH
+  run        --alg bfs|pagerank|sssp|bc|cc|widest --workload rmatN|uniformN|twitter|ukweb|csr:PATH
              --hw xS[yG] --alpha F --strategy rand|high|low [--source N]
              [--placement assign|degree-desc|degree-asc|bfs]
              [--rounds N] [--reps N] [--seed N] [--instrument]
@@ -271,6 +271,13 @@ fn calibrate_cmd(args: &Args) -> Result<()> {
             &g,
             &mut totem::alg::cc::Cc::new(),
             &mut totem::alg::cc::Cc::new(),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Widest => calibrate::calibrate(
+            &g,
+            &mut totem::alg::widest::Widest::new(src),
+            &mut totem::alg::widest::Widest::new(src),
             &artifacts,
             alpha,
         )?,

@@ -9,7 +9,7 @@
 //! the measured transfer+scatter rate of the communication phase.
 
 use super::ModelParams;
-use crate::alg::{traversed_edges, Algorithm};
+use crate::alg::Algorithm;
 use crate::engine::{self, EngineConfig, RunResult};
 use crate::graph::CsrGraph;
 use crate::partition::Strategy;
@@ -38,7 +38,8 @@ fn rounds_of(r: &RunResult) -> usize {
 pub fn measure_host<A: Algorithm>(g: &CsrGraph, alg: &mut A) -> Result<(f64, f64, u64)> {
     let cfg = EngineConfig::host_only(1);
     let r = engine::run(g, alg, &cfg)?;
-    let traversed = traversed_edges(alg.spec().name, &r.output, g, rounds_of(&r));
+    // TEPS accounting lives on the trait: each program owns its formula.
+    let traversed = alg.traversed_edges(&r.output, g, rounds_of(&r));
     let compute = r.metrics.bottleneck_compute_secs().max(1e-9);
     Ok((traversed as f64 / compute, r.makespan_secs(), traversed))
 }

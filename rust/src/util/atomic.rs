@@ -42,6 +42,26 @@ pub fn atomic_min_f32(a: &AtomicU32, v: f32) -> f32 {
     }
 }
 
+/// Atomically `*a = max(*a, v)` for f32 stored as bits; returns previous.
+///
+/// The dual of [`atomic_min_f32`], used by max-reduce programs (widest
+/// path's max-min relaxation). NaN-free inputs assumed.
+#[inline]
+pub fn atomic_max_f32(a: &AtomicU32, v: f32) -> f32 {
+    debug_assert!(!v.is_nan());
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f32::from_bits(cur);
+        if cur_f >= v {
+            return cur_f;
+        }
+        match a.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return cur_f,
+            Err(next) => cur = next,
+        }
+    }
+}
+
 /// Atomically `*a += v` for f32 stored as bits; returns previous.
 #[inline]
 pub fn atomic_add_f32(a: &AtomicU32, v: f32) -> f32 {
@@ -82,6 +102,33 @@ mod tests {
         assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 10.0);
         atomic_min_f32(&a, 3.5);
         assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3.5);
+    }
+
+    #[test]
+    fn f32_max_sequential() {
+        let a = AtomicU32::new(f32::NEG_INFINITY.to_bits());
+        atomic_max_f32(&a, 3.0);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3.0);
+        atomic_max_f32(&a, 1.5);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3.0);
+        atomic_max_f32(&a, f32::INFINITY);
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f32_max_concurrent_finds_max() {
+        let a = AtomicU32::new(f32::NEG_INFINITY.to_bits());
+        let aref = &a;
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                scope.spawn(move || {
+                    for i in 0..1000u32 {
+                        atomic_max_f32(aref, (t * 1000 + i) as f32);
+                    }
+                });
+            }
+        });
+        assert_eq!(f32::from_bits(a.load(Ordering::Relaxed)), 3999.0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Two halves:
 //! - [`JsonValue`] + a recursive-descent parser, used to read the AOT
 //!   `artifacts/manifest.json` written by `python/compile/aot.py`;
-//! - a tiny writer ([`JsonValue::render`] / [`JsonWriter`]) used by the
+//! - a tiny writer ([`JsonValue::render`]) used by the
 //!   bench harness to dump machine-readable results next to the markdown
 //!   tables.
 //!

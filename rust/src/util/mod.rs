@@ -9,6 +9,22 @@ pub mod rng;
 pub mod threadpool;
 pub mod timer;
 
+/// Split-borrow two *distinct* elements of a slice mutably — the shared
+/// helper behind the engine's pairwise state exchanges and the vertex-
+/// program driver's value/shadow (dist/σ) kernels. Panics if `a == b`
+/// (callers validate distinctness up front).
+pub fn split_two_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    assert_ne!(a, b, "split_two_mut needs distinct indices");
+    if a < b {
+        let (x, y) = xs.split_at_mut(b);
+        (&mut x[a], &mut y[0])
+    } else {
+        let (x, y) = xs.split_at_mut(a);
+        let (snd, fst) = (&mut x[b], &mut y[0]);
+        (fst, snd)
+    }
+}
+
 /// Format a byte count human-readably (used by reports and Table 5).
 pub fn fmt_bytes(bytes: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
@@ -41,6 +57,24 @@ pub fn fmt_count(n: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn split_two_mut_returns_both_orders() {
+        let mut xs = vec![1, 2, 3];
+        let (a, b) = split_two_mut(&mut xs, 0, 2);
+        assert_eq!((*a, *b), (1, 3));
+        let (a, b) = split_two_mut(&mut xs, 2, 0);
+        assert_eq!((*a, *b), (3, 1));
+        *a = 9;
+        assert_eq!(xs, vec![1, 2, 9]);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn split_two_mut_rejects_equal_indices() {
+        let mut xs = vec![1, 2];
+        let _ = split_two_mut(&mut xs, 1, 1);
+    }
 
     #[test]
     fn bytes_formatting() {

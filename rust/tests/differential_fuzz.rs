@@ -4,11 +4,15 @@
 //! A seeded sweep samples random engine configurations — workload (R-MAT /
 //! uniform) × algorithm × executor mode × partition count × strategy ×
 //! [`Placement`] × direction on/off — and checks every run against the
-//! baseline: **exact** for the min-reduction algorithms (BFS, CC, SSSP),
-//! within f32-summation tolerance for the order-sensitive ones (PageRank,
-//! BC). A second deterministic sweep pins the placement-invariance
-//! contract: the same configuration run under every placement must produce
-//! bit-identical global outputs.
+//! baseline: **exact** for the min/max-reduction algorithms (BFS, CC,
+//! SSSP, widest-path), within f32-summation tolerance for the
+//! order-sensitive ones (PageRank, BC). A second deterministic sweep pins
+//! the placement-invariance contract: the same configuration run under
+//! every placement must produce bit-identical global outputs. A third
+//! property (ISSUE 5) pins the vertex-program driver itself: for every
+//! pull-capable program, the derived push and pull kernels must be
+//! bit-identical on seeded R-MAT graphs across placements and both
+//! executors.
 //!
 //! Reproduction: every failure message carries the sweep seed and the full
 //! sampled configuration. Re-run just that case with
@@ -34,8 +38,8 @@ fn env_u64(name: &str, default: u64) -> u64 {
 }
 
 /// The sampled graph pool: two scale-free and one uniform graph, all
-/// weighted (weights are ignored by everything but SSSP). Small enough
-/// that the full sweep stays fast in debug builds.
+/// weighted (SSSP and widest-path consume the weights; the rest ignore
+/// them). Small enough that the full sweep stays fast in debug builds.
 fn graph_pool() -> Vec<(String, CsrGraph)> {
     let mut pool = Vec::new();
     for (name, mut el) in [
@@ -130,6 +134,17 @@ fn check_against_baseline(g: &CsrGraph, s: &Sampled, sweep_seed: u64, iter: usiz
         }
         AlgKind::Sssp => {
             let want = baseline::sssp(g, s.source);
+            for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{}",
+                    ctx(v, a.to_string(), b.to_string())
+                );
+            }
+        }
+        AlgKind::Widest => {
+            // pure selection among edge weights: compared on bits
+            let want = baseline::widest(g, s.source);
             for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
                 assert!(
                     a.to_bits() == b.to_bits(),
@@ -256,6 +271,96 @@ fn push_mode_pagerank_bit_identical_across_placements() {
             }
         }
     }
+}
+
+/// ISSUE 5 driver property: for every **pull-capable** vertex program,
+/// the [`ProgramDriver`]'s derived push and pull kernels must produce
+/// bit-identical outputs — and identical superstep counts — on seeded
+/// R-MAT graphs across every placement, partition count, and both
+/// executors. Push-only programs are asserted to opt out (`supports_pull
+/// == false`), so this sweep automatically covers any future program that
+/// declares a traversal kernel.
+#[test]
+fn pull_capable_programs_push_pull_bit_identical() {
+    use totem::alg::Algorithm;
+    use totem::engine::{self, DirectionConfig};
+
+    /// α/β knobs that flip every CPU element to bottom-up on the first
+    /// non-empty frontier and keep it there.
+    fn force_pull() -> DirectionConfig {
+        DirectionConfig { alpha: 1e12, beta: 1e12 }
+    }
+
+    fn graphs() -> Vec<(String, CsrGraph)> {
+        [0xA11CEu64, 0xB0B]
+            .iter()
+            .map(|&seed| {
+                let mut el = rmat(&RmatParams::paper(8, seed));
+                with_random_weights(&mut el, 32, seed ^ 1);
+                (format!("rmat8/{seed:x}"), CsrGraph::from_edge_list(&el))
+            })
+            .collect()
+    }
+
+    fn bits_of(out: &totem::engine::StateArray) -> Vec<u32> {
+        match out {
+            totem::engine::StateArray::I32(v) => v.iter().map(|&x| x as u32).collect(),
+            totem::engine::StateArray::F32(v) => v.iter().map(|x| x.to_bits()).collect(),
+        }
+    }
+
+    fn check<A: Algorithm>(name: &str, make: &dyn Fn(u32) -> A) -> bool {
+        if !make(0).supports_pull() {
+            return false;
+        }
+        for (gname, g) in graphs() {
+            // a hub source guarantees a non-empty first frontier, so the
+            // forced-pull knobs must engage (asserted below)
+            let source = (0..g.vertex_count as u32)
+                .max_by_key(|&v| g.out_degree(v))
+                .unwrap_or(0);
+            for parts in [1usize, 2, 3] {
+                let shares = vec![1.0 / parts as f64; parts];
+                for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+                    for placement in ALL_PLACEMENTS {
+                        let base = EngineConfig::cpu_partitions(&shares, Strategy::Rand)
+                            .with_mode(mode)
+                            .with_seed(17)
+                            .with_placement(placement);
+                        let ctx = format!(
+                            "{name}/{gname}/{mode:?}/{parts}p/{}",
+                            placement.name()
+                        );
+                        let mut push_alg = make(source);
+                        let rp = engine::run(&g, &mut push_alg, &base).unwrap();
+                        let mut pull_alg = make(source);
+                        let cfg = base.clone().with_direction(force_pull());
+                        let rq = engine::run(&g, &mut pull_alg, &cfg).unwrap();
+                        assert!(
+                            rq.metrics.pull_steps() >= 1,
+                            "{ctx}: forced-pull run never pulled (vacuous test)"
+                        );
+                        assert_eq!(
+                            bits_of(&rp.output),
+                            bits_of(&rq.output),
+                            "{ctx}: pull kernel diverged from push"
+                        );
+                        assert_eq!(rp.supersteps, rq.supersteps, "{ctx}: superstep count");
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    let mut any_pull = false;
+    any_pull |= check("bfs", &|s| totem::alg::bfs::Bfs::new(s));
+    any_pull |= check("pagerank", &|_| totem::alg::pagerank::Pagerank::new(3));
+    any_pull |= check("sssp", &|s| totem::alg::sssp::Sssp::new(s));
+    any_pull |= check("bc", &|s| totem::alg::bc::Bc::new(s));
+    any_pull |= check("cc", &|_| totem::alg::cc::Cc::new());
+    any_pull |= check("widest", &|s| totem::alg::widest::Widest::new(s));
+    assert!(any_pull, "at least one program (BFS) must be pull-capable");
 }
 
 /// The sweep is a pure function of its seed: same seed, same samples.

@@ -3,7 +3,11 @@
 //! for every operator mistake we could think of.
 
 use std::path::PathBuf;
-use totem::alg::{bfs::Bfs, sssp::Sssp};
+use totem::alg::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, VertexProgram,
+};
+use totem::alg::{bfs::Bfs, sssp::Sssp, INF_I32};
 use totem::engine::{self, EngineConfig, RebalanceConfig};
 use totem::graph::generator::{rmat, RmatParams};
 use totem::graph::{io as gio, CsrGraph, EdgeList};
@@ -212,6 +216,144 @@ fn pipelined_with_zero_boundary_edges_is_clean() {
     assert_eq!(r.output.as_i32()[0], 0);
     assert_eq!(r.metrics.total_messages(), 0);
     assert_eq!(r.metrics.overlap_factor(), 0.0);
+}
+
+/// A configurable mis-declared vertex program: each knob injects one
+/// schema/plan mistake that used to surface as a `panic!("expected i32
+/// array")` deep inside a kernel or the comm phase — and must now be a
+/// typed `anyhow` error at driver-construction time, before any state is
+/// built (ISSUE 5 satellite).
+struct Misdeclared {
+    /// dist pad that is not the push-min identity
+    bad_pad: bool,
+    /// put the channel on the aux field instead of the state field
+    comm_on_aux: bool,
+    /// point the kernel's shadow at an f32 field while value is i32
+    shadow_dtype_clash: bool,
+    /// point the kernel's shadow at the value field itself
+    shadow_is_value: bool,
+    /// output field index past the schema
+    output_out_of_range: bool,
+}
+
+impl Misdeclared {
+    fn ok() -> Misdeclared {
+        Misdeclared {
+            bad_pad: false,
+            comm_on_aux: false,
+            shadow_dtype_clash: false,
+            shadow_is_value: false,
+            output_out_of_range: false,
+        }
+    }
+}
+
+const MD_VAL: FieldId = FieldId(0);
+const MD_SHADOW_I32: FieldId = FieldId(1);
+const MD_SHADOW_F32: FieldId = FieldId(2);
+const MD_AUX: FieldId = FieldId(3);
+
+impl VertexProgram for Misdeclared {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "misdeclared",
+            needs_weights: false,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+            output: if self.output_out_of_range { FieldId(99) } else { MD_VAL },
+        }
+    }
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("val", Role::Device, if self.bad_pad { 0 } else { INF_I32 }),
+            FieldSpec::i32("shadow", Role::Host, INF_I32),
+            FieldSpec::f32("shadow_f32", Role::Host, 0.0),
+            FieldSpec::f32("aux", Role::Aux, 0.0),
+        ]
+    }
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::MonotoneScatter {
+                value: MD_VAL,
+                shadow: if self.shadow_is_value {
+                    MD_VAL
+                } else if self.shadow_dtype_clash {
+                    MD_SHADOW_F32
+                } else {
+                    MD_SHADOW_I32
+                },
+            },
+            comm: vec![if self.comm_on_aux {
+                CommDecl::PushMin(MD_AUX)
+            } else {
+                CommDecl::PushMin(MD_VAL)
+            }],
+            device: None,
+            accel: AccelSpec { name: "misdeclared", n_si32: 0, n_sf32: 0 },
+        }
+    }
+    fn init_vertex(&self, _g: u32, _row: &mut InitRow<'_>) {}
+}
+
+#[test]
+fn well_formed_program_constructs() {
+    assert!(ProgramDriver::build(Misdeclared::ok()).is_ok());
+}
+
+#[test]
+fn schema_pad_not_reduce_identity_is_typed_error() {
+    let err = ProgramDriver::build(Misdeclared { bad_pad: true, ..Misdeclared::ok() })
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("reduce identity"), "{msg}");
+    assert!(msg.contains("'val'"), "{msg}");
+}
+
+#[test]
+fn channel_on_aux_field_is_typed_error() {
+    let err = ProgramDriver::build(Misdeclared { comm_on_aux: true, ..Misdeclared::ok() })
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("aux"), "{msg}");
+    assert!(msg.contains("misdeclared"), "{msg}");
+}
+
+#[test]
+fn kernel_field_dtype_clash_is_typed_error() {
+    let err = ProgramDriver::build(Misdeclared {
+        shadow_dtype_clash: true,
+        ..Misdeclared::ok()
+    })
+    .map(|_| ())
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dtype") || msg.contains("share a dtype"), "{msg}");
+}
+
+#[test]
+fn shadow_aliasing_value_is_typed_error() {
+    // would otherwise pass dtype checks and panic inside the kernel's
+    // split-borrow on the first superstep
+    let err = ProgramDriver::build(Misdeclared { shadow_is_value: true, ..Misdeclared::ok() })
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("distinct"), "{msg}");
+}
+
+#[test]
+fn output_field_out_of_range_is_typed_error() {
+    let err = ProgramDriver::build(Misdeclared {
+        output_out_of_range: true,
+        ..Misdeclared::ok()
+    })
+    .map(|_| ())
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("4 fields"), "{msg}");
 }
 
 #[test]

@@ -157,6 +157,33 @@ def sssp(n, edges, src):
     return dist
 
 
+def widest(n, edges, src):
+    """Single-source widest path (max-min): width[v] = best bottleneck
+    capacity over paths src->v; +inf at the source (empty path), -inf if
+    unreachable. Pure selection among edge weights -- exact in f32, so the
+    engine is asserted bit-for-bit against these files (like BFS/CC/SSSP).
+    Mirrors baseline::widest in rust/src/baseline/."""
+    out = adjacency(n, edges)
+    width = [-float("inf")] * n
+    width[src] = float("inf")
+    q = [src]
+    queued = [False] * n
+    queued[src] = True
+    head = 0
+    while head < len(q):
+        v = q[head]
+        head += 1
+        queued[v] = False
+        for t, w in out[v]:
+            cand = min(width[v], w)
+            if cand > width[t]:
+                width[t] = cand
+                if not queued[t]:
+                    q.append(t)
+                    queued[t] = True
+    return width
+
+
 def pagerank(n, edges, rounds):
     out = adjacency(n, edges)
     outdeg = [len(out[v]) for v in range(n)]
@@ -207,6 +234,8 @@ def bc(n, edges, src):
 def fmt(x):
     if x == float("inf"):
         return "inf"
+    if x == -float("inf"):
+        return "-inf"
     if float(x) == int(x):
         return str(int(x))
     return repr(float(x))
@@ -224,6 +253,7 @@ def write_fixture(name, n, edges, src):
         "sssp": sssp(n, edges, src),
         "pagerank": pagerank(n, edges, PR_ROUNDS),
         "bc": bc(n, edges, src),
+        "widest": widest(n, edges, src),
     }
     for alg, vals in results.items():
         with open(os.path.join(HERE, "%s.%s.txt" % (name, alg)), "w") as f:

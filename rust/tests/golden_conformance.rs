@@ -7,9 +7,10 @@
 //! {RAND, HIGH, LOW} × every vertex [`Placement`] — and checks the run
 //! against the fixture:
 //!
-//! - BFS, CC, SSSP are **bit-exact** against the golden files in every
-//!   configuration (min reductions are order-free; the fixtures carry
-//!   integer weights, so SSSP distances are exact in f32);
+//! - BFS, CC, SSSP, and widest-path are **bit-exact** against the golden
+//!   files in every configuration (min/max reductions are order-free; the
+//!   fixtures carry integer weights, so SSSP distances are exact in f32
+//!   and widest-path widths are pure selections among weights);
 //! - direction-optimized BFS must also be bit-exact against the same
 //!   push-only golden files (DESIGN.md §8);
 //! - PageRank and BC are order-sensitive f32 summations, so their
@@ -227,13 +228,13 @@ fn golden_regenerate_if_requested() {
 }
 
 #[test]
-fn golden_bfs_cc_sssp_bit_exact_across_all_configs() {
+fn golden_bfs_cc_sssp_widest_bit_exact_across_all_configs() {
     if regen() {
         return;
     }
     for fx in FIXTURES {
         let g = load_graph(fx.name);
-        for alg in [AlgKind::Bfs, AlgKind::Cc, AlgKind::Sssp] {
+        for alg in [AlgKind::Bfs, AlgKind::Cc, AlgKind::Sssp, AlgKind::Widest] {
             let want = load_golden(fx.name, alg);
             for (label, cfg) in configs() {
                 let (r, _) = run_alg(&g, spec_for(alg, fx), &cfg)

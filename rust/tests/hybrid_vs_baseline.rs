@@ -3,7 +3,7 @@
 //! partitioned BSP engine (CPU-only element mixes; the accelerator path is
 //! covered by `accel_integration.rs` once artifacts are built).
 
-use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp};
+use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
 use totem::baseline;
 use totem::engine::{self, EngineConfig, RebalanceConfig};
 use totem::graph::generator::{rmat, with_random_weights, RmatParams};
@@ -81,6 +81,25 @@ fn sssp_matches_baseline() {
         let mut alg = Sssp::new(5);
         let r = engine::run(&g, &mut alg, &cfg).unwrap();
         assert_eq!(r.output.as_f32(), expect.as_slice(), "config {name}");
+    }
+}
+
+#[test]
+fn widest_matches_baseline() {
+    // max-min relaxation is pure selection among edge weights: the hybrid
+    // engine must reproduce the oracle bit-for-bit in every configuration
+    // (the new vertex program riding the driver's MonotoneScatter family).
+    let g = workload(9, 43, true);
+    let expect = baseline::widest(&g, 5);
+    for (name, cfg) in configs() {
+        let mut alg = Widest::new(5);
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        for (v, (a, b)) in r.output.as_f32().iter().zip(&expect).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "config {name} vertex {v}: {a} vs {b}"
+            );
+        }
     }
 }
 
