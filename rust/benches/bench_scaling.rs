@@ -1,0 +1,109 @@
+//! BENCH_scaling — the repo's first perf-trajectory baseline (DESIGN.md
+//! §11): TEPS per algorithm × thread count × balance mode on seeded
+//! R-MATs, plus the observable intra-partition load-imbalance spread
+//! (`Metrics::chunk_spread_secs`).
+//!
+//! Host-only: needs no AOT artifacts, so it runs anywhere the crate
+//! builds. Emits `BENCH_scaling.json` into the working directory (the
+//! committed baseline + the CI artifact) and the usual markdown/JSON pair
+//! under `results/`.
+//!
+//! Expectation encoded by the committed baseline: on skewed R-MATs at
+//! threads > 1, `edge` and `hub-split` rows meet or beat `vertex` TEPS,
+//! because vertex-count chunks hand one worker all the hubs (Fig. 11's
+//! imbalance story). Order-sensitive kernels (PageRank push, BC forward
+//! σ) run their canonical sequential path regardless of mode, so their
+//! rows move only with the pool's dispatch overhead.
+//!
+//! Flags: --scales 12,13  --threads 1,2,4  --reps 2  --seed 42
+//!        --algs bfs,sssp,cc,widest,pagerank,bc  --out BENCH_scaling.json
+
+use totem::engine::{Balance, EngineConfig};
+use totem::graph::Workload;
+use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::report::{fmt_teps, save, Table};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s, JsonValue};
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let reps = args.usize_or("reps", 2).unwrap();
+    let seed = args.u64_or("seed", 42).unwrap();
+    let scales: Vec<u32> = args
+        .f64_list_or("scales", &[12.0, 13.0])
+        .unwrap()
+        .into_iter()
+        .map(|x| x as u32)
+        .collect();
+    let threads: Vec<usize> = args
+        .f64_list_or("threads", &[1.0, 2.0, 4.0])
+        .unwrap()
+        .into_iter()
+        .map(|x| x as usize)
+        .collect();
+    let algs: Vec<AlgKind> = args
+        .str_or("algs", "bfs,sssp,cc,widest,pagerank,bc")
+        .split(',')
+        .map(|a| AlgKind::parse(a.trim()).unwrap())
+        .collect();
+    let out_path = args.str_or("out", "BENCH_scaling.json");
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    let mut md = String::new();
+    for &alg in &algs {
+        for &scale in &scales {
+            let g = build_workload(Workload::Rmat(scale), seed, alg);
+            let mut t = Table::new(
+                &format!("BENCH_scaling: {} on RMAT{scale} (seed {seed})", alg.name()),
+                &["threads", "vertex", "edge", "hub-split"],
+            );
+            for &th in &threads {
+                let mut row = vec![th.to_string()];
+                for bal in Balance::ALL {
+                    let cfg = EngineConfig::host_only(th).with_balance(bal);
+                    match measure(&g, RunSpec::new(alg), &cfg, reps) {
+                        Ok(m) => {
+                            let spread = (0..m.last.metrics.partitions)
+                                .map(|p| m.last.metrics.chunk_spread_secs(p))
+                                .fold(0.0, f64::max);
+                            row.push(fmt_teps(m.teps));
+                            rows.push(obj(vec![
+                                ("alg", s(alg.name())),
+                                ("scale", num(scale as f64)),
+                                ("threads", num(th as f64)),
+                                ("balance", s(bal.name())),
+                                ("teps", num(m.teps)),
+                                ("makespan_secs", num(m.makespan_secs)),
+                                ("chunk_spread_secs", num(spread)),
+                                ("supersteps", num(m.last.supersteps as f64)),
+                            ]));
+                        }
+                        Err(e) => {
+                            eprintln!("bench_scaling: {} failed: {e:#}", alg.name());
+                            row.push("-".into());
+                        }
+                    }
+                }
+                t.row(row);
+            }
+            md.push_str(&t.markdown());
+            md.push('\n');
+        }
+    }
+    print!("{md}");
+
+    let doc = obj(vec![
+        ("bench", s("BENCH_scaling")),
+        ("workloads", s("paper-parameter R-MAT (a=0.57 b=0.19 c=0.19, avg degree 16, permuted)")),
+        ("seed", num(seed as f64)),
+        (
+            "methodology",
+            s("measured: host-only engine runs, mean TEPS over reps after one warmup; \
+               teps = traversed_edges / makespan (Eq. 2 accounting)"),
+        ),
+        ("rows", arr(rows.clone())),
+    ]);
+    std::fs::write(&out_path, doc.render()).unwrap();
+    save("bench_scaling", &md, &obj(vec![("rows", arr(rows))])).unwrap();
+    eprintln!("bench_scaling: wrote {out_path}");
+}

@@ -75,6 +75,11 @@ pub struct StepCtx {
     /// `supports_pull` and the run enables `EngineConfig::direction`;
     /// accelerator elements always receive `Push`.
     pub direction: Direction,
+    /// Requested intra-partition balance mode (DESIGN.md §11). Kernels may
+    /// degrade it (e.g. pull and gather cap at `Edge`; order-sensitive f32
+    /// kernels ignore it entirely) — eligibility is decided centrally in
+    /// `ProgramDriver`, never per call site.
+    pub balance: crate::util::threadpool::Balance,
 }
 
 /// Result of a CPU compute phase.
@@ -84,6 +89,11 @@ pub struct ComputeOut {
     /// Instrumented state-memory reads/writes (0 when not instrumenting).
     pub reads: u64,
     pub writes: u64,
+    /// Wall time of the slowest / fastest worker chunk in this phase
+    /// (0 when the kernel ran as a single chunk) — the load-imbalance
+    /// signal surfaced as `StepMetrics::chunk_max` / `chunk_min`.
+    pub chunk_max_secs: f64,
+    pub chunk_min_secs: f64,
 }
 
 /// Edge array orientation for the accelerator COO upload.

@@ -39,7 +39,9 @@ use crate::util::atomic::{
     as_atomic_f32_cells, as_atomic_i32_cells, atomic_add_f32, atomic_max_f32, atomic_min_f32,
 };
 use crate::util::split_two_mut;
-use crate::util::threadpool::parallel_reduce;
+use crate::util::threadpool::{
+    parallel_reduce, parallel_reduce_plan, Balance, Chunk, ChunkPlan,
+};
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicI32, AtomicU32, AtomicU64, Ordering};
 
@@ -938,6 +940,7 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
             threads: 1,
             instrument: false,
             direction: Direction::Push,
+            balance: Balance::Vertex,
         };
         let cur = self.program.current_level(&probe);
         let levels = state.arrays[self.state_index(level)].as_i32();
@@ -958,7 +961,7 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
 
     fn compute_cpu(&self, part: &Partition, state: &mut AlgState, ctx: &StepCtx) -> ComputeOut {
         if self.program.skip_superstep(ctx) {
-            return ComputeOut { changed: true, reads: 0, writes: 0 };
+            return ComputeOut { changed: true, ..Default::default() };
         }
         match self.kernels[ctx.cycle] {
             Kernel::MonotoneScatter { value, shadow } => {
@@ -1013,6 +1016,34 @@ fn merge(a: Acc, b: Acc) -> Acc {
 }
 
 impl<P: VertexProgram> ProgramDriver<P> {
+    /// Central balance-mode eligibility (DESIGN.md §11). The requested
+    /// `ctx.balance` is granted, degraded, or ignored **here**, by kernel
+    /// family, from the §9 order-sensitivity contract — never at call
+    /// sites:
+    ///
+    /// - `MonotoneScatter`, `Traversal` (push): CAS scatters
+    ///   (`fetch_min`/`fetch_max`/`fetch_or`) are idempotent, commutative
+    ///   and NaN-free → any mode, including `HubSplit`.
+    /// - `Traversal` (pull), `Gather`: per-vertex work must stay whole (a
+    ///   pull probe early-exits; a gather's f32 sum must run in adjacency
+    ///   order) → `HubSplit` degrades to `Edge`.
+    /// - `TraversalSigma`, `FoldScatter`: canonical-order f32 scatters are
+    ///   order-*sensitive* → forced single-chunk (see those kernels).
+    fn scatter_plan(&self, part: &Partition, ctx: &StepCtx) -> ChunkPlan {
+        ChunkPlan::for_balance(ctx.balance, &part.csr.row_offsets, ctx.threads)
+    }
+
+    /// Edge-capped plan (`HubSplit` → `Edge`) over the given row offsets:
+    /// pull kernels balance on in-degree (transpose rows), gather on
+    /// out-degree, but neither may shard a single vertex's adjacency.
+    fn edge_capped_plan(row_offsets: &[u64], ctx: &StepCtx) -> ChunkPlan {
+        let b = match ctx.balance {
+            Balance::HubSplit => Balance::Edge,
+            b => b,
+        };
+        ChunkPlan::for_balance(b, row_offsets, ctx.threads)
+    }
+
     /// Monotone relaxation (paper Fig. 20's `active` pattern): a vertex
     /// relaxes its out-edges when its value improved past the shadow —
     /// which covers both local and inbox updates without explicit flags.
@@ -1029,12 +1060,61 @@ impl<P: VertexProgram> ProgramDriver<P> {
         let needs_w = self.program.meta().needs_weights;
         match self.schema[value.0].ty {
             FieldType::I32 => {
+                let plan = self.scatter_plan(part, ctx);
                 let (lo_arr, hi_arr) = split_two_mut(&mut state.arrays, vi, si);
                 let cells = as_atomic_i32_cells(lo_arr.as_i32_mut());
                 let shadow_cells = as_atomic_i32_cells(hi_arr.as_i32_mut());
-                let fold = |lo: usize, hi: usize, acc: Acc| {
+                // Hub gate (DESIGN.md §11): with a split hub the gate runs
+                // once, *before* the fan-out, so every adjacency shard
+                // scatters the same settled value and the shadow advances
+                // exactly once per superstep.
+                let hub_val: Option<i32> = plan.hub.and_then(|h| {
+                    let dv = cells[h].load(Ordering::Relaxed);
+                    let sh = shadow_cells[h].load(Ordering::Relaxed);
+                    if (!upward && dv >= sh) || (upward && dv <= sh) {
+                        return None;
+                    }
+                    shadow_cells[h].store(dv, Ordering::Relaxed);
+                    Some(dv)
+                });
+                let hub = plan.hub;
+                let scatter = |v: usize,
+                               dv: i32,
+                               span: Option<(usize, usize)>,
+                               changed: &mut bool,
+                               reads: &mut u64,
+                               writes: &mut u64| {
+                    let ts_all = part.targets(v as u32);
+                    let ws_all = if needs_w { part.weights(v as u32) } else { &[] };
+                    let (ts, base) = match span {
+                        Some((e0, e1)) => (&ts_all[e0..e1], e0),
+                        None => (ts_all, 0),
+                    };
+                    for (k, &t) in ts.iter().enumerate() {
+                        let w = if needs_w { ws_all[base + k] } else { 0.0 };
+                        let Some(up) = self.program.edge_update(ctx, Value::I32(dv), w) else {
+                            continue;
+                        };
+                        let msg = up.expect_i32();
+                        // only min-reduce exists for i32 values
+                        let old = cells[t as usize].fetch_min(msg, Ordering::Relaxed);
+                        if ctx.instrument {
+                            *reads += 1;
+                        }
+                        if msg < old {
+                            *changed = true;
+                            if ctx.instrument {
+                                *writes += 1;
+                            }
+                        }
+                    }
+                };
+                let fold = |c: &Chunk, acc: Acc| {
                     let (mut changed, mut reads, mut writes) = acc;
-                    for v in lo..hi {
+                    for v in c.lo..c.hi {
+                        if hub == Some(v) {
+                            continue;
+                        }
                         let dv = cells[v].load(Ordering::Relaxed);
                         if ctx.instrument {
                             reads += 2; // value[v], shadow[v]
@@ -1044,80 +1124,110 @@ impl<P: VertexProgram> ProgramDriver<P> {
                             continue;
                         }
                         shadow_cells[v].store(dv, Ordering::Relaxed);
-                        let ts = part.targets(v as u32);
-                        let ws = if needs_w { part.weights(v as u32) } else { &[] };
-                        for (k, &t) in ts.iter().enumerate() {
-                            let w = if needs_w { ws[k] } else { 0.0 };
-                            let Some(up) = self.program.edge_update(ctx, Value::I32(dv), w)
-                            else {
-                                continue;
-                            };
-                            let msg = up.expect_i32();
-                            // only min-reduce exists for i32 values
-                            let old = cells[t as usize].fetch_min(msg, Ordering::Relaxed);
-                            if ctx.instrument {
-                                reads += 1;
-                            }
-                            if msg < old {
-                                changed = true;
-                                if ctx.instrument {
-                                    writes += 1;
-                                }
-                            }
-                        }
+                        scatter(v, dv, None, &mut changed, &mut reads, &mut writes);
+                    }
+                    if let (Some(span), Some(h), Some(dv)) = (c.split, hub, hub_val) {
+                        scatter(h, dv, Some(span), &mut changed, &mut reads, &mut writes);
                     }
                     (changed, reads, writes)
                 };
-                let (changed, reads, writes) =
-                    parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
-                ComputeOut { changed, reads, writes }
+                let ((changed, mut reads, writes), spread) =
+                    parallel_reduce_plan(&plan, (false, 0, 0), fold, merge);
+                if ctx.instrument && hub.is_some() {
+                    reads += 2; // hub gate: value[h], shadow[h]
+                }
+                ComputeOut {
+                    changed,
+                    reads,
+                    writes,
+                    chunk_max_secs: spread.max_secs,
+                    chunk_min_secs: spread.min_secs,
+                }
             }
             FieldType::F32 => {
+                let plan = self.scatter_plan(part, ctx);
                 let (lo_arr, hi_arr) = split_two_mut(&mut state.arrays, vi, si);
                 let cells = as_atomic_f32_cells(lo_arr.as_f32_mut());
                 let shadow_cells = as_atomic_f32_cells(hi_arr.as_f32_mut());
-                let fold = |lo: usize, hi: usize, acc: Acc| {
+                // Hub gate: see the I32 arm.
+                let hub_val: Option<f32> = plan.hub.and_then(|h| {
+                    let dv = f32::from_bits(cells[h].load(Ordering::Relaxed));
+                    let sh = f32::from_bits(shadow_cells[h].load(Ordering::Relaxed));
+                    if (!upward && dv >= sh) || (upward && dv <= sh) {
+                        return None;
+                    }
+                    shadow_cells[h].store(dv.to_bits(), Ordering::Relaxed);
+                    Some(dv)
+                });
+                let hub = plan.hub;
+                let scatter = |v: usize,
+                               dv: f32,
+                               span: Option<(usize, usize)>,
+                               changed: &mut bool,
+                               reads: &mut u64,
+                               writes: &mut u64| {
+                    let ts_all = part.targets(v as u32);
+                    let ws_all = if needs_w { part.weights(v as u32) } else { &[] };
+                    let (ts, base) = match span {
+                        Some((e0, e1)) => (&ts_all[e0..e1], e0),
+                        None => (ts_all, 0),
+                    };
+                    for (k, &t) in ts.iter().enumerate() {
+                        let w = if needs_w { ws_all[base + k] } else { 0.0 };
+                        let Some(up) = self.program.edge_update(ctx, Value::F32(dv), w) else {
+                            continue;
+                        };
+                        let msg = up.expect_f32();
+                        let old = if upward {
+                            atomic_max_f32(&cells[t as usize], msg)
+                        } else {
+                            atomic_min_f32(&cells[t as usize], msg)
+                        };
+                        if ctx.instrument {
+                            *reads += 1;
+                        }
+                        if (upward && msg > old) || (!upward && msg < old) {
+                            *changed = true;
+                            if ctx.instrument {
+                                *writes += 1;
+                            }
+                        }
+                    }
+                };
+                let fold = |c: &Chunk, acc: Acc| {
                     let (mut changed, mut reads, mut writes) = acc;
-                    for v in lo..hi {
+                    for v in c.lo..c.hi {
+                        if hub == Some(v) {
+                            continue;
+                        }
                         let dv = f32::from_bits(cells[v].load(Ordering::Relaxed));
                         if ctx.instrument {
-                            reads += 2;
+                            reads += 2; // value[v], shadow[v]
                         }
                         let sh = f32::from_bits(shadow_cells[v].load(Ordering::Relaxed));
                         if (!upward && dv >= sh) || (upward && dv <= sh) {
                             continue;
                         }
                         shadow_cells[v].store(dv.to_bits(), Ordering::Relaxed);
-                        let ts = part.targets(v as u32);
-                        let ws = if needs_w { part.weights(v as u32) } else { &[] };
-                        for (k, &t) in ts.iter().enumerate() {
-                            let w = if needs_w { ws[k] } else { 0.0 };
-                            let Some(up) = self.program.edge_update(ctx, Value::F32(dv), w)
-                            else {
-                                continue;
-                            };
-                            let msg = up.expect_f32();
-                            let old = if upward {
-                                atomic_max_f32(&cells[t as usize], msg)
-                            } else {
-                                atomic_min_f32(&cells[t as usize], msg)
-                            };
-                            if ctx.instrument {
-                                reads += 1;
-                            }
-                            if (upward && msg > old) || (!upward && msg < old) {
-                                changed = true;
-                                if ctx.instrument {
-                                    writes += 1;
-                                }
-                            }
-                        }
+                        scatter(v, dv, None, &mut changed, &mut reads, &mut writes);
+                    }
+                    if let (Some(span), Some(h), Some(dv)) = (c.split, hub, hub_val) {
+                        scatter(h, dv, Some(span), &mut changed, &mut reads, &mut writes);
                     }
                     (changed, reads, writes)
                 };
-                let (changed, reads, writes) =
-                    parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
-                ComputeOut { changed, reads, writes }
+                let ((changed, mut reads, writes), spread) =
+                    parallel_reduce_plan(&plan, (false, 0, 0), fold, merge);
+                if ctx.instrument && hub.is_some() {
+                    reads += 2; // hub gate: value[h], shadow[h]
+                }
+                ComputeOut {
+                    changed,
+                    reads,
+                    writes,
+                    chunk_max_secs: spread.max_secs,
+                    chunk_min_secs: spread.min_secs,
+                }
             }
         }
     }
@@ -1148,58 +1258,95 @@ impl<P: VertexProgram> ProgramDriver<P> {
             std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
         };
 
-        let fold = |lo: usize, hi: usize, acc: Acc| {
+        let plan = self.scatter_plan(part, ctx);
+        // Hub gate: the frontier test is read-only, but snapshotting it
+        // once keeps every adjacency shard's decision identical (the level
+        // of an already-frontier vertex cannot drop mid-superstep — all
+        // writers write `cur + 1`).
+        let hub = plan.hub;
+        let hub_on_frontier =
+            hub.is_some_and(|h| cells[h].load(Ordering::Relaxed) == cur);
+        let expand = |v: usize,
+                      span: Option<(usize, usize)>,
+                      changed: &mut bool,
+                      reads: &mut u64,
+                      writes: &mut u64| {
+            let ts_all = part.targets(v as u32);
+            let ts = match span {
+                Some((e0, e1)) => &ts_all[e0..e1],
+                None => ts_all,
+            };
+            for &t in ts {
+                let t = t as usize;
+                if t < nv {
+                    // visited-bitmap fast path (Fig 11 lines 6-7)
+                    if ctx.instrument {
+                        *reads += 1;
+                    }
+                    let bit = 1u64 << (t % 64);
+                    if bitmap[t / 64].load(Ordering::Relaxed) & bit != 0 {
+                        continue;
+                    }
+                    // claim the bit; the level write races benignly
+                    // (all writers this superstep write the same value).
+                    let prev = bitmap[t / 64].fetch_or(bit, Ordering::Relaxed);
+                    if prev & bit == 0 {
+                        // might already hold a level delivered by the
+                        // inbox (stale bitmap) — min keeps it correct.
+                        cells[t].fetch_min(up, Ordering::Relaxed);
+                        if ctx.instrument {
+                            *writes += 1;
+                        }
+                        *changed = true;
+                    }
+                } else {
+                    // boundary edge: reduce into the ghost slot
+                    let prev = cells[t].fetch_min(up, Ordering::Relaxed);
+                    if ctx.instrument {
+                        *reads += 1;
+                    }
+                    if prev > up {
+                        if ctx.instrument {
+                            *writes += 1;
+                        }
+                        *changed = true;
+                    }
+                }
+            }
+        };
+        let fold = |c: &Chunk, acc: Acc| {
             let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
+            for v in c.lo..c.hi {
+                if hub == Some(v) {
+                    continue;
+                }
                 if ctx.instrument {
                     reads += 1; // level[v]
                 }
                 if cells[v].load(Ordering::Relaxed) != cur {
                     continue;
                 }
-                for &t in part.targets(v as u32) {
-                    let t = t as usize;
-                    if t < nv {
-                        // visited-bitmap fast path (Fig 11 lines 6-7)
-                        if ctx.instrument {
-                            reads += 1;
-                        }
-                        let bit = 1u64 << (t % 64);
-                        if bitmap[t / 64].load(Ordering::Relaxed) & bit != 0 {
-                            continue;
-                        }
-                        // claim the bit; the level write races benignly
-                        // (all writers this superstep write the same value).
-                        let prev = bitmap[t / 64].fetch_or(bit, Ordering::Relaxed);
-                        if prev & bit == 0 {
-                            // might already hold a level delivered by the
-                            // inbox (stale bitmap) — min keeps it correct.
-                            cells[t].fetch_min(up, Ordering::Relaxed);
-                            if ctx.instrument {
-                                writes += 1;
-                            }
-                            changed = true;
-                        }
-                    } else {
-                        // boundary edge: reduce into the ghost slot
-                        let prev = cells[t].fetch_min(up, Ordering::Relaxed);
-                        if ctx.instrument {
-                            reads += 1;
-                        }
-                        if prev > up {
-                            if ctx.instrument {
-                                writes += 1;
-                            }
-                            changed = true;
-                        }
-                    }
+                expand(v, None, &mut changed, &mut reads, &mut writes);
+            }
+            if let (Some(span), Some(h)) = (c.split, hub) {
+                if hub_on_frontier {
+                    expand(h, Some(span), &mut changed, &mut reads, &mut writes);
                 }
             }
             (changed, reads, writes)
         };
-        let (changed, reads, writes) =
-            parallel_reduce(nv, ctx.threads, (false, 0, 0), fold, merge);
-        ComputeOut { changed, reads, writes }
+        let ((changed, mut reads, writes), spread) =
+            parallel_reduce_plan(&plan, (false, 0, 0), fold, merge);
+        if ctx.instrument && hub.is_some() {
+            reads += 1; // hub gate: level[h]
+        }
+        ComputeOut {
+            changed,
+            reads,
+            writes,
+            chunk_max_secs: spread.max_secs,
+            chunk_min_secs: spread.min_secs,
+        }
     }
 
     /// Bottom-up traversal (DESIGN.md §8), derived from the same program:
@@ -1240,9 +1387,12 @@ impl<P: VertexProgram> ProgramDriver<P> {
             std::slice::from_raw_parts(scratch.as_ptr() as *const AtomicU64, scratch.len())
         };
 
-        let fold = |lo: usize, hi: usize, acc: Acc| {
+        // Balance on in-degree (the probe cost); a vertex's probe must stay
+        // whole (early exit + claim), so HubSplit caps at Edge.
+        let plan = Self::edge_capped_plan(&tr.row_offsets[..nv + 1], ctx);
+        let fold = |c: &Chunk, acc: Acc| {
             let (mut changed, mut reads, mut writes) = acc;
-            for v in lo..hi {
+            for v in c.lo..c.hi {
                 let lv = cells[v].load(Ordering::Relaxed);
                 if ctx.instrument {
                     reads += 1; // level[v]
@@ -1301,9 +1451,15 @@ impl<P: VertexProgram> ProgramDriver<P> {
             }
             (changed, reads, writes)
         };
-        let (changed, reads, writes) =
-            parallel_reduce(nv, ctx.threads, (false, 0, 0), fold, merge);
-        ComputeOut { changed, reads, writes }
+        let ((changed, reads, writes), spread) =
+            parallel_reduce_plan(&plan, (false, 0, 0), fold, merge);
+        ComputeOut {
+            changed,
+            reads,
+            writes,
+            chunk_max_secs: spread.max_secs,
+            chunk_min_secs: spread.min_secs,
+        }
     }
 
     /// BC forward (paper Figure 18 forwardPropagation): settle levels with
@@ -1369,9 +1525,15 @@ impl<P: VertexProgram> ProgramDriver<P> {
             }
             (changed, reads, writes)
         };
+        // Deterministic path (DESIGN.md §9, §11): the f32 σ-adds into a
+        // shared target are order-sensitive, so the canonical sweep must
+        // run start-to-finish as ONE chunk — parallel chunking (any
+        // balance mode, any thread count) would make the add order
+        // timing-dependent. `threads = 1` is the central eligibility
+        // decision, not a call-site accident.
         let (changed, reads, writes) =
-            parallel_reduce(part.nv, ctx.threads, (false, 0, 0), fold, merge);
-        ComputeOut { changed, reads, writes }
+            parallel_reduce(part.nv, 1, (false, 0, 0), fold, merge);
+        ComputeOut { changed, reads, writes, ..Default::default() }
     }
 
     /// Gather: each active vertex sums `src` over its adjacency (local CSR
@@ -1392,13 +1554,15 @@ impl<P: VertexProgram> ProgramDriver<P> {
         let lvl = self.program.current_level(ctx);
         let fields = Fields::new(state, &self.slots);
         let program = &self.program;
-        let (reads, writes) = parallel_reduce(
-            nv,
-            ctx.threads,
+        // Balance on out-degree (the sum cost); a vertex's f32 sum must run
+        // in adjacency order (§9), so HubSplit caps at Edge.
+        let plan = Self::edge_capped_plan(&part.csr.row_offsets, ctx);
+        let ((reads, writes), spread) = parallel_reduce_plan(
+            &plan,
             (0u64, 0u64),
-            |lo, hi, acc| {
+            |c: &Chunk, acc| {
                 let (mut reads, mut writes) = acc;
-                for v in lo..hi {
+                for v in c.lo..c.hi {
                     match active {
                         Activation::Always => {}
                         Activation::LevelEquals(f) => {
@@ -1430,7 +1594,13 @@ impl<P: VertexProgram> ProgramDriver<P> {
             program.publish(ctx, v, &fields);
         }
         let publish_writes = if ctx.instrument { nv as u64 } else { 0 };
-        ComputeOut { changed: true, reads, writes: writes + publish_writes }
+        ComputeOut {
+            changed: true,
+            reads,
+            writes: writes + publish_writes,
+            chunk_max_secs: spread.max_secs,
+            chunk_min_secs: spread.min_secs,
+        }
     }
 
     /// Fold-then-scatter (push-mode PageRank): fold the previous round's
@@ -1463,13 +1633,18 @@ impl<P: VertexProgram> ProgramDriver<P> {
             }
         }
         if ctx.superstep >= rounds {
-            return ComputeOut { changed: true, reads: 0, writes: writes_seq };
+            return ComputeOut { changed: true, writes: writes_seq, ..Default::default() };
         }
 
         let canon = &part.canonical_order;
+        // Deterministic path (DESIGN.md §9, §11): rank mass is f32-added
+        // into shared accumulator cells in canonical sender order; that
+        // order is observable, so the sweep runs as ONE chunk regardless
+        // of `ctx.threads` / `ctx.balance` — the driver's central
+        // eligibility decision for order-sensitive kernels.
         let (reads, writes) = parallel_reduce(
             nv,
-            ctx.threads,
+            1,
             (0u64, 0u64),
             |lo, hi, acc| {
                 let (mut reads, mut writes) = acc;
@@ -1492,7 +1667,7 @@ impl<P: VertexProgram> ProgramDriver<P> {
             },
             |a, b| (a.0 + b.0, a.1 + b.1),
         );
-        ComputeOut { changed: true, reads, writes: writes + writes_seq }
+        ComputeOut { changed: true, reads, writes: writes + writes_seq, ..Default::default() }
     }
 }
 

@@ -3,7 +3,14 @@
 
 use super::direction::DirectionConfig;
 use crate::partition::{Placement, Strategy};
+use crate::util::threadpool::Balance;
 use std::path::PathBuf;
+
+/// Detected machine parallelism — the default CPU-element thread count for
+/// `host_auto`, `hybrid`, and the CLI (`totem run --threads N` overrides).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// What kind of processing element executes a partition.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -125,6 +132,11 @@ pub struct EngineConfig {
     /// `supports_pull` react; CPU partitions may switch to bottom-up
     /// sweeps per superstep, accelerator partitions always stay top-down.
     pub direction: Option<DirectionConfig>,
+    /// Intra-partition load-balance mode for parallel kernels
+    /// (DESIGN.md §11). Pure scheduling choice: global outputs are
+    /// bit-identical across modes; eligibility per kernel family is
+    /// decided centrally in `ProgramDriver`.
+    pub balance: Balance,
 }
 
 impl EngineConfig {
@@ -143,6 +155,7 @@ impl EngineConfig {
             mode: ExecMode::Synchronous,
             rebalance: None,
             direction: None,
+            balance: Balance::Vertex,
         }
     }
 
@@ -154,13 +167,20 @@ impl EngineConfig {
         }
     }
 
+    /// Host-only configuration sized to the machine
+    /// (`available_parallelism`) — the CLI default.
+    pub fn host_auto() -> EngineConfig {
+        Self::host_only(default_threads())
+    }
+
     /// Hybrid `2SyG`-style configuration: one CPU partition holding an
     /// `alpha` share of the edges plus `accels` accelerator partitions
-    /// splitting the rest evenly.
+    /// splitting the rest evenly. The CPU element is sized to the machine;
+    /// override with `from_notation` or by editing `elements[0]`.
     pub fn hybrid(accels: usize, alpha: f64, strategy: Strategy) -> EngineConfig {
         assert!(accels >= 1, "hybrid needs at least one accelerator");
         assert!((0.0..=1.0).contains(&alpha));
-        let mut elements = vec![ElementKind::Cpu { threads: 1 }];
+        let mut elements = vec![ElementKind::Cpu { threads: default_threads() }];
         let mut shares = vec![alpha];
         for _ in 0..accels {
             elements.push(ElementKind::Accelerator);
@@ -171,6 +191,9 @@ impl EngineConfig {
 
     /// Multi-partition CPU-only configuration — exercises the full BSP +
     /// communication machinery without PJRT (used heavily by tests).
+    /// Deliberately `threads: 1` per element: test infrastructure defaults
+    /// to the fully deterministic single-chunk path; tests that exercise
+    /// intra-partition parallelism raise it explicitly.
     pub fn cpu_partitions(shares: &[f64], strategy: Strategy) -> EngineConfig {
         EngineConfig {
             elements: shares.iter().map(|_| ElementKind::Cpu { threads: 1 }).collect(),
@@ -268,12 +291,42 @@ impl EngineConfig {
         self.with_direction(DirectionConfig::default())
     }
 
+    /// Select the intra-partition balance mode (DESIGN.md §11).
+    pub fn with_balance(mut self, balance: Balance) -> Self {
+        self.balance = balance;
+        self
+    }
+
+    /// Set every CPU element's thread count (the `--threads` override).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        for el in &mut self.elements {
+            if let ElementKind::Cpu { threads: t } = el {
+                *t = threads;
+            }
+        }
+        self
+    }
+
     pub fn num_partitions(&self) -> usize {
         self.elements.len()
     }
 
     pub fn has_accelerator(&self) -> bool {
         self.elements.iter().any(|e| *e == ElementKind::Accelerator)
+    }
+
+    /// Widest CPU element — the worker-pool size for this run and the
+    /// `threads` figure reported by `harness::Measured`.
+    pub fn max_cpu_threads(&self) -> usize {
+        self.elements
+            .iter()
+            .map(|e| match e {
+                ElementKind::Cpu { threads } => *threads,
+                ElementKind::Accelerator => 0,
+            })
+            .max()
+            .unwrap_or(1)
+            .max(1)
     }
 }
 
@@ -337,6 +390,23 @@ mod tests {
         assert_eq!(c.direction, Some(DirectionConfig::default()));
         let c = c.with_direction(DirectionConfig { alpha: 4.0, beta: 8.0 });
         assert_eq!(c.direction.unwrap().alpha, 4.0);
+    }
+
+    #[test]
+    fn balance_and_threads_builders() {
+        let c = EngineConfig::host_only(1);
+        assert_eq!(c.balance, Balance::Vertex, "historical chunking is the default");
+        let c = c.with_balance(Balance::HubSplit).with_threads(4);
+        assert_eq!(c.balance, Balance::HubSplit);
+        assert_eq!(c.elements, vec![ElementKind::Cpu { threads: 4 }]);
+        assert_eq!(c.max_cpu_threads(), 4);
+
+        let auto = EngineConfig::host_auto();
+        assert!(auto.max_cpu_threads() >= 1);
+        let h = EngineConfig::hybrid(1, 0.5, Strategy::High).with_threads(3);
+        assert_eq!(h.elements[0], ElementKind::Cpu { threads: 3 });
+        assert_eq!(h.elements[1], ElementKind::Accelerator, "accels untouched");
+        assert_eq!(h.max_cpu_threads(), 3);
     }
 
     #[test]

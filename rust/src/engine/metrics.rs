@@ -44,6 +44,14 @@ pub struct StepMetrics {
     pub frontier_edges: Vec<u64>,
     /// Per-partition Σ out-degree over unexplored vertices (`m_u` proxy).
     pub unexplored_edges: Vec<u64>,
+    /// Per-partition wall time of the *slowest* worker chunk in the
+    /// compute phase (DESIGN.md §11) — with `chunk_min`, the observable
+    /// intra-partition load-imbalance spread. Zero when the kernel ran as
+    /// a single chunk (threads = 1, tiny partitions, or the deterministic
+    /// order-sensitive path).
+    pub chunk_max: Vec<f64>,
+    /// Per-partition wall time of the fastest worker chunk.
+    pub chunk_min: Vec<f64>,
 }
 
 impl StepMetrics {
@@ -55,6 +63,8 @@ impl StepMetrics {
             frontier_verts: vec![0; partitions],
             frontier_edges: vec![0; partitions],
             unexplored_edges: vec![0; partitions],
+            chunk_max: vec![0.0; partitions],
+            chunk_min: vec![0.0; partitions],
             ..Default::default()
         }
     }
@@ -174,6 +184,22 @@ impl Metrics {
         self.steps.iter().map(|s| s.messages).sum()
     }
 
+    /// Intra-partition load-imbalance for partition `p`:
+    /// `Σ_steps (chunk_max - chunk_min)` — seconds the partition's fastest
+    /// worker spent idle waiting on its slowest sibling. The balance-mode
+    /// signal (DESIGN.md §11); ~0 under `Edge`/`HubSplit` on skewed graphs
+    /// and for single-chunk kernels.
+    pub fn chunk_spread_secs(&self, p: usize) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| {
+                (s.chunk_max.get(p).copied().unwrap_or(0.0)
+                    - s.chunk_min.get(p).copied().unwrap_or(0.0))
+                .max(0.0)
+            })
+            .sum()
+    }
+
     /// Index of the slowest partition by total compute time — the paper's
     /// "bottleneck processor" (always the CPU in their experiments).
     pub fn bottleneck_partition(&self) -> usize {
@@ -258,5 +284,18 @@ mod tests {
         assert_eq!(m.bottleneck_partition(), 1);
         assert_eq!(m.total_bytes(), 150);
         assert_eq!(m.total_messages(), 15);
+    }
+
+    #[test]
+    fn chunk_spread_accumulates_per_partition() {
+        let mut m = sample();
+        assert_eq!(m.chunk_spread_secs(0), 0.0, "single-chunk steps report zero");
+        m.steps[0].chunk_max = vec![0.5, 0.2];
+        m.steps[0].chunk_min = vec![0.1, 0.2];
+        m.steps[1].chunk_max = vec![0.3, 0.0];
+        m.steps[1].chunk_min = vec![0.2, 0.0];
+        assert!((m.chunk_spread_secs(0) - 0.5).abs() < 1e-12);
+        assert_eq!(m.chunk_spread_secs(1), 0.0, "balanced chunks: no spread");
+        assert_eq!(m.chunk_spread_secs(9), 0.0, "out of range is zero");
     }
 }

@@ -5,8 +5,9 @@
 //! This executor splits the superstep into per-partition tasks:
 //!
 //! - every CPU partition computes on its own scoped thread;
-//! - accelerator partitions step on the coordinator thread while the CPU
-//!   threads run;
+//! - accelerator partitions (and `HostWide` fallback partitions, which
+//!   fan out across the whole machine themselves) step on the coordinator
+//!   thread while the CPU threads run;
 //! - the coordinator drains compute completions and, as soon as **both**
 //!   endpoints of a ghost-table exchange have finished computing, runs
 //!   that exchange — while other partitions are still computing.
@@ -36,18 +37,21 @@
 //! partition's superstep-`s` kernel never races its superstep-`s` inbox —
 //! the sealed-inbox invariant that makes the overlap safe.
 //!
-//! Threads are spawned fresh each superstep (scoped threads make the
-//! borrow story trivially sound); spawn cost is microseconds against
-//! millisecond-scale supersteps at bench sizes. A persistent per-cycle
-//! worker pool — and hoisting the exchange plan, which must currently be
-//! re-derived because a migration can reshape `pg` between supersteps —
-//! is deliberate future work.
+//! Each partition still gets one fresh scoped *task* thread per superstep
+//! (scoped threads keep the borrow story trivially sound, and the
+//! coordinator needs per-partition completion events anyway), but the
+//! kernels inside those tasks no longer spawn: chunk work is dispatched
+//! to the persistent parked worker pool (`util::threadpool`, DESIGN.md
+//! §11), created once per engine run. Hoisting the exchange plan — which
+//! must currently be re-derived because a migration can reshape `pg`
+//! between supersteps — remains deliberate future work.
 
 use super::direction::Direction;
 use super::state::{AlgState, CommOp};
 use super::{comm_op_table, Element, Metrics, StepMetrics, SuperstepOutcome};
 use crate::alg::{Algorithm, ComputeOut, StepCtx};
 use crate::partition::PartitionedGraph;
+use crate::util::threadpool::Balance;
 use crate::util::timer::timed;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
@@ -111,6 +115,7 @@ pub(crate) fn run_superstep<A: Algorithm>(
     cycle: usize,
     superstep: usize,
     instrument: bool,
+    balance: Balance,
     metrics: &mut Metrics,
 ) -> Result<SuperstepOutcome> {
     let nparts = pg.parts.len();
@@ -150,7 +155,8 @@ pub(crate) fn run_superstep<A: Algorithm>(
                 let part = &pg.parts[pid];
                 live += 1;
                 scope.spawn(move || {
-                    let ctx = StepCtx { cycle, superstep, threads, instrument, direction };
+                    let ctx =
+                        StepCtx { cycle, superstep, threads, instrument, direction, balance };
                     let (out, secs) = timed(|| alg.compute_cpu(part, &mut st, &ctx));
                     // Receiver dropping early (accelerator error) is fine.
                     let _ = tx.send((pid, st, out, secs));
@@ -159,8 +165,32 @@ pub(crate) fn run_superstep<A: Algorithm>(
         }
         drop(tx);
 
-        // -- accelerator steps on the coordinator, overlapping the CPUs ----
+        // -- accelerator + host-wide steps on the coordinator, overlapping
+        //    the CPUs (a HostWide element spreads across the whole machine
+        //    via the shared worker pool, so it gets no scoped thread of its
+        //    own — it IS the wide element).
         for pid in 0..elements.len() {
+            if let Element::HostWide { threads } = &elements[pid] {
+                let ctx = StepCtx {
+                    cycle,
+                    superstep,
+                    threads: *threads,
+                    instrument: false,
+                    direction: Direction::Push,
+                    balance: Balance::Edge,
+                };
+                let st = slots[pid].as_mut().expect("host-wide state is never moved");
+                let (out, secs) = timed(|| alg.compute_cpu(&pg.parts[pid], st, &ctx));
+                step.compute[pid] = secs;
+                step.chunk_max[pid] = out.chunk_max_secs;
+                step.chunk_min[pid] = out.chunk_min_secs;
+                any_changed |= out.changed;
+                done[pid] = true;
+                run_ready_units(
+                    &mut units, strict, &done, &mut slots, pg, ops, &mut step, live > 0,
+                );
+                continue;
+            }
             if !matches!(elements[pid], Element::Accel(_)) {
                 continue;
             }
@@ -170,6 +200,7 @@ pub(crate) fn run_superstep<A: Algorithm>(
                 threads: 1,
                 instrument: false,
                 direction: Direction::Push,
+                balance: Balance::Vertex,
             };
             let si32 = alg.scalars_i32(&ctx);
             let sf32 = alg.scalars_f32(&ctx);
@@ -202,6 +233,8 @@ pub(crate) fn run_superstep<A: Algorithm>(
                 .map_err(|_| anyhow!("pipelined compute worker disappeared"))?;
             slots[pid] = Some(st);
             step.compute[pid] = secs;
+            step.chunk_max[pid] = out.chunk_max_secs;
+            step.chunk_min[pid] = out.chunk_min_secs;
             any_changed |= out.changed;
             metrics.mem[pid].reads += out.reads;
             metrics.mem[pid].writes += out.writes;

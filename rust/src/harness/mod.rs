@@ -161,6 +161,10 @@ pub struct Measured {
     /// Intra-partition vertex placement the run used (DESIGN.md §9) —
     /// surfaced so benchmark reports can label per-placement rows.
     pub placement: Placement,
+    /// Widest CPU-element thread count the run used (DESIGN.md §11) — so
+    /// scaling reports can label per-thread rows without re-deriving it
+    /// from the element list.
+    pub threads: usize,
     /// Last run's full result (partition stats etc. are deterministic
     /// given the seed, so any rep's copy is representative).
     pub last: RunResult,
@@ -199,6 +203,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         migrations: last.metrics.migrations,
         pull_steps: last.metrics.pull_steps(),
         placement: cfg.placement,
+        threads: cfg.max_cpu_threads(),
         last,
         traversed,
     })

@@ -67,7 +67,10 @@ COMMANDS:
              [--placement assign|degree-desc|degree-asc|bfs]
              [--rounds N] [--reps N] [--seed N] [--instrument]
              [--artifacts DIR] [--threads N] [--budget-mb N]
+             [--balance vertex|edge|hub-split]
              [--direction] [--dir-alpha F] [--dir-beta F]
+             (--threads 0 or omitted = one worker per available core;
+              --balance picks how CPU kernels cut chunks, DESIGN.md §11)
   model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
   calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
   generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
@@ -97,9 +100,20 @@ fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
     let alpha = args.f64_or("alpha", 0.7).map_err(anyhow::Error::msg)?;
     let strategy =
         Strategy::parse(&args.str_or("strategy", "high")).map_err(anyhow::Error::msg)?;
-    let threads = args.usize_or("threads", 1).map_err(anyhow::Error::msg)?;
+    // --threads 0 (the default) = auto: one worker per available core.
+    let threads = match args.usize_or("threads", 0).map_err(anyhow::Error::msg)? {
+        0 => totem::engine::default_threads(),
+        n => n,
+    };
     let mut cfg = EngineConfig::from_notation(&hw, alpha, strategy, threads)
         .map_err(anyhow::Error::msg)?;
+    // Intra-partition balance mode (DESIGN.md §11): how CPU kernels cut
+    // their per-superstep chunks — by vertex count, by edge mass, or edge
+    // mass with the dominant hub's adjacency sharded across workers.
+    let bal_str = args.str_or("balance", "vertex");
+    let balance = totem::engine::Balance::parse(&bal_str)
+        .ok_or_else(|| anyhow!("unknown --balance '{bal_str}' (vertex|edge|hub-split)"))?;
+    cfg = cfg.with_balance(balance);
     // Intra-partition vertex placement (DESIGN.md §9): a pure layout
     // knob — outputs are bit-identical across placements.
     let placement = totem::partition::Placement::parse(&args.str_or("placement", "degree-desc"))
@@ -164,6 +178,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         println!("direction        : push-only");
     }
     println!("placement        : {}", m.placement.name());
+    println!("parallelism      : {} threads, {} balance", m.threads, cfg.balance.name());
     println!("bottleneck comp. : {}", fmt_secs(m.bottleneck_secs));
     println!("communication    : {}", fmt_secs(m.comm_secs));
     println!(

@@ -28,6 +28,16 @@ use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
 
+/// Does this error chain mean "the PJRT backend itself is unavailable"
+/// (the vendored offline xla stub refusing to compile), as opposed to a
+/// real per-partition failure (missing artifacts, no fitting size class,
+/// budget exceeded, spec mismatch)? The engine treats exactly this case
+/// as recoverable and falls back to the `HostWide` element tier
+/// (DESIGN.md §11); everything else stays a hard error.
+pub fn backend_unavailable(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains("PJRT backend unavailable")
+}
+
 /// Shared PJRT client + compiled-program cache.
 pub struct PjrtRuntime {
     client: xla::PjRtClient,

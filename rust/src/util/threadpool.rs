@@ -1,75 +1,498 @@
-//! Scoped data-parallel helpers for the CPU processing element.
+//! Persistent data-parallel worker pool for the CPU processing element.
 //!
 //! The paper's CPU kernels are OpenMP `parallel for` loops over the
-//! partition's vertices (Figure 11). We reproduce that with
-//! `std::thread::scope` and static chunking — no external crate needed.
+//! partition's vertices (Figure 11). Through PR 5 we reproduced that with
+//! `std::thread::scope` — a fresh spawn per fold site per superstep per
+//! partition. This module replaces that with a **long-lived pool of parked
+//! workers** (DESIGN.md §11): threads are created once (`ensure_workers`,
+//! called by `engine::run` and lazily by the free functions below), block
+//! on a shared injector queue, and execute *chunk tasks* submitted by any
+//! caller. The `parallel_chunks` / `parallel_reduce` call-site API is
+//! unchanged, so kernel code migrated mechanically.
 //!
-//! The thread count models the paper's `xS` configurations (CPU sockets):
-//! `1S` = half the configured parallelism, `2S` = full. On this container
-//! (1 core) the structure is exercised but wall-clock parallel speedup is
-//! not observable; see DESIGN.md §2.
+//! On top of the pool sits **balance-aware chunking** (`Balance`,
+//! `ChunkPlan`): contiguous vertex chunks (the historical behaviour),
+//! edge-balanced chunks cut by prefix-summed out-degree, and hub-split
+//! chunks that additionally shard a single dominant vertex's adjacency
+//! across workers (CGgraph-style edge-level balance for R-MAT hubs).
+//! Which kernels may use which mode is decided centrally in
+//! `ProgramDriver` by the order-sensitivity contract (DESIGN.md §9, §11) —
+//! this module only builds plans and runs them.
+//!
+//! **Determinism contract** (part of the repo-wide bit-identity contract):
+//! chunk partials are combined strictly in ascending chunk order, whatever
+//! order the workers finished in, and a worker panic is re-raised on the
+//! calling thread with its original payload — never swallowed, never
+//! `expect`ed inside the pool.
+//!
+//! The thread count models the paper's `xS` configurations (CPU sockets).
+//! On a 1-core container the structure is exercised but wall-clock speedup
+//! is not observable; see DESIGN.md §2.
 
-/// Run `f(thread_idx, lo, hi)` over `0..n` split into `threads` contiguous
-/// chunks. With `threads == 1` the call is inlined on the caller thread
-/// (no spawn overhead) — the common case on this testbed.
-pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(usize, usize, usize) + Sync,
-{
-    let threads = threads.max(1);
-    if threads == 1 || n < 2 * threads {
-        f(0, 0, n);
-        return;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Upper bound on pool threads; a safety valve, far above any realistic
+/// `available_parallelism` on this testbed.
+const MAX_POOL_WORKERS: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Balance modes and chunk plans
+// ---------------------------------------------------------------------------
+
+/// Intra-partition load-balance mode for parallel kernels (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Balance {
+    /// Contiguous, equal-*vertex* chunks (the pre-PR-6 behaviour). On
+    /// skewed graphs one chunk inherits the hubs and the rest idle.
+    #[default]
+    Vertex,
+    /// Chunk boundaries cut by prefix-summed out-degree (CSR row offsets):
+    /// equal *edges* per worker, vertices never split.
+    Edge,
+    /// `Edge`, plus the single highest-degree vertex's adjacency is sharded
+    /// across all workers when it alone exceeds an even share — CGgraph's
+    /// edge-level balance for scale-free hubs.
+    HubSplit,
+}
+
+impl Balance {
+    pub const ALL: [Balance; 3] = [Balance::Vertex, Balance::Edge, Balance::HubSplit];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Balance::Vertex => "vertex",
+            Balance::Edge => "edge",
+            Balance::HubSplit => "hub-split",
+        }
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
+
+    /// Parse a CLI spelling (`--balance vertex|edge|hub-split`).
+    pub fn parse(s: &str) -> Option<Balance> {
+        match s.to_ascii_lowercase().as_str() {
+            "vertex" | "v" => Some(Balance::Vertex),
+            "edge" | "e" => Some(Balance::Edge),
+            "hub-split" | "hubsplit" | "hub" | "h" => Some(Balance::HubSplit),
+            _ => None,
+        }
+    }
+}
+
+/// One unit of parallel work: the vertex range `[lo, hi)`, plus optionally
+/// a shard `[e_lo, e_hi)` of the plan's hub adjacency (`ChunkPlan::hub`).
+/// When a plan has a hub, the hub vertex is *excluded* from every `[lo,hi)`
+/// range (kernels skip it) and processed only through the shards.
+#[derive(Debug, Clone, Copy)]
+pub struct Chunk {
+    pub lo: usize,
+    pub hi: usize,
+    /// `(e_lo, e_hi)` into the hub's adjacency list, if this chunk carries
+    /// a shard of it.
+    pub split: Option<(usize, usize)>,
+}
+
+/// Per-job worker busy-time spread — the observable load-imbalance signal
+/// surfaced into `StepMetrics` (max vs min chunk wall time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChunkSpread {
+    pub max_secs: f64,
+    pub min_secs: f64,
+}
+
+/// A concrete partitioning of `0..n` into chunks, built once per kernel
+/// invocation from the balance mode and (for edge modes) the CSR row
+/// offsets. Plans with `threads == 1` or `n < 2*threads` collapse to a
+/// single chunk executed inline — mirroring the historical fast path.
+#[derive(Debug, Clone)]
+pub struct ChunkPlan {
+    pub chunks: Vec<Chunk>,
+    /// The split vertex, when `HubSplit` engaged. Kernels must skip this
+    /// vertex in `[lo,hi)` range loops and process `Chunk::split` shards.
+    pub hub: Option<usize>,
+    pub n: usize,
+}
+
+impl ChunkPlan {
+    fn single(n: usize) -> ChunkPlan {
+        ChunkPlan { chunks: vec![Chunk { lo: 0, hi: n, split: None }], hub: None, n }
+    }
+
+    /// Contiguous equal-vertex chunks — identical boundaries to the
+    /// pre-pool scoped-spawn implementation.
+    pub fn vertex(n: usize, threads: usize) -> ChunkPlan {
+        let threads = threads.max(1);
+        if threads == 1 || n < 2 * threads {
+            return ChunkPlan::single(n);
+        }
+        let chunk = n.div_ceil(threads);
+        let mut chunks = Vec::with_capacity(threads);
         for t in 0..threads {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
             if lo >= hi {
                 break;
             }
-            let f = &f;
-            scope.spawn(move || f(t, lo, hi));
+            chunks.push(Chunk { lo, hi, split: None });
         }
+        ChunkPlan { chunks, hub: None, n }
+    }
+
+    /// Edge-balanced chunks: boundary `t` is the first vertex whose prefix
+    /// edge count reaches `t/threads` of the total. `row_offsets` is the
+    /// CSR row-offset array (`len == n+1`); every vertex stays whole.
+    pub fn edge(row_offsets: &[u64], threads: usize) -> ChunkPlan {
+        let n = row_offsets.len().saturating_sub(1);
+        let threads = threads.max(1);
+        if threads == 1 || n < 2 * threads {
+            return ChunkPlan::single(n);
+        }
+        let base = row_offsets[0];
+        let total = row_offsets[n] - base;
+        if total == 0 {
+            return ChunkPlan::vertex(n, threads);
+        }
+        let mut bounds = vec![0usize; threads + 1];
+        bounds[threads] = n;
+        for t in 1..threads {
+            let target = base + ((total as u128 * t as u128) / threads as u128) as u64;
+            let idx = row_offsets.partition_point(|&x| x < target).min(n);
+            bounds[t] = idx.max(bounds[t - 1]);
+        }
+        let mut chunks = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let (lo, hi) = (bounds[t], bounds[t + 1]);
+            if lo < hi {
+                chunks.push(Chunk { lo, hi, split: None });
+            }
+        }
+        ChunkPlan { chunks, hub: None, n }
+    }
+
+    /// Hub-split: find the single highest-out-degree vertex; if its degree
+    /// alone exceeds an even edge share (`deg_hub * threads > total`),
+    /// shard its adjacency evenly across all chunks and balance the
+    /// remaining vertices' edges around it. Otherwise degrade to `edge`.
+    pub fn hub_split(row_offsets: &[u64], threads: usize) -> ChunkPlan {
+        let n = row_offsets.len().saturating_sub(1);
+        let threads = threads.max(1);
+        if threads == 1 || n < 2 * threads {
+            return ChunkPlan::single(n);
+        }
+        let total = row_offsets[n] - row_offsets[0];
+        if total == 0 {
+            return ChunkPlan::vertex(n, threads);
+        }
+        let deg = |v: usize| row_offsets[v + 1] - row_offsets[v];
+        let (mut hub, mut deg_h) = (0usize, 0u64);
+        for v in 0..n {
+            if deg(v) > deg_h {
+                hub = v;
+                deg_h = deg(v);
+            }
+        }
+        if (deg_h as u128) * (threads as u128) <= total as u128 {
+            return ChunkPlan::edge(row_offsets, threads);
+        }
+        // Vertex ranges balanced on non-hub degree (the hub weighs zero —
+        // it is excluded from range iteration and carried by the shards).
+        let rest = total - deg_h;
+        let mut bounds = vec![0usize; threads + 1];
+        bounds[threads] = n;
+        let mut acc: u64 = 0;
+        let mut t = 1;
+        for v in 0..n {
+            if v != hub {
+                acc += deg(v);
+            }
+            while t < threads && (acc as u128) * (threads as u128) >= (rest as u128) * (t as u128)
+            {
+                bounds[t] = v + 1;
+                t += 1;
+            }
+        }
+        let dh = deg_h as usize;
+        let mut chunks = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let (lo, hi) = (bounds[t], bounds[t + 1]);
+            let (e_lo, e_hi) = (dh * t / threads, dh * (t + 1) / threads);
+            let split = (e_lo < e_hi).then_some((e_lo, e_hi));
+            if lo < hi || split.is_some() {
+                chunks.push(Chunk { lo, hi, split });
+            }
+        }
+        ChunkPlan { chunks, hub: Some(hub), n }
+    }
+
+    /// Build the plan for a balance mode over `row_offsets` (`len == n+1`).
+    pub fn for_balance(balance: Balance, row_offsets: &[u64], threads: usize) -> ChunkPlan {
+        match balance {
+            Balance::Vertex => ChunkPlan::vertex(row_offsets.len().saturating_sub(1), threads),
+            Balance::Edge => ChunkPlan::edge(row_offsets, threads),
+            Balance::HubSplit => ChunkPlan::hub_split(row_offsets, threads),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    work_cv: Condvar,
+}
+
+struct Pool {
+    shared: &'static PoolShared,
+    /// Workers spawned so far; guarded growth in `grow_to`.
+    spawned: Mutex<usize>,
+}
+
+/// A single chunk of a job, queued for any worker (or the submitting
+/// caller) to execute.
+struct Task {
+    job: *const JobHeader,
+    chunk: usize,
+}
+
+// SAFETY: the `job` pointer targets a `JobHeader` on the submitting
+// caller's stack. The caller never leaves `run_job` (by return *or*
+// unwind) until `remaining` hits zero, i.e. until every queued task has
+// finished executing, so the pointer is live for every access.
+unsafe impl Send for Task {}
+
+/// Per-job shared state, stack-allocated by the submitting caller.
+struct JobHeader {
+    /// The chunk body, lifetime-erased. See `Task` safety comment.
+    run: &'static (dyn Fn(usize) + Sync),
+    remaining: AtomicUsize,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Box::leak(Box::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+        })),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Ensure the global pool has at least `threads - 1` parked workers (the
+/// submitting caller is the remaining worker). Called once per engine run,
+/// sized from the element configuration; also called lazily by the free
+/// functions so direct callers (tests, benches) get parallelism too.
+/// Grow-only: workers are never torn down — they park on the queue condvar
+/// and die with the process.
+pub fn ensure_workers(threads: usize) {
+    let want = threads.saturating_sub(1).min(MAX_POOL_WORKERS);
+    let p = pool();
+    let mut spawned = p.spawned.lock().unwrap();
+    while *spawned < want {
+        let shared: &'static PoolShared = p.shared;
+        let idx = *spawned;
+        let res = std::thread::Builder::new()
+            .name(format!("totem-pool-{idx}"))
+            .spawn(move || worker_loop(shared));
+        if res.is_err() {
+            // Spawn failure is non-fatal: callers help-drain their own
+            // jobs, so work still completes (serially).
+            break;
+        }
+        *spawned += 1;
+    }
+}
+
+/// Current pool size (workers only, excluding callers). Test hook.
+pub fn pool_workers() -> usize {
+    *pool().spawned.lock().unwrap()
+}
+
+fn worker_loop(shared: &'static PoolShared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        run_task(task);
+    }
+}
+
+/// Execute one task: run the chunk body under `catch_unwind`, stash any
+/// panic payload in the job, and signal completion on the last chunk.
+fn run_task(task: Task) {
+    // SAFETY: see `Task`.
+    let job = unsafe { &*task.job };
+    let body = job.run;
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(|| body(task.chunk))) {
+        let mut slot = job.panic.lock().unwrap();
+        // first panic wins; later ones are dropped (same as rayon)
+        slot.get_or_insert(payload);
+    }
+    if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Lock-then-notify so the submitter cannot miss the wakeup between
+        // its `remaining` check and its `wait`.
+        let _g = job.done_lock.lock().unwrap();
+        job.done_cv.notify_all();
+    }
+}
+
+/// Submit `k` chunk tasks running `body(chunk_idx)` and wait for all of
+/// them. The caller help-drains the queue (it is worker number `threads`),
+/// then parks until stragglers finish. Re-raises the first worker panic on
+/// the calling thread once every chunk has completed — the job's memory is
+/// only released after quiescence, which is what makes the lifetime
+/// erasure sound.
+fn run_job(k: usize, body: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(k >= 1);
+    ensure_workers(k);
+    // SAFETY: lifetime erasure only; `job` (and thus `body`) outlives every
+    // access because this function does not return until `remaining == 0`.
+    let run: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+    let job = JobHeader {
+        run,
+        remaining: AtomicUsize::new(k),
+        panic: Mutex::new(None),
+        done_lock: Mutex::new(()),
+        done_cv: Condvar::new(),
+    };
+    let shared = pool().shared;
+    {
+        let mut q = shared.queue.lock().unwrap();
+        for chunk in 0..k {
+            q.push_back(Task { job: &job as *const JobHeader, chunk });
+        }
+    }
+    shared.work_cv.notify_all();
+    // Help-drain: execute queued tasks (ours or another concurrent job's —
+    // the pipelined executor submits from several partition threads) until
+    // our own job has no queued work left.
+    while job.remaining.load(Ordering::Acquire) != 0 {
+        let task = shared.queue.lock().unwrap().pop_front();
+        match task {
+            Some(t) => run_task(t),
+            None => break,
+        }
+    }
+    // Park until in-flight chunks (stolen by pool workers) finish.
+    {
+        let mut g = job.done_lock.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) != 0 {
+            g = job.done_cv.wait(g).unwrap();
+        }
+    }
+    if let Some(payload) = job.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public call-site API (unchanged signatures from the scoped-spawn era)
+// ---------------------------------------------------------------------------
+
+/// Run `f(chunk_idx, lo, hi)` over `0..n` split into `threads` contiguous
+/// vertex chunks on the persistent pool. With `threads == 1` (or tiny `n`)
+/// the call is inlined on the caller thread — the common case on this
+/// testbed.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let plan = ChunkPlan::vertex(n, threads);
+    if plan.chunks.len() == 1 {
+        f(0, 0, n);
+        return;
+    }
+    let chunks = &plan.chunks;
+    run_job(chunks.len(), &|ci: usize| {
+        let c = chunks[ci];
+        f(ci, c.lo, c.hi);
     });
 }
 
-/// Map-reduce over `0..n`: each thread folds its chunk with `fold`, results
-/// combined with `combine`. Used for "finished" voting and counters.
+/// Map-reduce over `0..n` with equal-vertex chunks: each chunk folds with
+/// `fold`, partials combined with `combine` **in ascending chunk order**
+/// (deterministic, part of the bit-identity contract). A panic inside
+/// `fold` is re-raised here with its original payload after all chunks
+/// quiesce.
 pub fn parallel_reduce<T, F, C>(n: usize, threads: usize, init: T, fold: F, combine: C) -> T
 where
     T: Send + Clone,
     F: Fn(usize, usize, T) -> T + Sync,
     C: Fn(T, T) -> T,
 {
-    let threads = threads.max(1);
-    if threads == 1 || n < 2 * threads {
-        return fold(0, n, init);
-    }
-    let chunk = n.div_ceil(threads);
-    let mut partials: Vec<Option<T>> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fold = &fold;
-            let seed = init.clone();
-            handles.push(scope.spawn(move || fold(lo, hi, seed)));
-        }
-        for h in handles {
-            partials.push(Some(h.join().expect("worker panicked")));
-        }
-    });
-    let mut acc = init;
-    for p in partials.into_iter().flatten() {
-        acc = combine(acc, p);
-    }
+    let plan = ChunkPlan::vertex(n, threads);
+    let (acc, _) = parallel_reduce_plan(&plan, init, |c, seed| fold(c.lo, c.hi, seed), combine);
     acc
+}
+
+/// Map-reduce over an explicit `ChunkPlan` (balance-aware kernels). Each
+/// chunk is timed; the returned `ChunkSpread` is the max/min chunk wall
+/// time — the per-partition load-imbalance signal for `StepMetrics`.
+/// Partials are combined in ascending chunk order regardless of completion
+/// order; single-chunk plans fold inline on the caller.
+pub fn parallel_reduce_plan<T, F, C>(
+    plan: &ChunkPlan,
+    init: T,
+    fold: F,
+    combine: C,
+) -> (T, ChunkSpread)
+where
+    T: Send + Clone,
+    F: Fn(&Chunk, T) -> T + Sync,
+    C: Fn(T, T) -> T,
+{
+    let k = plan.chunks.len();
+    if k == 0 {
+        return (init, ChunkSpread::default());
+    }
+    if k == 1 {
+        let t0 = Instant::now();
+        let acc = fold(&plan.chunks[0], init);
+        let secs = t0.elapsed().as_secs_f64();
+        return (acc, ChunkSpread { max_secs: secs, min_secs: secs });
+    }
+    let partials: Vec<Mutex<Option<T>>> = (0..k).map(|_| Mutex::new(None)).collect();
+    // Seeds are cloned on the caller (not inside workers) so the public
+    // bound stays `T: Send + Clone` — `T: Sync` is not required.
+    let seeds: Vec<Mutex<Option<T>>> = (0..k).map(|_| Mutex::new(Some(init.clone()))).collect();
+    let times: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+    {
+        let fold = &fold;
+        run_job(k, &|ci: usize| {
+            let seed = seeds[ci].lock().unwrap().take().expect("seed taken once");
+            let t0 = Instant::now();
+            let r = fold(&plan.chunks[ci], seed);
+            times[ci].store(t0.elapsed().as_secs_f64().to_bits(), Ordering::Relaxed);
+            *partials[ci].lock().unwrap() = Some(r);
+        });
+    }
+    let mut acc = init;
+    let (mut max_s, mut min_s) = (0.0f64, f64::INFINITY);
+    for (p, t) in partials.into_iter().zip(&times) {
+        let part = p
+            .into_inner()
+            .unwrap()
+            .expect("chunk quiesced without a result or a panic");
+        acc = combine(acc, part);
+        let secs = f64::from_bits(t.load(Ordering::Relaxed));
+        max_s = max_s.max(secs);
+        min_s = min_s.min(secs);
+    }
+    (acc, ChunkSpread { max_secs: max_s, min_secs: if min_s.is_finite() { min_s } else { 0.0 } })
 }
 
 #[cfg(test)]
@@ -120,5 +543,237 @@ mod tests {
             |a, b| a && b,
         );
         assert!(!finished);
+    }
+
+    /// Degree sequence → CSR row offsets.
+    fn offsets(degs: &[u64]) -> Vec<u64> {
+        let mut row = Vec::with_capacity(degs.len() + 1);
+        let mut acc = 0u64;
+        row.push(0);
+        for &d in degs {
+            acc += d;
+            row.push(acc);
+        }
+        row
+    }
+
+    /// Check a plan covers every vertex's full adjacency exactly once:
+    /// non-hub vertices appear in exactly one `[lo,hi)` range; the hub (if
+    /// any) is covered exactly by the union of disjoint shards.
+    fn assert_exact_cover(plan: &ChunkPlan, degs: &[u64], label: &str) {
+        let n = degs.len();
+        assert_eq!(plan.n, n, "{label}");
+        let mut visits = vec![0u32; n];
+        let mut hub_edges: Vec<u32> = Vec::new();
+        if let Some(h) = plan.hub {
+            hub_edges = vec![0; degs[h] as usize];
+        }
+        for c in &plan.chunks {
+            assert!(c.lo <= c.hi && c.hi <= n, "{label}: bad range");
+            for v in c.lo..c.hi {
+                if plan.hub != Some(v) {
+                    visits[v] += 1;
+                }
+            }
+            if let Some((e0, e1)) = c.split {
+                let h = plan.hub.expect("split without hub");
+                assert!(e1 <= degs[h] as usize, "{label}: shard past degree");
+                for e in e0..e1 {
+                    hub_edges[e] += 1;
+                }
+            }
+        }
+        for (v, &cnt) in visits.iter().enumerate() {
+            if plan.hub == Some(v) {
+                continue;
+            }
+            assert_eq!(cnt, 1, "{label}: vertex {v} visited {cnt} times");
+        }
+        assert!(hub_edges.iter().all(|&c| c == 1), "{label}: hub edges not covered once");
+    }
+
+    #[test]
+    fn plans_cover_every_edge_exactly_once_on_skewed_degrees() {
+        // Skewed sequences: zipf-ish, star (one mega hub), uniform,
+        // all-isolated, hub-at-the-end, and a seeded random mix.
+        let mut rng = crate::util::rng::Rng::new(0xBA1A);
+        let mut random: Vec<u64> = (0..257).map(|_| rng.below(9)).collect();
+        random[200] = 5_000; // dominant hub off-center
+        let zipf: Vec<u64> = (0..100).map(|v| 1 + 300 / (v as u64 + 1)).collect();
+        let mut star = vec![0u64; 64];
+        star[0] = 10_000;
+        let tail_hub: Vec<u64> = (0..50).map(|v| if v == 49 { 999 } else { 1 }).collect();
+        let cases: Vec<(&str, Vec<u64>)> = vec![
+            ("zipf", zipf),
+            ("star", star),
+            ("uniform", vec![7; 128]),
+            ("isolated", vec![0; 40]),
+            ("tail-hub", tail_hub),
+            ("random", random),
+        ];
+        for (name, degs) in &cases {
+            let row = offsets(degs);
+            for threads in [1usize, 2, 3, 4, 7, 8, 13] {
+                for b in Balance::ALL {
+                    let plan = ChunkPlan::for_balance(b, &row, threads);
+                    assert_exact_cover(&plan, degs, &format!("{name}/{threads}/{b:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_plan_balances_better_than_vertex_on_a_hub() {
+        // 0..n-1 light vertices plus a mega hub at v=0: the vertex plan
+        // gives chunk 0 nearly all edges; the edge plan caps every chunk at
+        // (total/threads + max_degree) and hub-split at roughly total/threads.
+        let mut degs = vec![1u64; 1024];
+        degs[0] = 4096;
+        let row = offsets(&degs);
+        let threads = 8;
+        let total: u64 = degs.iter().sum();
+        let load = |plan: &ChunkPlan| -> u64 {
+            plan.chunks
+                .iter()
+                .map(|c| {
+                    let mut e: u64 = (c.lo..c.hi)
+                        .filter(|&v| plan.hub != Some(v))
+                        .map(|v| degs[v])
+                        .sum();
+                    if let Some((e0, e1)) = c.split {
+                        e += (e1 - e0) as u64;
+                    }
+                    e
+                })
+                .max()
+                .unwrap_or(0)
+        };
+        let vmax = load(&ChunkPlan::vertex(degs.len(), threads));
+        let emax = load(&ChunkPlan::edge(&row, threads));
+        let hmax = load(&ChunkPlan::hub_split(&row, threads));
+        assert!(vmax >= degs[0], "vertex chunking inherits the hub whole");
+        assert!(emax <= total / threads as u64 + degs[0], "edge bound");
+        assert!(hmax < vmax, "hub-split must beat vertex chunking ({hmax} vs {vmax})");
+        assert!(hmax <= total / threads as u64 + total / 100, "hub shards even out the load");
+    }
+
+    #[test]
+    fn hub_split_degrades_to_edge_without_a_dominant_hub() {
+        let degs = vec![5u64; 64];
+        let row = offsets(&degs);
+        let plan = ChunkPlan::hub_split(&row, 4);
+        assert!(plan.hub.is_none(), "uniform degrees: no hub to split");
+        assert!(plan.chunks.iter().all(|c| c.split.is_none()));
+    }
+
+    #[test]
+    fn panic_propagates_to_caller_with_payload() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_reduce(
+                1000,
+                4,
+                0u64,
+                |lo, hi, acc| {
+                    if (lo..hi).contains(&613) {
+                        panic!("kernel died at 613");
+                    }
+                    acc + (hi - lo) as u64
+                },
+                |a, b| a + b,
+            )
+        });
+        let payload = caught.expect_err("panic must propagate out of the pool");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("kernel died at 613"), "original payload preserved: {msg}");
+        // The pool must stay usable after a propagated panic.
+        let total = parallel_reduce(100, 4, 0u64, |lo, hi, a| a + (hi - lo) as u64, |a, b| a + b);
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn combine_order_is_ascending_chunk_order() {
+        // Fold tags each chunk; combine concatenates. Whatever order the
+        // workers finish in, the combined sequence must be ascending — the
+        // deterministic-combine half of the bit-identity contract.
+        for _ in 0..64 {
+            let order = parallel_reduce(
+                1000,
+                8,
+                Vec::new(),
+                |lo, _hi, mut acc: Vec<usize>| {
+                    acc.push(lo);
+                    acc
+                },
+                |mut a, b| {
+                    a.extend(b);
+                    a
+                },
+            );
+            assert_eq!(order.len(), 8);
+            assert!(order.windows(2).all(|w| w[0] < w[1]), "got {order:?}");
+        }
+    }
+
+    #[test]
+    fn reduce_plan_reports_spread_and_sums_over_splits() {
+        let mut degs = vec![2u64; 512];
+        degs[100] = 9_000;
+        let row = offsets(&degs);
+        let plan = ChunkPlan::hub_split(&row, 4);
+        assert_eq!(plan.hub, Some(100));
+        // Sum of per-chunk edge loads must equal the total edge count.
+        let (sum, spread) = parallel_reduce_plan(
+            &plan,
+            0u64,
+            |c: &Chunk, acc: u64| {
+                let mut e: u64 = (c.lo..c.hi).filter(|&v| v != 100).map(|v| degs[v]).sum();
+                if let Some((e0, e1)) = c.split {
+                    e += (e1 - e0) as u64;
+                }
+                acc + e
+            },
+            |a, b| a + b,
+        );
+        assert_eq!(sum, degs.iter().sum::<u64>());
+        assert!(spread.max_secs >= spread.min_secs);
+        assert!(spread.min_secs >= 0.0);
+    }
+
+    #[test]
+    fn concurrent_jobs_from_many_submitters() {
+        // The pipelined executor submits jobs from several partition
+        // threads at once; results must stay isolated per job.
+        std::thread::scope(|s| {
+            for base in 0..6u64 {
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        let total = parallel_reduce(
+                            500,
+                            3,
+                            0u64,
+                            |lo, hi, acc| acc + (lo..hi).map(|x| x as u64 + base).sum::<u64>(),
+                            |a, b| a + b,
+                        );
+                        assert_eq!(total, 499 * 500 / 2 + 500 * base);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn workers_persist_across_calls() {
+        ensure_workers(4);
+        let before = pool_workers();
+        assert!(before >= 3);
+        for _ in 0..16 {
+            parallel_chunks(256, 4, |_, _, _| {});
+        }
+        assert_eq!(pool_workers(), before, "grow-only pool: no respawn per call");
     }
 }

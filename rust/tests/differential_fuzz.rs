@@ -22,7 +22,7 @@
 //! committed defaults).
 
 use totem::baseline;
-use totem::engine::{EngineConfig, ExecMode};
+use totem::engine::{Balance, EngineConfig, ExecMode};
 use totem::graph::generator::{rmat, uniform, with_random_weights, RmatParams};
 use totem::graph::CsrGraph;
 use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
@@ -75,6 +75,11 @@ fn sample(rng: &mut Rng, pool: &[(String, CsrGraph)]) -> Sampled {
         [rng.below(3) as usize];
     let placement = ALL_PLACEMENTS[rng.below(ALL_PLACEMENTS.len() as u64) as usize];
     let direction = rng.below(2) == 1;
+    // Balance mode × worker-thread count (DESIGN.md §11): eligibility is
+    // decided centrally in the driver, so every combination must stay
+    // baseline-correct regardless of which kernels degrade it.
+    let balance = Balance::ALL[rng.below(Balance::ALL.len() as u64) as usize];
+    let threads = 1 + rng.below(4) as usize;
     let part_seed = rng.below(1 << 20);
     // shares: random split, normalized
     let mut shares: Vec<f64> = (0..parts).map(|_| 0.2 + rng.next_f64()).collect();
@@ -92,18 +97,21 @@ fn sample(rng: &mut Rng, pool: &[(String, CsrGraph)]) -> Sampled {
     let mut cfg = EngineConfig::cpu_partitions(&shares, strategy)
         .with_mode(mode)
         .with_placement(placement)
+        .with_balance(balance)
+        .with_threads(threads)
         .with_seed(part_seed);
     if direction {
         cfg = cfg.direction_optimized();
     }
     let label = format!(
         "graph={} alg={} mode={mode:?} parts={parts} strategy={} placement={} \
-         direction={direction} part_seed={part_seed} source={source} rounds={rounds} \
-         shares={shares:?}",
+         balance={} threads={threads} direction={direction} part_seed={part_seed} \
+         source={source} rounds={rounds} shares={shares:?}",
         pool[graph_idx].0,
         alg.name(),
         strategy.name(),
         placement.name(),
+        balance.name(),
     );
     Sampled { label, cfg, alg, graph_idx, source, rounds }
 }
@@ -229,6 +237,57 @@ fn outputs_bit_identical_across_placements() {
                                 alg.name(),
                                 placement.name(),
                                 p0.name()
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Balance-mode invariance (ISSUE 6 tentpole contract, DESIGN.md §11):
+/// the same configuration run under {Vertex, Edge, HubSplit} chunking at
+/// several worker counts must produce bit-identical global outputs for
+/// all six algorithms, on both executors. CAS-scatter kernels take any
+/// mode; the order-sensitive f32 kernels run their canonical sequential
+/// path regardless — either way, bits may not move.
+#[test]
+fn outputs_bit_identical_across_balance_modes() {
+    let pool = graph_pool();
+    for (gname, g) in &pool {
+        let source = (0..g.vertex_count as u32).find(|&v| g.out_degree(v) > 0).unwrap_or(0);
+        for alg in ALL_ALGS {
+            for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+                for threads in [2usize, 4] {
+                    let mut reference: Option<(Balance, Vec<u32>)> = None;
+                    for balance in Balance::ALL {
+                        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::High)
+                            .with_mode(mode)
+                            .with_seed(13)
+                            .with_balance(balance)
+                            .with_threads(threads);
+                        let spec = RunSpec::new(alg).with_source(source).with_rounds(3);
+                        let (r, _) = run_alg(g, spec, &cfg).unwrap_or_else(|e| {
+                            panic!("{gname}/{}/{mode:?}/{threads}t/{}: {e:#}",
+                                alg.name(), balance.name())
+                        });
+                        let bits: Vec<u32> = match &r.output {
+                            totem::engine::StateArray::I32(v) => {
+                                v.iter().map(|&x| x as u32).collect()
+                            }
+                            totem::engine::StateArray::F32(v) => {
+                                v.iter().map(|x| x.to_bits()).collect()
+                            }
+                        };
+                        match &reference {
+                            None => reference = Some((balance, bits)),
+                            Some((b0, want)) => assert_eq!(
+                                &bits, want,
+                                "{gname}/{}/{mode:?}/{threads}t: {} differs from {}",
+                                alg.name(),
+                                balance.name(),
+                                b0.name()
                             ),
                         }
                     }

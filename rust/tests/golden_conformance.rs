@@ -29,7 +29,7 @@
 
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
-use totem::engine::{EngineConfig, ExecMode, StateArray};
+use totem::engine::{Balance, EngineConfig, ExecMode, StateArray};
 use totem::graph::{io as gio, CsrGraph};
 use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
 use totem::partition::{Strategy, ALL_PLACEMENTS};
@@ -314,6 +314,55 @@ fn golden_pagerank_bc_tolerance_and_pipeline_bit_identity() {
                             ),
                         }
                         assert_within_tolerance(fx.name, alg, &label, &rs.output, &want);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Balance-mode axis (ISSUE 6; DESIGN.md §11): every algorithm under
+/// {Vertex, Edge, HubSplit} chunking at threads = 2, on both executors,
+/// against the same golden files. All six must be **bit-identical across
+/// balance modes** (the modes only move chunk boundaries; eligibility for
+/// the order-sensitive kernels is decided centrally, forcing their
+/// canonical sequential path). BFS/CC/SSSP/widest are additionally
+/// bit-exact against the goldens; PageRank/BC within tolerance, anchored
+/// to the Vertex/Synchronous run for the cross-mode bit check.
+#[test]
+fn golden_all_algs_bit_identical_across_balance_modes() {
+    if regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        for alg in ALL_ALGS {
+            let want = load_golden(fx.name, alg);
+            let mut anchor: Option<StateArray> = None;
+            for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+                for balance in Balance::ALL {
+                    let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::High)
+                        .with_mode(mode)
+                        .with_seed(7)
+                        .with_balance(balance)
+                        .with_threads(2);
+                    let label = format!("{mode:?}/2t/{}", balance.name());
+                    let (r, _) = run_alg(&g, spec_for(alg, fx), &cfg)
+                        .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
+                    match &anchor {
+                        None => anchor = Some(r.output.clone()),
+                        Some(a) => assert_bit_exact(
+                            fx.name,
+                            alg,
+                            &format!("{label}/balance-invariance"),
+                            &r.output,
+                            a,
+                        ),
+                    }
+                    if is_i32_output(alg) || matches!(alg, AlgKind::Sssp | AlgKind::Widest) {
+                        assert_bit_exact(fx.name, alg, &label, &r.output, &want);
+                    } else {
+                        assert_within_tolerance(fx.name, alg, &label, &r.output, &want);
                     }
                 }
             }
