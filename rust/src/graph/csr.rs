@@ -7,6 +7,14 @@
 //! Vertex ids are `u32` (graphs up to 4B vertices); edge offsets are `u64`
 //! (graphs beyond 4B edges), mirroring the paper's `vid`/`eid` sizing rule
 //! in §4.3.3.
+//!
+//! The three CSR arrays are stored as [`Segment`]s — owned vectors for
+//! in-memory builds, zero-copy mmap views when loaded from a `.tcsr` v2
+//! container (DESIGN.md §12). `Segment` derefs to a slice, so consumers
+//! are storage-agnostic.
+
+use super::store::Segment;
+use super::IngestError;
 
 pub type VertexId = u32;
 
@@ -39,16 +47,51 @@ impl EdgeList {
 #[derive(Debug, Clone)]
 pub struct CsrGraph {
     pub vertex_count: usize,
-    pub row_offsets: Vec<u64>,
-    pub col_indices: Vec<VertexId>,
-    pub weights: Option<Vec<f32>>,
+    pub row_offsets: Segment<u64>,
+    pub col_indices: Segment<VertexId>,
+    pub weights: Option<Segment<f32>>,
 }
 
 impl CsrGraph {
     /// Build from an edge list with counting sort — `O(|V| + |E|)`.
     /// Weight order follows edge order.
+    ///
+    /// Panics on out-of-range endpoints or a mismatched weight array —
+    /// trusted in-process callers only. File/CLI ingest goes through
+    /// [`CsrGraph::try_from_edge_list`], which surfaces the same checks
+    /// as a typed error (`EdgeList::push` only `debug_assert!`s bounds,
+    /// so untrusted data used to reach the counting sort and panic on an
+    /// index in release builds).
     pub fn from_edge_list(el: &EdgeList) -> Self {
+        match Self::try_from_edge_list(el) {
+            Ok(g) => g,
+            Err(e) => panic!("invalid edge list: {e}"),
+        }
+    }
+
+    /// Checked build: validates every endpoint against `vertex_count` and
+    /// the weight tally against the edge tally before sorting, returning
+    /// a typed error naming the offending edge.
+    pub fn try_from_edge_list(el: &EdgeList) -> Result<Self, IngestError> {
         let v = el.vertex_count;
+        if let Some(ws) = &el.weights {
+            if ws.len() != el.edges.len() {
+                return Err(IngestError::WeightCountMismatch {
+                    edges: el.edges.len() as u64,
+                    weights: ws.len() as u64,
+                });
+            }
+        }
+        for (i, &(s, d)) in el.edges.iter().enumerate() {
+            if s as usize >= v || d as usize >= v {
+                return Err(IngestError::EdgeOutOfRange {
+                    index: i as u64,
+                    src: s,
+                    dst: d,
+                    vertex_count: v,
+                });
+            }
+        }
         let mut deg = vec![0u64; v + 1];
         for &(s, _) in &el.edges {
             deg[s as usize + 1] += 1;
@@ -68,7 +111,12 @@ impl CsrGraph {
             }
             cursor[s as usize] += 1;
         }
-        CsrGraph { vertex_count: v, row_offsets, col_indices, weights }
+        Ok(CsrGraph {
+            vertex_count: v,
+            row_offsets: row_offsets.into(),
+            col_indices: col_indices.into(),
+            weights: weights.map(Segment::from),
+        })
     }
 
     #[inline]
@@ -115,7 +163,7 @@ impl CsrGraph {
     pub fn reverse(&self) -> CsrGraph {
         let v = self.vertex_count;
         let mut deg = vec![0u64; v + 1];
-        for &d in &self.col_indices {
+        for &d in self.col_indices.iter() {
             deg[d as usize + 1] += 1;
         }
         for i in 0..v {
@@ -136,7 +184,12 @@ impl CsrGraph {
                 cursor[d as usize] += 1;
             }
         }
-        CsrGraph { vertex_count: v, row_offsets, col_indices, weights }
+        CsrGraph {
+            vertex_count: v,
+            row_offsets: row_offsets.into(),
+            col_indices: col_indices.into(),
+            weights: weights.map(Segment::from),
+        }
     }
 
     /// Undirected view: every edge doubled (u,v)+(v,u), as the paper does
@@ -165,6 +218,22 @@ impl CsrGraph {
     pub fn footprint_bytes(&self) -> u64 {
         let base = (self.row_offsets.len() * 8 + self.col_indices.len() * 4) as u64;
         base + self.weights.as_ref().map_or(0, |w| (w.len() * 4) as u64)
+    }
+
+    /// Heap bytes the CSR arrays actually pin — 0 for mmap-backed
+    /// segments, whose pages are reclaimable file cache (DESIGN.md §12.6
+    /// memory accounting distinguishes the two).
+    pub fn owned_bytes(&self) -> u64 {
+        self.row_offsets.owned_bytes()
+            + self.col_indices.owned_bytes()
+            + self.weights.as_ref().map_or(0, |w| w.owned_bytes())
+    }
+
+    /// True when any CSR array is a file-backed mmap view.
+    pub fn is_mapped(&self) -> bool {
+        self.row_offsets.is_mapped()
+            || self.col_indices.is_mapped()
+            || self.weights.as_ref().is_some_and(|w| w.is_mapped())
     }
 
     /// Structural invariant check (used by property tests).
@@ -276,6 +345,42 @@ mod tests {
         let g = CsrGraph::from_edge_list(&EdgeList::new(0));
         g.validate().unwrap();
         assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    fn try_from_edge_list_names_the_offending_edge() {
+        let mut el = EdgeList::new(3);
+        el.edges.push((0, 1));
+        el.edges.push((2, 9)); // dst out of range
+        let err = CsrGraph::try_from_edge_list(&el).unwrap_err();
+        assert_eq!(
+            err,
+            crate::graph::IngestError::EdgeOutOfRange { index: 1, src: 2, dst: 9, vertex_count: 3 }
+        );
+        assert!(err.to_string().contains("out of declared range"), "{err}");
+    }
+
+    #[test]
+    fn try_from_edge_list_checks_weight_tally() {
+        let mut el = EdgeList::new(2);
+        el.edges.push((0, 1));
+        el.weights = Some(vec![1.0, 2.0]);
+        let err = CsrGraph::try_from_edge_list(&el).unwrap_err();
+        assert_eq!(
+            err,
+            crate::graph::IngestError::WeightCountMismatch { edges: 1, weights: 2 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of declared range")]
+    fn from_edge_list_panics_with_typed_message_on_bad_ids() {
+        // The unchecked constructor used to fail with a raw index panic
+        // deep in the counting sort (release builds); it now reports the
+        // offending edge even on the panicking path.
+        let mut el = EdgeList::new(2);
+        el.edges.push((0, 7));
+        let _ = CsrGraph::from_edge_list(&el);
     }
 
     #[test]

@@ -2,19 +2,28 @@
 //!
 //! Two formats:
 //! - a text edge-list format (`src dst [weight]` per line, `#` comments,
-//!   `p <V> <E>` header optional) — interchange with the outside world;
-//! - a fast little-endian binary CSR snapshot (`.tcsr`) so benchmark
-//!   workloads are generated once and memory-mapped-style loaded after —
-//!   the paper treats graph loading as an amortized pre-processing cost
-//!   (§5, "Time Measurements").
+//!   `p <V> <E>` header optional but validated when present) —
+//!   interchange with the outside world, parsed streamingly so convert
+//!   jobs never hold the file in RAM;
+//! - the binary CSR container (`.tcsr`): v2 (DESIGN.md §12) is the
+//!   written format — sectioned, explicitly little-endian, checksummed,
+//!   and genuinely memory-mappable via [`super::store::GraphStore`]; the
+//!   legacy v1 snapshot is still read (and written by
+//!   [`write_csr_v1`] for migration tests). The paper treats graph
+//!   loading as an amortized pre-processing cost (§5, "Time
+//!   Measurements"); v2 + mmap makes the amortized cost a page fault.
+//!
+//! All ingest entry points here return errors, never panic, on malformed
+//! data: out-of-range vertex ids, header/tally mismatches, and mixed
+//! weightedness surface as [`IngestError`] values in the error chain
+//! (ISSUE 7 satellite bugfixes).
 
 use super::csr::{CsrGraph, EdgeList};
+use super::store::{self, read_vec_le, write_slice_le, GraphStore};
+use super::IngestError;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
-
-const MAGIC: &[u8; 8] = b"TOTEMCSR";
-const VERSION: u32 = 1;
 
 /// Write a text edge list.
 pub fn write_edge_list(el: &EdgeList, path: &Path) -> Result<()> {
@@ -37,15 +46,62 @@ pub fn write_edge_list(el: &EdgeList, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read a text edge list. Vertices are sized from the `p` header if
-/// present, else `max id + 1`.
-pub fn read_edge_list(path: &Path) -> Result<EdgeList> {
+/// Write a CSR graph as a text edge list, streaming — no intermediate
+/// `EdgeList`. Weights print via Rust's shortest-round-trip float
+/// formatting, so text→CSR→text→CSR is bit-stable.
+pub fn write_edge_list_from_csr(g: &CsrGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# totem edge list")?;
+    writeln!(w, "p {} {}", g.vertex_count, g.edge_count())?;
+    for s in 0..g.vertex_count as u32 {
+        match &g.weights {
+            Some(_) => {
+                for (&d, &wt) in g.neighbors(s).iter().zip(g.edge_weights(s)) {
+                    writeln!(w, "{s} {d} {wt}")?;
+                }
+            }
+            None => {
+                for &d in g.neighbors(s) {
+                    writeln!(w, "{s} {d}")?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// What a streaming edge-list pass learned about the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElSummary {
+    pub vertex_count: usize,
+    pub edge_count: u64,
+    pub weighted: bool,
+    /// The `p` header's edge count, when the file had one.
+    pub declared_edges: Option<u64>,
+}
+
+/// Stream a text edge list through `sink`, one call per edge, without
+/// materializing it. Enforces the format contract as typed errors:
+/// - a `p <V> [E]` header must precede all edges and appear at most once;
+/// - with a header, every endpoint is range-checked against `V` as it is
+///   read ([`IngestError::EdgeOutOfRange`] names the edge and line);
+/// - the first edge fixes weightedness; a change is
+///   [`IngestError::MixedWeights`];
+/// - at EOF a declared `E` must equal the actual tally —
+///   [`IngestError::EdgeCountMismatch`] otherwise (a truncated file used
+///   to load silently).
+pub fn stream_edge_list(
+    path: &Path,
+    sink: &mut dyn FnMut(u32, u32, Option<f32>) -> Result<()>,
+) -> Result<ElSummary> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let r = BufReader::new(f);
-    let mut el = EdgeList::new(0);
-    let mut weights: Vec<f32> = Vec::new();
-    let mut saw_weights = false;
+    let mut declared_v: Option<usize> = None;
+    let mut declared_e: Option<u64> = None;
     let mut max_id = 0u32;
+    let mut count = 0u64;
+    let mut weighted: Option<bool> = None;
     for (ln, line) in r.lines().enumerate() {
         let line = line?;
         let t = line.trim();
@@ -55,12 +111,22 @@ pub fn read_edge_list(path: &Path) -> Result<EdgeList> {
         let mut parts = t.split_whitespace();
         let first = parts.next().unwrap();
         if first == "p" {
+            if declared_v.is_some() {
+                bail!("line {}: duplicate p header", ln + 1);
+            }
+            if count > 0 {
+                bail!("line {}: p header after edges", ln + 1);
+            }
             let v: usize = parts
                 .next()
                 .context("p line: missing V")?
                 .parse()
                 .context("p line: bad V")?;
-            el.vertex_count = v;
+            declared_e = match parts.next() {
+                Some(tok) => Some(tok.parse::<u64>().context("p line: bad E")?),
+                None => None,
+            };
+            declared_v = Some(v);
             continue;
         }
         let s: u32 = first.parse().with_context(|| format!("line {}: bad src", ln + 1))?;
@@ -69,26 +135,82 @@ pub fn read_edge_list(path: &Path) -> Result<EdgeList> {
             .with_context(|| format!("line {}: missing dst", ln + 1))?
             .parse()
             .with_context(|| format!("line {}: bad dst", ln + 1))?;
-        if let Some(wtok) = parts.next() {
-            let wt: f32 = wtok.parse().with_context(|| format!("line {}: bad weight", ln + 1))?;
-            weights.push(wt);
-            saw_weights = true;
-        } else if saw_weights {
-            bail!("line {}: mixed weighted/unweighted edges", ln + 1);
+        let wt: Option<f32> = match parts.next() {
+            Some(tok) => Some(
+                tok.parse().with_context(|| format!("line {}: bad weight", ln + 1))?,
+            ),
+            None => None,
+        };
+        match weighted {
+            None => weighted = Some(wt.is_some()),
+            Some(expect) => {
+                if expect != wt.is_some() {
+                    return Err(anyhow::Error::from(IngestError::MixedWeights {
+                        line: ln as u64 + 1,
+                    })
+                    .context(format!("{path:?}")));
+                }
+            }
+        }
+        if let Some(v) = declared_v {
+            if s as usize >= v || d as usize >= v {
+                return Err(anyhow::Error::from(IngestError::EdgeOutOfRange {
+                    index: count,
+                    src: s,
+                    dst: d,
+                    vertex_count: v,
+                })
+                .context(format!("{path:?} line {}", ln + 1)));
+            }
         }
         max_id = max_id.max(s).max(d);
-        el.edges.push((s, d));
+        sink(s, d, wt)?;
+        count += 1;
     }
-    if el.vertex_count == 0 && !el.edges.is_empty() {
-        el.vertex_count = max_id as usize + 1;
-    }
-    if el.vertex_count <= max_id as usize && !el.edges.is_empty() {
-        bail!("vertex id {max_id} out of declared range {}", el.vertex_count);
-    }
-    if saw_weights {
-        if weights.len() != el.edges.len() {
-            bail!("mixed weighted/unweighted edges");
+    let vertex_count = match declared_v {
+        Some(v) => v,
+        None if count == 0 => 0,
+        None => max_id as usize + 1,
+    };
+    if let Some(e) = declared_e {
+        if e != count {
+            return Err(anyhow::Error::from(IngestError::EdgeCountMismatch {
+                declared: e,
+                actual: count,
+            })
+            .context(format!("{path:?}")));
         }
+    }
+    Ok(ElSummary {
+        vertex_count,
+        edge_count: count,
+        weighted: weighted.unwrap_or(false),
+        declared_edges: declared_e,
+    })
+}
+
+/// One no-op streaming pass: header + tallies only. `totem convert` runs
+/// this first to size the spill builder, then streams again to build.
+pub fn scan_edge_list(path: &Path) -> Result<ElSummary> {
+    stream_edge_list(path, &mut |_, _, _| Ok(()))
+}
+
+/// Read a text edge list into memory. Vertices are sized from the `p`
+/// header if present, else `max id + 1`; all `stream_edge_list` checks
+/// apply (notably: a declared edge count that disagrees with the actual
+/// tally is an error, where it used to be silently ignored).
+pub fn read_edge_list(path: &Path) -> Result<EdgeList> {
+    let mut el = EdgeList::new(0);
+    let mut weights: Vec<f32> = Vec::new();
+    let summary = stream_edge_list(path, &mut |s, d, wt| {
+        el.edges.push((s, d));
+        if let Some(w) = wt {
+            weights.push(w);
+        }
+        Ok(())
+    })?;
+    el.vertex_count = summary.vertex_count;
+    if summary.weighted {
         el.weights = Some(weights);
     }
     Ok(el)
@@ -116,53 +238,50 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn write_slice<T: Copy>(w: &mut impl Write, xs: &[T]) -> Result<()> {
-    // Safe for the POD types we use (u32/u64/f32), little-endian hosts.
-    let bytes = unsafe {
-        std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
-    };
-    w.write_all(bytes)?;
+/// Write the binary CSR snapshot. Since ISSUE 7 this emits the v2
+/// container ([`store::write_csr_v2`]); readers still accept v1.
+pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
+    store::write_csr_v2(g, path)?;
     Ok(())
 }
 
-fn read_vec<T: Copy + Default>(r: &mut impl Read, n: usize) -> Result<Vec<T>> {
-    let mut v = vec![T::default(); n];
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, n * std::mem::size_of::<T>())
-    };
-    r.read_exact(bytes)?;
-    Ok(v)
-}
-
-/// Write the binary CSR snapshot.
-pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
+/// Write the legacy v1 snapshot (header + raw LE arrays, no table, no
+/// checksums). Kept for the v1→v2 migration path and its tests.
+pub fn write_csr_v1(g: &CsrGraph, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    write_u32(&mut w, VERSION)?;
+    w.write_all(store::MAGIC)?;
+    write_u32(&mut w, store::VERSION_V1)?;
     write_u32(&mut w, if g.weights.is_some() { 1 } else { 0 })?;
     write_u64(&mut w, g.vertex_count as u64)?;
     write_u64(&mut w, g.edge_count() as u64)?;
-    write_slice(&mut w, &g.row_offsets)?;
-    write_slice(&mut w, &g.col_indices)?;
+    write_slice_le(&mut w, g.row_offsets.as_slice())?;
+    write_slice_le(&mut w, g.col_indices.as_slice())?;
     if let Some(ws) = &g.weights {
-        write_slice(&mut w, ws)?;
+        write_slice_le(&mut w, ws.as_slice())?;
     }
     Ok(())
 }
 
-/// Header bytes of the binary CSR format: magic + version + weighted flag
-/// + |V| + |E|.
-const CSR_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
+/// Header bytes of the v1 binary CSR format: magic + version + weighted
+/// flag + |V| + |E|.
+const CSR_V1_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8;
 
-/// Read the binary CSR snapshot.
+/// Read a binary CSR snapshot, any version — v1 through the legacy
+/// reader below, v2 through [`GraphStore`] (buffered or mapped per
+/// platform default, checksums verified).
+pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+    Ok(GraphStore::open(path)?.into_graph())
+}
+
+/// Read the legacy v1 snapshot.
 ///
 /// Defensive against corrupt or truncated files: the declared |V|/|E| are
 /// checked against the actual file length *before* any allocation (a
 /// corrupted count would otherwise attempt an absurd allocation and
 /// abort), truncation mid-array is a typed error, and out-of-range vertex
 /// ids are rejected by the structural validation — never a panic.
-pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+pub fn read_csr_v1(path: &Path) -> Result<CsrGraph> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let file_len = f
         .metadata()
@@ -172,11 +291,11 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)
         .with_context(|| format!("{path:?}: truncated header"))?;
-    if &magic != MAGIC {
+    if &magic != store::MAGIC {
         bail!("{path:?}: not a totem CSR file");
     }
     let ver = read_u32(&mut r).with_context(|| format!("{path:?}: truncated header"))?;
-    if ver != VERSION {
+    if ver != store::VERSION_V1 {
         bail!("{path:?}: unsupported version {ver}");
     }
     let weighted =
@@ -193,7 +312,7 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
         .ok_or_else(|| {
             anyhow::anyhow!("{path:?}: corrupt header (|V|={v64}, |E|={e64} overflow)")
         })?;
-    let expected = CSR_HEADER_BYTES
+    let expected = CSR_V1_HEADER_BYTES
         .checked_add(body)
         .ok_or_else(|| anyhow::anyhow!("{path:?}: corrupt header"))?;
     if file_len < expected {
@@ -208,19 +327,24 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
 
     let v = v64 as usize;
     let e = e64 as usize;
-    let row_offsets: Vec<u64> = read_vec(&mut r, v + 1)
+    let row_offsets: Vec<u64> = read_vec_le(&mut r, v + 1)
         .with_context(|| format!("{path:?}: truncated row offsets"))?;
     let col_indices: Vec<u32> =
-        read_vec(&mut r, e).with_context(|| format!("{path:?}: truncated column indices"))?;
+        read_vec_le(&mut r, e).with_context(|| format!("{path:?}: truncated column indices"))?;
     let weights = if weighted {
         Some(
-            read_vec::<f32>(&mut r, e)
+            read_vec_le::<f32>(&mut r, e)
                 .with_context(|| format!("{path:?}: truncated weights"))?,
         )
     } else {
         None
     };
-    let g = CsrGraph { vertex_count: v, row_offsets, col_indices, weights };
+    let g = CsrGraph {
+        vertex_count: v,
+        row_offsets: row_offsets.into(),
+        col_indices: col_indices.into(),
+        weights: weights.map(Into::into),
+    };
     g.validate().map_err(|e| anyhow::anyhow!("{path:?}: corrupt CSR: {e}"))?;
     Ok(g)
 }
@@ -229,6 +353,7 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
 mod tests {
     use super::*;
     use crate::graph::generator::{rmat, with_random_weights, RmatParams};
+    use crate::graph::store::{peek_version, MAGIC, VERSION_V2};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("totem_io_tests");
@@ -258,17 +383,88 @@ mod tests {
     }
 
     #[test]
+    fn edge_list_validates_declared_edge_count() {
+        // Pre-ISSUE-7 the declared E was parsed and discarded, so a
+        // truncated file loaded silently. Now it is a typed error.
+        let p = tmp("short.el");
+        std::fs::write(&p, "p 4 3\n0 1\n1 2\n").unwrap();
+        let err = read_edge_list(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("edge count mismatch"), "{msg}");
+        assert!(msg.contains("declares 3") && msg.contains("holds 2"), "{msg}");
+        // padded files (more edges than declared) are equally an error
+        std::fs::write(&p, "p 4 1\n0 1\n1 2\n").unwrap();
+        assert!(read_edge_list(&p).is_err());
+        // a header without E keeps the old lenient behavior
+        std::fs::write(&p, "p 4\n0 1\n1 2\n").unwrap();
+        let el = read_edge_list(&p).unwrap();
+        assert_eq!(el.edges.len(), 2);
+    }
+
+    #[test]
+    fn edge_list_header_position_rules() {
+        let p = tmp("hdr.el");
+        std::fs::write(&p, "0 1\np 4 1\n").unwrap();
+        let msg = format!("{:#}", read_edge_list(&p).unwrap_err());
+        assert!(msg.contains("p header after edges"), "{msg}");
+        std::fs::write(&p, "p 4 1\np 4 1\n0 1\n").unwrap();
+        let msg = format!("{:#}", read_edge_list(&p).unwrap_err());
+        assert!(msg.contains("duplicate p header"), "{msg}");
+    }
+
+    #[test]
+    fn scan_matches_read() {
+        let mut el = rmat(&RmatParams::paper(6, 4));
+        with_random_weights(&mut el, 16, 5);
+        let p = tmp("scan.el");
+        write_edge_list(&el, &p).unwrap();
+        let s = scan_edge_list(&p).unwrap();
+        assert_eq!(s.vertex_count, el.vertex_count);
+        assert_eq!(s.edge_count, el.edges.len() as u64);
+        assert!(s.weighted);
+        assert_eq!(s.declared_edges, Some(el.edges.len() as u64));
+    }
+
+    #[test]
+    fn csr_text_streaming_writer_roundtrips() {
+        let mut el = rmat(&RmatParams::paper(6, 11));
+        with_random_weights(&mut el, 16, 12);
+        let g = CsrGraph::from_edge_list(&el);
+        let p = tmp("fromcsr.el");
+        write_edge_list_from_csr(&g, &p).unwrap();
+        let g2 = CsrGraph::from_edge_list(&read_edge_list(&p).unwrap());
+        assert_eq!(g2.row_offsets, g.row_offsets);
+        assert_eq!(g2.col_indices, g.col_indices);
+        assert_eq!(g2.weights, g.weights);
+    }
+
+    #[test]
     fn csr_binary_roundtrip() {
         let mut el = rmat(&RmatParams::paper(8, 3));
         with_random_weights(&mut el, 64, 4);
         let g = CsrGraph::from_edge_list(&el);
         let p = tmp("c.tcsr");
         write_csr(&g, &p).unwrap();
+        assert_eq!(peek_version(&p).unwrap(), VERSION_V2, "write_csr emits v2 now");
         let back = read_csr(&p).unwrap();
         assert_eq!(back.vertex_count, g.vertex_count);
         assert_eq!(back.row_offsets, g.row_offsets);
         assert_eq!(back.col_indices, g.col_indices);
         assert_eq!(back.weights, g.weights);
+    }
+
+    #[test]
+    fn csr_v1_legacy_roundtrip_still_reads() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 5)));
+        let p = tmp("legacy.tcsr");
+        write_csr_v1(&g, &p).unwrap();
+        assert_eq!(peek_version(&p).unwrap(), 1);
+        // both the explicit v1 reader and the version-dispatching one
+        let back = read_csr_v1(&p).unwrap();
+        assert_eq!(back.col_indices, g.col_indices);
+        let back2 = read_csr(&p).unwrap();
+        assert_eq!(back2.col_indices, g.col_indices);
+        assert_eq!(back2.row_offsets, g.row_offsets);
     }
 
     #[test]
@@ -300,12 +496,12 @@ mod tests {
 
     #[test]
     fn csr_rejects_absurd_header_counts_before_allocating() {
-        // header declares |V| = u64::MAX: must fail on the size check —
-        // never attempt the corresponding allocation.
+        // a v1 header declaring |V| = u64::MAX: must fail on the size
+        // check — never attempt the corresponding allocation.
         let p = tmp("absurd.tcsr");
         let mut bytes = Vec::new();
         bytes.extend_from_slice(MAGIC);
-        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // v1
         bytes.extend_from_slice(&0u32.to_le_bytes()); // unweighted
         bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // |V|
         bytes.extend_from_slice(&8u64.to_le_bytes()); // |E|
@@ -317,7 +513,7 @@ mod tests {
         // large-but-not-overflowing count with a tiny file: truncation
         let mut bytes2 = Vec::new();
         bytes2.extend_from_slice(MAGIC);
-        bytes2.extend_from_slice(&VERSION.to_le_bytes());
+        bytes2.extend_from_slice(&1u32.to_le_bytes());
         bytes2.extend_from_slice(&0u32.to_le_bytes());
         bytes2.extend_from_slice(&(1u64 << 40).to_le_bytes());
         bytes2.extend_from_slice(&(1u64 << 40).to_le_bytes());
@@ -340,12 +536,12 @@ mod tests {
 
     #[test]
     fn csr_rejects_out_of_range_column_index() {
-        // structurally valid sizes, but a column index >= |V|: caught by
-        // validation with an error, not a panic downstream.
+        // structurally valid v1 sizes, but a column index >= |V|: caught
+        // by validation with an error, not a panic downstream.
         let p = tmp("oor.tcsr");
         let mut bytes = Vec::new();
         bytes.extend_from_slice(MAGIC);
-        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // v1
         bytes.extend_from_slice(&0u32.to_le_bytes());
         bytes.extend_from_slice(&2u64.to_le_bytes()); // |V| = 2
         bytes.extend_from_slice(&1u64.to_le_bytes()); // |E| = 1
@@ -364,6 +560,9 @@ mod tests {
         std::fs::write(&p, "p 4 2\n0 1\n2 9\n").unwrap();
         let msg = format!("{:#}", read_edge_list(&p).unwrap_err());
         assert!(msg.contains("out of declared range"), "{msg}");
+        // the typed error names the edge and the line
+        assert!(msg.contains("2 -> 9"), "{msg}");
+        assert!(msg.contains("line 3"), "{msg}");
     }
 
     #[test]
@@ -381,6 +580,10 @@ mod tests {
     fn mixed_weights_rejected() {
         let p = tmp("e.el");
         std::fs::write(&p, "0 1 2.0\n1 0\n").unwrap();
+        let msg = format!("{:#}", read_edge_list(&p).unwrap_err());
+        assert!(msg.contains("mixed weighted/unweighted"), "{msg}");
+        // and the other direction
+        std::fs::write(&p, "0 1\n1 0 2.0\n").unwrap();
         assert!(read_edge_list(&p).is_err());
     }
 }

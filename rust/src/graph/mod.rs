@@ -1,10 +1,57 @@
 //! Graph substrate: CSR representation (paper §4.3.1), synthetic workload
-//! generators (Table 2), serialization, and topology statistics.
+//! generators (Table 2), serialization, the out-of-core `.tcsr` v2
+//! container (DESIGN.md §12), and topology statistics.
 
 pub mod csr;
 pub mod generator;
+pub mod ingest;
 pub mod io;
 pub mod properties;
+pub mod store;
 
 pub use csr::{CsrGraph, EdgeList, VertexId};
 pub use generator::{rmat, uniform, with_random_weights, RmatParams, Workload};
+pub use store::{GraphStore, LoadMode, Segment};
+
+/// Typed errors raised by the ingest paths (file parsing, CLI entry
+/// points, streaming builds). Every variant names the offending datum so
+/// a failed multi-hour conversion says *which* edge or tally was wrong —
+/// these used to be silent truncations or release-mode index panics
+/// (ISSUE 7 satellite bugs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum IngestError {
+    /// An edge endpoint is `>= vertex_count`. `index` is the 0-based
+    /// position in the input edge stream.
+    EdgeOutOfRange { index: u64, src: u32, dst: u32, vertex_count: usize },
+    /// A `p <V> <E>` header declared `declared` edges but the file held
+    /// `actual` — a truncated or padded edge list.
+    EdgeCountMismatch { declared: u64, actual: u64 },
+    /// The weight array does not parallel the edge array.
+    WeightCountMismatch { edges: u64, weights: u64 },
+    /// A weighted edge follows unweighted ones (or vice versa) at input
+    /// line `line` (1-based).
+    MixedWeights { line: u64 },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::EdgeOutOfRange { index, src, dst, vertex_count } => write!(
+                f,
+                "edge #{index} ({src} -> {dst}) has a vertex id out of declared range {vertex_count}"
+            ),
+            IngestError::EdgeCountMismatch { declared, actual } => write!(
+                f,
+                "edge count mismatch: header declares {declared} edges but the file holds {actual}"
+            ),
+            IngestError::WeightCountMismatch { edges, weights } => {
+                write!(f, "weight count mismatch: {edges} edges but {weights} weights")
+            }
+            IngestError::MixedWeights { line } => {
+                write!(f, "line {line}: mixed weighted/unweighted edges")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}

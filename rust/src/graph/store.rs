@@ -1,0 +1,1051 @@
+//! The `.tcsr` v2 on-disk CSR container and its out-of-core loaders
+//! (DESIGN.md §12).
+//!
+//! v2 replaces the v1 "header + raw arrays" snapshot with a durable
+//! contract: a section-offset table, explicit little-endian encoding on
+//! every field (with a zero-copy fast path on little-endian hosts), and
+//! FNV-1a 64 checksums over the header and every section. The layout is
+//! fixed and canonical — given (|V|, |E|, weighted) there is exactly one
+//! valid byte stream — so two writers that agree on the graph agree on
+//! the file, byte for byte.
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic "TOTEMCSR"
+//!      8     4  version (u32 LE) = 2
+//!     12     4  flags   (u32 LE; bit 0 = weighted, others must be 0)
+//!     16     8  |V|     (u64 LE)
+//!     24     8  |E|     (u64 LE)
+//!     32     4  n_sections (u32 LE; 2 unweighted, 3 weighted)
+//!     36     4  reserved (u32 LE) = 0
+//!     40  32·n  section table, canonical order row/col/weights:
+//!               { kind u32, elem_bytes u32, file_offset u64,
+//!                 elem_count u64, fnv1a64 u64 }
+//! 40+32n     8  header checksum: FNV-1a 64 over bytes [0, 40+32n)
+//! 48+32n     …  sections, each 8-byte aligned, zero padding between;
+//!               the file ends exactly at the last section's end
+//! ```
+//!
+//! Loading goes through [`GraphStore`]: on little-endian Unix the file is
+//! memory-mapped and the CSR arrays are zero-copy [`Segment::Mapped`]
+//! views into the mapping (pages fault in on demand, so |E| ≫ RAM graphs
+//! stream through partition build); everywhere else — or on request — a
+//! buffered reader materializes owned vectors with per-element endian
+//! conversion. Both paths verify checksums (skippable for huge mapped
+//! graphs where eager verification would fault every page) and both end
+//! in `CsrGraph::validate`.
+
+use super::csr::CsrGraph;
+use crate::util::mmap::{mmap_supported, Mmap};
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+#[cfg_attr(not(all(unix, target_endian = "little")), allow(unused_imports))]
+use std::sync::Arc;
+
+pub const MAGIC: &[u8; 8] = b"TOTEMCSR";
+pub const VERSION_V1: u32 = 1;
+pub const VERSION_V2: u32 = 2;
+
+const FLAG_WEIGHTED: u32 = 1;
+pub const SEC_ROW: u32 = 1;
+pub const SEC_COL: u32 = 2;
+pub const SEC_WEIGHTS: u32 = 3;
+
+/// magic + version + flags + |V| + |E| + n_sections + reserved.
+const FIXED_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 8 + 4 + 4;
+const TABLE_ENTRY_BYTES: u64 = 32;
+
+// ---------------------------------------------------------------------------
+// POD element types and explicit little-endian slice IO
+// ---------------------------------------------------------------------------
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+    impl Sealed for f32 {}
+}
+
+/// The three element types the container stores. Sealed: the on-disk
+/// contract enumerates exactly these encodings (DESIGN.md §12.1).
+pub trait Pod: Copy + Default + PartialEq + std::fmt::Debug + sealed::Sealed + 'static {
+    const ELEM_BYTES: usize;
+    fn put_le(self, out: &mut [u8]);
+    fn get_le(b: &[u8]) -> Self;
+}
+
+impl Pod for u32 {
+    const ELEM_BYTES: usize = 4;
+    fn put_le(self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.to_le_bytes());
+    }
+    fn get_le(b: &[u8]) -> u32 {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl Pod for u64 {
+    const ELEM_BYTES: usize = 8;
+    fn put_le(self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_le_bytes());
+    }
+    fn get_le(b: &[u8]) -> u64 {
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+}
+
+impl Pod for f32 {
+    const ELEM_BYTES: usize = 4;
+    fn put_le(self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.to_bits().to_le_bytes());
+    }
+    fn get_le(b: &[u8]) -> f32 {
+        f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Write a POD slice in little-endian on-disk order. On LE hosts the
+/// in-memory representation *is* the on-disk representation, so the write
+/// is a single zero-copy `write_all`; big-endian hosts convert through a
+/// bounded scratch buffer — this is what makes the format portable
+/// (pre-v2 `write_slice` silently emitted host order).
+pub fn write_slice_le<T: Pod>(w: &mut impl Write, xs: &[T]) -> Result<()> {
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+        };
+        w.write_all(bytes)?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut buf = [0u8; 8192];
+        let per = buf.len() / T::ELEM_BYTES;
+        for chunk in xs.chunks(per) {
+            for (i, &x) in chunk.iter().enumerate() {
+                x.put_le(&mut buf[i * T::ELEM_BYTES..]);
+            }
+            w.write_all(&buf[..chunk.len() * T::ELEM_BYTES])?;
+        }
+    }
+    Ok(())
+}
+
+/// Read `n` little-endian POD elements. Mirror of [`write_slice_le`]:
+/// zero-copy on LE hosts, per-element conversion elsewhere.
+pub fn read_vec_le<T: Pod>(r: &mut impl Read, n: usize) -> Result<Vec<T>> {
+    let mut v = vec![T::default(); n];
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, n * T::ELEM_BYTES)
+        };
+        r.read_exact(bytes)?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut buf = [0u8; 8192];
+        let per = buf.len() / T::ELEM_BYTES;
+        for chunk in v.chunks_mut(per) {
+            let want = chunk.len() * T::ELEM_BYTES;
+            r.read_exact(&mut buf[..want])?;
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = T::get_le(&buf[i * T::ELEM_BYTES..]);
+            }
+        }
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// FNV-1a 64 checksums
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 over a byte stream. Chosen over CRC for its
+/// trivial spec (two constants) — tools/tcsr_v2.py mirrors it verbatim.
+#[derive(Clone, Copy)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(FNV_OFFSET)
+    }
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// FNV-1a 64 of a POD slice's *little-endian* byte image — always equal
+/// to the checksum of the bytes as they appear on disk, regardless of
+/// host endianness.
+pub fn fnv_of_slice<T: Pod>(xs: &[T]) -> u64 {
+    let mut h = Fnv64::new();
+    #[cfg(target_endian = "little")]
+    {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+        };
+        h.update(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut b = [0u8; 8];
+        for &x in xs {
+            x.put_le(&mut b);
+            h.update(&b[..T::ELEM_BYTES]);
+        }
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Segment: owned-or-mapped CSR array storage
+// ---------------------------------------------------------------------------
+
+/// One CSR array, either owned in RAM or a zero-copy view into a shared
+/// file mapping. Derefs to `[T]`, so every existing consumer (`seg[i]`,
+/// `seg[lo..hi]`, `.iter()`, `.windows(2)`, `.len()`) works unchanged;
+/// only construction sites know the difference.
+///
+/// The `Mapped` variant exists only on little-endian Unix: there the
+/// on-disk LE byte image can be reinterpreted in place. Big-endian hosts
+/// always materialize `Owned` vectors through the converting reader.
+#[derive(Debug, Clone)]
+pub enum Segment<T: Pod> {
+    Owned(Vec<T>),
+    #[cfg(all(unix, target_endian = "little"))]
+    Mapped {
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        len: usize,
+    },
+}
+
+impl<T: Pod> Segment<T> {
+    /// Zero-copy view of `len` elements at `byte_offset` into `map`.
+    /// Panics if the span is misaligned or out of bounds — callers
+    /// (the v2 reader) have already validated the layout, so either
+    /// would be an internal logic error, not a data error.
+    #[cfg(all(unix, target_endian = "little"))]
+    pub fn mapped(map: Arc<Mmap>, byte_offset: usize, len: usize) -> Segment<T> {
+        let end = byte_offset
+            .checked_add(len.checked_mul(T::ELEM_BYTES).expect("segment size overflow"))
+            .expect("segment span overflow");
+        assert!(end <= map.len(), "segment span exceeds mapping");
+        let base = map.as_slice().as_ptr() as usize + byte_offset;
+        assert_eq!(base % std::mem::align_of::<T>(), 0, "segment misaligned");
+        Segment::Mapped { map, byte_offset, len }
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Segment::Owned(_) => false,
+            #[cfg(all(unix, target_endian = "little"))]
+            Segment::Mapped { .. } => true,
+        }
+    }
+
+    /// Heap bytes this segment pins (0 when it is a file-backed view —
+    /// the pages are reclaimable cache, not owned allocation).
+    pub fn owned_bytes(&self) -> u64 {
+        match self {
+            Segment::Owned(v) => (v.len() * T::ELEM_BYTES) as u64,
+            #[cfg(all(unix, target_endian = "little"))]
+            Segment::Mapped { .. } => 0,
+        }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Segment<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        match self {
+            Segment::Owned(v) => v,
+            #[cfg(all(unix, target_endian = "little"))]
+            Segment::Mapped { map, byte_offset, len } => unsafe {
+                let p = map.as_slice().as_ptr().add(*byte_offset) as *const T;
+                std::slice::from_raw_parts(p, *len)
+            },
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Segment<T> {
+    fn from(v: Vec<T>) -> Segment<T> {
+        Segment::Owned(v)
+    }
+}
+
+impl<T: Pod> PartialEq for Segment<T> {
+    fn eq(&self, other: &Segment<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> Default for Segment<T> {
+    fn default() -> Segment<T> {
+        Segment::Owned(Vec::new())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical v2 layout
+// ---------------------------------------------------------------------------
+
+fn align8(x: u64) -> u64 {
+    (x + 7) & !7
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionSpan {
+    pub kind: u32,
+    pub elem_bytes: u32,
+    pub offset: u64,
+    pub elem_count: u64,
+    pub byte_len: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct V2Layout {
+    /// Fixed header + table + header checksum; first section starts here.
+    pub header_bytes: u64,
+    pub sections: Vec<SectionSpan>,
+    /// Exact file length — the file ends at the last section's end.
+    pub total_bytes: u64,
+}
+
+/// The one valid layout for a (|V|, |E|, weighted) triple. All arithmetic
+/// is checked so an absurd header fails here — before any allocation or
+/// file access sized from it.
+pub fn layout_for(vcount: u64, ecount: u64, weighted: bool) -> Result<V2Layout> {
+    let overflow =
+        || anyhow::anyhow!("corrupt header (|V|={vcount}, |E|={ecount} overflow)");
+    let n_sections = if weighted { 3u64 } else { 2 };
+    let header_bytes = FIXED_HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES + 8;
+    let mut sections = Vec::with_capacity(n_sections as usize);
+    let mut off = header_bytes; // 48 + 32n: already 8-aligned
+    let rows = vcount.checked_add(1).ok_or_else(overflow)?;
+    let specs: &[(u32, u32, u64)] = &if weighted {
+        vec![(SEC_ROW, 8u32, rows), (SEC_COL, 4, ecount), (SEC_WEIGHTS, 4, ecount)]
+    } else {
+        vec![(SEC_ROW, 8, rows), (SEC_COL, 4, ecount)]
+    };
+    for &(kind, elem_bytes, elem_count) in specs {
+        off = align8(off);
+        let byte_len = elem_count.checked_mul(elem_bytes as u64).ok_or_else(overflow)?;
+        let end = off.checked_add(byte_len).ok_or_else(overflow)?;
+        sections.push(SectionSpan { kind, elem_bytes, offset: off, elem_count, byte_len });
+        off = end;
+    }
+    Ok(V2Layout { header_bytes, sections, total_bytes: off })
+}
+
+fn section_name(kind: u32) -> &'static str {
+    match kind {
+        SEC_ROW => "row-offsets",
+        SEC_COL => "col-indices",
+        SEC_WEIGHTS => "weights",
+        _ => "unknown",
+    }
+}
+
+/// Serialize the complete v2 header (fixed fields + table + header
+/// checksum) given each section's content checksum.
+fn encode_header(
+    vcount: u64,
+    ecount: u64,
+    weighted: bool,
+    layout: &V2Layout,
+    checksums: &[u64],
+) -> Vec<u8> {
+    assert_eq!(checksums.len(), layout.sections.len());
+    let mut h = Vec::with_capacity(layout.header_bytes as usize);
+    h.extend_from_slice(MAGIC);
+    h.extend_from_slice(&VERSION_V2.to_le_bytes());
+    let flags = if weighted { FLAG_WEIGHTED } else { 0 };
+    h.extend_from_slice(&flags.to_le_bytes());
+    h.extend_from_slice(&vcount.to_le_bytes());
+    h.extend_from_slice(&ecount.to_le_bytes());
+    h.extend_from_slice(&(layout.sections.len() as u32).to_le_bytes());
+    h.extend_from_slice(&0u32.to_le_bytes()); // reserved
+    for (s, &sum) in layout.sections.iter().zip(checksums) {
+        h.extend_from_slice(&s.kind.to_le_bytes());
+        h.extend_from_slice(&s.elem_bytes.to_le_bytes());
+        h.extend_from_slice(&s.offset.to_le_bytes());
+        h.extend_from_slice(&s.elem_count.to_le_bytes());
+        h.extend_from_slice(&sum.to_le_bytes());
+    }
+    let mut fnv = Fnv64::new();
+    fnv.update(&h);
+    h.extend_from_slice(&fnv.finish().to_le_bytes());
+    debug_assert_eq!(h.len() as u64, layout.header_bytes);
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Writers
+// ---------------------------------------------------------------------------
+
+/// Write a whole in-memory graph as a v2 container. Checksums are
+/// computed up front so the file is written strictly sequentially.
+pub fn write_csr_v2(g: &CsrGraph, path: &Path) -> Result<u64> {
+    let weighted = g.weights.is_some();
+    let layout = layout_for(g.vertex_count as u64, g.edge_count() as u64, weighted)?;
+    let mut checksums = vec![fnv_of_slice(g.row_offsets.as_slice()), fnv_of_slice(g.col_indices.as_slice())];
+    if let Some(ws) = &g.weights {
+        checksums.push(fnv_of_slice(ws.as_slice()));
+    }
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&encode_header(
+        g.vertex_count as u64,
+        g.edge_count() as u64,
+        weighted,
+        &layout,
+        &checksums,
+    ))?;
+    let mut pos = layout.header_bytes;
+    let mut pad_to = |w: &mut BufWriter<File>, off: u64, pos: &mut u64| -> Result<()> {
+        while *pos < off {
+            w.write_all(&[0u8])?;
+            *pos += 1;
+        }
+        Ok(())
+    };
+    pad_to(&mut w, layout.sections[0].offset, &mut pos)?;
+    write_slice_le(&mut w, g.row_offsets.as_slice())?;
+    pos += layout.sections[0].byte_len;
+    pad_to(&mut w, layout.sections[1].offset, &mut pos)?;
+    write_slice_le(&mut w, g.col_indices.as_slice())?;
+    pos += layout.sections[1].byte_len;
+    if let Some(ws) = &g.weights {
+        pad_to(&mut w, layout.sections[2].offset, &mut pos)?;
+        write_slice_le(&mut w, ws.as_slice())?;
+        pos += layout.sections[2].byte_len;
+    }
+    w.flush()?;
+    debug_assert_eq!(pos, layout.total_bytes);
+    Ok(layout.total_bytes)
+}
+
+/// Streaming v2 writer for graphs whose edges never fit in RAM at once.
+///
+/// Construction takes the (vertex-proportional, so RAM-resident by the
+/// §12 memory contract) row-offset array and writes a zeroed header
+/// placeholder plus the row section; edges are then pushed **in CSR
+/// order** (non-decreasing source), streaming col-index bytes straight to
+/// the file while weights spool to a sidecar temp file; `finish()`
+/// appends the weights section and seeks back to write the real header
+/// with the now-known checksums. Peak memory is O(|V|) + IO buffers.
+pub struct Csr2Writer {
+    w: BufWriter<File>,
+    wtmp: Option<(PathBuf, BufWriter<File>)>,
+    layout: V2Layout,
+    vcount: u64,
+    ecount: u64,
+    weighted: bool,
+    row_fnv: u64,
+    col_fnv: Fnv64,
+    wei_fnv: Fnv64,
+    pushed: u64,
+    finished: bool,
+}
+
+impl Csr2Writer {
+    /// `row_offsets` must be a valid CSR offset array (len |V|+1, starts
+    /// at 0, monotone); its last element is |E|.
+    pub fn create(path: &Path, row_offsets: &[u64], weighted: bool) -> Result<Csr2Writer> {
+        if row_offsets.is_empty() || row_offsets[0] != 0 {
+            bail!("row offsets must start with 0");
+        }
+        if row_offsets.windows(2).any(|w| w[0] > w[1]) {
+            bail!("row offsets must be monotone");
+        }
+        let vcount = (row_offsets.len() - 1) as u64;
+        let ecount = *row_offsets.last().unwrap();
+        let layout = layout_for(vcount, ecount, weighted)?;
+        let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        // Placeholder header + alignment padding; rewritten by finish().
+        w.write_all(&vec![0u8; layout.sections[0].offset as usize])?;
+        write_slice_le(&mut w, row_offsets)?;
+        let wtmp = if weighted {
+            let p = path.with_extension("wtmp");
+            let tf = File::create(&p).with_context(|| format!("create {p:?}"))?;
+            Some((p, BufWriter::new(tf)))
+        } else {
+            None
+        };
+        Ok(Csr2Writer {
+            w,
+            wtmp,
+            layout,
+            vcount,
+            ecount,
+            weighted,
+            row_fnv: fnv_of_slice(row_offsets),
+            col_fnv: Fnv64::new(),
+            wei_fnv: Fnv64::new(),
+            pushed: 0,
+            finished: false,
+        })
+    }
+
+    /// Append the next edge's destination (and weight, if weighted).
+    /// Edges must arrive in CSR order; the caller (SpillBuild's merge)
+    /// guarantees it.
+    pub fn push_edge(&mut self, dst: u32, weight: f32) -> Result<()> {
+        if self.pushed == self.ecount {
+            bail!("more edges pushed than the row offsets declare ({})", self.ecount);
+        }
+        let db = dst.to_le_bytes();
+        self.col_fnv.update(&db);
+        self.w.write_all(&db)?;
+        if let Some((_, tw)) = &mut self.wtmp {
+            let wb = weight.to_bits().to_le_bytes();
+            self.wei_fnv.update(&wb);
+            tw.write_all(&wb)?;
+        }
+        self.pushed += 1;
+        Ok(())
+    }
+
+    /// Seal the container: pad, splice in the weights sidecar, rewrite
+    /// the real header. Returns the file's total byte length.
+    pub fn finish(mut self) -> Result<u64> {
+        if self.pushed != self.ecount {
+            bail!("{} edges pushed but row offsets declare {}", self.pushed, self.ecount);
+        }
+        let col = self.layout.sections[1];
+        let mut pos = col.offset + col.byte_len;
+        if let Some((tpath, tw)) = self.wtmp.take() {
+            let wsec = self.layout.sections[2];
+            while pos < wsec.offset {
+                self.w.write_all(&[0u8])?;
+                pos += 1;
+            }
+            tw.into_inner().map_err(|e| anyhow::anyhow!("flush weights sidecar: {e}"))?;
+            let mut tr = BufReader::new(
+                File::open(&tpath).with_context(|| format!("reopen {tpath:?}"))?,
+            );
+            let mut buf = vec![0u8; 1 << 20];
+            loop {
+                let n = tr.read(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                self.w.write_all(&buf[..n])?;
+                pos += n as u64;
+            }
+            let _ = std::fs::remove_file(&tpath);
+            if pos != wsec.offset + wsec.byte_len {
+                bail!("weights sidecar length mismatch");
+            }
+        }
+        if pos != self.layout.total_bytes {
+            bail!("stream length mismatch (wrote {pos}, layout says {})", self.layout.total_bytes);
+        }
+        self.w.flush()?;
+        let mut f = self.w.into_inner().map_err(|e| anyhow::anyhow!("flush: {e}"))?;
+        let mut checksums = vec![self.row_fnv, self.col_fnv.finish()];
+        if self.weighted {
+            checksums.push(self.wei_fnv.finish());
+        }
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&encode_header(
+            self.vcount,
+            self.ecount,
+            self.weighted,
+            &self.layout,
+            &checksums,
+        ))?;
+        f.flush()?;
+        self.finished = true;
+        Ok(self.layout.total_bytes)
+    }
+}
+
+impl Drop for Csr2Writer {
+    fn drop(&mut self) {
+        // On abandoned writes, don't leak the weights sidecar.
+        if !self.finished {
+            if let Some((p, _)) = self.wtmp.take() {
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader / GraphStore
+// ---------------------------------------------------------------------------
+
+/// How `GraphStore::open_with` should back the CSR arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadMode {
+    /// Mmap when the platform supports it (little-endian Unix), else
+    /// fall back to buffered reads. The default.
+    Auto,
+    /// Require the mapping; error where unsupported.
+    Mmap,
+    /// Always materialize owned vectors through the buffered reader.
+    Buffered,
+}
+
+/// Parsed v2 metadata (no section payloads) — what `totem info` and the
+/// corruption tests inspect.
+#[derive(Debug, Clone)]
+pub struct V2Info {
+    pub version: u32,
+    pub weighted: bool,
+    pub vertices: u64,
+    pub edges: u64,
+    pub header_bytes: u64,
+    pub total_bytes: u64,
+    pub sections: Vec<SectionSpan>,
+    pub checksums: Vec<u64>,
+}
+
+/// Read + fully validate a v2 header (magic, version, flags, canonical
+/// layout agreement, header checksum, exact file length). Returns the
+/// parse alongside the file, positioned just past the header.
+fn read_v2_header(path: &Path, f: &File) -> Result<(V2Info, BufReader<File>)> {
+    let file_len = f.metadata().with_context(|| format!("stat {path:?}"))?.len();
+    let mut r = BufReader::new(f.try_clone().with_context(|| format!("reopen {path:?}"))?);
+    let mut fixed = [0u8; FIXED_HEADER_BYTES as usize];
+    r.read_exact(&mut fixed)
+        .with_context(|| format!("{path:?}: truncated header"))?;
+    if &fixed[0..8] != MAGIC {
+        bail!("{path:?}: not a totem CSR file");
+    }
+    let ver = u32::get_le(&fixed[8..]);
+    if ver != VERSION_V2 {
+        bail!("{path:?}: unsupported version {ver}");
+    }
+    let flags = u32::get_le(&fixed[12..]);
+    if flags & !FLAG_WEIGHTED != 0 {
+        bail!("{path:?}: corrupt header (unknown flags {flags:#x})");
+    }
+    let weighted = flags & FLAG_WEIGHTED != 0;
+    let vcount = u64::get_le(&fixed[16..]);
+    let ecount = u64::get_le(&fixed[24..]);
+    let n_sections = u32::get_le(&fixed[32..]);
+    let reserved = u32::get_le(&fixed[36..]);
+    if reserved != 0 {
+        bail!("{path:?}: corrupt header (reserved field != 0)");
+    }
+    let layout = layout_for(vcount, ecount, weighted)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    if n_sections as usize != layout.sections.len() {
+        bail!(
+            "{path:?}: corrupt header ({n_sections} sections declared, layout has {})",
+            layout.sections.len()
+        );
+    }
+    if file_len < layout.header_bytes {
+        bail!(
+            "{path:?}: truncated header — {} bytes needed, file holds {file_len}",
+            layout.header_bytes
+        );
+    }
+    let mut table = vec![0u8; (n_sections as u64 * TABLE_ENTRY_BYTES) as usize];
+    r.read_exact(&mut table)
+        .with_context(|| format!("{path:?}: truncated header"))?;
+    let mut sumb = [0u8; 8];
+    r.read_exact(&mut sumb)
+        .with_context(|| format!("{path:?}: truncated header"))?;
+    let stored_header_fnv = u64::get_le(&sumb);
+    let mut fnv = Fnv64::new();
+    fnv.update(&fixed);
+    fnv.update(&table);
+    if fnv.finish() != stored_header_fnv {
+        bail!("{path:?}: corrupt header (checksum mismatch)");
+    }
+    // The table must agree with the canonical layout exactly.
+    let mut checksums = Vec::with_capacity(layout.sections.len());
+    for (i, want) in layout.sections.iter().enumerate() {
+        let e = &table[i * TABLE_ENTRY_BYTES as usize..];
+        let got = SectionSpan {
+            kind: u32::get_le(&e[0..]),
+            elem_bytes: u32::get_le(&e[4..]),
+            offset: u64::get_le(&e[8..]),
+            elem_count: u64::get_le(&e[16..]),
+            byte_len: u64::get_le(&e[16..])
+                .checked_mul(u32::get_le(&e[4..]) as u64)
+                .unwrap_or(u64::MAX),
+        };
+        if got != *want {
+            bail!(
+                "{path:?}: corrupt header (section {} is {:?}, canonical layout says {:?})",
+                i,
+                got,
+                want
+            );
+        }
+        checksums.push(u64::get_le(&e[24..]));
+    }
+    if file_len < layout.total_bytes {
+        bail!(
+            "{path:?}: truncated CSR file — layout needs {} bytes, file holds {file_len}",
+            layout.total_bytes
+        );
+    }
+    if file_len > layout.total_bytes {
+        bail!("{path:?}: {} trailing bytes after CSR payload", file_len - layout.total_bytes);
+    }
+    Ok((
+        V2Info {
+            version: ver,
+            weighted,
+            vertices: vcount,
+            edges: ecount,
+            header_bytes: layout.header_bytes,
+            total_bytes: layout.total_bytes,
+            sections: layout.sections,
+            checksums,
+        },
+        r,
+    ))
+}
+
+/// Parse and validate a v2 header without loading sections.
+pub fn describe_v2(path: &Path) -> Result<V2Info> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    read_v2_header(path, &f).map(|(info, _)| info)
+}
+
+/// Peek a `.tcsr` file's container version (1 or 2); errors on non-totem
+/// files. Used for version dispatch and CLI input sniffing.
+pub fn peek_version(path: &Path) -> Result<u32> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut head = [0u8; 12];
+    let mut r = BufReader::new(f);
+    r.read_exact(&mut head)
+        .with_context(|| format!("{path:?}: truncated header"))?;
+    if &head[0..8] != MAGIC {
+        bail!("{path:?}: not a totem CSR file");
+    }
+    Ok(u32::get_le(&head[8..]))
+}
+
+/// Whether `path` starts with the `.tcsr` magic (any version).
+pub fn is_tcsr(path: &Path) -> bool {
+    let mut head = [0u8; 8];
+    match File::open(path) {
+        Ok(mut f) => f.read_exact(&mut head).is_ok() && &head == MAGIC,
+        Err(_) => false,
+    }
+}
+
+fn check_padding_zero(path: &Path, bytes: &[u8], at: u64) -> Result<()> {
+    if bytes.iter().any(|&b| b != 0) {
+        bail!("{path:?}: corrupt CSR file (non-zero padding at offset {at})");
+    }
+    Ok(())
+}
+
+/// A CSR graph plus how it is backed. The graph's sections are either
+/// zero-copy views into a shared mapping (`is_mapped()`) or owned
+/// vectors; everything downstream sees a plain [`CsrGraph`].
+pub struct GraphStore {
+    graph: CsrGraph,
+    mapped: bool,
+}
+
+impl GraphStore {
+    /// Open with defaults: auto mmap, checksums verified.
+    pub fn open(path: &Path) -> Result<GraphStore> {
+        GraphStore::open_with(path, LoadMode::Auto, true)
+    }
+
+    /// Open a `.tcsr` container (v1 or v2). v1 files always load through
+    /// the buffered legacy reader; v2 honors `mode`. `verify` controls
+    /// the per-section checksum pass — skipping it on the mmap path means
+    /// no page is faulted before the algorithm touches it, which is the
+    /// point of out-of-core loading for |E| ≫ RAM graphs.
+    pub fn open_with(path: &Path, mode: LoadMode, verify: bool) -> Result<GraphStore> {
+        match peek_version(path)? {
+            VERSION_V1 => {
+                let graph = super::io::read_csr_v1(path)?;
+                Ok(GraphStore { graph, mapped: false })
+            }
+            VERSION_V2 => Self::open_v2(path, mode, verify),
+            other => bail!("{path:?}: unsupported version {other}"),
+        }
+    }
+
+    fn open_v2(path: &Path, mode: LoadMode, verify: bool) -> Result<GraphStore> {
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let (info, reader) = read_v2_header(path, &f)?;
+        let mappable = mmap_supported() && cfg!(target_endian = "little");
+        let want_map = match mode {
+            LoadMode::Mmap => {
+                if !mappable {
+                    bail!("{path:?}: mmap loading is unsupported on this platform");
+                }
+                true
+            }
+            LoadMode::Buffered => false,
+            LoadMode::Auto => mappable,
+        };
+        if want_map {
+            Self::open_v2_mapped(path, &f, &info, verify)
+        } else {
+            Self::open_v2_buffered(path, reader, &info, verify)
+        }
+    }
+
+    #[cfg(all(unix, target_endian = "little"))]
+    fn open_v2_mapped(path: &Path, f: &File, info: &V2Info, verify: bool) -> Result<GraphStore> {
+        let map = Arc::new(
+            Mmap::map_readonly(f).with_context(|| format!("mmap {path:?}"))?,
+        );
+        map.advise_sequential();
+        let bytes = map.as_slice();
+        let mut prev_end = info.header_bytes;
+        for (s, &sum) in info.sections.iter().zip(&info.checksums) {
+            check_padding_zero(path, &bytes[prev_end as usize..s.offset as usize], prev_end)?;
+            if verify {
+                let mut fnv = Fnv64::new();
+                fnv.update(&bytes[s.offset as usize..(s.offset + s.byte_len) as usize]);
+                if fnv.finish() != sum {
+                    bail!(
+                        "{path:?}: corrupt {} section (checksum mismatch)",
+                        section_name(s.kind)
+                    );
+                }
+            }
+            prev_end = s.offset + s.byte_len;
+        }
+        let row = &info.sections[0];
+        let col = &info.sections[1];
+        let row_offsets =
+            Segment::<u64>::mapped(map.clone(), row.offset as usize, row.elem_count as usize);
+        let col_indices =
+            Segment::<u32>::mapped(map.clone(), col.offset as usize, col.elem_count as usize);
+        let weights = if info.weighted {
+            let w = &info.sections[2];
+            Some(Segment::<f32>::mapped(map, w.offset as usize, w.elem_count as usize))
+        } else {
+            None
+        };
+        let graph = CsrGraph {
+            vertex_count: info.vertices as usize,
+            row_offsets,
+            col_indices,
+            weights,
+        };
+        graph
+            .validate()
+            .map_err(|e| anyhow::anyhow!("{path:?}: corrupt CSR: {e}"))?;
+        Ok(GraphStore { graph, mapped: true })
+    }
+
+    #[cfg(not(all(unix, target_endian = "little")))]
+    fn open_v2_mapped(path: &Path, _f: &File, _info: &V2Info, _verify: bool) -> Result<GraphStore> {
+        bail!("{path:?}: mmap loading is unsupported on this platform");
+    }
+
+    fn open_v2_buffered(
+        path: &Path,
+        mut r: BufReader<File>,
+        info: &V2Info,
+        verify: bool,
+    ) -> Result<GraphStore> {
+        // The reader sits just past the header; sections follow in file
+        // order with only alignment padding between them.
+        let mut pos = info.header_bytes;
+        let mut skip_padding = |r: &mut BufReader<File>, pos: &mut u64, to: u64| -> Result<()> {
+            if *pos < to {
+                let mut pad = vec![0u8; (to - *pos) as usize];
+                r.read_exact(&mut pad)?;
+                check_padding_zero(path, &pad, *pos)?;
+                *pos = to;
+            }
+            Ok(())
+        };
+        let row = &info.sections[0];
+        skip_padding(&mut r, &mut pos, row.offset)?;
+        let row_offsets: Vec<u64> = read_vec_le(&mut r, row.elem_count as usize)
+            .with_context(|| format!("{path:?}: truncated row offsets"))?;
+        pos += row.byte_len;
+        let col = &info.sections[1];
+        skip_padding(&mut r, &mut pos, col.offset)?;
+        let col_indices: Vec<u32> = read_vec_le(&mut r, col.elem_count as usize)
+            .with_context(|| format!("{path:?}: truncated column indices"))?;
+        pos += col.byte_len;
+        let weights: Option<Vec<f32>> = if info.weighted {
+            let wsec = &info.sections[2];
+            skip_padding(&mut r, &mut pos, wsec.offset)?;
+            Some(
+                read_vec_le(&mut r, wsec.elem_count as usize)
+                    .with_context(|| format!("{path:?}: truncated weights"))?,
+            )
+        } else {
+            None
+        };
+        if verify {
+            let sums = [
+                fnv_of_slice(&row_offsets),
+                fnv_of_slice(&col_indices),
+                weights.as_deref().map(fnv_of_slice).unwrap_or(0),
+            ];
+            for (i, s) in info.sections.iter().enumerate() {
+                if sums[i] != info.checksums[i] {
+                    bail!(
+                        "{path:?}: corrupt {} section (checksum mismatch)",
+                        section_name(s.kind)
+                    );
+                }
+            }
+        }
+        let graph = CsrGraph {
+            vertex_count: info.vertices as usize,
+            row_offsets: row_offsets.into(),
+            col_indices: col_indices.into(),
+            weights: weights.map(Segment::from),
+        };
+        graph
+            .validate()
+            .map_err(|e| anyhow::anyhow!("{path:?}: corrupt CSR: {e}"))?;
+        Ok(GraphStore { graph, mapped: false })
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    pub fn into_graph(self) -> CsrGraph {
+        self.graph
+    }
+
+    /// True when the CSR sections are file-backed mmap views.
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+}
+
+impl LoadMode {
+    pub fn parse(s: &str) -> Result<LoadMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(LoadMode::Auto),
+            "mmap" => Ok(LoadMode::Mmap),
+            "buffered" | "read" => Ok(LoadMode::Buffered),
+            _ => Err(format!("unknown store mode '{s}' (auto|mmap|buffered)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Standard FNV-1a 64 test vectors — these pin the exact constants
+        // the Python mirror (tools/tcsr_v2.py) must reproduce.
+        let of = |s: &str| {
+            let mut h = Fnv64::new();
+            h.update(s.as_bytes());
+            h.finish()
+        };
+        assert_eq!(of(""), 0xcbf29ce484222325);
+        assert_eq!(of("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(of("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv_of_slice_matches_le_bytes() {
+        let xs: Vec<u32> = vec![1, 0xdeadbeef, 42];
+        let mut bytes = Vec::new();
+        for x in &xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut h = Fnv64::new();
+        h.update(&bytes);
+        assert_eq!(fnv_of_slice(&xs), h.finish());
+    }
+
+    #[test]
+    fn le_slice_roundtrip_all_types() {
+        fn rt<T: Pod>(xs: Vec<T>) {
+            let mut buf = Vec::new();
+            write_slice_le(&mut buf, &xs).unwrap();
+            assert_eq!(buf.len(), xs.len() * T::ELEM_BYTES);
+            let back: Vec<T> = read_vec_le(&mut &buf[..], xs.len()).unwrap();
+            assert_eq!(back, xs);
+        }
+        rt(vec![0u32, 1, u32::MAX, 0x01020304]);
+        rt(vec![0u64, u64::MAX, 0x0102030405060708]);
+        rt(vec![0f32, -1.5, f32::MAX, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn le_encoding_is_byte_exact() {
+        let mut buf = Vec::new();
+        write_slice_le(&mut buf, &[0x01020304u32]).unwrap();
+        assert_eq!(buf, vec![0x04, 0x03, 0x02, 0x01], "explicitly little-endian");
+    }
+
+    #[test]
+    fn layout_is_canonical_and_aligned() {
+        let l = layout_for(5, 9, true).unwrap();
+        // 3 sections: header = 40 + 96 + 8 = 144.
+        assert_eq!(l.header_bytes, 144);
+        assert_eq!(l.sections[0], SectionSpan { kind: SEC_ROW, elem_bytes: 8, offset: 144, elem_count: 6, byte_len: 48 });
+        assert_eq!(l.sections[1].offset, 192);
+        assert_eq!(l.sections[1].byte_len, 36);
+        // col ends at 228 → weights padded up to 232.
+        assert_eq!(l.sections[2].offset, 232);
+        assert_eq!(l.total_bytes, 232 + 36);
+        for s in &l.sections {
+            assert_eq!(s.offset % 8, 0, "8-byte aligned sections");
+        }
+        // unweighted: two sections, no trailing pad.
+        let l2 = layout_for(5, 9, false).unwrap();
+        assert_eq!(l2.header_bytes, 112);
+        assert_eq!(l2.total_bytes, 112 + 48 + 36);
+    }
+
+    #[test]
+    fn layout_rejects_overflowing_counts() {
+        assert!(layout_for(u64::MAX, 8, false).is_err());
+        assert!(layout_for(8, u64::MAX / 2, true).is_err());
+    }
+
+    #[test]
+    fn segment_derefs_like_a_slice() {
+        let s: Segment<u64> = vec![0u64, 3, 7].into();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[1], 3);
+        assert_eq!(&s[1..], &[3, 7]);
+        assert_eq!(s.windows(2).count(), 2);
+        assert!(!s.is_mapped());
+        assert_eq!(s.owned_bytes(), 24);
+        let t: Segment<u64> = vec![0u64, 3, 7].into();
+        assert_eq!(s, t);
+    }
+}

@@ -6,7 +6,7 @@ use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, wides
 use crate::alg::Algorithm;
 use crate::engine::{self, EngineConfig, RunResult};
 use crate::partition::Placement;
-use crate::graph::generator::with_random_weights;
+use crate::graph::generator::{weight_seed, with_random_weights, WEIGHT_MAX_DEFAULT};
 use crate::graph::{CsrGraph, Workload};
 use crate::stats;
 use anyhow::Result;
@@ -95,7 +95,9 @@ impl RunSpec {
 pub fn build_workload(w: Workload, seed: u64, alg: AlgKind) -> CsrGraph {
     let mut el = w.generate(seed);
     if alg.needs_weights() {
-        with_random_weights(&mut el, 64, seed ^ 0x5eed);
+        // Same max/seed convention as the streaming path (Workload::stream),
+        // so `totem convert` output is bit-identical to the in-memory build.
+        with_random_weights(&mut el, WEIGHT_MAX_DEFAULT, weight_seed(seed));
     }
     CsrGraph::from_edge_list(&el)
 }
@@ -165,6 +167,19 @@ pub struct Measured {
     /// scaling reports can label per-thread rows without re-deriving it
     /// from the element list.
     pub threads: usize,
+    /// Process peak RSS after the measured reps (VmHWM; `None` off
+    /// Linux). Real memory-footprint accounting for Table 5 — DESIGN.md
+    /// §12.6.
+    pub peak_rss_bytes: Option<u64>,
+    /// CSR-array bytes of the input graph (paper §4.3.3 formula).
+    pub graph_bytes: u64,
+    /// Heap bytes the input graph's CSR arrays actually pin — 0 when the
+    /// graph is an mmap view of a `.tcsr` container (reclaimable file
+    /// cache, not committed memory).
+    pub graph_owned_bytes: u64,
+    /// Summed per-partition footprints (graph copies + inbox/outbox +
+    /// state) from the last rep.
+    pub partition_bytes: u64,
     /// Last run's full result (partition stats etc. are deterministic
     /// given the seed, so any rep's copy is representative).
     pub last: RunResult,
@@ -193,7 +208,12 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         last = Some((r, tr));
     }
     let (last, traversed) = last.unwrap();
+    let partition_bytes = last.footprints.iter().map(|fp| fp.total()).sum();
     Ok(Measured {
+        peak_rss_bytes: crate::util::mem::peak_rss_bytes(),
+        graph_bytes: g.footprint_bytes(),
+        graph_owned_bytes: g.owned_bytes(),
+        partition_bytes,
         makespan_secs: stats::mean(&makespans),
         makespan_ci95: stats::ci95(&makespans),
         teps: stats::mean(&teps),
@@ -274,6 +294,18 @@ mod tests {
         let m2 = measure(&g, RunSpec::new(AlgKind::Bfs).with_source(0), &EngineConfig::host_only(1), 1)
             .unwrap();
         assert_eq!(m2.pull_steps, 0);
+    }
+
+    #[test]
+    fn measure_reports_memory_accounting() {
+        let g = build_workload(Workload::Rmat(8), 3, AlgKind::Bfs);
+        let m = measure(&g, RunSpec::new(AlgKind::Bfs), &EngineConfig::host_only(1), 1).unwrap();
+        assert_eq!(m.graph_bytes, g.footprint_bytes());
+        assert_eq!(m.graph_owned_bytes, m.graph_bytes, "in-memory build owns all arrays");
+        assert!(m.partition_bytes >= m.graph_bytes, "partitions hold a graph copy plus state");
+        if cfg!(target_os = "linux") {
+            assert!(m.peak_rss_bytes.unwrap() > 0, "VmHWM probe");
+        }
     }
 
     #[test]

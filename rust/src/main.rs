@@ -5,6 +5,8 @@
 //!   model      evaluate the performance model (Eqs. 1–4)
 //!   calibrate  measure r_cpu / r_acc / c on this testbed
 //!   generate   write a workload to disk (edge list or binary CSR)
+//!   convert    stream any input (workload, .el, .tcsr) into a `.tcsr` v2
+//!              container or text edge list with bounded staging memory
 //!   info       degree-distribution statistics of a workload
 //!   beta       boundary-edge statistics for a partitioning (Fig. 4)
 //!
@@ -15,16 +17,20 @@
 //!   totem calibrate --alg bfs --workload rmat13
 //!   totem beta --workload twitter --parts 2 --strategy rand
 
-use anyhow::{anyhow, bail, Result};
-use totem::engine::EngineConfig;
-use totem::graph::{io as gio, properties, Workload};
+use anyhow::{anyhow, bail, Context, Result};
+use totem::engine::{EngineConfig, StateArray};
+use totem::graph::ingest;
+use totem::graph::store;
+use totem::graph::{io as gio, properties, GraphStore, LoadMode, Workload};
 use totem::harness::{build_workload, measure, AlgKind, RunSpec};
 use totem::model::{self, calibrate, ModelParams};
 use totem::partition::{PartitionedGraph, Strategy};
 use totem::report::{fmt_secs, fmt_teps, Table};
 use totem::util::args::Args;
 use totem::util::{fmt_bytes, fmt_count};
-use std::path::PathBuf;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = match Args::from_env() {
@@ -40,6 +46,7 @@ fn main() {
         "model" => model_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "generate" => generate_cmd(&args),
+        "convert" => convert_cmd(&args),
         "info" => info_cmd(&args),
         "beta" => beta_cmd(&args),
         "help" | "--help" | "-h" => {
@@ -69,20 +76,42 @@ COMMANDS:
              [--artifacts DIR] [--threads N] [--budget-mb N]
              [--balance vertex|edge|hub-split]
              [--direction] [--dir-alpha F] [--dir-beta F]
+             [--store auto|mmap|buffered] [--no-verify] [--dump-output PATH]
              (--threads 0 or omitted = one worker per available core;
-              --balance picks how CPU kernels cut chunks, DESIGN.md §11)
+              --balance picks how CPU kernels cut chunks, DESIGN.md §11;
+              --store picks how csr:PATH containers load, DESIGN.md §12;
+              --dump-output writes per-vertex results for exact diffing)
   model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
   calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
   generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
+  convert    <workload|in.el|in.tcsr> <out.tcsr|out.el>
+             [--weights] [--seed N] [--spill-edges N]
+             [--store auto|mmap|buffered] [--no-verify]
+             (streams through fixed-size spill runs: edge staging memory is
+              bounded by --spill-edges regardless of graph size; .tcsr in →
+              .tcsr out re-encodes, migrating v1 containers to v2)
   info       --workload W [--seed N]
   beta       --workload W --parts N [--strategy S] [--seed N]
 ";
+
+/// `--store` flag → container load mode (DESIGN.md §12.3).
+fn load_mode(args: &Args) -> Result<LoadMode> {
+    LoadMode::parse(&args.str_or("store", "auto")).map_err(anyhow::Error::msg)
+}
 
 fn parse_workload_or_file(args: &Args, alg: Option<AlgKind>) -> Result<totem::graph::CsrGraph> {
     let w = args.str_or("workload", "rmat14");
     let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
     if let Some(path) = w.strip_prefix("csr:") {
-        return gio::read_csr(&PathBuf::from(path));
+        let st = GraphStore::open_with(
+            &PathBuf::from(path),
+            load_mode(args)?,
+            !args.has("no-verify"),
+        )?;
+        if st.is_mapped() {
+            eprintln!("# csr:{path} mmap-backed (0 heap bytes for CSR arrays)");
+        }
+        return Ok(st.into_graph());
     }
     if let Some(path) = w.strip_prefix("el:") {
         let el = gio::read_edge_list(&PathBuf::from(path))?;
@@ -182,6 +211,16 @@ fn run_cmd(args: &Args) -> Result<()> {
     println!("bottleneck comp. : {}", fmt_secs(m.bottleneck_secs));
     println!("communication    : {}", fmt_secs(m.comm_secs));
     println!(
+        "graph memory     : {} CSR, {} heap-owned{}",
+        fmt_bytes(m.graph_bytes),
+        fmt_bytes(m.graph_owned_bytes),
+        if g.is_mapped() { " (mmap-backed)" } else { "" }
+    );
+    println!("partition memory : {}", fmt_bytes(m.partition_bytes));
+    if let Some(rss) = m.peak_rss_bytes {
+        println!("peak RSS         : {}", fmt_bytes(rss));
+    }
+    println!(
         "comm volume      : {} in {} messages",
         fmt_bytes(r.metrics.total_bytes()),
         fmt_count(r.metrics.total_messages())
@@ -217,6 +256,33 @@ fn run_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(path) = args.get("dump-output") {
+        let path = PathBuf::from(path);
+        dump_output(&path, &r.output)?;
+        eprintln!("# wrote per-vertex output to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Write per-vertex results as `vertex value` lines. Floats are dumped as
+/// bit patterns (`to_bits` hex) so two runs can be compared with a plain
+/// `diff` — the ingest-smoke CI job diffs mmap-path vs in-memory-path runs.
+fn dump_output(path: &Path, out: &StateArray) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    match out {
+        StateArray::I32(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {x}")?;
+            }
+        }
+        StateArray::F32(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {:08x}", x.to_bits())?;
+            }
+        }
+    }
+    w.flush()?;
     Ok(())
 }
 
@@ -313,7 +379,8 @@ fn generate_cmd(args: &Args) -> Result<()> {
     );
     let mut el = w.generate(seed);
     if args.has("weights") {
-        totem::graph::with_random_weights(&mut el, 64, seed ^ 0x5eed);
+        use totem::graph::generator::{weight_seed, WEIGHT_MAX_DEFAULT};
+        totem::graph::with_random_weights(&mut el, WEIGHT_MAX_DEFAULT, weight_seed(seed));
     }
     match args.str_or("format", "csr").as_str() {
         "el" => gio::write_edge_list(&el, &out)?,
@@ -327,6 +394,140 @@ fn generate_cmd(args: &Args) -> Result<()> {
         fmt_count(el.edge_count() as u64)
     );
     Ok(())
+}
+
+/// What `totem convert` reads from: a synthetic workload streamed on the
+/// fly, a text edge list, or an existing binary container.
+enum ConvertSrc {
+    Workload(Workload),
+    Text(PathBuf),
+    Tcsr(PathBuf),
+}
+
+fn convert_cmd(args: &Args) -> Result<()> {
+    const USAGE: &str = "usage: totem convert <workload|in.el|in.tcsr> <out.tcsr|out.el> \
+                         [--weights] [--seed N] [--spill-edges N] [--store M] [--no-verify]";
+    let input = args.positional.get(1).cloned().ok_or_else(|| anyhow!(USAGE))?;
+    let output = args.positional.get(2).cloned().ok_or_else(|| anyhow!(USAGE))?;
+    let out = PathBuf::from(&output);
+    let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let weighted = args.has("weights");
+    let spill = match args.usize_or("spill-edges", ingest::DEFAULT_SPILL_EDGES)
+        .map_err(anyhow::Error::msg)?
+    {
+        0 => bail!("--spill-edges must be positive"),
+        n => n,
+    };
+    let to_tcsr = out.extension().is_some_and(|e| e == "tcsr");
+    // Spill runs land next to the output (same filesystem), falling back
+    // to the system temp dir for bare filenames.
+    let tmp_parent = match out.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::env::temp_dir(),
+    };
+    let src = if let Ok(w) = Workload::parse(&input) {
+        ConvertSrc::Workload(w)
+    } else {
+        let p = PathBuf::from(&input);
+        if !p.is_file() {
+            bail!("input '{input}' is neither a workload name nor an existing file");
+        }
+        if store::is_tcsr(&p) {
+            ConvertSrc::Tcsr(p)
+        } else {
+            ConvertSrc::Text(p)
+        }
+    };
+    match (src, to_tcsr) {
+        (ConvertSrc::Workload(w), true) => {
+            let stats = ingest::convert_workload_to_tcsr(&w, seed, weighted, &out, spill, &tmp_parent)?;
+            print_convert_stats(&out, &stats);
+        }
+        (ConvertSrc::Workload(w), false) => {
+            let (v, e) = w.dimensions();
+            let f = File::create(&out).with_context(|| format!("create {out:?}"))?;
+            let mut wr = BufWriter::new(f);
+            writeln!(wr, "# totem edge list")?;
+            writeln!(wr, "p {v} {e}")?;
+            w.stream(seed, weighted, &mut |s, d, wt| {
+                match wt {
+                    Some(x) => writeln!(wr, "{s} {d} {x}"),
+                    None => writeln!(wr, "{s} {d}"),
+                }
+                .map_err(Into::into)
+            })?;
+            wr.flush()?;
+            println!("wrote {} (|V|={}, |E|={})", out.display(), fmt_count(v as u64), fmt_count(e));
+        }
+        (ConvertSrc::Text(p), true) => {
+            let stats = ingest::convert_edge_list_to_tcsr(&p, &out, spill, &tmp_parent)?;
+            print_convert_stats(&out, &stats);
+        }
+        (ConvertSrc::Text(p), false) => {
+            // Text → text normalizes (re-emits with a validated header).
+            let summary = gio::scan_edge_list(&p)?;
+            let f = File::create(&out).with_context(|| format!("create {out:?}"))?;
+            let mut wr = BufWriter::new(f);
+            writeln!(wr, "# totem edge list")?;
+            writeln!(wr, "p {} {}", summary.vertex_count, summary.edge_count)?;
+            gio::stream_edge_list(&p, &mut |s, d, wt| {
+                match wt {
+                    Some(x) => writeln!(wr, "{s} {d} {x}"),
+                    None => writeln!(wr, "{s} {d}"),
+                }
+                .map_err(Into::into)
+            })?;
+            wr.flush()?;
+            println!(
+                "wrote {} (|V|={}, |E|={})",
+                out.display(),
+                fmt_count(summary.vertex_count as u64),
+                fmt_count(summary.edge_count)
+            );
+        }
+        (ConvertSrc::Tcsr(p), true) => {
+            // Re-encode: buffered read (the source may be v1, which the
+            // mmap path does not serve) → canonical v2 bytes. This is the
+            // v1 → v2 migration path.
+            let st = GraphStore::open_with(&p, LoadMode::Buffered, !args.has("no-verify"))?;
+            let bytes = store::write_csr_v2(st.graph(), &out)?;
+            println!(
+                "wrote {} (|V|={}, |E|={}, {} on disk)",
+                out.display(),
+                fmt_count(st.graph().vertex_count as u64),
+                fmt_count(st.graph().edge_count() as u64),
+                fmt_bytes(bytes)
+            );
+        }
+        (ConvertSrc::Tcsr(p), false) => {
+            let st = GraphStore::open_with(&p, load_mode(args)?, !args.has("no-verify"))?;
+            gio::write_edge_list_from_csr(st.graph(), &out)?;
+            println!(
+                "wrote {} (|V|={}, |E|={})",
+                out.display(),
+                fmt_count(st.graph().vertex_count as u64),
+                fmt_count(st.graph().edge_count() as u64)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_convert_stats(out: &Path, stats: &ingest::ConvertStats) {
+    println!(
+        "wrote {} (|V|={}, |E|={}, {}weighted, {} on disk)",
+        out.display(),
+        fmt_count(stats.vertices as u64),
+        fmt_count(stats.edges),
+        if stats.weighted { "" } else { "un" },
+        fmt_bytes(stats.bytes_written)
+    );
+    println!(
+        "spill: {} runs of <= {} edges, peak staging {}",
+        stats.runs,
+        fmt_count(stats.run_edges as u64),
+        fmt_bytes(stats.peak_staging_bytes)
+    );
 }
 
 fn info_cmd(args: &Args) -> Result<()> {

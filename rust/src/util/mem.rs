@@ -1,0 +1,63 @@
+//! Process memory accounting (DESIGN.md §12.6).
+//!
+//! Linux exposes resident-set figures in `/proc/self/status`; `VmHWM` is
+//! the peak RSS since process start (or the last reset), `VmRSS` the
+//! current value. Both are reported in kB. On non-Linux targets there is
+//! no portable equivalent without new dependencies, so the probes return
+//! `None` and callers print `n/a` — accounting is advisory, never
+//! load-bearing for correctness.
+
+/// Peak resident set size of this process in bytes (`VmHWM`), if the
+/// platform exposes it.
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmHWM:").map(|kb| kb * 1024)
+}
+
+/// Current resident set size of this process in bytes (`VmRSS`), if the
+/// platform exposes it.
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_kb("VmRSS:").map(|kb| kb * 1024)
+}
+
+#[cfg(target_os = "linux")]
+fn proc_status_kb(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            // format: "VmHWM:      12345 kB"
+            let num = rest.trim().split_whitespace().next()?;
+            return num.parse::<u64>().ok();
+        }
+    }
+    None
+}
+
+#[cfg(not(target_os = "linux"))]
+fn proc_status_kb(_key: &str) -> Option<u64> {
+    None
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_probes_report_plausible_values() {
+        let peak = peak_rss_bytes().expect("linux exposes VmHWM");
+        let cur = current_rss_bytes().expect("linux exposes VmRSS");
+        // Any live process has at least a page resident, and the peak can
+        // never be below the current value.
+        assert!(cur >= 4096);
+        assert!(peak >= cur);
+    }
+
+    #[test]
+    fn peak_tracks_large_allocations() {
+        let before = peak_rss_bytes().unwrap();
+        let buf = vec![1u8; 64 << 20]; // 64 MiB, touched so it's resident
+        let sum: u64 = buf.iter().map(|&b| b as u64).sum();
+        assert_eq!(sum, 64 << 20);
+        let after = peak_rss_bytes().unwrap();
+        assert!(after >= before, "peak RSS is monotone");
+    }
+}

@@ -1,0 +1,219 @@
+//! Minimal read-only file memory-mapping shim (DESIGN.md §12.3).
+//!
+//! The offline build environment cannot add the `libc`/`memmap2` crates, so
+//! the two syscalls the out-of-core ingest layer needs — `mmap` and
+//! `munmap` — are declared here directly against the C runtime every Unix
+//! target already links. The surface is deliberately tiny: map a whole
+//! file read-only & private, expose it as `&[u8]`, unmap on drop.
+//!
+//! Non-Unix targets compile a stub whose `map_readonly` always fails with
+//! `ErrorKind::Unsupported`; callers (`graph::store::GraphStore`) treat
+//! that as "fall back to buffered reads", so the rest of the crate never
+//! `cfg`s on the platform itself.
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    // Prototypes per POSIX; `off_t` is pointer-width (`isize`) on every
+    // LP64 Unix target this repo builds for. 32-bit targets without
+    // large-file support would need `mmap64` — out of scope, documented
+    // in DESIGN.md §12.3.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: isize,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+        #[cfg(target_os = "linux")]
+        pub fn madvise(addr: *mut c_void, length: usize, advice: c_int) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    #[cfg(target_os = "linux")]
+    pub const MADV_SEQUENTIAL: c_int = 2;
+}
+
+/// Whether this build can memory-map files at all.
+pub fn mmap_supported() -> bool {
+    cfg!(unix)
+}
+
+/// A read-only, private mapping of an entire file.
+///
+/// The mapping stays valid for the lifetime of this value; `Drop` unmaps.
+/// Contract (DESIGN.md §12.3): the underlying file must not be truncated
+/// while mapped — POSIX delivers `SIGBUS` on access past a shrunken file's
+/// end, which no userspace check can fully prevent. `GraphStore` validates
+/// the file length against the declared layout *before* building slices,
+/// so a well-formed file that stays put is always safe.
+#[cfg(unix)]
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+#[cfg(unix)]
+impl Mmap {
+    /// Map `f` read-only in its entirety. Fails on empty files (POSIX
+    /// rejects zero-length mappings) and on any syscall error.
+    pub fn map_readonly(f: &std::fs::File) -> std::io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let len = f.metadata()?.len();
+        if len == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "cannot mmap an empty file",
+            ));
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "file too large to map")
+        })?;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr: ptr as *mut u8, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes. Page-aligned base pointer (mmap guarantees it).
+    pub fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Advise the kernel we will stream the mapping front-to-back
+    /// (read-ahead hint for checksum verification and partition build).
+    /// Best-effort: errors are ignored, non-Linux is a no-op.
+    pub fn advise_sequential(&self) {
+        #[cfg(target_os = "linux")]
+        unsafe {
+            let _ = sys::madvise(self.ptr as *mut _, self.len, sys::MADV_SEQUENTIAL);
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        unsafe {
+            let _ = sys::munmap(self.ptr as *mut _, self.len);
+        }
+    }
+}
+
+// SAFETY: the mapping is read-only (PROT_READ) and private (MAP_PRIVATE);
+// concurrent shared reads from multiple threads are data-race-free, and
+// ownership transfer only moves the pointer, never the pages.
+#[cfg(unix)]
+unsafe impl Send for Mmap {}
+#[cfg(unix)]
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+/// Stub for non-Unix targets: `map_readonly` always fails, so callers take
+/// the buffered-read fallback path.
+#[cfg(not(unix))]
+#[derive(Debug)]
+pub struct Mmap {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(unix))]
+impl Mmap {
+    pub fn map_readonly(_f: &std::fs::File) -> std::io::Result<Mmap> {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "mmap is not available on this platform",
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self.never {}
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self.never {}
+    }
+
+    pub fn advise_sequential(&self) {
+        match self.never {}
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("totem_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let p = tmp("a.bin");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(b"hello mapping").unwrap();
+        drop(f);
+        let f = std::fs::File::open(&p).unwrap();
+        let m = Mmap::map_readonly(&f).unwrap();
+        assert_eq!(m.as_slice(), b"hello mapping");
+        assert_eq!(m.len(), 13);
+        m.advise_sequential();
+    }
+
+    #[test]
+    fn rejects_empty_file() {
+        let p = tmp("empty.bin");
+        std::fs::File::create(&p).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        assert!(Mmap::map_readonly(&f).is_err());
+    }
+
+    #[test]
+    fn mapping_is_page_aligned_and_shareable_across_threads() {
+        let p = tmp("b.bin");
+        std::fs::write(&p, vec![7u8; 4096 * 2 + 13]).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        let m = std::sync::Arc::new(Mmap::map_readonly(&f).unwrap());
+        assert_eq!(m.as_slice().as_ptr() as usize % 4096, 0, "page aligned");
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.as_slice().iter().map(|&b| b as u64).sum::<u64>());
+        let a = m.as_slice().iter().map(|&b| b as u64).sum::<u64>();
+        assert_eq!(a, h.join().unwrap());
+    }
+}

@@ -1,10 +1,13 @@
-//! Self-contained utility layer: PRNG, JSON, CLI args, atomics, scoped
-//! parallelism, timers. The offline build environment vendors only the
-//! `xla` crate closure, so everything here is hand-rolled (see DESIGN.md §6).
+//! Self-contained utility layer: PRNG, JSON, CLI args, atomics, the
+//! worker pool, timers, file memory-mapping, and process memory probes.
+//! The offline build environment vendors only the `xla` crate closure,
+//! so everything here is hand-rolled (see DESIGN.md §6).
 
 pub mod args;
 pub mod atomic;
 pub mod json;
+pub mod mem;
+pub mod mmap;
 pub mod rng;
 pub mod threadpool;
 pub mod timer;

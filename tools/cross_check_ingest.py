@@ -1,0 +1,355 @@
+#!/usr/bin/env python3
+"""Independent cross-check of the out-of-core ingest path (DESIGN.md §12).
+
+Re-implements the v2 container byte contract, the spill-run external sort,
+and the two-pass streaming R-MAT in pure Python (via `tcsr_v2.py` and
+`cross_sim_bench.py`, the mirrors of `store.rs` / `ingest.rs` /
+`generator.rs` / `util/rng.rs`) and checks them against each other — and,
+when `--totem` points at a built binary, against bytes the Rust CLI
+actually wrote.
+
+Checks:
+  1. FNV-1a 64 pinned test vectors.
+  2. Canonical layout pin for the reference example in tcsr_v2_layout.json.
+  3. Encode/decode roundtrip + exhaustive single-byte-flip corruption sweep
+     (every byte of a v2 file is covered by a checksum, a zero-padding
+     check, or the exact-length check) + truncation/trailing-bytes checks.
+  4. Spill-run external sort (chunk → stable sort by src → k-way merge
+     keyed (src, run_index)) reproduces the counting-sort CSR exactly,
+     across run sizes — the stability argument in ingest.rs.
+  5. Two-pass streaming R-MAT (replay edge draws, take the permutation,
+     regenerate) is bit-equal to the in-memory generator.
+  6. Harness weight convention (batch draw) == streaming weight convention
+     (interleaved draw): same RNG, same order.
+  7. [--totem] `totem convert` output bytes == Python `encode()` of the
+     mirrored graph, and the text edge-list export matches the mirrored
+     edge stream + weights.
+
+Exit 0 with a PASS summary, non-zero with the first failure.
+"""
+
+import argparse
+import heapq
+import os
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import tcsr_v2
+from cross_sim_bench import Csr, Rng, random_weights, rmat_paper
+
+WEIGHT_MAX_DEFAULT = 64
+
+
+def weight_seed(seed):
+    return seed ^ 0x5EED
+
+
+_passed = []
+
+
+def check(name, cond, detail=""):
+    if not cond:
+        print("FAIL %s%s" % (name, (": " + detail) if detail else ""))
+        sys.exit(1)
+    _passed.append(name)
+    print("ok   %s" % name)
+
+
+# -- 1. FNV vectors ----------------------------------------------------------
+
+
+def check_fnv():
+    vectors = {
+        b"": 0xCBF29CE484222325,
+        b"a": 0xAF63DC4C8601EC8C,
+        b"foobar": 0x85944171F73967E8,
+    }
+    for data, want in vectors.items():
+        got = tcsr_v2.fnv1a64(data)
+        check("fnv1a64(%r)" % data, got == want, "got %#x want %#x" % (got, want))
+
+
+# -- 2. layout pin -----------------------------------------------------------
+
+
+def check_layout_pin():
+    lay = tcsr_v2.layout_for(5, 9, True)
+    check("layout(5,9,weighted).header", lay["header_bytes"] == 144, str(lay))
+    offs = [s["offset"] for s in lay["sections"]]
+    check("layout(5,9,weighted).offsets", offs == [144, 192, 232], str(offs))
+    check("layout(5,9,weighted).total", lay["total_bytes"] == 268, str(lay))
+    lay = tcsr_v2.layout_for(5, 9, False)
+    check(
+        "layout(5,9,unweighted)",
+        lay["header_bytes"] == 112 and lay["total_bytes"] == 196,
+        str(lay),
+    )
+
+
+# -- 3. roundtrip + corruption sweep ----------------------------------------
+
+
+def check_roundtrip_and_corruption():
+    # Roundtrip on a real generated graph.
+    n, edges = rmat_paper(5, 13)
+    w = random_weights(len(edges), 16, 99)
+    g = Csr(n, edges, w)
+    data = tcsr_v2.encode(g.off, g.tgt, g.wgt)
+    ro, ci, wt = tcsr_v2.decode(data)
+    check(
+        "roundtrip rmat(5)",
+        ro == g.off and ci == g.tgt and wt == g.wgt,
+        "decode disagrees with encode input",
+    )
+    # Unweighted too.
+    g2 = Csr(n, edges)
+    d2 = tcsr_v2.encode(g2.off, g2.tgt)
+    ro2, ci2, wt2 = tcsr_v2.decode(d2)
+    check("roundtrip unweighted", ro2 == g2.off and ci2 == g2.tgt and wt2 is None)
+
+    # Exhaustive byte-flip sweep on a tiny container (every byte is covered
+    # by the header checksum, a section checksum, the zero-padding check, or
+    # the magic/version/layout comparisons).
+    tiny_edges = [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 0), (4, 2), (2, 0)]
+    tiny = Csr(5, tiny_edges, [float(i + 1) for i in range(len(tiny_edges))])
+    tdata = bytearray(tcsr_v2.encode(tiny.off, tiny.tgt, tiny.wgt))
+    undetected = []
+    for i in range(len(tdata)):
+        tdata[i] ^= 0xFF
+        try:
+            tcsr_v2.decode(bytes(tdata))
+            undetected.append(i)
+        except ValueError:
+            pass
+        tdata[i] ^= 0xFF
+    check(
+        "byte-flip sweep (%d bytes)" % len(tdata),
+        not undetected,
+        "flips not detected at offsets %s" % undetected[:10],
+    )
+    # Truncation at several boundaries, and trailing garbage.
+    for cut in (0, 4, 39, 40, len(tdata) // 2, len(tdata) - 1):
+        try:
+            tcsr_v2.decode(bytes(tdata[:cut]))
+            check("truncation at %d" % cut, False, "accepted truncated file")
+        except ValueError:
+            pass
+    check("truncation sweep", True)
+    try:
+        tcsr_v2.decode(bytes(tdata) + b"xyz")
+        check("trailing bytes", False, "accepted trailing garbage")
+    except ValueError as e:
+        check("trailing bytes", "trailing" in str(e), str(e))
+
+
+# -- 4. spill-run external sort == counting sort ----------------------------
+
+
+def spill_merge(n, edges, weights, run_edges):
+    """Mirror of ingest.rs SpillBuild: chunk the stream into runs of
+    `run_edges`, stable-sort each run by src, k-way merge with ties broken
+    by run index. Returns the CSR arrays built from the merged stream."""
+    recs = [
+        (s, d, weights[i] if weights is not None else 0.0)
+        for i, (s, d) in enumerate(edges)
+    ]
+    runs = [
+        sorted(recs[i : i + run_edges], key=lambda r: r[0])
+        for i in range(0, len(recs), run_edges)
+    ]
+    heap = [(run[0][0], ri, 0) for ri, run in enumerate(runs) if run]
+    heapq.heapify(heap)
+    tgt, wgt = [], []
+    off = [0] * (n + 1)
+    while heap:
+        src, ri, k = heapq.heappop(heap)
+        _, d, w = runs[ri][k]
+        off[src + 1] += 1
+        tgt.append(d)
+        wgt.append(w)
+        if k + 1 < len(runs[ri]):
+            heapq.heappush(heap, (runs[ri][k + 1][0], ri, k + 1))
+    for v in range(n):
+        off[v + 1] += off[v]
+    return off, tgt, (wgt if weights is not None else None)
+
+
+def check_spill_merge():
+    n, edges = rmat_paper(7, 21)
+    w = random_weights(len(edges), WEIGHT_MAX_DEFAULT, weight_seed(21))
+    direct = Csr(n, edges, w)
+    for run_edges in (7, 100, 1000, 10_000):
+        off, tgt, wgt = spill_merge(n, edges, w, run_edges)
+        check(
+            "spill merge == counting sort (runs of %d)" % run_edges,
+            off == direct.off and tgt == direct.tgt and wgt == direct.wgt,
+            "merged stream order diverges from counting-sort order",
+        )
+    # Unweighted.
+    direct_u = Csr(n, edges)
+    off, tgt, wgt = spill_merge(n, edges, None, 64)
+    check(
+        "spill merge unweighted",
+        off == direct_u.off and tgt == direct_u.tgt and wgt is None,
+    )
+
+
+# -- 5. streaming two-pass R-MAT == in-memory -------------------------------
+
+
+def rmat_paper_streaming(scale, seed):
+    """Mirror of generator.rs rmat_streaming: replay the m*scale edge draws
+    to position the RNG at the permutation, then regenerate edges with a
+    fresh RNG applying the permutation on the fly."""
+    a, b, c = 0.57, 0.19, 0.19
+    n = 1 << scale
+    m = n * 16
+    rng = Rng(seed)
+    for _ in range(m * scale):
+        rng.next_f64()
+    perm = rng.permutation(n)
+    rng = Rng(seed)
+    out = []
+    for _ in range(m):
+        x = y = 0
+        for level in range(scale - 1, -1, -1):
+            r = rng.next_f64()
+            bit = 1 << level
+            if r < a:
+                pass
+            elif r < a + b:
+                y |= bit
+            elif r < a + b + c:
+                x |= bit
+            else:
+                x |= bit
+                y |= bit
+        out.append((perm[x], perm[y]))
+    return n, out
+
+
+def check_streaming_rmat():
+    for scale, seed in ((5, 42), (7, 9)):
+        n_a, mem = rmat_paper(scale, seed)
+        n_b, streamed = rmat_paper_streaming(scale, seed)
+        check(
+            "streaming rmat(%d, seed %d) bit-equal" % (scale, seed),
+            n_a == n_b and mem == streamed,
+            "two-pass replay diverges from in-memory generator",
+        )
+
+
+# -- 6. weight convention: batch draw == interleaved draw -------------------
+
+
+def check_weight_convention():
+    m, seed = 500, 42
+    batch = random_weights(m, WEIGHT_MAX_DEFAULT, weight_seed(seed))
+    rng = Rng(weight_seed(seed))
+    interleaved = []
+    for _ in range(m):
+        interleaved.append(float(1 + rng.below(WEIGHT_MAX_DEFAULT)))
+        # ...an edge would be emitted here; the weight RNG is independent
+        # of the edge RNG, so interleaving cannot change the stream.
+    check("weight convention batch == interleaved", batch == interleaved)
+    check(
+        "weights are integer-valued in [1, 64]",
+        all(w == int(w) and 1 <= w <= 64 for w in batch),
+    )
+
+
+# -- 7. optional: cross-check the Rust binary's actual bytes ----------------
+
+
+def parse_el(path):
+    vertices = edges_declared = None
+    edges, weights = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line.startswith("p "):
+                _, v, e = line.split()
+                vertices, edges_declared = int(v), int(e)
+                continue
+            parts = line.split()
+            edges.append((int(parts[0]), int(parts[1])))
+            if len(parts) > 2:
+                weights.append(float(parts[2]))
+    return vertices, edges_declared, edges, (weights or None)
+
+
+def check_against_binary(totem):
+    scale, seed = 10, 42
+    n, edges = rmat_paper(scale, seed)
+    w = random_weights(len(edges), WEIGHT_MAX_DEFAULT, weight_seed(seed))
+    g = Csr(n, edges, w)
+    expect = tcsr_v2.encode(g.off, g.tgt, g.wgt)
+    with tempfile.TemporaryDirectory(prefix="totem_xcheck_") as td:
+        tcsr = os.path.join(td, "x.tcsr")
+        el = os.path.join(td, "x.el")
+        subprocess.run(
+            [totem, "convert", "rmat%d" % scale, tcsr, "--weights",
+             "--spill-edges", "3000"],
+            check=True,
+        )
+        with open(tcsr, "rb") as f:
+            got = f.read()
+        check(
+            "rust `totem convert rmat%d` bytes == python encode" % scale,
+            got == expect,
+            "file is %d bytes, python expects %d; first difference at %d"
+            % (
+                len(got),
+                len(expect),
+                next(
+                    (i for i, (a, b) in enumerate(zip(got, expect)) if a != b),
+                    min(len(got), len(expect)),
+                ),
+            ),
+        )
+        subprocess.run(
+            [totem, "convert", "rmat%d" % scale, el, "--weights"], check=True
+        )
+        v, e_decl, got_edges, got_w = parse_el(el)
+        check(
+            "rust text export header",
+            v == n and e_decl == len(edges),
+            "p %s %s" % (v, e_decl),
+        )
+        check("rust text export edges", got_edges == edges)
+        check("rust text export weights", got_w == w)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--totem",
+        help="path to a built totem binary; enables the Rust-vs-Python "
+        "byte comparison (CI). Omit for the pure-Python checks only.",
+    )
+    args = ap.parse_args()
+
+    check_fnv()
+    check_layout_pin()
+    check_roundtrip_and_corruption()
+    check_spill_merge()
+    check_streaming_rmat()
+    check_weight_convention()
+    if args.totem:
+        if not os.path.exists(args.totem):
+            print("FAIL --totem binary not found: %s" % args.totem)
+            sys.exit(1)
+        check_against_binary(args.totem)
+    else:
+        print("note: --totem not given, skipping Rust-binary byte comparison")
+
+    print("\nPASS: %d ingest cross-checks" % len(_passed))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+#!/usr/bin/env python3
+"""Pure-Python reader/writer for the `.tcsr` v2 container.
+
+Mirrors `rust/src/graph/store.rs` byte for byte (the layout is canonical:
+given (|V|, |E|, weighted) there is exactly one valid byte stream, so a
+Python-written container must equal a Rust-written one). The machine-
+readable contract lives in `tools/tcsr_v2_layout.json`; this module is the
+executable form used by `tools/cross_check_ingest.py`.
+
+Raises ValueError with the same message keywords as the Rust reader
+("truncated", "not a totem", "corrupt header", "checksum mismatch",
+"trailing", "non-zero padding") so corruption tests can assert either
+implementation interchangeably.
+"""
+
+import struct
+
+MAGIC = b"TOTEMCSR"
+VERSION_V2 = 2
+FLAG_WEIGHTED = 1
+SEC_ROW, SEC_COL, SEC_WEIGHTS = 1, 2, 3
+FIXED_HEADER_BYTES = 40
+TABLE_ENTRY_BYTES = 32
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a64(data, h=FNV_OFFSET):
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & MASK64
+    return h
+
+
+def _align8(x):
+    return (x + 7) & ~7
+
+
+def layout_for(vcount, ecount, weighted):
+    """The one valid layout for (|V|, |E|, weighted) — store.rs layout_for."""
+    n_sections = 3 if weighted else 2
+    header_bytes = FIXED_HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES + 8
+    specs = [(SEC_ROW, 8, vcount + 1), (SEC_COL, 4, ecount)]
+    if weighted:
+        specs.append((SEC_WEIGHTS, 4, ecount))
+    off = header_bytes
+    sections = []
+    for kind, elem_bytes, elem_count in specs:
+        off = _align8(off)
+        byte_len = elem_count * elem_bytes
+        sections.append(
+            {
+                "kind": kind,
+                "elem_bytes": elem_bytes,
+                "offset": off,
+                "elem_count": elem_count,
+                "byte_len": byte_len,
+            }
+        )
+        off += byte_len
+    return {"header_bytes": header_bytes, "sections": sections, "total_bytes": off}
+
+
+def _pack_section(xs, elem_bytes, is_float):
+    fmt = "<%d%s" % (len(xs), "f" if is_float else ("I" if elem_bytes == 4 else "Q"))
+    return struct.pack(fmt, *xs)
+
+
+def encode(row_offsets, col_indices, weights=None):
+    """Serialize a CSR graph to canonical v2 bytes."""
+    weighted = weights is not None
+    vcount = len(row_offsets) - 1
+    ecount = len(col_indices)
+    assert row_offsets[0] == 0 and row_offsets[-1] == ecount
+    lay = layout_for(vcount, ecount, weighted)
+    payloads = [
+        _pack_section(row_offsets, 8, False),
+        _pack_section(col_indices, 4, False),
+    ]
+    if weighted:
+        payloads.append(_pack_section(weights, 4, True))
+    h = bytearray()
+    h += MAGIC
+    h += struct.pack("<II", VERSION_V2, FLAG_WEIGHTED if weighted else 0)
+    h += struct.pack("<QQ", vcount, ecount)
+    h += struct.pack("<II", len(lay["sections"]), 0)
+    for s, p in zip(lay["sections"], payloads):
+        h += struct.pack(
+            "<IIQQQ",
+            s["kind"],
+            s["elem_bytes"],
+            s["offset"],
+            s["elem_count"],
+            fnv1a64(p),
+        )
+    h += struct.pack("<Q", fnv1a64(bytes(h)))
+    assert len(h) == lay["header_bytes"]
+    out = bytearray(h)
+    for s, p in zip(lay["sections"], payloads):
+        out += b"\x00" * (s["offset"] - len(out))  # alignment padding
+        out += p
+    assert len(out) == lay["total_bytes"]
+    return bytes(out)
+
+
+def write_tcsr(path, row_offsets, col_indices, weights=None):
+    data = encode(row_offsets, col_indices, weights)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+def decode(data, verify=True):
+    """Parse + fully validate v2 bytes → (row_offsets, col_indices, weights)."""
+    if len(data) < FIXED_HEADER_BYTES:
+        raise ValueError("truncated header")
+    if data[0:8] != MAGIC:
+        raise ValueError("not a totem CSR file")
+    ver, flags = struct.unpack_from("<II", data, 8)
+    if ver != VERSION_V2:
+        raise ValueError("unsupported version %d" % ver)
+    if flags & ~FLAG_WEIGHTED:
+        raise ValueError("corrupt header (unknown flags %#x)" % flags)
+    weighted = bool(flags & FLAG_WEIGHTED)
+    vcount, ecount = struct.unpack_from("<QQ", data, 16)
+    n_sections, reserved = struct.unpack_from("<II", data, 32)
+    if reserved != 0:
+        raise ValueError("corrupt header (reserved field != 0)")
+    lay = layout_for(vcount, ecount, weighted)
+    if n_sections != len(lay["sections"]):
+        raise ValueError("corrupt header (section count mismatch)")
+    if len(data) < lay["header_bytes"]:
+        raise ValueError("truncated header")
+    hdr_end = FIXED_HEADER_BYTES + n_sections * TABLE_ENTRY_BYTES
+    (stored_fnv,) = struct.unpack_from("<Q", data, hdr_end)
+    if fnv1a64(data[:hdr_end]) != stored_fnv:
+        raise ValueError("corrupt header (checksum mismatch)")
+    sums = []
+    for i, want in enumerate(lay["sections"]):
+        kind, elem_bytes, offset, elem_count, sec_fnv = struct.unpack_from(
+            "<IIQQQ", data, FIXED_HEADER_BYTES + i * TABLE_ENTRY_BYTES
+        )
+        got = (kind, elem_bytes, offset, elem_count)
+        if got != (want["kind"], want["elem_bytes"], want["offset"], want["elem_count"]):
+            raise ValueError("corrupt header (section %d disagrees with canonical layout)" % i)
+        sums.append(sec_fnv)
+    if len(data) < lay["total_bytes"]:
+        raise ValueError("truncated CSR file")
+    if len(data) > lay["total_bytes"]:
+        raise ValueError("%d trailing bytes after CSR payload" % (len(data) - lay["total_bytes"]))
+    prev_end = lay["header_bytes"]
+    arrays = []
+    for s, sec_fnv in zip(lay["sections"], sums):
+        if any(data[prev_end : s["offset"]]):
+            raise ValueError("corrupt CSR file (non-zero padding at offset %d)" % prev_end)
+        payload = data[s["offset"] : s["offset"] + s["byte_len"]]
+        if verify and fnv1a64(payload) != sec_fnv:
+            raise ValueError("corrupt section %d (checksum mismatch)" % s["kind"])
+        is_float = s["kind"] == SEC_WEIGHTS
+        fmt = "<%d%s" % (s["elem_count"], "f" if is_float else ("I" if s["elem_bytes"] == 4 else "Q"))
+        arrays.append(list(struct.unpack(fmt, payload)))
+        prev_end = s["offset"] + s["byte_len"]
+    row_offsets, col_indices = arrays[0], arrays[1]
+    weights = arrays[2] if weighted else None
+    # CsrGraph::validate mirror
+    if row_offsets[0] != 0 or row_offsets[-1] != ecount:
+        raise ValueError("corrupt CSR: row offsets")
+    if any(a > b for a, b in zip(row_offsets, row_offsets[1:])):
+        raise ValueError("corrupt CSR: row_offsets not monotone")
+    if any(c >= vcount for c in col_indices):
+        raise ValueError("corrupt CSR: col index out of range")
+    return row_offsets, col_indices, weights
+
+
+def read_tcsr(path, verify=True):
+    with open(path, "rb") as f:
+        return decode(f.read(), verify=verify)
