@@ -1,0 +1,170 @@
+//! BENCH_serving — throughput of the concurrent query-serving layer
+//! (DESIGN.md §13): queries/second × lane-batch width × admission limit
+//! on seeded R-MAT graphs.
+//!
+//! Host-only and cache-disabled by default, so the batching win is
+//! isolated: `--batches 1` is the sequential baseline (every BFS query
+//! runs its own traversal), wider settings let the batcher fold queued
+//! queries into one bit-parallel multi-source run. The headline number is
+//! the `speedup vs batch=1` column — the acceptance target for ISSUE 8 is
+//! ≥ 8× at full width on a scale-18 R-MAT (`--scale 18`).
+//!
+//! The query stream is closed-loop: all queries are submitted up front
+//! (rate 0) and the wall clock runs until the last answer, so queries/sec
+//! measures server drain rate, not arrival pacing. Sources are sampled
+//! with repeats from a seeded xorshift — repeats exercise lane dedup
+//! exactly as a real query mix would.
+//!
+//! Flags: --scale 13  --queries 128  --batches 1,8,64  --inflight 256
+//!        --serve-workers 2  --threads 2  --cache 0  --seed 42
+//!        --out BENCH_serving.json
+
+use totem::engine::EngineConfig;
+use totem::graph::{rmat, CsrGraph, RmatParams};
+use totem::report::{save, Table};
+use totem::serve::{QueryKind, Server, ServerConfig};
+use totem::util::args::Args;
+use totem::util::json::{arr, num, obj, s, JsonValue};
+
+struct Outcome {
+    qps: f64,
+    wall_secs: f64,
+    batches: u64,
+    rejected: u64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn drive(g: &CsrGraph, cfg: ServerConfig, queries: &[QueryKind]) -> Outcome {
+    let srv = Server::start(g.clone(), cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(queries.len());
+    for &q in queries {
+        match srv.submit(q) {
+            Ok(t) => tickets.push(t),
+            Err(_) => {} // typed rejection; counted in the report
+        }
+    }
+    let mut answered = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            answered += 1;
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let report = srv.shutdown();
+    Outcome {
+        qps: answered as f64 / wall_secs.max(1e-9),
+        wall_secs,
+        batches: report.batches,
+        rejected: report.rejected,
+        p50_ms: report.histogram.quantile_secs(0.50) * 1e3,
+        p99_ms: report.histogram.quantile_secs(0.99) * 1e3,
+    }
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    let scale = args.usize_or("scale", 13).unwrap() as u32;
+    let nqueries = args.usize_or("queries", 128).unwrap();
+    let seed = args.u64_or("seed", 42).unwrap();
+    let batches: Vec<usize> = args
+        .f64_list_or("batches", &[1.0, 8.0, 64.0])
+        .unwrap()
+        .into_iter()
+        .map(|x| x as usize)
+        .collect();
+    let inflight = args.usize_or("inflight", 256).unwrap();
+    let workers = args.usize_or("serve-workers", 2).unwrap();
+    let threads = args.usize_or("threads", 2).unwrap();
+    let cache = args.usize_or("cache", 0).unwrap();
+    let out_path = args.str_or("out", "BENCH_serving.json");
+
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(scale, seed)));
+    // Seeded closed-loop BFS mix with repeats (lane dedup + realistic
+    // hot-source skew).
+    let mut x = seed | 1;
+    let queries: Vec<QueryKind> = (0..nqueries)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            QueryKind::Bfs { source: (x % g.vertex_count as u64) as u32 }
+        })
+        .collect();
+
+    eprintln!(
+        "bench_serving: RMAT{scale} |V|={} |E|={}, {} queries, {} serve workers x {} threads",
+        g.vertex_count,
+        g.edge_count(),
+        nqueries,
+        workers,
+        threads
+    );
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    let mut t = Table::new(
+        &format!("BENCH_serving: {nqueries} BFS queries on RMAT{scale} (seed {seed}, cache {cache})"),
+        &["max_batch", "inflight", "queries/s", "batches", "rejected", "p50 ms", "p99 ms", "speedup vs batch=1"],
+    );
+    let mut baseline_qps: Option<f64> = None;
+    for &b in &batches {
+        let cfg = ServerConfig {
+            workers,
+            max_in_flight: inflight,
+            max_batch: b,
+            cache_capacity: cache,
+            ..ServerConfig::new(EngineConfig::host_only(threads))
+        };
+        let o = drive(&g, cfg, &queries);
+        if b == 1 {
+            baseline_qps = Some(o.qps);
+        }
+        let speedup = baseline_qps.map(|base| o.qps / base.max(1e-9));
+        t.row(vec![
+            b.to_string(),
+            inflight.to_string(),
+            format!("{:.1}", o.qps),
+            o.batches.to_string(),
+            o.rejected.to_string(),
+            format!("{:.3}", o.p50_ms),
+            format!("{:.3}", o.p99_ms),
+            speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+        ]);
+        rows.push(obj(vec![
+            ("scale", num(scale as f64)),
+            ("max_batch", num(b as f64)),
+            ("max_inflight", num(inflight as f64)),
+            ("serve_workers", num(workers as f64)),
+            ("threads", num(threads as f64)),
+            ("queries", num(nqueries as f64)),
+            ("qps", num(o.qps)),
+            ("wall_secs", num(o.wall_secs)),
+            ("batches", num(o.batches as f64)),
+            ("rejected", num(o.rejected as f64)),
+            ("p50_ms", num(o.p50_ms)),
+            ("p99_ms", num(o.p99_ms)),
+            ("speedup_vs_sequential", num(speedup.unwrap_or(1.0))),
+        ]));
+    }
+    let md = t.markdown();
+    print!("{md}");
+
+    let doc = obj(vec![
+        ("bench", s("BENCH_serving")),
+        ("workloads", s("paper-parameter R-MAT (a=0.57 b=0.19 c=0.19, avg degree 16, permuted)")),
+        ("seed", num(seed as f64)),
+        (
+            "methodology",
+            s("measured: closed-loop replay of a seeded BFS query mix against the serving \
+               layer, cache disabled; queries/s = answered / wall clock from first submit to \
+               last answer; batch=1 is the sequential baseline (one traversal per query), \
+               wider max_batch lets the lane batcher fold queued queries into one \
+               bit-parallel multi-source run"),
+        ),
+        ("rows", arr(rows.clone())),
+    ]);
+    std::fs::write(&out_path, doc.render()).unwrap();
+    save("bench_serving", &md, &obj(vec![("rows", arr(rows))])).unwrap();
+    eprintln!("bench_serving: wrote {out_path}");
+}

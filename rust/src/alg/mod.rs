@@ -30,6 +30,7 @@
 pub mod bc;
 pub mod bfs;
 pub mod cc;
+pub mod msbfs;
 pub mod pagerank;
 pub mod program;
 pub mod sssp;
@@ -107,10 +108,14 @@ pub enum EdgeOrientation {
 }
 
 /// Pad value for the `[state_len, n_cap)` region of device arrays.
+/// `U64` pads exist only for host-role fields (u64 never ships to the
+/// accelerator), but every field carries one so ghost/dummy slots can be
+/// initialized uniformly.
 #[derive(Debug, Clone, Copy)]
 pub enum Pad {
     I32(i32),
     F32(f32),
+    U64(u64),
 }
 
 /// Which AOT program implements a cycle's superstep on the accelerator,
@@ -209,6 +214,13 @@ pub trait Algorithm: Sync {
     /// Which `arrays` index carries the per-vertex result.
     fn output_array(&self) -> usize {
         0
+    }
+
+    /// Additional `arrays` indices to collect into `RunResult::extra`,
+    /// in order (multi-source BFS collects one level array per lane on
+    /// top of the `seen` word in `output_array`). Default: none.
+    fn extra_outputs(&self) -> Vec<usize> {
+        vec![]
     }
 
     /// Rebuild partition-local scratch (`AlgState::scratch`) after the

@@ -1,0 +1,278 @@
+//! Bit-parallel multi-source BFS (MS-BFS) on the typed vertex-program
+//! surface (DESIGN.md §13; Then et al. 2014's lane-packing idea on the
+//! engine's BSP substrate).
+//!
+//! Up to 64 BFS instances run as **bit lanes of shared u64 words**: one
+//! `next`/`seen`/`frontier` word per vertex plus one i32 level field per
+//! lane. A single graph sweep advances every lane at once — the frontier
+//! union is one OR, the settle test one AND-NOT — so b batched traversals
+//! cost one traversal's memory traffic instead of b. Every cross-vertex
+//! interaction is an OR-reduction ([`CommDecl::PushOr`], which is
+//! order-free), so batched results are bit-identical to solo runs in every
+//! engine configuration; the serving layer (`serve/`) leans on exactly
+//! that equivalence to auto-batch queued reachability/BFS queries.
+//!
+//! The program declares the three words, the per-lane level fields, and
+//! the source→lane assignment; the [`Kernel::BitTraversal`] family in the
+//! driver owns the two-phase race-free superstep.
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, VertexProgram,
+};
+use super::INF_I32;
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
+use anyhow::{bail, Result};
+
+/// Maximum batch width: one bit lane per u64 bit.
+pub const MAX_LANES: usize = 64;
+
+const NEXT: FieldId = FieldId(0);
+const SEEN: FieldId = FieldId(1);
+const FRONTIER: FieldId = FieldId(2);
+/// Lane level fields occupy the contiguous schema range
+/// `[LEVELS_BASE, LEVELS_BASE + lanes)` — the layout [`Kernel::BitTraversal`]
+/// encodes as `levels_base`/`lanes` (keeps `Kernel: Copy`).
+const LEVELS_BASE: FieldId = FieldId(3);
+
+/// Static lane field names ([`FieldSpec::name`] is `&'static str`).
+static LANE_NAMES: [&str; MAX_LANES] = [
+    "lane00", "lane01", "lane02", "lane03", "lane04", "lane05", "lane06", "lane07", "lane08",
+    "lane09", "lane10", "lane11", "lane12", "lane13", "lane14", "lane15", "lane16", "lane17",
+    "lane18", "lane19", "lane20", "lane21", "lane22", "lane23", "lane24", "lane25", "lane26",
+    "lane27", "lane28", "lane29", "lane30", "lane31", "lane32", "lane33", "lane34", "lane35",
+    "lane36", "lane37", "lane38", "lane39", "lane40", "lane41", "lane42", "lane43", "lane44",
+    "lane45", "lane46", "lane47", "lane48", "lane49", "lane50", "lane51", "lane52", "lane53",
+    "lane54", "lane55", "lane56", "lane57", "lane58", "lane59", "lane60", "lane61", "lane62",
+    "lane63",
+];
+
+/// Multi-source BFS: lane `b` runs BFS from `sources[b]`. Repeated
+/// sources are legal — the vertex simply carries several bits from
+/// superstep 0, and the repeated lanes stay bit-identical forever.
+pub struct MsBfsProgram {
+    pub sources: Vec<u32>,
+}
+
+impl MsBfsProgram {
+    fn lanes(&self) -> usize {
+        self.sources.len()
+    }
+}
+
+impl VertexProgram for MsBfsProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "msbfs",
+            needs_weights: false,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+            // the seen word is the per-vertex reachability mask; lane
+            // levels ride along via `extra_outputs`
+            output: SEEN,
+        }
+    }
+
+    /// All fields are [`Role::Host`]: u64 words never cross the PJRT
+    /// boundary, and the lane levels stay host-side with them (one
+    /// program, one placement story).
+    fn schema(&self) -> Vec<FieldSpec> {
+        let mut s = vec![
+            FieldSpec::u64("next", Role::Host, 0),
+            FieldSpec::u64("seen", Role::Host, 0),
+            FieldSpec::u64("frontier", Role::Host, 0),
+        ];
+        for b in 0..self.lanes() {
+            s.push(FieldSpec::i32(LANE_NAMES[b], Role::Host, INF_I32));
+        }
+        s
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::BitTraversal {
+                next: NEXT,
+                seen: SEEN,
+                frontier: FRONTIER,
+                levels_base: LEVELS_BASE,
+                lanes: self.lanes(),
+            },
+            comm: vec![CommDecl::PushOr(NEXT)],
+            // not lowered for the accelerator: an accelerator placement
+            // fails at manifest lookup with an actionable message
+            accel: AccelSpec { name: "msbfs", n_si32: 0, n_sf32: 0 },
+            device: None,
+        }
+    }
+
+    /// Sources enter through `next`: Phase A of superstep 0 settles them
+    /// at level 0, exactly like a delivered frontier bit.
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        let mut mask = 0u64;
+        for (b, &s) in self.sources.iter().enumerate() {
+            if s == global_id {
+                mask |= 1 << b;
+            }
+        }
+        if mask != 0 {
+            row.set_u64(NEXT, mask);
+        }
+    }
+
+    /// Σ over vertices of out-degree × |lanes that reached the vertex| —
+    /// each lane is a full BFS, so edges count once per lane that
+    /// traversed them (paper §5 accounting, summed over the batch).
+    fn traversed_edges(&self, output: &StateArray, g: &CsrGraph, _rounds: usize) -> u64 {
+        output
+            .as_u64()
+            .iter()
+            .enumerate()
+            .map(|(v, &w)| g.out_degree(v as u32) * w.count_ones() as u64)
+            .sum()
+    }
+}
+
+/// The engine-facing multi-source BFS algorithm.
+pub type MsBfs = ProgramDriver<MsBfsProgram>;
+
+impl MsBfs {
+    /// Batch `sources` (1..=64, repeats allowed) into one bit-parallel
+    /// traversal; lane `b` computes BFS from `sources[b]`.
+    pub fn new(sources: &[u32]) -> Result<MsBfs> {
+        if sources.is_empty() || sources.len() > MAX_LANES {
+            bail!(
+                "multi-source BFS batches 1..={MAX_LANES} sources per run, got {}",
+                sources.len()
+            );
+        }
+        ProgramDriver::build(MsBfsProgram { sources: sources.to_vec() })
+    }
+
+    /// Batch width of this instance.
+    pub fn lane_count(&self) -> usize {
+        self.inner().lanes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::{bfs::Bfs, Algorithm};
+    use crate::engine::{self, EngineConfig, ExecMode};
+    use crate::graph::generator::{rmat, RmatParams};
+    use crate::graph::{CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn chain(n: usize) -> CsrGraph {
+        let mut el = EdgeList::new(n);
+        for i in 0..n - 1 {
+            el.push(i as u32, i as u32 + 1);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn batch_width_is_validated() {
+        assert!(MsBfs::new(&[]).is_err());
+        assert!(MsBfs::new(&vec![0; 65]).is_err());
+        assert_eq!(MsBfs::new(&vec![0; 64]).unwrap().lane_count(), 64);
+    }
+
+    #[test]
+    fn driver_derives_the_msbfs_contract() {
+        let alg = MsBfs::new(&[0, 1, 2]).unwrap();
+        assert!(!alg.supports_pull(), "bit traversal is push-only");
+        let ops = alg.channels(0);
+        assert_eq!(ops.len(), 1);
+        assert!(
+            !ops[0].order_sensitive(),
+            "OR lanes are order-free — pipelining must stay eligible"
+        );
+        let spec = Algorithm::program(&alg, 0);
+        assert!(spec.arrays.is_empty(), "host-only program ships nothing");
+        assert_eq!(alg.extra_outputs().len(), 3, "one level array per lane");
+    }
+
+    #[test]
+    fn two_lane_chain_levels_and_masks() {
+        let g = chain(6);
+        let mut alg = MsBfs::new(&[0, 3]).unwrap();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        // lane 0 reaches everything, lane 1 only vertices >= 3
+        let seen = r.output.as_u64();
+        assert_eq!(seen, &[0b01, 0b01, 0b01, 0b11, 0b11, 0b11]);
+        let lane0 = r.extra[0].as_i32();
+        let lane1 = r.extra[1].as_i32();
+        for v in 0..6 {
+            assert_eq!(lane0[v], v as i32);
+            let want = if v >= 3 { v as i32 - 3 } else { INF_I32 };
+            assert_eq!(lane1[v], want);
+        }
+    }
+
+    #[test]
+    fn repeated_sources_share_lane_results() {
+        let g = chain(5);
+        let mut alg = MsBfs::new(&[2, 2]).unwrap();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.extra[0].as_i32(), r.extra[1].as_i32());
+    }
+
+    /// Each lane of a batched run must equal the corresponding solo BFS
+    /// bit-for-bit — the contract the serving layer's auto-batching
+    /// depends on. Checked across partitioning and both executors.
+    #[test]
+    fn lanes_match_solo_bfs_across_configs() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 5)));
+        let sources = [0u32, 3, 17, 42, 100, 200];
+        let solo: Vec<Vec<i32>> = sources
+            .iter()
+            .map(|&s| {
+                let mut b = Bfs::new(s);
+                engine::run(&g, &mut b, &EngineConfig::host_only(1))
+                    .unwrap()
+                    .output
+                    .as_i32()
+                    .to_vec()
+            })
+            .collect();
+        let configs = [
+            EngineConfig::host_only(1),
+            EngineConfig::host_only(3),
+            EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand),
+            EngineConfig::cpu_partitions(&[0.3, 0.7], Strategy::High)
+                .with_mode(ExecMode::Pipelined),
+        ];
+        for cfg in configs {
+            let mut alg = MsBfs::new(&sources).unwrap();
+            let r = engine::run(&g, &mut alg, &cfg).unwrap();
+            for (b, want) in solo.iter().enumerate() {
+                assert_eq!(
+                    r.extra[b].as_i32(),
+                    want.as_slice(),
+                    "lane {b} diverged from solo BFS"
+                );
+            }
+            // seen mask must agree with the lane levels
+            let seen = r.output.as_u64();
+            for (v, &w) in seen.iter().enumerate() {
+                for (b, want) in solo.iter().enumerate() {
+                    assert_eq!(w >> b & 1 == 1, want[v] != INF_I32, "mask/level clash at {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traversed_edges_counts_per_lane() {
+        let g = chain(4);
+        let mut alg = MsBfs::new(&[0, 2]).unwrap();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        // lane 0 visits all 4 vertices (deg 1,1,1,0), lane 1 visits {2,3}
+        // (deg 1,0): 3 + 1 edges
+        let te = alg.traversed_edges(&r.output, &g, r.supersteps);
+        assert_eq!(te, 4);
+    }
+}

@@ -36,7 +36,8 @@ use crate::engine::state::{AlgState, Channel, CommOp, FieldType, StateArray};
 use crate::graph::CsrGraph;
 use crate::partition::{Partition, PartitionedGraph};
 use crate::util::atomic::{
-    as_atomic_f32_cells, as_atomic_i32_cells, atomic_add_f32, atomic_max_f32, atomic_min_f32,
+    as_atomic_f32_cells, as_atomic_i32_cells, as_atomic_u64_cells, atomic_add_f32, atomic_max_f32,
+    atomic_min_f32,
 };
 use crate::util::split_two_mut;
 use crate::util::threadpool::{
@@ -55,6 +56,10 @@ pub struct FieldId(pub usize);
 pub enum Value {
     I32(i32),
     F32(f32),
+    /// Bit-lane word (multi-source BFS frontiers). Host-only: u64 fields
+    /// never cross the PJRT boundary, so [`Role::Device`] u64 fields are a
+    /// construction-time error.
+    U64(u64),
 }
 
 impl Value {
@@ -62,6 +67,7 @@ impl Value {
         match self {
             Value::I32(_) => FieldType::I32,
             Value::F32(_) => FieldType::F32,
+            Value::U64(_) => FieldType::U64,
         }
     }
     /// Extract the i32 payload. Only called by driver kernels after the
@@ -70,18 +76,21 @@ impl Value {
         match self {
             Value::I32(x) => x,
             Value::F32(x) => panic!("expected i32 update, program produced f32 {x}"),
+            Value::U64(x) => panic!("expected i32 update, program produced u64 {x}"),
         }
     }
     pub fn expect_f32(self) -> f32 {
         match self {
             Value::F32(x) => x,
             Value::I32(x) => panic!("expected f32 update, program produced i32 {x}"),
+            Value::U64(x) => panic!("expected f32 update, program produced u64 {x}"),
         }
     }
     fn to_pad(self) -> Pad {
         match self {
             Value::I32(x) => Pad::I32(x),
             Value::F32(x) => Pad::F32(x),
+            Value::U64(x) => Pad::U64(x),
         }
     }
 }
@@ -126,6 +135,9 @@ impl FieldSpec {
     pub fn f32(name: &'static str, role: Role, pad: f32) -> FieldSpec {
         FieldSpec { name, ty: FieldType::F32, role, pad: Value::F32(pad) }
     }
+    pub fn u64(name: &'static str, role: Role, pad: u64) -> FieldSpec {
+        FieldSpec { name, ty: FieldType::U64, role, pad: Value::U64(pad) }
+    }
 }
 
 /// Declarative communication op over schema fields. The driver resolves
@@ -142,6 +154,12 @@ pub enum CommDecl {
     /// the driver's scatter kernels iterate in canonical vertex order
     /// (DESIGN.md §9).
     PushAdd(FieldId),
+    /// Push channel with a bitwise-`or` reduction over u64 lane words
+    /// (multi-source BFS frontiers). Order-free: `a | b | c` is the same
+    /// word in any arrival order, so the pipelined executor never needs
+    /// the strict-order fallback. The channel resets outbox slots to the
+    /// identity (0) after each send — only fresh bits travel.
+    PushOr(FieldId),
     /// Pull channel: ghost slots are overwritten with remote real values
     /// before each compute.
     Pull(FieldId),
@@ -183,6 +201,34 @@ pub enum Kernel {
     /// the derived pull kernel apply one update value per superstep; the
     /// driver evaluates `edge_update` once per superstep with weight 0.
     Traversal { level: FieldId },
+    /// Bit-parallel multi-source traversal (MS-BFS; DESIGN.md §13): up to
+    /// 64 BFS instances share one cache line per vertex, each owning one
+    /// bit lane of three u64 words. A superstep runs in two pool-barriered
+    /// phases:
+    ///
+    /// - **Phase A (settle, vertex-parallel)**: `new = next[v] & !seen[v]`;
+    ///   if nonzero the vertex folds `new` into `seen`, records
+    ///   `current_level` into the per-lane i32 level field of every bit in
+    ///   `new`, publishes `frontier[v] = new`, and votes changed. `next`
+    ///   resets to 0 either way. Per-vertex writes are disjoint, so any
+    ///   interleaving yields the same words.
+    /// - **Phase B (expand, requested balance plan incl. `HubSplit`)**:
+    ///   every vertex with a nonzero frontier word `fetch_or`s it into all
+    ///   out-neighbors' `next` cells (ghost slots included). `or` is
+    ///   idempotent and commutative, so sharded hub adjacencies and any
+    ///   chunk schedule produce identical bits.
+    ///
+    /// The per-lane level fields are the `lanes` consecutive schema fields
+    /// starting at `levels_base` (contiguity keeps `Kernel: Copy`). Push
+    /// only: the derived pull kernel and the α/β direction policy do not
+    /// apply (`supports_pull` is false for bit-traversal programs).
+    BitTraversal {
+        next: FieldId,
+        seen: FieldId,
+        frontier: FieldId,
+        levels_base: FieldId,
+        lanes: usize,
+    },
     /// BC's forward sweep: traversal that additionally accumulates
     /// shortest-path counts (σ) into targets settled exactly one level
     /// deeper, iterated in canonical order (the σ adds are f32). The
@@ -369,6 +415,10 @@ impl InitRow<'_> {
         let v = self.v;
         self.slot_mut(f).as_f32_mut()[v] = x;
     }
+    pub fn set_u64(&mut self, f: FieldId, x: u64) {
+        let v = self.v;
+        self.slot_mut(f).as_u64_mut()[v] = x;
+    }
 }
 
 /// Typed view over one partition's state during a superstep, indexed by
@@ -383,11 +433,13 @@ pub struct Fields<'a> {
 enum StateCells<'a> {
     I32(&'a [AtomicI32]),
     F32(&'a [AtomicU32]),
+    U64(&'a [AtomicU64]),
 }
 
 enum AuxSlice<'a> {
     I32(&'a [i32]),
     F32(&'a [f32]),
+    U64(&'a [u64]),
 }
 
 impl<'a> Fields<'a> {
@@ -398,6 +450,7 @@ impl<'a> Fields<'a> {
             .map(|a| match a {
                 StateArray::I32(v) => StateCells::I32(as_atomic_i32_cells(v)),
                 StateArray::F32(v) => StateCells::F32(as_atomic_f32_cells(v)),
+                StateArray::U64(v) => StateCells::U64(as_atomic_u64_cells(v)),
             })
             .collect();
         let aux = aux
@@ -405,6 +458,7 @@ impl<'a> Fields<'a> {
             .map(|a| match a {
                 StateArray::I32(v) => AuxSlice::I32(v),
                 StateArray::F32(v) => AuxSlice::F32(v),
+                StateArray::U64(v) => AuxSlice::U64(v),
             })
             .collect();
         Fields { cells, aux, slots }
@@ -421,11 +475,11 @@ impl<'a> Fields<'a> {
         match self.slots[f.0] {
             Slot::State(i) => match &self.cells[i] {
                 StateCells::I32(c) => c[v].load(Ordering::Relaxed),
-                StateCells::F32(_) => panic!("field {} is f32", f.0),
+                _ => panic!("field {} is not i32", f.0),
             },
             Slot::Aux(i) => match &self.aux[i] {
                 AuxSlice::I32(s) => s[v],
-                AuxSlice::F32(_) => panic!("field {} is f32", f.0),
+                _ => panic!("field {} is not i32", f.0),
             },
         }
     }
@@ -434,11 +488,24 @@ impl<'a> Fields<'a> {
         match self.slots[f.0] {
             Slot::State(i) => match &self.cells[i] {
                 StateCells::F32(c) => f32::from_bits(c[v].load(Ordering::Relaxed)),
-                StateCells::I32(_) => panic!("field {} is i32", f.0),
+                _ => panic!("field {} is not f32", f.0),
             },
             Slot::Aux(i) => match &self.aux[i] {
                 AuxSlice::F32(s) => s[v],
-                AuxSlice::I32(_) => panic!("field {} is i32", f.0),
+                _ => panic!("field {} is not f32", f.0),
+            },
+        }
+    }
+
+    pub fn u64(&self, f: FieldId, v: usize) -> u64 {
+        match self.slots[f.0] {
+            Slot::State(i) => match &self.cells[i] {
+                StateCells::U64(c) => c[v].load(Ordering::Relaxed),
+                _ => panic!("field {} is not u64", f.0),
+            },
+            Slot::Aux(i) => match &self.aux[i] {
+                AuxSlice::U64(s) => s[v],
+                _ => panic!("field {} is not u64", f.0),
             },
         }
     }
@@ -446,14 +513,29 @@ impl<'a> Fields<'a> {
     pub fn set_i32(&self, f: FieldId, v: usize, x: i32) {
         match self.state_cells(f) {
             StateCells::I32(c) => c[v].store(x, Ordering::Relaxed),
-            StateCells::F32(_) => panic!("field {} is f32", f.0),
+            _ => panic!("field {} is not i32", f.0),
         }
     }
 
     pub fn set_f32(&self, f: FieldId, v: usize, x: f32) {
         match self.state_cells(f) {
             StateCells::F32(c) => c[v].store(x.to_bits(), Ordering::Relaxed),
-            StateCells::I32(_) => panic!("field {} is i32", f.0),
+            _ => panic!("field {} is not f32", f.0),
+        }
+    }
+
+    pub fn set_u64(&self, f: FieldId, v: usize, x: u64) {
+        match self.state_cells(f) {
+            StateCells::U64(c) => c[v].store(x, Ordering::Relaxed),
+            _ => panic!("field {} is not u64", f.0),
+        }
+    }
+
+    /// Atomic `fetch_or` into a u64 cell; returns the previous word.
+    pub fn or_u64(&self, f: FieldId, v: usize, x: u64) -> u64 {
+        match self.state_cells(f) {
+            StateCells::U64(c) => c[v].fetch_or(x, Ordering::Relaxed),
+            _ => panic!("field {} is not u64", f.0),
         }
     }
 
@@ -462,7 +544,7 @@ impl<'a> Fields<'a> {
             StateCells::F32(c) => {
                 atomic_add_f32(&c[v], x);
             }
-            StateCells::I32(_) => panic!("field {} is i32", f.0),
+            _ => panic!("field {} is not f32", f.0),
         }
     }
 }
@@ -510,6 +592,14 @@ impl<P: VertexProgram> ProgramDriver<P> {
             }
             if schema[..i].iter().any(|g| g.name == f.name) {
                 bail!("program '{}': duplicate field name '{}'", meta.name, f.name);
+            }
+            if f.ty == FieldType::U64 && f.role != Role::Host {
+                bail!(
+                    "program '{}': u64 field '{}' must be Role::Host — u64 state never \
+                     crosses the accelerator boundary",
+                    meta.name,
+                    f.name
+                );
             }
         }
         let mut slots = Vec::with_capacity(schema.len());
@@ -612,6 +702,7 @@ impl<P: VertexProgram> ProgramDriver<P> {
         let ok = match (spec.pad, want) {
             (Value::I32(a), Value::I32(b)) => a == b,
             (Value::F32(a), Value::F32(b)) => a.to_bits() == b.to_bits(),
+            (Value::U64(a), Value::U64(b)) => a == b,
             _ => false,
         };
         if !ok {
@@ -636,6 +727,12 @@ impl<P: VertexProgram> ProgramDriver<P> {
                     let id = match self.schema[f.0].ty {
                         FieldType::I32 => Value::I32(INF_I32),
                         FieldType::F32 => Value::F32(f32::INFINITY),
+                        FieldType::U64 => bail!(
+                            "program '{}': PushMin is not defined for u64 field '{}' \
+                             (u64 travels on PushOr)",
+                            meta.name,
+                            self.field_name(f)
+                        ),
                     };
                     self.check_identity(f, id, "push-min")?;
                 }
@@ -647,7 +744,21 @@ impl<P: VertexProgram> ProgramDriver<P> {
                     self.check_state_field(f, "PushAdd", Some(FieldType::F32))?;
                     self.check_identity(f, Value::F32(0.0), "push-add")?;
                 }
-                CommDecl::Pull(f) => self.check_state_field(f, "Pull", None)?,
+                CommDecl::PushOr(f) => {
+                    self.check_state_field(f, "PushOr", Some(FieldType::U64))?;
+                    self.check_identity(f, Value::U64(0), "push-or")?;
+                }
+                CommDecl::Pull(f) => {
+                    self.check_state_field(f, "Pull", None)?;
+                    if self.schema[f.0].ty == FieldType::U64 {
+                        bail!(
+                            "program '{}': Pull is not defined for u64 field '{}' \
+                             (u64 travels on PushOr)",
+                            meta.name,
+                            self.field_name(f)
+                        );
+                    }
+                }
                 CommDecl::DistSigma { dist, sigma } => {
                     self.check_state_field(dist, "DistSigma.dist", Some(FieldType::I32))?;
                     self.check_state_field(sigma, "DistSigma.sigma", Some(FieldType::F32))?;
@@ -687,6 +798,42 @@ impl<P: VertexProgram> ProgramDriver<P> {
                         meta.name,
                         self.field_name(level)
                     );
+                }
+            }
+            Kernel::BitTraversal { next, seen, frontier, levels_base, lanes } => {
+                if lanes == 0 || lanes > 64 {
+                    bail!(
+                        "program '{}': BitTraversal lanes must be 1..=64, got {lanes}",
+                        meta.name
+                    );
+                }
+                for (f, what) in [
+                    (next, "BitTraversal.next"),
+                    (seen, "BitTraversal.seen"),
+                    (frontier, "BitTraversal.frontier"),
+                ] {
+                    self.check_state_field(f, what, Some(FieldType::U64))?;
+                    self.check_identity(f, Value::U64(0), "bit-traversal")?;
+                }
+                if next == seen || next == frontier || seen == frontier {
+                    bail!(
+                        "program '{}': BitTraversal next/seen/frontier must be three \
+                         distinct fields",
+                        meta.name
+                    );
+                }
+                if !plan.comm.contains(&CommDecl::PushOr(next)) {
+                    bail!(
+                        "program '{}': BitTraversal next word '{}' must travel on a \
+                         PushOr channel",
+                        meta.name,
+                        self.field_name(next)
+                    );
+                }
+                for b in 0..lanes {
+                    let f = FieldId(levels_base.0 + b);
+                    self.check_state_field(f, "BitTraversal lane level", Some(FieldType::I32))?;
+                    self.check_identity(f, Value::I32(INF_I32), "bit-traversal lane")?;
                 }
             }
             Kernel::TraversalSigma { dist, sigma } => {
@@ -819,6 +966,7 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
             let arr = match f.pad {
                 Value::I32(x) => StateArray::I32(vec![x; n]),
                 Value::F32(x) => StateArray::F32(vec![x; n]),
+                Value::U64(x) => StateArray::U64(vec![x; n]),
             };
             match slot {
                 Slot::State(i) => arrays[i] = arr,
@@ -856,15 +1004,18 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
                     CommOp::Single(match self.schema[f.0].ty {
                         FieldType::I32 => Channel::push_min_i32(i),
                         FieldType::F32 => Channel::push_min_f32(i),
+                        FieldType::U64 => unreachable!("rejected at construction"),
                     })
                 }
                 CommDecl::PushMax(f) => CommOp::Single(Channel::push_max_f32(self.state_index(f))),
                 CommDecl::PushAdd(f) => CommOp::Single(Channel::push_add_f32(self.state_index(f))),
+                CommDecl::PushOr(f) => CommOp::Single(Channel::push_or_u64(self.state_index(f))),
                 CommDecl::Pull(f) => {
                     let i = self.state_index(f);
                     CommOp::Single(match self.schema[f.0].ty {
                         FieldType::I32 => Channel::pull_i32(i),
                         FieldType::F32 => Channel::pull_f32(i),
+                        FieldType::U64 => unreachable!("rejected at construction"),
                     })
                 }
                 CommDecl::DistSigma { dist, sigma } => CommOp::DistSigma {
@@ -971,6 +1122,9 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
                 Direction::Push => self.traversal_push(part, state, ctx, level),
                 Direction::Pull => self.traversal_pull(part, state, ctx, level),
             },
+            Kernel::BitTraversal { next, seen, frontier, levels_base, lanes } => {
+                self.bit_traversal(part, state, ctx, next, seen, frontier, levels_base, lanes)
+            }
             Kernel::TraversalSigma { dist, sigma } => {
                 self.traversal_sigma(part, state, ctx, dist, sigma)
             }
@@ -992,6 +1146,18 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
 
     fn output_array(&self) -> usize {
         self.state_index(self.program.meta().output)
+    }
+
+    /// Bit-traversal programs additionally expose every per-lane level
+    /// field, in lane order, so callers (the serving layer) can unpack one
+    /// full i32 level array per batched source.
+    fn extra_outputs(&self) -> Vec<usize> {
+        match self.kernels.first() {
+            Some(&Kernel::BitTraversal { levels_base, lanes, .. }) if self.kernels.len() == 1 => {
+                (0..lanes).map(|b| self.state_index(FieldId(levels_base.0 + b))).collect()
+            }
+            _ => vec![],
+        }
     }
 
     fn rebuild_scratch(&self, part: &Partition, state: &mut AlgState) {
@@ -1059,6 +1225,9 @@ impl<P: VertexProgram> ProgramDriver<P> {
         let (vi, si) = (self.state_index(value), self.state_index(shadow));
         let needs_w = self.program.meta().needs_weights;
         match self.schema[value.0].ty {
+            // u64 monotone values are impossible: the value needs a
+            // PushMin/PushMax channel and both reject u64 at construction.
+            FieldType::U64 => unreachable!("rejected at construction"),
             FieldType::I32 => {
                 let plan = self.scatter_plan(part, ctx);
                 let (lo_arr, hi_arr) = split_two_mut(&mut state.arrays, vi, si);
@@ -1457,6 +1626,151 @@ impl<P: VertexProgram> ProgramDriver<P> {
             changed,
             reads,
             writes,
+            chunk_max_secs: spread.max_secs,
+            chunk_min_secs: spread.min_secs,
+        }
+    }
+
+    /// Bit-parallel multi-source traversal (DESIGN.md §13). Two
+    /// pool-barriered phases per superstep — `parallel_reduce_plan`
+    /// returns only after every chunk finished, which IS the barrier:
+    ///
+    /// - **Phase A (settle)**: vertex-parallel, per-vertex writes disjoint.
+    ///   `new = next[v] & !seen[v]`; a nonzero `new` folds into `seen`,
+    ///   stamps `current_level` into each new bit's lane level field, and
+    ///   publishes `frontier[v] = new`. `next` and `frontier` reset
+    ///   otherwise, so stale words never re-expand.
+    /// - **Phase B (expand)**: the requested balance plan (`HubSplit`
+    ///   included — `fetch_or` is idempotent and commutative, and
+    ///   `frontier` settled in Phase A, so adjacency shards all scatter
+    ///   the same word). Each frontier word ORs into every out-neighbor's
+    ///   `next` cell; boundary targets land in ghost slots for the PushOr
+    ///   channel to carry.
+    ///
+    /// Every cross-vertex interaction is an OR-reduction of u64 words, so
+    /// the result is bit-identical for any thread count, chunk schedule,
+    /// executor, partition count, or placement.
+    #[allow(clippy::too_many_arguments)]
+    fn bit_traversal(
+        &self,
+        part: &Partition,
+        state: &mut AlgState,
+        ctx: &StepCtx,
+        next: FieldId,
+        seen: FieldId,
+        frontier: FieldId,
+        levels_base: FieldId,
+        lanes: usize,
+    ) -> ComputeOut {
+        let cur = self.program.current_level(ctx);
+        let fields = Fields::new(state, &self.slots);
+
+        // Phase A: settle — vertex plan regardless of the requested
+        // balance (per-vertex work is O(1); splitting a vertex would
+        // double-settle it).
+        let plan_a = ChunkPlan::for_balance(Balance::Vertex, &part.csr.row_offsets, ctx.threads);
+        let ((a_changed, a_reads, a_writes), _) = parallel_reduce_plan(
+            &plan_a,
+            (false, 0u64, 0u64),
+            |c: &Chunk, acc: Acc| {
+                let (mut changed, mut reads, mut writes) = acc;
+                for v in c.lo..c.hi {
+                    let nx = fields.u64(next, v);
+                    let sn = fields.u64(seen, v);
+                    if ctx.instrument {
+                        reads += 2;
+                    }
+                    let new = nx & !sn;
+                    if new != 0 {
+                        changed = true;
+                        fields.set_u64(seen, v, sn | new);
+                        let mut bits = new;
+                        while bits != 0 {
+                            let b = bits.trailing_zeros() as usize;
+                            fields.set_i32(FieldId(levels_base.0 + b), v, cur);
+                            bits &= bits - 1;
+                        }
+                        if ctx.instrument {
+                            writes += 2 + new.count_ones() as u64;
+                        }
+                    }
+                    fields.set_u64(frontier, v, new);
+                    if nx != 0 {
+                        fields.set_u64(next, v, 0);
+                    }
+                }
+                (changed, reads, writes)
+            },
+            merge,
+        );
+
+        // Phase B: expand the settled frontier along out-edges.
+        let plan_b = self.scatter_plan(part, ctx);
+        let hub = plan_b.hub;
+        // Snapshot once so every adjacency shard scatters the same word
+        // (stable anyway — nobody writes `frontier` in this phase).
+        let hub_word = hub.map(|h| fields.u64(frontier, h)).unwrap_or(0);
+        let expand = |v: usize,
+                      word: u64,
+                      span: Option<(usize, usize)>,
+                      changed: &mut bool,
+                      reads: &mut u64,
+                      writes: &mut u64| {
+            let ts_all = part.targets(v as u32);
+            let ts = match span {
+                Some((e0, e1)) => &ts_all[e0..e1],
+                None => ts_all,
+            };
+            for &t in ts {
+                let prev = fields.or_u64(next, t as usize, word);
+                if ctx.instrument {
+                    *reads += 1;
+                }
+                if word & !prev != 0 {
+                    *changed = true;
+                    if ctx.instrument {
+                        *writes += 1;
+                    }
+                }
+            }
+        };
+        let ((b_changed, b_reads, b_writes), spread) = parallel_reduce_plan(
+            &plan_b,
+            (false, 0u64, 0u64),
+            |c: &Chunk, acc: Acc| {
+                let (mut changed, mut reads, mut writes) = acc;
+                for v in c.lo..c.hi {
+                    if hub == Some(v) {
+                        continue;
+                    }
+                    let word = fields.u64(frontier, v);
+                    if ctx.instrument {
+                        reads += 1;
+                    }
+                    if word == 0 {
+                        continue;
+                    }
+                    expand(v, word, None, &mut changed, &mut reads, &mut writes);
+                }
+                if let (Some(span), true) = (c.split, hub_word != 0) {
+                    expand(
+                        hub.expect("split implies hub"),
+                        hub_word,
+                        Some(span),
+                        &mut changed,
+                        &mut reads,
+                        &mut writes,
+                    );
+                }
+                (changed, reads, writes)
+            },
+            merge,
+        );
+        let hub_read = if ctx.instrument && hub.is_some() { 1 } else { 0 };
+        ComputeOut {
+            changed: a_changed || b_changed,
+            reads: a_reads + b_reads + hub_read,
+            writes: a_writes + b_writes,
             chunk_max_secs: spread.max_secs,
             chunk_min_secs: spread.min_secs,
         }

@@ -3,14 +3,50 @@
 
 use super::direction::DirectionConfig;
 use crate::partition::{Placement, Strategy};
-use crate::util::threadpool::Balance;
+use crate::util::threadpool::{Balance, MAX_POOL_WORKERS};
 use std::path::PathBuf;
 
-/// Detected machine parallelism — the default CPU-element thread count for
-/// `host_auto`, `hybrid`, and the CLI (`totem run --threads N` overrides).
-pub fn default_threads() -> usize {
+/// Raw machine parallelism as detected, unclamped. The run banner compares
+/// this against [`default_threads`] to surface worker-pool-cap clamping.
+pub fn detected_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
+
+/// Detected machine parallelism clamped to the worker-pool cap
+/// ([`MAX_POOL_WORKERS`]) — the default CPU-element thread count for
+/// `host_auto`, `hybrid`, and the CLI (`totem run --threads N` overrides;
+/// explicit values above the cap are rejected by
+/// [`EngineConfig::validate`] instead of clamped).
+pub fn default_threads() -> usize {
+    detected_threads().min(MAX_POOL_WORKERS)
+}
+
+/// Typed engine-configuration errors, surfaced by
+/// [`EngineConfig::validate`] before any state is built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A CPU element requests more threads than the worker pool can hold:
+    /// `ChunkPlan` would cut `requested` chunks against a pool silently
+    /// capped at `cap` workers — quiet oversubscription. Explicit
+    /// `--threads` values above the cap are rejected; auto-detected
+    /// parallelism is clamped in [`default_threads`] instead.
+    ThreadsExceedPoolCap { requested: usize, cap: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ThreadsExceedPoolCap { requested, cap } => write!(
+                f,
+                "--threads {requested} exceeds the worker-pool cap of {cap} \
+                 (the pool would silently run {cap} workers against {requested} chunks); \
+                 use --threads <= {cap}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// What kind of processing element executes a partition.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -307,6 +343,23 @@ impl EngineConfig {
         self
     }
 
+    /// Validate element-level limits. `engine::run`/`run_shared` call this
+    /// before any state is built; the CLI and harness surface the typed
+    /// error directly.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        for el in &self.elements {
+            if let ElementKind::Cpu { threads } = el {
+                if *threads > MAX_POOL_WORKERS {
+                    return Err(ConfigError::ThreadsExceedPoolCap {
+                        requested: *threads,
+                        cap: MAX_POOL_WORKERS,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
     pub fn num_partitions(&self) -> usize {
         self.elements.len()
     }
@@ -407,6 +460,23 @@ mod tests {
         assert_eq!(h.elements[0], ElementKind::Cpu { threads: 3 });
         assert_eq!(h.elements[1], ElementKind::Accelerator, "accels untouched");
         assert_eq!(h.max_cpu_threads(), 3);
+    }
+
+    #[test]
+    fn threads_above_pool_cap_are_a_typed_error() {
+        assert!(EngineConfig::host_only(MAX_POOL_WORKERS).validate().is_ok());
+        let err = EngineConfig::host_only(MAX_POOL_WORKERS + 1).validate().unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::ThreadsExceedPoolCap {
+                requested: MAX_POOL_WORKERS + 1,
+                cap: MAX_POOL_WORKERS
+            }
+        );
+        assert!(err.to_string().contains("worker-pool cap"));
+        // auto-detection clamps instead of erroring
+        assert!(default_threads() <= MAX_POOL_WORKERS);
+        assert!(EngineConfig::host_auto().validate().is_ok());
     }
 
     #[test]

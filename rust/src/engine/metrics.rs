@@ -103,6 +103,12 @@ pub struct Metrics {
     pub accel_transfer_bytes: Vec<u64>,
     /// Vertex migrations performed by the dynamic α controller.
     pub migrations: usize,
+    /// Controller firings that selected an empty band (the donor could not
+    /// shed a vertex, e.g. a single-vertex partition). Counted distinctly:
+    /// no rebuild happened, no budget was consumed, and the controller
+    /// stops observing that donor until a real migration reshapes the
+    /// partitions.
+    pub noop_migrations: usize,
 }
 
 impl Metrics {
@@ -114,6 +120,7 @@ impl Metrics {
             mem: vec![MemCounters::default(); partitions],
             accel_transfer_bytes: vec![0; partitions],
             migrations: 0,
+            noop_migrations: 0,
         }
     }
 

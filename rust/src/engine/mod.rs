@@ -33,7 +33,10 @@ pub mod state;
 pub use crate::alg::INF_I32;
 pub use crate::partition::Placement;
 pub use crate::util::threadpool::Balance;
-pub use config::{default_threads, ElementKind, EngineConfig, ExecMode, RebalanceConfig};
+pub use config::{
+    default_threads, detected_threads, ConfigError, ElementKind, EngineConfig, ExecMode,
+    RebalanceConfig,
+};
 pub use direction::{Direction, DirectionConfig, FrontierStats};
 pub use metrics::{MemCounters, Metrics, StepMetrics};
 pub use state::{AlgState, Channel, ChannelKind, CommOp, FieldType, Reduce, StateArray, TypeMismatch};
@@ -51,6 +54,11 @@ use std::time::Instant;
 pub struct RunResult {
     /// Global per-vertex result (e.g. BFS levels, PageRank ranks).
     pub output: StateArray,
+    /// Additional collected arrays declared by
+    /// [`Algorithm::extra_outputs`] (multi-source BFS collects one level
+    /// array per lane on top of the `seen` word in `output`). Empty for
+    /// every single-output algorithm.
+    pub extra: Vec<StateArray>,
     pub metrics: Metrics,
     pub supersteps: usize,
     /// Realized per-partition edge shares (α = shares[0]); reflects the
@@ -122,6 +130,7 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     if spec.needs_weights && g.weights.is_none() {
         bail!("{} requires edge weights", spec.name);
     }
+    cfg.validate()?;
     let nparts = cfg.num_partitions();
     if let Some(rb) = &cfg.rebalance {
         rb.validate(nparts).map_err(anyhow::Error::msg)?;
@@ -143,19 +152,107 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     alg.prepare(g, pg_graph);
 
     // --- partition --------------------------------------------------------
-    let mut pg = PartitionedGraph::partition_placed(
+    let pg = PartitionedGraph::partition_placed(
         pg_graph,
         cfg.strategy,
         &cfg.shares,
         cfg.seed,
         cfg.placement,
     );
+    run_inner(pg_graph, PgRef::Owned(pg), alg, cfg)
+}
+
+/// Run `alg` over a pre-partitioned **shared** graph — the serving layer's
+/// path (DESIGN.md §13). The engine borrows `pg` immutably, so any number
+/// of concurrent `run_shared` calls may execute against one
+/// `Arc<PartitionedGraph>`: each run owns its per-partition `AlgState`s,
+/// and the worker pool accepts concurrent submitters (see
+/// `util::threadpool`'s concurrent-caller contract).
+///
+/// The caller owns graph preparation: `prepared` must already be the
+/// undirected/reversed view the algorithm's spec asks for, and `pg` must
+/// be a partitioning *of `prepared`* matching `cfg`'s element count.
+/// `original` is the untransformed graph handed to [`Algorithm::prepare`]
+/// (pass the same reference as `prepared` when the spec needs no
+/// transform). Dynamic re-balancing is rejected: it would mutate the
+/// shared partitioning mid-flight.
+pub fn run_shared<A: Algorithm>(
+    original: &CsrGraph,
+    prepared: &CsrGraph,
+    pg: &PartitionedGraph,
+    alg: &mut A,
+    cfg: &EngineConfig,
+) -> Result<RunResult> {
+    let spec = alg.spec();
+    if spec.needs_weights && prepared.weights.is_none() {
+        bail!("{} requires edge weights", spec.name);
+    }
+    cfg.validate()?;
+    if cfg.rebalance.is_some() {
+        bail!("run_shared: dynamic re-balancing would mutate the shared partitioned graph");
+    }
+    if let Some(d) = &cfg.direction {
+        d.validate().map_err(anyhow::Error::msg)?;
+    }
+    if cfg.num_partitions() != pg.parts.len() {
+        bail!(
+            "run_shared: config has {} elements but the shared graph has {} partitions",
+            cfg.num_partitions(),
+            pg.parts.len()
+        );
+    }
+    alg.prepare(original, prepared);
+    run_inner(prepared, PgRef::Shared(pg), alg, cfg)
+}
+
+/// Owned-vs-borrowed partitioned graph for [`run_inner`]: the classic path
+/// owns its partitioning (the α controller may rebuild it mid-run); the
+/// serving path borrows an immutable shared one (re-balancing rejected up
+/// front by [`run_shared`]).
+enum PgRef<'a> {
+    Owned(PartitionedGraph),
+    Shared(&'a PartitionedGraph),
+}
+
+impl PgRef<'_> {
+    fn get(&self) -> &PartitionedGraph {
+        match self {
+            PgRef::Owned(p) => p,
+            PgRef::Shared(p) => p,
+        }
+    }
+}
+
+/// Outcome of one α-controller migration attempt (see the controller block
+/// in [`run_inner`]).
+enum MigrationAttempt {
+    /// Candidate built and accelerators re-bound: ready to commit.
+    Ready(rebalance::Migration, Vec<(usize, AccelPartition)>),
+    /// The donor had no movable band — a distinct no-op (nothing was
+    /// rebuilt; counted in `Metrics::noop_migrations`).
+    Noop,
+    /// The candidate no longer fits the accelerator — migration skipped,
+    /// run continues on the current partitioning.
+    DeviceSkip,
+}
+
+/// Shared BSP core behind [`run`] and [`run_shared`]; `pg_graph` is the
+/// (prepared) graph `pg` partitions.
+fn run_inner<A: Algorithm>(
+    pg_graph: &CsrGraph,
+    mut pg: PgRef<'_>,
+    alg: &mut A,
+    cfg: &EngineConfig,
+) -> Result<RunResult> {
+    let spec = alg.spec();
+    let nparts = cfg.num_partitions();
 
     // --- state + elements --------------------------------------------------
     let mut states: Vec<AlgState> = pg
+        .get()
         .parts
         .iter()
-        .map(|p| alg.init_state(&pg, p))
+        .map(|p| alg.init_state(pg.get(), p))
         .collect();
 
     let mut runtime: Option<PjrtRuntime> = None;
@@ -170,8 +267,12 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
             ElementKind::Accelerator => {
                 let rt = runtime.as_mut().expect("runtime initialized above");
                 let prog = alg.program(0);
-                match rt.instantiate(&prog, &pg.parts[pid], &states[pid], cfg.accel_memory_budget)
-                {
+                match rt.instantiate(
+                    &prog,
+                    &pg.get().parts[pid],
+                    &states[pid],
+                    cfg.accel_memory_budget,
+                ) {
                     Ok(accel) => elements.push(Element::Accel(Box::new(accel))),
                     // The backend itself is unavailable (the vendored PJRT
                     // stub refuses every compile): fall back to the wide-
@@ -185,8 +286,8 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
                     Err(e) => {
                         return Err(e.context(format!(
                             "partition {pid} ({} vertices, {} edges) does not fit the accelerator",
-                            pg.parts[pid].nv,
-                            pg.parts[pid].edge_count()
+                            pg.get().parts[pid].nv,
+                            pg.get().parts[pid].edge_count()
                         )));
                     }
                 }
@@ -217,13 +318,14 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     let mut directions = vec![Direction::Push; nparts];
 
     for cycle in 0..alg.cycles() {
-        alg.begin_cycle(cycle, &pg, &mut states);
+        alg.begin_cycle(cycle, pg.get(), &mut states);
         let channels = alg.channels(cycle);
 
         // Re-bind accelerator partitions to this cycle's program.
         if cycle > 0 {
-            let rebinds =
-                build_accel_rebinds(alg, cycle, &pg, &states, &elements, runtime.as_mut(), cfg)?;
+            let rebinds = build_accel_rebinds(
+                alg, cycle, pg.get(), &states, &elements, runtime.as_mut(), cfg,
+            )?;
             commit_accel_rebinds(&mut elements, rebinds);
         }
 
@@ -231,7 +333,7 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
         // before the first compute (PageRank contributions, BC ratios).
         {
             let mut sw = Stopwatch::new();
-            let (bytes, msgs) = sw.time(|| comm_phase(&pg, &mut states, &channels, true));
+            let (bytes, msgs) = sw.time(|| comm_phase(pg.get(), &mut states, &channels, true));
             let mut step = StepMetrics::empty(nparts);
             step.comm = sw.secs();
             step.bytes = bytes;
@@ -254,7 +356,7 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
                     for pid in 0..nparts {
                         if matches!(elements[pid], Element::Cpu { .. }) {
                             if let Some(fs) =
-                                alg.frontier_stats(&pg.parts[pid], &states[pid], superstep)
+                                alg.frontier_stats(&pg.get().parts[pid], &states[pid], superstep)
                             {
                                 directions[pid] = dc.next(directions[pid], &fs);
                                 dir_stats[pid] = Some(fs);
@@ -268,11 +370,11 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
 
             let mut outcome = match cfg.mode {
                 ExecMode::Synchronous => run_superstep_sync(
-                    &*alg, &pg, &mut states, &mut elements, &channels, &directions, cycle,
+                    &*alg, pg.get(), &mut states, &mut elements, &channels, &directions, cycle,
                     superstep, cfg.instrument, cfg.balance, &mut metrics,
                 )?,
                 ExecMode::Pipelined => pipeline::run_superstep(
-                    &*alg, &pg, &mut states, &mut elements, &channels, &directions, cycle,
+                    &*alg, pg.get(), &mut states, &mut elements, &channels, &directions, cycle,
                     superstep, cfg.instrument, cfg.balance, &mut metrics,
                 )?,
             };
@@ -304,39 +406,62 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
             if let Some(ctrl) = controller.as_mut() {
                 let busy = metrics.steps.last().expect("step just pushed").compute.clone();
                 if let Some((donor, recipient)) = ctrl.observe(&busy) {
-                    let (migrated, secs) = timed(|| {
-                        let candidate = rebalance::migrate_band(
+                    let (attempt, secs) = timed(|| {
+                        let Some(candidate) = rebalance::migrate_band(
                             &*alg,
                             pg_graph,
-                            &pg,
+                            pg.get(),
                             &states,
                             &channels,
                             donor,
                             recipient,
                             ctrl.band(),
-                        )?;
+                        ) else {
+                            return MigrationAttempt::Noop;
+                        };
                         // Re-bind accelerators against the candidate BEFORE
                         // committing: a band that no longer fits the device
                         // skips this migration instead of aborting the run.
-                        let rebinds = build_accel_rebinds(
+                        match build_accel_rebinds(
                             &*alg, cycle, &candidate.pg, &candidate.states, &elements,
                             runtime.as_mut(), cfg,
-                        )
-                        .ok()?;
-                        Some((candidate, rebinds))
+                        ) {
+                            Ok(rebinds) => MigrationAttempt::Ready(candidate, rebinds),
+                            Err(_) => MigrationAttempt::DeviceSkip,
+                        }
                     });
-                    if let Some((candidate, rebinds)) = migrated {
-                        pg = candidate.pg;
-                        states = candidate.states;
-                        commit_accel_rebinds(&mut elements, rebinds);
-                        metrics.migrations += 1;
-                        // migration (rebuild + remap + pull refresh) is
-                        // engine overhead on the critical path: charge it
-                        // as exposed communication of the step just run.
-                        let last = metrics.steps.last_mut().expect("step just pushed");
-                        last.comm += secs;
-                        last.bytes += candidate.refresh.0;
-                        last.messages += candidate.refresh.1;
+                    match attempt {
+                        MigrationAttempt::Ready(candidate, rebinds) => {
+                            let rebalance::Migration { pg: new_pg, states: new_states, refresh } =
+                                candidate;
+                            match &mut pg {
+                                PgRef::Owned(p) => *p = new_pg,
+                                // run_shared rejects rebalance up front.
+                                PgRef::Shared(_) => {
+                                    unreachable!("rebalance on a shared graph is rejected")
+                                }
+                            }
+                            states = new_states;
+                            commit_accel_rebinds(&mut elements, rebinds);
+                            metrics.migrations += 1;
+                            ctrl.committed();
+                            // migration (rebuild + remap + pull refresh) is
+                            // engine overhead on the critical path: charge it
+                            // as exposed communication of the step just run.
+                            let last = metrics.steps.last_mut().expect("step just pushed");
+                            last.comm += secs;
+                            last.bytes += refresh.0;
+                            last.messages += refresh.1;
+                        }
+                        // Empty band: nothing was rebuilt. Count the no-op
+                        // distinctly and stop observing this donor — a
+                        // pinned single-vertex partition used to re-fire
+                        // the controller every window (PR 8 bugfix).
+                        MigrationAttempt::Noop => {
+                            metrics.noop_migrations += 1;
+                            ctrl.mark_noop(donor);
+                        }
+                        MigrationAttempt::DeviceSkip => {}
                     }
                 }
             }
@@ -345,13 +470,19 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
     metrics.wall_secs = wall0.elapsed().as_secs_f64();
 
     // --- collect (paper: alg_collect via local→global maps) ----------------
+    let pgr = pg.get();
     let out_idx = alg.output_array();
-    let output = collect_output(&pg, &states, out_idx);
+    let output = collect_output(pgr, &states, out_idx);
+    let extra: Vec<StateArray> = alg
+        .extra_outputs()
+        .into_iter()
+        .map(|idx| collect_output(pgr, &states, idx))
+        .collect();
 
-    let footprints = footprints_of(&*alg, &pg, &states, &elements);
+    let footprints = footprints_of(&*alg, pgr, &states, &elements);
 
     let mut comm_slots = vec![0u64; nparts];
-    for p in &pg.parts {
+    for p in &pgr.parts {
         for t in &p.ghosts {
             comm_slots[p.id] += t.len() as u64;
             comm_slots[t.remote_part] += t.len() as u64;
@@ -360,11 +491,12 @@ pub fn run<A: Algorithm>(g: &CsrGraph, alg: &mut A, cfg: &EngineConfig) -> Resul
 
     Ok(RunResult {
         output,
+        extra,
         metrics,
         supersteps: total_steps,
-        shares: pg.edge_shares(),
-        vertices: pg.parts.iter().map(|p| p.nv).collect(),
-        beta: pg.beta_stats(),
+        shares: pgr.edge_shares(),
+        vertices: pgr.parts.iter().map(|p| p.nv).collect(),
+        beta: pgr.beta_stats(),
         footprints,
         comm_slots,
     })
@@ -615,6 +747,15 @@ pub(crate) fn comm_op_table(
                                 );
                             }
                         }
+                        (StateArray::U64(v), StateArray::U64(dv)) => {
+                            for (i, &m) in v[t.slot_base..t.slot_base + n].iter().enumerate() {
+                                state::apply_u64(
+                                    ch.reduce,
+                                    &mut dv[t.remote_locals[i] as usize],
+                                    m,
+                                );
+                            }
+                        }
                         _ => unreachable!("channel dtype mismatch"),
                     }
                     if ch.reset_after_send {
@@ -623,6 +764,8 @@ pub(crate) fn comm_op_table(
                                 .fill(ch.reduce.identity_i32()),
                             StateArray::F32(v) => v[t.slot_base..t.slot_base + n]
                                 .fill(ch.reduce.identity_f32()),
+                            StateArray::U64(v) => v[t.slot_base..t.slot_base + n]
+                                .fill(ch.reduce.identity_u64()),
                         }
                     }
                 }
@@ -639,11 +782,17 @@ pub(crate) fn comm_op_table(
                                 dv[t.slot_base + i] = v[l as usize];
                             }
                         }
+                        (StateArray::U64(v), StateArray::U64(dv)) => {
+                            for (i, &l) in t.remote_locals.iter().enumerate() {
+                                dv[t.slot_base + i] = v[l as usize];
+                            }
+                        }
                         _ => unreachable!("channel dtype mismatch"),
                     }
                 }
             }
-            (4 * n as u64, n as u64)
+            let width: u64 = if ch.reduce.is_u64() { 8 } else { 4 };
+            (width * n as u64, n as u64)
         }
         CommOp::DistSigma { dist, sigma } => {
             if pull_only {
@@ -714,6 +863,13 @@ fn collect_output(pg: &PartitionedGraph, states: &[AlgState], idx: usize) -> Sta
                 .map(|s| s.arrays[idx].as_f32().to_vec())
                 .collect();
             StateArray::F32(pg.collect_to_global(&locals))
+        }
+        Some(StateArray::U64(_)) => {
+            let locals: Vec<Vec<u64>> = states
+                .iter()
+                .map(|s| s.arrays[idx].as_u64().to_vec())
+                .collect();
+            StateArray::U64(pg.collect_to_global(&locals))
         }
         None => StateArray::I32(Vec::new()),
     }

@@ -42,11 +42,15 @@ pub(crate) struct Controller {
     cfg: RebalanceConfig,
     streak: usize,
     migrations: usize,
+    /// Donors whose band came back empty (e.g. single-vertex partitions):
+    /// observing them again would no-op forever, so they are skipped until
+    /// a committed migration reshapes the partitions.
+    noop_donors: Vec<usize>,
 }
 
 impl Controller {
     pub(crate) fn new(cfg: RebalanceConfig) -> Controller {
-        Controller { cfg, streak: 0, migrations: 0 }
+        Controller { cfg, streak: 0, migrations: 0, noop_donors: Vec::new() }
     }
 
     /// Edge-share band moved per migration.
@@ -71,6 +75,12 @@ impl Controller {
             }
         }
         let (hi, lo) = (busy[slow], busy[fast]);
+        if self.noop_donors.contains(&slow) {
+            // This donor already proved it cannot shed a band; firing again
+            // would no-op every window (the PR 8 pinned-partition loop).
+            self.streak = 0;
+            return None;
+        }
         if hi <= 0.0 {
             self.streak = 0;
             return None;
@@ -87,6 +97,23 @@ impl Controller {
         self.streak = 0;
         self.migrations += 1;
         Some((slow, fast))
+    }
+
+    /// The migration fired by the last `observe` selected an empty band:
+    /// refund the budget (no rebuild happened) and stop observing the
+    /// donor — it cannot shed a vertex until a committed migration
+    /// reshapes the partitions.
+    pub(crate) fn mark_noop(&mut self, donor: usize) {
+        self.migrations = self.migrations.saturating_sub(1);
+        if !self.noop_donors.contains(&donor) {
+            self.noop_donors.push(donor);
+        }
+    }
+
+    /// A migration was committed: partition shapes changed, so previously
+    /// pinned donors may have grown — clear the no-op blacklist.
+    pub(crate) fn committed(&mut self) {
+        self.noop_donors.clear();
     }
 }
 
@@ -232,6 +259,17 @@ fn remap_array(
             }
             StateArray::F32(out)
         }
+        StateArray::U64(old) => {
+            let fill = *old.last().expect("state arrays are never empty");
+            let mut out = vec![fill; n];
+            for (l, &gv) in part.local_to_global.iter().enumerate() {
+                let op = old_pg.part_of[gv as usize] as usize;
+                let ol = old_pg.local_of[gv as usize] as usize;
+                let src = if aux { &old_states[op].aux[k] } else { &old_states[op].arrays[k] };
+                out[l] = src.as_u64()[ol];
+            }
+            StateArray::U64(out)
+        }
     }
 }
 
@@ -276,6 +314,29 @@ mod tests {
         let mut c = controller(0.3, 1, 5);
         assert_eq!(c.observe(&[0.0, 0.0]), None); // no busy time: no signal
         assert_eq!(c.observe(&[1.0]), None); // single partition
+    }
+
+    #[test]
+    fn noop_donor_is_blacklisted_until_a_commit() {
+        // Regression (PR 8): a pinned one-vertex donor used to re-fire the
+        // controller every `patience` window, silently draining the
+        // migration budget on no-ops.
+        let mut c = controller(0.3, 1, 3);
+        assert_eq!(c.observe(&[1.0, 0.1]), Some((0, 1)));
+        // the migration came back empty: refund + blacklist donor 0
+        c.mark_noop(0);
+        for _ in 0..32 {
+            assert_eq!(c.observe(&[1.0, 0.1]), None, "blacklisted donor must not re-fire");
+        }
+        // the budget was refunded, so a *different* donor still has all 3
+        assert_eq!(c.observe(&[0.1, 1.0]), Some((1, 0)));
+        // a committed migration reshapes partitions: blacklist clears
+        c.committed();
+        assert_eq!(c.observe(&[1.0, 0.1]), Some((0, 1)));
+        // mark_noop is idempotent
+        c.mark_noop(0);
+        c.mark_noop(0);
+        assert_eq!(c.observe(&[1.0, 0.1]), None);
     }
 
     #[test]

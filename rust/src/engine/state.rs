@@ -7,12 +7,15 @@
 //! accelerator marshaling all operate on this one layout, which is what
 //! makes the hybrid engine algorithm-agnostic.
 
-/// Element type of a [`StateArray`] — the only two dtypes that exist on
-/// both sides of the PJRT boundary.
+/// Element type of a [`StateArray`]. `i32`/`f32` exist on both sides of
+/// the PJRT boundary; `u64` (the bit-parallel MS-BFS lane words) is
+/// host-only — the driver validates that u64 fields are never marked
+/// `Role::Device`, so they never reach the accelerator marshaling layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FieldType {
     I32,
     F32,
+    U64,
 }
 
 impl FieldType {
@@ -20,6 +23,7 @@ impl FieldType {
         match self {
             FieldType::I32 => "i32",
             FieldType::F32 => "f32",
+            FieldType::U64 => "u64",
         }
     }
 }
@@ -48,12 +52,13 @@ impl std::fmt::Display for TypeMismatch {
 
 impl std::error::Error for TypeMismatch {}
 
-/// A single state array. Only `i32` and `f32` exist on both sides of the
-/// PJRT boundary, so everything is expressed in those.
+/// A single state array. `i32` and `f32` exist on both sides of the PJRT
+/// boundary; `u64` is host-only (see [`FieldType`]).
 #[derive(Debug, Clone)]
 pub enum StateArray {
     I32(Vec<i32>),
     F32(Vec<f32>),
+    U64(Vec<u64>),
 }
 
 impl StateArray {
@@ -61,6 +66,7 @@ impl StateArray {
         match self {
             StateArray::I32(v) => v.len(),
             StateArray::F32(v) => v.len(),
+            StateArray::U64(v) => v.len(),
         }
     }
     pub fn is_empty(&self) -> bool {
@@ -70,6 +76,7 @@ impl StateArray {
         match self {
             StateArray::I32(_) => FieldType::I32,
             StateArray::F32(_) => FieldType::F32,
+            StateArray::U64(_) => FieldType::U64,
         }
     }
     /// Typed (non-panicking) accessor — see [`TypeMismatch`].
@@ -110,8 +117,24 @@ impl StateArray {
             _ => panic!("expected f32 array"),
         }
     }
+    pub fn as_u64(&self) -> &[u64] {
+        match self {
+            StateArray::U64(v) => v,
+            _ => panic!("expected u64 array"),
+        }
+    }
+    pub fn as_u64_mut(&mut self) -> &mut Vec<u64> {
+        match self {
+            StateArray::U64(v) => v,
+            _ => panic!("expected u64 array"),
+        }
+    }
     pub fn bytes(&self) -> u64 {
-        4 * self.len() as u64
+        let elem = match self {
+            StateArray::I32(_) | StateArray::F32(_) => 4,
+            StateArray::U64(_) => 8,
+        };
+        elem * self.len() as u64
     }
 }
 
@@ -151,6 +174,10 @@ pub enum Reduce {
     AddF32,
     SetI32,
     SetF32,
+    /// Bitwise-OR reduce over u64 lane words (multi-source BFS frontiers).
+    /// Idempotent and commutative on exact integer bits, so never
+    /// order-sensitive — pipelined deliveries stay bit-identical.
+    OrU64,
 }
 
 impl Reduce {
@@ -171,11 +198,20 @@ impl Reduce {
             _ => panic!("not an f32 reduce"),
         }
     }
+    pub fn identity_u64(&self) -> u64 {
+        match self {
+            Reduce::OrU64 => 0,
+            _ => panic!("not a u64 reduce"),
+        }
+    }
     pub fn is_f32(&self) -> bool {
         matches!(
             self,
             Reduce::MinF32 | Reduce::MaxF32 | Reduce::AddF32 | Reduce::SetF32
         )
+    }
+    pub fn is_u64(&self) -> bool {
+        matches!(self, Reduce::OrU64)
     }
 }
 
@@ -226,6 +262,13 @@ impl Channel {
     pub fn pull_i32(array: usize) -> Channel {
         Channel { array, reduce: Reduce::SetI32, kind: ChannelKind::Pull, reset_after_send: false }
     }
+    /// OR is idempotent, so stale re-delivery would be *correct* — but
+    /// resetting after send keeps each superstep's traffic to fresh bits
+    /// only (a hub's ghost word would otherwise re-ship every superstep
+    /// until quiescence).
+    pub fn push_or_u64(array: usize) -> Channel {
+        Channel { array, reduce: Reduce::OrU64, kind: ChannelKind::Push, reset_after_send: true }
+    }
 }
 
 /// A communication-phase operation. Most algorithms use independent
@@ -246,6 +289,7 @@ impl CommOp {
     /// Bytes per ghost slot this op moves.
     pub fn bytes_per_slot(&self) -> u64 {
         match self {
+            CommOp::Single(ch) if ch.reduce.is_u64() => 8,
             CommOp::Single(_) => 4,
             CommOp::DistSigma { .. } => 8,
         }
@@ -284,6 +328,19 @@ pub fn apply_i32(reduce: Reduce, dst: &mut i32, msg: i32) -> bool {
             ch
         }
         _ => panic!("i32 apply with f32 reduce"),
+    }
+}
+
+/// Apply `reduce(dst, msg)` to one u64 cell; returns true if it changed.
+#[inline]
+pub fn apply_u64(reduce: Reduce, dst: &mut u64, msg: u64) -> bool {
+    match reduce {
+        Reduce::OrU64 => {
+            let new = msg & !*dst;
+            *dst |= msg;
+            new != 0
+        }
+        _ => panic!("u64 apply with non-u64 reduce"),
     }
 }
 
@@ -405,5 +462,37 @@ mod tests {
         assert!(!CommOp::Single(Channel::pull_i32(0)).order_sensitive());
         assert!(CommOp::Single(Channel::push_add_f32(0)).order_sensitive());
         assert!(CommOp::DistSigma { dist: 0, sigma: 1 }.order_sensitive());
+        // OR over integer bits is exact/commutative/idempotent: the MS-BFS
+        // channel must pipeline freely.
+        assert!(!CommOp::Single(Channel::push_or_u64(0)).order_sensitive());
+    }
+
+    #[test]
+    fn or_u64_reduce_semantics() {
+        assert_eq!(Reduce::OrU64.identity_u64(), 0);
+        assert!(Reduce::OrU64.is_u64());
+        assert!(!Reduce::OrU64.is_f32());
+        let mut w = 0b0011u64;
+        assert!(apply_u64(Reduce::OrU64, &mut w, 0b0110));
+        assert_eq!(w, 0b0111);
+        // already-subsumed message: no change reported
+        assert!(!apply_u64(Reduce::OrU64, &mut w, 0b0101));
+        assert_eq!(w, 0b0111);
+        let ch = Channel::push_or_u64(3);
+        assert_eq!(ch.array, 3);
+        assert!(ch.reset_after_send, "fresh-bits-only traffic contract");
+        assert_eq!(CommOp::Single(ch).bytes_per_slot(), 8);
+    }
+
+    #[test]
+    fn u64_array_accessors() {
+        let mut a = StateArray::U64(vec![1, 2]);
+        a.as_u64_mut()[1] = 0xff;
+        assert_eq!(a.as_u64(), &[1, 0xff]);
+        assert_eq!(a.bytes(), 16, "u64 arrays are 8 bytes/element");
+        assert_eq!(a.field_type(), FieldType::U64);
+        assert_eq!(FieldType::U64.name(), "u64");
+        assert!(a.try_as_i32().is_err());
+        assert!(a.try_as_f32().is_err());
     }
 }

@@ -165,11 +165,16 @@ pub struct Measured {
     pub placement: Placement,
     /// Widest CPU-element thread count the run used (DESIGN.md §11) — so
     /// scaling reports can label per-thread rows without re-deriving it
-    /// from the element list.
+    /// from the element list. Clamped to the worker-pool cap
+    /// (`MAX_POOL_WORKERS`), which `EngineConfig::validate` enforces, so
+    /// the label always matches the threads that actually ran.
     pub threads: usize,
-    /// Process peak RSS after the measured reps (VmHWM; `None` off
-    /// Linux). Real memory-footprint accounting for Table 5 — DESIGN.md
-    /// §12.6.
+    /// Peak RSS of the measured reps (VmHWM; `None` off Linux) — scoped
+    /// to this `measure` call by `PeakRssProbe` (watermark reset after
+    /// warmup), so back-to-back measurements in one process don't inherit
+    /// each other's peaks. When `/proc/self/clear_refs` is unavailable
+    /// this degrades to the probe's documented baseline+delta lower
+    /// bound. DESIGN.md §12.6.
     pub peak_rss_bytes: Option<u64>,
     /// CSR-array bytes of the input graph (paper §4.3.3 formula).
     pub graph_bytes: u64,
@@ -191,6 +196,9 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
     let reps = reps.max(1);
     // warmup (compiles accelerator programs, faults pages)
     let _ = run_alg(g, spec, cfg)?;
+    // open the peak-RSS region after warmup: the measured peak covers the
+    // reps, not graph construction or a previous measurement's high water
+    let rss = crate::util::mem::PeakRssProbe::start();
     let mut makespans = Vec::with_capacity(reps);
     let mut bottleneck = Vec::with_capacity(reps);
     let mut comm = Vec::with_capacity(reps);
@@ -210,7 +218,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
     let (last, traversed) = last.unwrap();
     let partition_bytes = last.footprints.iter().map(|fp| fp.total()).sum();
     Ok(Measured {
-        peak_rss_bytes: crate::util::mem::peak_rss_bytes(),
+        peak_rss_bytes: rss.peak(),
         graph_bytes: g.footprint_bytes(),
         graph_owned_bytes: g.owned_bytes(),
         partition_bytes,
@@ -223,7 +231,7 @@ pub fn measure(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig, reps: usize) -> 
         migrations: last.metrics.migrations,
         pull_steps: last.metrics.pull_steps(),
         placement: cfg.placement,
-        threads: cfg.max_cpu_threads(),
+        threads: cfg.max_cpu_threads().min(crate::util::threadpool::MAX_POOL_WORKERS),
         last,
         traversed,
     })

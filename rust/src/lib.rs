@@ -18,5 +18,6 @@ pub mod model;
 pub mod partition;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod util;

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   run        execute an algorithm on a workload under a hardware config
+//!   serve      answer a stream of queries concurrently over one shared
+//!              partitioned graph, batching compatible BFS/reachability
+//!              queries into bit-parallel multi-source traversals
 //!   model      evaluate the performance model (Eqs. 1–4)
 //!   calibrate  measure r_cpu / r_acc / c on this testbed
 //!   generate   write a workload to disk (edge list or binary CSR)
@@ -43,6 +46,7 @@ fn main() {
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
     let code = match cmd.as_str() {
         "run" => run_cmd(&args),
+        "serve" => serve_cmd(&args),
         "model" => model_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "generate" => generate_cmd(&args),
@@ -81,6 +85,16 @@ COMMANDS:
               --balance picks how CPU kernels cut chunks, DESIGN.md §11;
               --store picks how csr:PATH containers load, DESIGN.md §12;
               --dump-output writes per-vertex results for exact diffing)
+  serve      --workload W [--queries PATH] [--nqueries N] [--rate QPS]
+             [--serve-workers N] [--max-inflight N] [--max-batch N]
+             [--cache N] [--weights] [--rounds N] [--dump-dir DIR]
+             [--hw xS --alpha F --strategy S --threads N ...]
+             (queries: one per line, `bfs V|reach V|sssp V|pagerank`,
+              replayed at --rate queries/s (0 = as fast as admitted);
+              no --queries = --nqueries synthetic bfs queries;
+              --max-batch 1 --cache 0 disables batching/caching for
+              sequential-baseline diffs; --dump-dir writes one
+              per-vertex file per answered query for exact diffing)
   model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
   calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
   generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
@@ -129,9 +143,20 @@ fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
     let alpha = args.f64_or("alpha", 0.7).map_err(anyhow::Error::msg)?;
     let strategy =
         Strategy::parse(&args.str_or("strategy", "high")).map_err(anyhow::Error::msg)?;
-    // --threads 0 (the default) = auto: one worker per available core.
+    // --threads 0 (the default) = auto: one worker per available core,
+    // clamped to the worker-pool cap — surfaced so a 512-core banner
+    // never claims parallelism the pool cannot deliver.
     let threads = match args.usize_or("threads", 0).map_err(anyhow::Error::msg)? {
-        0 => totem::engine::default_threads(),
+        0 => {
+            let detected = totem::engine::detected_threads();
+            let clamped = totem::engine::default_threads();
+            if detected > clamped {
+                eprintln!(
+                    "# auto threads clamped: {detected} cores detected, worker pool capped at {clamped}"
+                );
+            }
+            clamped
+        }
         n => n,
     };
     let mut cfg = EngineConfig::from_notation(&hw, alpha, strategy, threads)
@@ -277,6 +302,138 @@ fn dump_output(path: &Path, out: &StateArray) -> Result<()> {
             }
         }
         StateArray::F32(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {:08x}", x.to_bits())?;
+            }
+        }
+        StateArray::U64(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {x:016x}")?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Replay a query stream against the serving layer (DESIGN.md §13.5):
+/// build + partition the graph once, submit queries at the configured
+/// arrival rate, wait for every admitted ticket, then print the
+/// server-level report (throughput, latency histogram, batching/cache
+/// wins, typed rejections).
+fn serve_cmd(args: &Args) -> Result<()> {
+    use totem::serve::{arrival_delay_secs, parse_query_file, QueryKind, Server, ServerConfig};
+
+    // --weights attaches synthetic weights (required for sssp queries);
+    // build_workload's Sssp arm is exactly that recipe.
+    let weighted = args.has("weights");
+    let g = parse_workload_or_file(args, weighted.then_some(AlgKind::Sssp))?;
+    let engine = engine_config(args, AlgKind::Bfs)?;
+    let queries: Vec<QueryKind> = match args.get("queries") {
+        Some(p) => {
+            let text = std::fs::read_to_string(&p).with_context(|| format!("read {p}"))?;
+            parse_query_file(&text)?
+        }
+        None => {
+            // Synthetic closed-loop load: seeded BFS sources (xorshift so
+            // repeats occur — they exercise lane dedup and the cache).
+            let n = args.usize_or("nqueries", 64).map_err(anyhow::Error::msg)?;
+            let mut x = args.u64_or("seed", 42).map_err(anyhow::Error::msg)? | 1;
+            (0..n)
+                .map(|_| {
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    QueryKind::Bfs { source: (x % g.vertex_count as u64) as u32 }
+                })
+                .collect()
+        }
+    };
+    let rate = args.f64_or("rate", 0.0).map_err(anyhow::Error::msg)?;
+    let cfg = ServerConfig {
+        workers: args.usize_or("serve-workers", 2).map_err(anyhow::Error::msg)?,
+        max_in_flight: args.usize_or("max-inflight", 64).map_err(anyhow::Error::msg)?,
+        max_batch: args.usize_or("max-batch", 64).map_err(anyhow::Error::msg)?,
+        pagerank_rounds: args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?,
+        cache_capacity: args.usize_or("cache", 1024).map_err(anyhow::Error::msg)?,
+        engine,
+    };
+    let dump_dir = args.get("dump-dir").map(PathBuf::from);
+    if let Some(d) = &dump_dir {
+        std::fs::create_dir_all(d).with_context(|| format!("create {d:?}"))?;
+    }
+
+    eprintln!(
+        "# serving |V|={} |E|={} — {} workers, <= {} in flight, <= {} lanes/batch",
+        fmt_count(g.vertex_count as u64),
+        fmt_count(g.edge_count() as u64),
+        cfg.workers,
+        cfg.max_in_flight,
+        cfg.max_batch,
+    );
+    let srv = Server::start(g, cfg)?;
+    eprintln!("# graph fingerprint {:016x}", srv.fingerprint());
+
+    let delay = arrival_delay_secs(rate);
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    for (i, &q) in queries.iter().enumerate() {
+        match srv.submit(q) {
+            Ok(t) => tickets.push((i, t)),
+            Err(e) => eprintln!("# query {i} rejected: {e}"),
+        }
+        if delay > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+    }
+    let mut answered = 0usize;
+    for (i, t) in tickets {
+        match t.wait() {
+            Ok(a) => {
+                answered += 1;
+                if let Some(d) = &dump_dir {
+                    let path = d.join(format!("q{i:04}_{}.txt", queries[i].name()));
+                    dump_response(&path, &a.response)?;
+                }
+            }
+            Err(e) => eprintln!("# query {i} failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = srv.shutdown();
+
+    println!(
+        "queries          : {} submitted, {answered} answered, {} rejected",
+        queries.len(),
+        report.rejected
+    );
+    println!(
+        "throughput       : {:.1} queries/s over {}",
+        answered as f64 / wall.max(1e-9),
+        fmt_secs(wall)
+    );
+    print!("{report}");
+    Ok(())
+}
+
+/// Write one query answer as `vertex value` lines — same diff-friendly
+/// conventions as [`dump_output`] (floats as bit-pattern hex).
+fn dump_response(path: &Path, resp: &totem::serve::QueryResponse) -> Result<()> {
+    use totem::serve::QueryResponse as QR;
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    match resp {
+        QR::Levels(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {x}")?;
+            }
+        }
+        QR::Reachable(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {}", *x as u8)?;
+            }
+        }
+        QR::Distances(v) | QR::Ranks(v) => {
             for (i, x) in v.iter().enumerate() {
                 writeln!(w, "{i} {:08x}", x.to_bits())?;
             }

@@ -88,10 +88,17 @@ impl PjrtRuntime {
             .arrays
             .iter()
             .map(|&i| match &state.arrays[i] {
-                StateArray::I32(_) => DType::I32,
-                StateArray::F32(_) => DType::F32,
+                StateArray::I32(_) => Ok(DType::I32),
+                StateArray::F32(_) => Ok(DType::F32),
+                // The driver keeps u64 fields host-role, so a u64 here
+                // means a program listed one in `arrays` — a bug upstream.
+                StateArray::U64(_) => Err(anyhow!(
+                    "program '{}': u64 state arrays are host-only and cannot ship to the \
+                     accelerator",
+                    prog.name
+                )),
             })
-            .collect();
+            .collect::<Result<_>>()?;
         let entry = self
             .manifest
             .select(prog.name, part.state_len(), part.edge_count(), budget_bytes)?
@@ -309,6 +316,8 @@ impl AccelPartition {
                         .buffer_from_host_buffer(&self.scratch_f32, &[n_cap], None)
                         .map_err(|e| anyhow!("state upload: {e}"))?
                 }
+                // unreachable in practice: instantiate rejects u64 arrays
+                StateArray::U64(_) => bail!("u64 state arrays cannot ship to the accelerator"),
             };
             let _ = k;
             state_bufs.push(buf);
@@ -382,6 +391,8 @@ impl AccelPartition {
                         .map_err(|e| anyhow!("readback array {k}: {e}"))?;
                     v.copy_from_slice(&self.scratch_f32[..self.state_len]);
                 }
+                // unreachable in practice: instantiate rejects u64 arrays
+                StateArray::U64(_) => bail!("u64 state arrays cannot ship to the accelerator"),
             }
             out.transfer_bytes += 4 * n_cap as u64;
         }

@@ -1,0 +1,141 @@
+//! Admission control for the query-serving layer (DESIGN.md §13.1).
+//!
+//! The server bounds **in-flight** queries — admitted but not yet
+//! answered, whether queued, batched, or computing — with a single atomic
+//! counter. Saturation is a *typed, immediate* rejection at submit time
+//! ([`AdmissionError::Saturated`]), never silent queueing without bound:
+//! a serving layer that buffers arbitrarily converts overload into
+//! unbounded latency and memory, while a typed rejection lets callers
+//! shed load or retry with backoff. Admission is released by an RAII
+//! guard, so every exit path (answered, failed, worker panic unwinding a
+//! batch) gives the slot back.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Typed admission failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The server already holds `limit` in-flight queries; the observed
+    /// count at rejection rides along for operator-facing logs.
+    Saturated { in_flight: usize, limit: usize },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::Saturated { in_flight, limit } => write!(
+                f,
+                "server saturated: {in_flight} queries in flight (admission limit {limit})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Bounded in-flight counter shared by submitters and workers.
+#[derive(Debug)]
+pub struct Admission {
+    limit: usize,
+    in_flight: AtomicUsize,
+}
+
+impl Admission {
+    /// `limit` is clamped to at least 1 — an admission controller that
+    /// can never admit is a misconfiguration, not a policy.
+    pub fn new(limit: usize) -> Arc<Admission> {
+        Arc::new(Admission { limit: limit.max(1), in_flight: AtomicUsize::new(0) })
+    }
+
+    /// Try to take one in-flight slot. CAS loop (not `fetch_add` +
+    /// correction) so the counter never overshoots the limit even under a
+    /// submitter stampede.
+    pub fn try_admit(self: &Arc<Admission>) -> Result<AdmissionGuard, AdmissionError> {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.limit {
+                return Err(AdmissionError::Saturated { in_flight: cur, limit: self.limit });
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(AdmissionGuard { admission: Arc::clone(self) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Queries currently holding a slot.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+}
+
+/// RAII in-flight slot: dropping it (result delivered, query failed, or a
+/// worker unwound) releases admission.
+#[derive(Debug)]
+pub struct AdmissionGuard {
+    admission: Arc<Admission>,
+}
+
+impl Drop for AdmissionGuard {
+    fn drop(&mut self) {
+        let prev = self.admission.in_flight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "admission guard double-release");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_limit_then_rejects_typed() {
+        let a = Admission::new(2);
+        let g1 = a.try_admit().unwrap();
+        let _g2 = a.try_admit().unwrap();
+        let err = a.try_admit().unwrap_err();
+        assert_eq!(err, AdmissionError::Saturated { in_flight: 2, limit: 2 });
+        assert!(format!("{err}").contains("saturated"));
+        drop(g1);
+        assert!(a.try_admit().is_ok(), "released slot is reusable");
+    }
+
+    #[test]
+    fn zero_limit_is_clamped_to_one() {
+        let a = Admission::new(0);
+        assert_eq!(a.limit(), 1);
+        let _g = a.try_admit().unwrap();
+        assert!(a.try_admit().is_err());
+    }
+
+    #[test]
+    fn concurrent_stampede_never_exceeds_limit() {
+        let a = Admission::new(8);
+        let admitted = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..32 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        if let Ok(g) = a.try_admit() {
+                            admitted.fetch_add(1, Ordering::Relaxed);
+                            assert!(a.in_flight() <= 8, "overshoot");
+                            drop(g);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(a.in_flight(), 0, "all slots released");
+        assert!(admitted.load(Ordering::Relaxed) > 0);
+    }
+}

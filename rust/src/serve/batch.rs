@@ -1,0 +1,119 @@
+//! Lane-packing policy: which queued queries share one bit-parallel
+//! traversal, and which u64 bit lane each rides (DESIGN.md §13.3).
+//!
+//! The policy is deliberately a **pure function** over the queued query
+//! kinds — no clocks, no server state — so the contract is testable in
+//! isolation and cross-checked offline by `tools/cross_check_serving.py`:
+//!
+//! 1. the head query anchors the batch (FIFO: the oldest admitted query
+//!    never waits for younger ones);
+//! 2. every lane-batchable query (`bfs`/`reach`) whose source already has
+//!    a lane **joins** it (dedup — repeated hot sources cost one lane);
+//! 3. a new source opens the next lane while fewer than
+//!    `min(max_batch, 64)` lanes are open;
+//! 4. non-batchable queries are never reordered into a batch, and
+//!    batchable queries beyond the lane budget stay queued in order.
+//!
+//! Lane order is first-seen query order, so lane `b` of the resulting
+//! [`crate::alg::msbfs::MsBfs`] run is BFS from `lane_sources[b]` and the
+//! engine's lane-for-lane bit-identity contract maps each query straight
+//! to its solo-run answer.
+
+use super::workload::QueryKind;
+use crate::alg::msbfs::MAX_LANES;
+
+/// Outcome of batch selection over a queue snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchSelection {
+    /// Indices (into the snapshot) of the queries taken, head first.
+    pub picked: Vec<usize>,
+    /// One traversal source per lane, in lane order.
+    pub lane_sources: Vec<u32>,
+    /// `lane_of[j]` is the lane serving `picked[j]`.
+    pub lane_of: Vec<usize>,
+}
+
+impl BatchSelection {
+    pub fn width(&self) -> usize {
+        self.lane_sources.len()
+    }
+}
+
+/// Select the batch anchored at `kinds[0]` (which must be lane-batchable;
+/// callers dispatch non-batchable heads solo). `max_batch` caps the lane
+/// budget and is itself capped by the 64 bit lanes of a u64.
+pub fn select_batch(kinds: &[QueryKind], max_batch: usize) -> BatchSelection {
+    let budget = max_batch.clamp(1, MAX_LANES);
+    debug_assert!(kinds[0].batchable(), "head must be lane-batchable");
+    let mut picked = Vec::new();
+    let mut lane_sources: Vec<u32> = Vec::new();
+    let mut lane_of = Vec::new();
+    for (i, k) in kinds.iter().enumerate() {
+        let Some(src) = k.lane_source() else { continue };
+        if let Some(lane) = lane_sources.iter().position(|&s| s == src) {
+            picked.push(i);
+            lane_of.push(lane);
+        } else if lane_sources.len() < budget {
+            picked.push(i);
+            lane_of.push(lane_sources.len());
+            lane_sources.push(src);
+        }
+        // else: lane budget full and this source is new — stays queued
+    }
+    BatchSelection { picked, lane_sources, lane_of }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bfs(s: u32) -> QueryKind {
+        QueryKind::Bfs { source: s }
+    }
+
+    #[test]
+    fn batches_compatible_queries_in_fifo_order() {
+        let kinds = [bfs(5), QueryKind::Reach { source: 7 }, bfs(9)];
+        let b = select_batch(&kinds, 64);
+        assert_eq!(b.picked, vec![0, 1, 2]);
+        assert_eq!(b.lane_sources, vec![5, 7, 9]);
+        assert_eq!(b.lane_of, vec![0, 1, 2]);
+        assert_eq!(b.width(), 3);
+    }
+
+    #[test]
+    fn repeated_sources_share_a_lane() {
+        let kinds = [bfs(5), QueryKind::Reach { source: 5 }, bfs(5), bfs(8)];
+        let b = select_batch(&kinds, 64);
+        assert_eq!(b.picked, vec![0, 1, 2, 3]);
+        assert_eq!(b.lane_sources, vec![5, 8], "dedup: hot source costs one lane");
+        assert_eq!(b.lane_of, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn non_batchable_queries_are_left_in_place() {
+        let kinds = [bfs(1), QueryKind::Pagerank, QueryKind::Sssp { source: 2 }, bfs(3)];
+        let b = select_batch(&kinds, 64);
+        assert_eq!(b.picked, vec![0, 3]);
+        assert_eq!(b.lane_sources, vec![1, 3]);
+    }
+
+    #[test]
+    fn lane_budget_caps_new_sources_but_not_joins() {
+        let kinds = [bfs(1), bfs(2), bfs(3), bfs(1)];
+        let b = select_batch(&kinds, 2);
+        // sources 1 and 2 open the two lanes; 3 is over budget; the
+        // second source-1 query still joins lane 0
+        assert_eq!(b.picked, vec![0, 1, 3]);
+        assert_eq!(b.lane_sources, vec![1, 2]);
+        assert_eq!(b.lane_of, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn budget_is_clamped_to_u64_lanes() {
+        let kinds: Vec<QueryKind> = (0..100).map(|s| bfs(s as u32)).collect();
+        let b = select_batch(&kinds, 1000);
+        assert_eq!(b.width(), MAX_LANES);
+        assert_eq!(b.picked.len(), MAX_LANES);
+    }
+}

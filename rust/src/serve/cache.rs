@@ -1,0 +1,161 @@
+//! Per-lane result cache keyed by source **and graph identity**
+//! (DESIGN.md §13.4).
+//!
+//! A lane answer (the i32 level array of one BFS source) is immutable
+//! once computed — the served graph is immutable by construction — so
+//! repeats of a hot source are cache hits that bypass admission-queue
+//! compute entirely. Keys embed a **graph fingerprint**: an FNV-1a hash
+//! over the vertex/edge counts and a bounded sample of CSR offsets and
+//! column indices. Serving a different graph (even one with identical
+//! n/m) changes the fingerprint, so a stale cache can never answer for
+//! the wrong graph; reloading the same file reproduces the same
+//! fingerprint, so warm caches survive server restarts by design.
+//! Invalidation is therefore structural — there is no TTL to tune and no
+//! explicit flush: entries are evicted FIFO only to bound memory.
+
+use crate::graph::store::Fnv64;
+use crate::graph::CsrGraph;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Offsets/columns sampled per array — enough to distinguish graphs that
+/// agree on n and m, cheap enough to run at server start on billion-edge
+/// inputs (the sample stride adapts to the array length).
+const FINGERPRINT_SAMPLES: usize = 1024;
+
+/// FNV-1a fingerprint of a CSR graph: n, m, weightedness, and a strided
+/// sample of row offsets and column indices. Reuses the `.tcsr` checksum
+/// primitive so `tools/cross_check_serving.py` can mirror it exactly.
+pub fn graph_fingerprint(g: &CsrGraph) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(&(g.vertex_count as u64).to_le_bytes());
+    h.update(&(g.edge_count() as u64).to_le_bytes());
+    h.update(&(g.weights.is_some() as u64).to_le_bytes());
+    let ro = &g.row_offsets[..];
+    let stride = (ro.len() / FINGERPRINT_SAMPLES).max(1);
+    for i in (0..ro.len()).step_by(stride) {
+        h.update(&ro[i].to_le_bytes());
+    }
+    let cols = &g.col_indices[..];
+    let stride = (cols.len() / FINGERPRINT_SAMPLES).max(1);
+    for i in (0..cols.len()).step_by(stride) {
+        h.update(&(cols[i] as u64).to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Cache key: one lane answer of one graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct LaneKey {
+    fingerprint: u64,
+    source: u32,
+}
+
+/// Bounded FIFO cache of lane level arrays. Values are `Arc`ed: a hit
+/// hands the caller a shared handle, never a copy of an |V|-sized array.
+pub struct LaneCache {
+    fingerprint: u64,
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+struct CacheInner {
+    map: HashMap<LaneKey, Arc<Vec<i32>>>,
+    fifo: VecDeque<LaneKey>,
+}
+
+impl LaneCache {
+    /// A cache bound to one served graph. `capacity` 0 disables caching.
+    pub fn new(g: &CsrGraph, capacity: usize) -> LaneCache {
+        LaneCache {
+            fingerprint: graph_fingerprint(g),
+            capacity,
+            inner: Mutex::new(CacheInner { map: HashMap::new(), fifo: VecDeque::new() }),
+        }
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn get(&self, source: u32) -> Option<Arc<Vec<i32>>> {
+        let key = LaneKey { fingerprint: self.fingerprint, source };
+        self.inner.lock().unwrap().map.get(&key).cloned()
+    }
+
+    pub fn insert(&self, source: u32, levels: Arc<Vec<i32>>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let key = LaneKey { fingerprint: self.fingerprint, source };
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key, levels).is_none() {
+            inner.fifo.push_back(key);
+            while inner.fifo.len() > self.capacity {
+                let evict = inner.fifo.pop_front().expect("len checked");
+                inner.map.remove(&evict);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeList;
+
+    fn graph(edges: &[(u32, u32)], n: usize) -> CsrGraph {
+        let mut el = EdgeList::new(n);
+        for &(u, v) in edges {
+            el.push(u, v);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_graphs_and_reproduces() {
+        let g1 = graph(&[(0, 1), (1, 2)], 3);
+        let g2 = graph(&[(0, 1), (0, 2)], 3); // same n, same m
+        assert_ne!(graph_fingerprint(&g1), graph_fingerprint(&g2));
+        let g1b = graph(&[(0, 1), (1, 2)], 3);
+        assert_eq!(graph_fingerprint(&g1), graph_fingerprint(&g1b), "identity is structural");
+    }
+
+    #[test]
+    fn hit_returns_the_shared_answer() {
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 8);
+        assert!(c.get(0).is_none());
+        c.insert(0, Arc::new(vec![0, 1]));
+        assert_eq!(c.get(0).unwrap().as_slice(), &[0, 1]);
+        assert!(c.get(1).is_none(), "keyed by source");
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_memory() {
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 2);
+        c.insert(0, Arc::new(vec![0]));
+        c.insert(1, Arc::new(vec![1]));
+        c.insert(2, Arc::new(vec![2]));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(0).is_none(), "oldest evicted");
+        assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 0);
+        c.insert(0, Arc::new(vec![0]));
+        assert!(c.is_empty());
+    }
+}

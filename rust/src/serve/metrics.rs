@@ -1,0 +1,278 @@
+//! Per-query metrics and the server-level aggregate report
+//! (DESIGN.md §13.6).
+//!
+//! Every answered query records where its latency went — queue wait
+//! versus compute — plus the superstep count and traversal rate of the
+//! run that answered it. The server aggregates these into counters,
+//! means, and a **log2-bucket latency histogram** (microsecond-indexed,
+//! so one histogram spans cache hits in the tens of microseconds and
+//! billion-edge traversals in the tens of seconds without tuning bucket
+//! edges).
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// What one answered query cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueryMetrics {
+    /// Admission to dispatch: time spent queued behind other queries.
+    pub queue_wait_secs: f64,
+    /// Dispatch to answer: the engine run (amortized share for batched
+    /// queries is NOT taken — each rider records the full batch compute
+    /// time, because that is the latency it observed).
+    pub compute_secs: f64,
+    /// Supersteps of the run that answered this query (0 for cache hits).
+    pub supersteps: usize,
+    /// Traversed edges / compute_secs of the answering run, in edges/sec
+    /// (0.0 for cache hits and non-traversal queries).
+    pub teps: f64,
+    /// Lanes of the batch that answered this query (1 = solo).
+    pub batch_width: usize,
+    /// Answered from the lane cache without touching the engine.
+    pub cache_hit: bool,
+}
+
+/// Log2-bucket latency histogram. Bucket `b` holds latencies in
+/// `[2^b, 2^(b+1))` microseconds; bucket 0 also absorbs sub-microsecond
+/// samples. 40 buckets cover ~12 days — effectively unbounded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; Self::BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub const BUCKETS: usize = 40;
+
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; Self::BUCKETS] }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(0.0) as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(Self::BUCKETS - 1);
+        self.buckets[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Latency below which `q` (0..=1) of samples fall, reported as the
+    /// upper edge of the containing bucket (conservative).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 2f64.powi(b as i32 + 1) / 1e6;
+            }
+        }
+        2f64.powi(Self::BUCKETS as i32) / 1e6
+    }
+
+    /// Non-empty buckets as `(lower_us, upper_us, count)` rows.
+    pub fn rows(&self) -> Vec<(u64, u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(b, &n)| (1u64 << b, 1u64 << (b + 1), n))
+            .collect()
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+/// Aggregate snapshot of a serving session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Queries answered (cache hits included).
+    pub served: u64,
+    /// Typed admission rejections at submit time.
+    pub rejected: u64,
+    /// Queries answered from the lane cache.
+    pub cache_hits: u64,
+    /// Multi-source traversal runs dispatched (width ≥ 1).
+    pub batches: u64,
+    /// Queries answered by those runs (≥ batches; the surplus is the
+    /// batching win).
+    pub batched_queries: u64,
+    pub mean_queue_wait_secs: f64,
+    pub mean_compute_secs: f64,
+    /// Mean TEPS over traversal-answering runs (cache hits excluded).
+    pub mean_teps: f64,
+    /// End-to-end latency (queue wait + compute) distribution.
+    pub histogram: LatencyHistogram,
+}
+
+impl fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "served {} (cache hits {}), rejected {}, {} traversal batches answering {} queries",
+            self.served, self.cache_hits, self.rejected, self.batches, self.batched_queries
+        )?;
+        writeln!(
+            f,
+            "mean queue wait {:.3} ms, mean compute {:.3} ms, mean {:.2} MTEPS, p50 {:.3} ms, p99 {:.3} ms",
+            self.mean_queue_wait_secs * 1e3,
+            self.mean_compute_secs * 1e3,
+            self.mean_teps / 1e6,
+            self.histogram.quantile_secs(0.50) * 1e3,
+            self.histogram.quantile_secs(0.99) * 1e3,
+        )?;
+        for (lo, hi, n) in self.histogram.rows() {
+            writeln!(f, "  [{lo:>9} us, {hi:>9} us)  {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Thread-safe accumulator behind one mutex — contention is per answered
+/// query, negligible next to the engine runs it is measuring.
+pub struct ServeMetrics {
+    inner: Mutex<Accum>,
+}
+
+#[derive(Default)]
+struct Accum {
+    served: u64,
+    rejected: u64,
+    cache_hits: u64,
+    batches: u64,
+    batched_queries: u64,
+    queue_wait_sum: f64,
+    compute_sum: f64,
+    teps_sum: f64,
+    teps_samples: u64,
+    histogram: LatencyHistogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics { inner: Mutex::new(Accum::default()) }
+    }
+
+    pub fn record_query(&self, m: QueryMetrics) {
+        let mut a = self.inner.lock().unwrap();
+        a.served += 1;
+        a.queue_wait_sum += m.queue_wait_secs;
+        a.compute_sum += m.compute_secs;
+        a.histogram.record(m.queue_wait_secs + m.compute_secs);
+        if m.cache_hit {
+            a.cache_hits += 1;
+        } else if m.teps > 0.0 {
+            a.teps_sum += m.teps;
+            a.teps_samples += 1;
+        }
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// One multi-source run dispatched, answering `queries` queries.
+    pub fn record_batch(&self, queries: usize) {
+        let mut a = self.inner.lock().unwrap();
+        a.batches += 1;
+        a.batched_queries += queries as u64;
+    }
+
+    pub fn report(&self) -> ServeReport {
+        let a = self.inner.lock().unwrap();
+        let served = a.served.max(1) as f64;
+        ServeReport {
+            served: a.served,
+            rejected: a.rejected,
+            cache_hits: a.cache_hits,
+            batches: a.batches,
+            batched_queries: a.batched_queries,
+            mean_queue_wait_secs: a.queue_wait_sum / served,
+            mean_compute_secs: a.compute_sum / served,
+            mean_teps: if a.teps_samples > 0 { a.teps_sum / a.teps_samples as f64 } else { 0.0 },
+            histogram: a.histogram.clone(),
+        }
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(queue: f64, compute: f64, hit: bool) -> QueryMetrics {
+        QueryMetrics {
+            queue_wait_secs: queue,
+            compute_secs: compute,
+            supersteps: if hit { 0 } else { 3 },
+            teps: if hit { 0.0 } else { 1e6 },
+            batch_width: 1,
+            cache_hit: hit,
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2_microseconds() {
+        let mut h = LatencyHistogram::new();
+        h.record(3e-6); // 3 us -> bucket [2,4)
+        h.record(3e-6);
+        h.record(1.0); // 1 s -> bucket [524288, 1048576) us
+        assert_eq!(h.count(), 3);
+        let rows = h.rows();
+        assert_eq!(rows[0], (2, 4, 2));
+        assert_eq!(rows[1], (524288, 1048576, 1));
+        assert!(h.quantile_secs(0.5) <= 8e-6);
+        assert!(h.quantile_secs(1.0) >= 1.0);
+    }
+
+    #[test]
+    fn sub_microsecond_and_huge_samples_stay_in_range() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn report_aggregates_counters_and_means() {
+        let m = ServeMetrics::new();
+        m.record_query(q(0.010, 0.090, false));
+        m.record_query(q(0.030, 0.000, true));
+        m.record_rejection();
+        m.record_batch(2);
+        let r = m.report();
+        assert_eq!(r.served, 2);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.cache_hits, 1);
+        assert_eq!(r.batches, 1);
+        assert_eq!(r.batched_queries, 2);
+        assert!((r.mean_queue_wait_secs - 0.020).abs() < 1e-12);
+        assert!((r.mean_compute_secs - 0.045).abs() < 1e-12);
+        assert!((r.mean_teps - 1e6).abs() < 1.0, "cache hits excluded from TEPS mean");
+        let text = format!("{r}");
+        assert!(text.contains("served 2"));
+        assert!(text.contains("p99"));
+    }
+
+    #[test]
+    fn empty_report_is_all_zeros() {
+        let r = ServeMetrics::new().report();
+        assert_eq!(r.served, 0);
+        assert_eq!(r.mean_teps, 0.0);
+        assert_eq!(r.histogram.quantile_secs(0.99), 0.0);
+    }
+}

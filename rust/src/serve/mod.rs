@@ -1,0 +1,650 @@
+//! Concurrent query serving over one immutable partitioned graph
+//! (DESIGN.md §13).
+//!
+//! The offline engine answers one algorithm per process run; this layer
+//! turns the same engine into a **server**: one graph is partitioned once
+//! ([`ServeGraph`]), then many queries execute against it concurrently via
+//! [`crate::engine::run_shared`] on the persistent worker pool. The moving
+//! parts, each its own submodule with an isolated contract:
+//!
+//! - [`admission`] — bounded in-flight queries, typed rejection when
+//!   saturated;
+//! - [`workload`] — the query vocabulary (`bfs`/`reach`/`sssp`/`pagerank`)
+//!   and replayable query files;
+//! - [`batch`] — the pure lane-packing policy that folds compatible
+//!   queued traversals into one bit-parallel multi-source BFS
+//!   ([`crate::alg::msbfs::MsBfs`], up to 64 sources per run);
+//! - [`cache`] — per-lane result cache keyed by source + graph identity;
+//! - [`metrics`] — per-query latency split and the server-level report.
+//!
+//! Worker threads pop the FIFO queue; a lane-batchable head drags every
+//! compatible queued query into its batch (the batching win the serving
+//! benchmark measures), a non-batchable head runs solo. Because
+//! `Reduce::OrU64` is order-free, batched traversals stay bit-identical
+//! lane-for-lane to solo runs under every executor and partitioning —
+//! the serving layer never trades answer fidelity for throughput.
+
+pub mod admission;
+pub mod batch;
+pub mod cache;
+pub mod metrics;
+pub mod workload;
+
+pub use admission::{Admission, AdmissionError, AdmissionGuard};
+pub use batch::{select_batch, BatchSelection};
+pub use cache::{graph_fingerprint, LaneCache};
+pub use metrics::{LatencyHistogram, QueryMetrics, ServeMetrics, ServeReport};
+pub use workload::{arrival_delay_secs, parse_query, parse_query_file, QueryKind};
+
+use crate::alg::msbfs::MsBfs;
+use crate::alg::pagerank::Pagerank;
+use crate::alg::sssp::Sssp;
+use crate::alg::{Algorithm, INF_I32};
+use crate::engine::{self, EngineConfig, StateArray};
+use crate::graph::CsrGraph;
+use crate::partition::PartitionedGraph;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Shared graph
+// ---------------------------------------------------------------------------
+
+/// One graph, partitioned once, served by any number of concurrent runs.
+///
+/// The forward partitioning answers traversals (BFS / reach / SSSP); the
+/// reversed view pull-mode PageRank needs is built **lazily** on the first
+/// PageRank query (a `OnceLock` — pure traversal servers never pay the
+/// doubled footprint).
+pub struct ServeGraph {
+    graph: CsrGraph,
+    forward_pg: PartitionedGraph,
+    reversed: OnceLock<(CsrGraph, PartitionedGraph)>,
+    engine: EngineConfig,
+    fingerprint: u64,
+}
+
+impl ServeGraph {
+    /// Partition `graph` per `engine` for serving. Rejects configurations
+    /// [`engine::run_shared`] would reject per query (dynamic
+    /// re-balancing mutates the partitioning and cannot share it).
+    pub fn build(graph: CsrGraph, engine: EngineConfig) -> Result<ServeGraph> {
+        engine.validate()?;
+        if engine.rebalance.is_some() {
+            bail!("serve: dynamic re-balancing would mutate the shared partitioned graph");
+        }
+        let forward_pg = PartitionedGraph::partition_placed(
+            &graph,
+            engine.strategy,
+            &engine.shares,
+            engine.seed,
+            engine.placement,
+        );
+        let fingerprint = graph_fingerprint(&graph);
+        Ok(ServeGraph {
+            graph,
+            forward_pg,
+            reversed: OnceLock::new(),
+            engine,
+            fingerprint,
+        })
+    }
+
+    pub fn graph(&self) -> &CsrGraph {
+        &self.graph
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    fn reversed(&self) -> &(CsrGraph, PartitionedGraph) {
+        self.reversed.get_or_init(|| {
+            let rg = self.graph.reverse();
+            let rpg = PartitionedGraph::partition_placed(
+                &rg,
+                self.engine.strategy,
+                &self.engine.shares,
+                self.engine.seed,
+                self.engine.placement,
+            );
+            (rg, rpg)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Queries and answers
+// ---------------------------------------------------------------------------
+
+/// Per-kind answer payloads. Level arrays are `Arc`-shared with the lane
+/// cache — a batched BFS answering 30 queries clones 30 handles, not 30
+/// |V|-sized vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryResponse {
+    /// BFS levels per vertex ([`crate::alg::INF_I32`] = unreached).
+    Levels(Arc<Vec<i32>>),
+    /// Reachability per vertex.
+    Reachable(Vec<bool>),
+    /// SSSP distances per vertex.
+    Distances(Vec<f32>),
+    /// PageRank scores per vertex.
+    Ranks(Vec<f32>),
+}
+
+/// Typed post-admission failure (admission failures are rejected at
+/// [`Server::submit`] with [`AdmissionError`] before a ticket exists).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The query cannot run on this graph (e.g. SSSP without weights).
+    Unsupported(String),
+    /// The engine run failed.
+    Engine(String),
+    /// The server shut down before answering.
+    Disconnected,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Unsupported(why) => write!(f, "unsupported query: {why}"),
+            ServeError::Engine(why) => write!(f, "engine failure: {why}"),
+            ServeError::Disconnected => write!(f, "server shut down before answering"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// An answered query: the payload plus where its latency went.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryAnswer {
+    pub response: QueryResponse,
+    pub metrics: QueryMetrics,
+}
+
+/// Handle to an admitted query; blocks until a worker answers.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<QueryAnswer, ServeError>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<QueryAnswer, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Disconnected))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Serving-layer knobs on top of the engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Dispatcher threads (each runs whole engine jobs; `0` = accept
+    /// submissions but never dispatch — used by saturation tests).
+    pub workers: usize,
+    /// Admission limit: queries admitted but not yet answered.
+    pub max_in_flight: usize,
+    /// Lane budget per batched traversal (capped at 64 bit lanes).
+    pub max_batch: usize,
+    /// Rounds for PageRank queries.
+    pub pagerank_rounds: usize,
+    /// Lane cache entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Engine configuration every query runs under (re-balancing
+    /// rejected — see [`ServeGraph::build`]).
+    pub engine: EngineConfig,
+}
+
+impl ServerConfig {
+    pub fn new(engine: EngineConfig) -> ServerConfig {
+        ServerConfig {
+            workers: 2,
+            max_in_flight: 64,
+            max_batch: 64,
+            pagerank_rounds: 5,
+            cache_capacity: 1024,
+            engine,
+        }
+    }
+}
+
+/// One admitted, not-yet-dispatched query. Dropping it (answered or not)
+/// releases its admission slot via the RAII guard.
+struct Pending {
+    kind: QueryKind,
+    _guard: AdmissionGuard,
+    enqueued_at: Instant,
+    tx: mpsc::Sender<Result<QueryAnswer, ServeError>>,
+}
+
+struct Shared {
+    graph: ServeGraph,
+    cfg: ServerConfig,
+    queue: Mutex<VecDeque<Pending>>,
+    ready: Condvar,
+    admission: Arc<Admission>,
+    cache: LaneCache,
+    metrics: ServeMetrics,
+    shutdown: AtomicBool,
+}
+
+/// The query server: admission → FIFO queue → worker threads dispatching
+/// batched or solo engine runs over one [`ServeGraph`].
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(graph: CsrGraph, cfg: ServerConfig) -> Result<Server> {
+        let sg = ServeGraph::build(graph, cfg.engine.clone())?;
+        let cache = LaneCache::new(&sg.graph, cfg.cache_capacity);
+        let shared = Arc::new(Shared {
+            graph: sg,
+            admission: Admission::new(cfg.max_in_flight),
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            cache,
+            metrics: ServeMetrics::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Ok(Server { shared, workers })
+    }
+
+    /// Submit one query. Lane-cache hits answer immediately without
+    /// consuming an admission slot; otherwise the query takes a slot (or
+    /// is rejected typed) and queues for a worker.
+    pub fn submit(&self, kind: QueryKind) -> Result<Ticket, AdmissionError> {
+        let (tx, rx) = mpsc::channel();
+        if let Some(src) = kind.lane_source() {
+            if let Some(levels) = self.shared.cache.get(src) {
+                let m = QueryMetrics {
+                    queue_wait_secs: 0.0,
+                    compute_secs: 0.0,
+                    supersteps: 0,
+                    teps: 0.0,
+                    batch_width: 1,
+                    cache_hit: true,
+                };
+                self.shared.metrics.record_query(m);
+                let _ = tx.send(Ok(QueryAnswer { response: respond(kind, &levels), metrics: m }));
+                return Ok(Ticket { rx });
+            }
+        }
+        let guard = match self.shared.admission.try_admit() {
+            Ok(g) => g,
+            Err(e) => {
+                self.shared.metrics.record_rejection();
+                return Err(e);
+            }
+        };
+        let pending = Pending { kind, _guard: guard, enqueued_at: Instant::now(), tx };
+        self.shared.queue.lock().unwrap().push_back(pending);
+        self.shared.ready.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.shared.admission.in_flight()
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.shared.graph.fingerprint()
+    }
+
+    pub fn report(&self) -> ServeReport {
+        self.shared.metrics.report()
+    }
+
+    /// Drain the queue, stop the workers, and return the final report.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop_workers();
+        self.report()
+    }
+
+    fn stop_workers(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_workers();
+    }
+}
+
+/// Shape one answer from a lane's level array.
+fn respond(kind: QueryKind, levels: &Arc<Vec<i32>>) -> QueryResponse {
+    match kind {
+        QueryKind::Bfs { .. } => QueryResponse::Levels(Arc::clone(levels)),
+        QueryKind::Reach { .. } => {
+            QueryResponse::Reachable(levels.iter().map(|&l| l != INF_I32).collect())
+        }
+        other => unreachable!("{} queries do not ride lanes", other.name()),
+    }
+}
+
+/// One unit of dispatched work.
+enum Work {
+    /// Lane-batched traversal: the pendings in pick order, one source per
+    /// lane, and each pending's lane.
+    Batch { pendings: Vec<Pending>, lane_sources: Vec<u32>, lane_of: Vec<usize> },
+    Solo(Pending),
+}
+
+/// Pop the next unit of work (caller holds the queue non-empty).
+fn take_work(q: &mut VecDeque<Pending>, max_batch: usize) -> Work {
+    let head_batchable = q.front().expect("caller checked non-empty").kind.batchable();
+    if !head_batchable {
+        return Work::Solo(q.pop_front().expect("checked above"));
+    }
+    let kinds: Vec<QueryKind> = q.iter().map(|p| p.kind).collect();
+    let sel = select_batch(&kinds, max_batch);
+    let mut pendings = Vec::with_capacity(sel.picked.len());
+    for &i in sel.picked.iter().rev() {
+        pendings.push(q.remove(i).expect("selected index in range"));
+    }
+    pendings.reverse(); // back to pick (FIFO) order, aligned with lane_of
+    Work::Batch { pendings, lane_sources: sel.lane_sources, lane_of: sel.lane_of }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let work = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.is_empty() {
+                    // graceful drain: exit only once the queue is empty
+                    if shared.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    q = shared.ready.wait(q).unwrap();
+                    continue;
+                }
+                break take_work(&mut q, shared.cfg.max_batch);
+            }
+        };
+        match work {
+            Work::Batch { pendings, lane_sources, lane_of } => {
+                run_batch(shared, pendings, &lane_sources, &lane_of)
+            }
+            Work::Solo(p) => run_solo(shared, p),
+        }
+    }
+}
+
+/// Dispatch one bit-parallel multi-source traversal and fan its lanes
+/// back out to the queries that rode them.
+fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane_of: &[usize]) {
+    let dispatched = Instant::now();
+    let fail_all = |pendings: Vec<Pending>, err: ServeError| {
+        for p in pendings {
+            let _ = p.tx.send(Err(err.clone()));
+        }
+    };
+    let mut alg = match MsBfs::new(lane_sources) {
+        Ok(a) => a,
+        Err(e) => return fail_all(pendings, ServeError::Engine(format!("{e:#}"))),
+    };
+    let r = match engine::run_shared(
+        &shared.graph.graph,
+        &shared.graph.graph,
+        &shared.graph.forward_pg,
+        &mut alg,
+        &shared.cfg.engine,
+    ) {
+        Ok(r) => r,
+        Err(e) => return fail_all(pendings, ServeError::Engine(format!("{e:#}"))),
+    };
+    let compute = dispatched.elapsed().as_secs_f64();
+    let traversed = alg.traversed_edges(&r.output, &shared.graph.graph, 1);
+    let teps = if compute > 0.0 { traversed as f64 / compute } else { 0.0 };
+    let width = lane_sources.len();
+    let lane_levels: Vec<Arc<Vec<i32>>> = r
+        .extra
+        .into_iter()
+        .map(|a| match a {
+            StateArray::I32(v) => Arc::new(v),
+            _ => unreachable!("msbfs lane outputs are i32 level arrays"),
+        })
+        .collect();
+    debug_assert_eq!(lane_levels.len(), width, "one collected level array per lane");
+    for (b, &src) in lane_sources.iter().enumerate() {
+        shared.cache.insert(src, Arc::clone(&lane_levels[b]));
+    }
+    shared.metrics.record_batch(pendings.len());
+    for (j, p) in pendings.into_iter().enumerate() {
+        let m = QueryMetrics {
+            queue_wait_secs: dispatched.saturating_duration_since(p.enqueued_at).as_secs_f64(),
+            compute_secs: compute,
+            supersteps: r.supersteps,
+            teps,
+            batch_width: width,
+            cache_hit: false,
+        };
+        shared.metrics.record_query(m);
+        let response = respond(p.kind, &lane_levels[lane_of[j]]);
+        let _ = p.tx.send(Ok(QueryAnswer { response, metrics: m }));
+    }
+}
+
+/// Dispatch one non-batchable query (SSSP / PageRank) solo.
+fn run_solo(shared: &Shared, p: Pending) {
+    let dispatched = Instant::now();
+    let g = &shared.graph.graph;
+    let cfg = &shared.cfg.engine;
+    let outcome: Result<(Vec<f32>, usize, u64)> = match p.kind {
+        QueryKind::Sssp { source } => {
+            if g.weights.is_none() {
+                let _ = p.tx.send(Err(ServeError::Unsupported(
+                    "sssp requires a weighted graph".into(),
+                )));
+                return;
+            }
+            let mut alg = Sssp::new(source);
+            engine::run_shared(g, g, &shared.graph.forward_pg, &mut alg, cfg).map(|r| {
+                let traversed = alg.traversed_edges(&r.output, g, 1);
+                (take_f32(r.output), r.supersteps, traversed)
+            })
+        }
+        QueryKind::Pagerank => {
+            let (rg, rpg) = shared.graph.reversed();
+            let rounds = shared.cfg.pagerank_rounds;
+            let mut alg = Pagerank::new(rounds);
+            engine::run_shared(g, rg, rpg, &mut alg, cfg).map(|r| {
+                let traversed = alg.traversed_edges(&r.output, g, rounds);
+                (take_f32(r.output), r.supersteps, traversed)
+            })
+        }
+        other => unreachable!("{} heads dispatch as batches", other.name()),
+    };
+    match outcome {
+        Err(e) => {
+            let _ = p.tx.send(Err(ServeError::Engine(format!("{e:#}"))));
+        }
+        Ok((values, supersteps, traversed)) => {
+            let compute = dispatched.elapsed().as_secs_f64();
+            let m = QueryMetrics {
+                queue_wait_secs: dispatched.saturating_duration_since(p.enqueued_at).as_secs_f64(),
+                compute_secs: compute,
+                supersteps,
+                teps: if compute > 0.0 { traversed as f64 / compute } else { 0.0 },
+                batch_width: 1,
+                cache_hit: false,
+            };
+            shared.metrics.record_query(m);
+            let response = match p.kind {
+                QueryKind::Sssp { .. } => QueryResponse::Distances(values),
+                QueryKind::Pagerank => QueryResponse::Ranks(values),
+                other => unreachable!("{} heads dispatch as batches", other.name()),
+            };
+            let _ = p.tx.send(Ok(QueryAnswer { response, metrics: m }));
+        }
+    }
+}
+
+fn take_f32(a: StateArray) -> Vec<f32> {
+    match a {
+        StateArray::F32(v) => v,
+        _ => unreachable!("solo outputs are f32 arrays"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::Bfs;
+    use crate::graph::{rmat, with_random_weights, RmatParams};
+
+    fn weighted_rmat(scale: u32, seed: u64) -> CsrGraph {
+        let mut el = rmat(&RmatParams::paper(scale, seed));
+        with_random_weights(&mut el, 64, seed ^ 0x9e37);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    fn server(g: &CsrGraph, workers: usize, limit: usize) -> Server {
+        let cfg = ServerConfig {
+            workers,
+            max_in_flight: limit,
+            ..ServerConfig::new(EngineConfig::host_only(2))
+        };
+        Server::start(g.clone(), cfg).unwrap()
+    }
+
+    #[test]
+    fn mixed_queries_match_solo_engine_runs() {
+        let g = weighted_rmat(7, 42);
+        let srv = server(&g, 2, 64);
+        let tickets: Vec<(QueryKind, Ticket)> = [
+            QueryKind::Bfs { source: 0 },
+            QueryKind::Reach { source: 3 },
+            QueryKind::Sssp { source: 0 },
+            QueryKind::Pagerank,
+        ]
+        .into_iter()
+        .map(|k| (k, srv.submit(k).unwrap()))
+        .collect();
+        for (kind, t) in tickets {
+            let a = t.wait().unwrap();
+            let cfg = EngineConfig::host_only(2);
+            match (kind, a.response) {
+                (QueryKind::Bfs { source }, QueryResponse::Levels(got)) => {
+                    let want = engine::run(&g, &mut Bfs::new(source), &cfg).unwrap();
+                    assert_eq!(got.as_slice(), want.output.as_i32());
+                }
+                (QueryKind::Reach { source }, QueryResponse::Reachable(got)) => {
+                    let want = engine::run(&g, &mut Bfs::new(source), &cfg).unwrap();
+                    let want: Vec<bool> =
+                        want.output.as_i32().iter().map(|&l| l != INF_I32).collect();
+                    assert_eq!(got, want);
+                }
+                (QueryKind::Sssp { source }, QueryResponse::Distances(got)) => {
+                    let want = engine::run(&g, &mut Sssp::new(source), &cfg).unwrap();
+                    assert_eq!(got.as_slice(), want.output.as_f32());
+                }
+                (QueryKind::Pagerank, QueryResponse::Ranks(got)) => {
+                    let want = engine::run(&g, &mut Pagerank::new(5), &cfg).unwrap();
+                    assert_eq!(got.as_slice(), want.output.as_f32());
+                }
+                (kind, other) => panic!("{} answered with {other:?}", kind.name()),
+            }
+        }
+        let report = srv.shutdown();
+        assert_eq!(report.served, 4);
+        assert_eq!(report.rejected, 0);
+    }
+
+    #[test]
+    fn saturation_rejects_typed_and_drains_on_shutdown() {
+        let g = weighted_rmat(6, 7);
+        // no workers: admitted queries stay queued, so saturation is
+        // deterministic
+        let srv = server(&g, 0, 2);
+        let t1 = srv.submit(QueryKind::Bfs { source: 0 }).unwrap();
+        let _t2 = srv.submit(QueryKind::Bfs { source: 1 }).unwrap();
+        let err = srv.submit(QueryKind::Bfs { source: 2 }).unwrap_err();
+        assert!(matches!(err, AdmissionError::Saturated { in_flight: 2, limit: 2 }));
+        assert_eq!(srv.in_flight(), 2);
+        let report = srv.shutdown();
+        assert_eq!(report.rejected, 1);
+        // with no workers the pending tickets resolve to Disconnected
+        assert_eq!(t1.wait().unwrap_err(), ServeError::Disconnected);
+    }
+
+    #[test]
+    fn repeated_sources_hit_the_lane_cache() {
+        let g = weighted_rmat(6, 11);
+        let srv = server(&g, 1, 16);
+        let a1 = srv.submit(QueryKind::Bfs { source: 5 }).unwrap().wait().unwrap();
+        assert!(!a1.metrics.cache_hit);
+        let a2 = srv.submit(QueryKind::Bfs { source: 5 }).unwrap().wait().unwrap();
+        assert!(a2.metrics.cache_hit, "second identical query is a cache hit");
+        assert_eq!(a1.response, a2.response);
+        // reach shares the cached lane
+        let a3 = srv.submit(QueryKind::Reach { source: 5 }).unwrap().wait().unwrap();
+        assert!(a3.metrics.cache_hit);
+        let report = srv.shutdown();
+        assert_eq!(report.cache_hits, 2);
+        assert_eq!(report.served, 3);
+    }
+
+    #[test]
+    fn sssp_on_unweighted_graph_is_a_typed_unsupported_error() {
+        let el = rmat(&RmatParams::paper(6, 3));
+        let g = CsrGraph::from_edge_list(&el);
+        let srv = server(&g, 1, 16);
+        let err = srv.submit(QueryKind::Sssp { source: 0 }).unwrap().wait().unwrap_err();
+        assert!(matches!(err, ServeError::Unsupported(_)));
+        assert!(format!("{err}").contains("weighted"));
+    }
+
+    #[test]
+    fn a_burst_of_batchable_queries_answers_in_few_batches() {
+        let g = weighted_rmat(7, 19);
+        // single worker: the first query dispatches solo-ish, the rest
+        // pile up and must leave in (at most a few) batched runs
+        let srv = server(&g, 1, 64);
+        let tickets: Vec<Ticket> = (0..24)
+            .map(|s| srv.submit(QueryKind::Bfs { source: s % 12 }).unwrap())
+            .collect();
+        let cfg = EngineConfig::host_only(2);
+        for (s, t) in tickets.into_iter().enumerate() {
+            let a = t.wait().unwrap();
+            let want = engine::run(&g, &mut Bfs::new((s % 12) as u32), &cfg).unwrap();
+            match a.response {
+                QueryResponse::Levels(got) => assert_eq!(got.as_slice(), want.output.as_i32()),
+                other => panic!("bfs answered with {other:?}"),
+            }
+        }
+        let report = srv.shutdown();
+        // cache hits + batching: far fewer engine runs than queries
+        assert!(
+            report.batches + report.cache_hits < 24,
+            "24 queries should not take 24 runs (batches {}, cache hits {})",
+            report.batches,
+            report.cache_hits
+        );
+        assert_eq!(report.served, 24);
+    }
+}

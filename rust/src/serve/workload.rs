@@ -1,0 +1,157 @@
+//! Query vocabulary and replayable query files for `totem serve`
+//! (DESIGN.md §13.5).
+//!
+//! A query file is one query per line, `#` comments and blank lines
+//! ignored:
+//!
+//! ```text
+//! bfs 17        # full level array from source 17
+//! reach 17      # reachable-set bit from source 17 (batches with bfs)
+//! sssp 42       # weighted distances (requires a weighted graph)
+//! pagerank      # fixed-round ranks
+//! ```
+//!
+//! Replay paces submissions at a configured arrival rate
+//! (queries/second; `0` = submit as fast as possible), which is how the
+//! serving benchmarks model open-loop load.
+
+use anyhow::{bail, Result};
+
+/// One query. `Bfs` and `Reach` are **lane-compatible**: both are
+/// answered by one bit lane of a multi-source traversal, so the batcher
+/// may pack them into the same run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryKind {
+    /// Per-vertex BFS levels from `source`.
+    Bfs { source: u32 },
+    /// Per-vertex reachability from `source` (a BFS that only keeps the
+    /// seen bit — served from the same lane as [`QueryKind::Bfs`]).
+    Reach { source: u32 },
+    /// Weighted single-source shortest paths from `source`.
+    Sssp { source: u32 },
+    /// Fixed-round PageRank over the whole graph.
+    Pagerank,
+}
+
+impl QueryKind {
+    /// Can this query ride a bit lane of a batched traversal?
+    pub fn batchable(&self) -> bool {
+        matches!(self, QueryKind::Bfs { .. } | QueryKind::Reach { .. })
+    }
+
+    /// The traversal source for lane-batchable kinds.
+    pub fn lane_source(&self) -> Option<u32> {
+        match *self {
+            QueryKind::Bfs { source } | QueryKind::Reach { source } => Some(source),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueryKind::Bfs { .. } => "bfs",
+            QueryKind::Reach { .. } => "reach",
+            QueryKind::Sssp { .. } => "sssp",
+            QueryKind::Pagerank => "pagerank",
+        }
+    }
+}
+
+/// Parse one query line (already comment/blank-filtered).
+pub fn parse_query(line: &str) -> Result<QueryKind> {
+    let mut it = line.split_whitespace();
+    let head = it.next().expect("caller filters blank lines");
+    let arg = it.next();
+    if it.next().is_some() {
+        bail!("query '{line}': trailing tokens");
+    }
+    let source = |what: &str| -> Result<u32> {
+        let Some(a) = arg else { bail!("query '{line}': {what} needs a source vertex") };
+        a.parse::<u32>()
+            .map_err(|_| anyhow::anyhow!("query '{line}': bad source '{a}'"))
+    };
+    match head.to_ascii_lowercase().as_str() {
+        "bfs" => Ok(QueryKind::Bfs { source: source("bfs")? }),
+        "reach" => Ok(QueryKind::Reach { source: source("reach")? }),
+        "sssp" => Ok(QueryKind::Sssp { source: source("sssp")? }),
+        "pagerank" | "pr" => {
+            if arg.is_some() {
+                bail!("query '{line}': pagerank takes no source");
+            }
+            Ok(QueryKind::Pagerank)
+        }
+        other => bail!("query '{line}': unknown kind '{other}' (bfs|reach|sssp|pagerank)"),
+    }
+}
+
+/// Parse a whole query file (one query per line; `#` comments).
+pub fn parse_query_file(text: &str) -> Result<Vec<QueryKind>> {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or("").trim())
+        .filter(|l| !l.is_empty())
+        .map(parse_query)
+        .collect()
+}
+
+/// Inter-arrival pacing for replay: at `rate_qps == 0` every delay is
+/// zero (closed-loop, as fast as the server admits); otherwise queries
+/// arrive uniformly spaced at the configured open-loop rate.
+pub fn arrival_delay_secs(rate_qps: f64) -> f64 {
+    if rate_qps <= 0.0 {
+        0.0
+    } else {
+        1.0 / rate_qps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_query_vocabulary() {
+        assert_eq!(parse_query("bfs 17").unwrap(), QueryKind::Bfs { source: 17 });
+        assert_eq!(parse_query("REACH 4").unwrap(), QueryKind::Reach { source: 4 });
+        assert_eq!(parse_query("sssp 42").unwrap(), QueryKind::Sssp { source: 42 });
+        assert_eq!(parse_query("pagerank").unwrap(), QueryKind::Pagerank);
+        assert_eq!(parse_query("pr").unwrap(), QueryKind::Pagerank);
+    }
+
+    #[test]
+    fn rejects_malformed_queries() {
+        assert!(parse_query("bfs").is_err(), "missing source");
+        assert!(parse_query("bfs x").is_err(), "non-numeric source");
+        assert!(parse_query("bfs 1 2").is_err(), "trailing tokens");
+        assert!(parse_query("pagerank 3").is_err(), "pagerank takes no source");
+        assert!(parse_query("dijkstra 1").is_err(), "unknown kind");
+    }
+
+    #[test]
+    fn file_parsing_skips_comments_and_blanks() {
+        let qs = parse_query_file("# header\nbfs 1\n\n  reach 2 # inline\npagerank\n").unwrap();
+        assert_eq!(
+            qs,
+            vec![
+                QueryKind::Bfs { source: 1 },
+                QueryKind::Reach { source: 2 },
+                QueryKind::Pagerank
+            ]
+        );
+    }
+
+    #[test]
+    fn batchability_and_lane_sources() {
+        assert!(QueryKind::Bfs { source: 1 }.batchable());
+        assert!(QueryKind::Reach { source: 1 }.batchable());
+        assert!(!QueryKind::Sssp { source: 1 }.batchable());
+        assert!(!QueryKind::Pagerank.batchable());
+        assert_eq!(QueryKind::Reach { source: 9 }.lane_source(), Some(9));
+        assert_eq!(QueryKind::Pagerank.lane_source(), None);
+    }
+
+    #[test]
+    fn arrival_pacing() {
+        assert_eq!(arrival_delay_secs(0.0), 0.0);
+        assert!((arrival_delay_secs(200.0) - 0.005).abs() < 1e-12);
+    }
+}

@@ -8,7 +8,7 @@
 //! full barrier between the compute and communication phases, so only
 //! atomicity (not ordering) is required within a phase.
 
-use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicI32, AtomicU32, AtomicU64, Ordering};
 
 /// Atomically `*a = min(*a, v)`; returns the previous value.
 #[inline]
@@ -88,6 +88,15 @@ pub fn as_atomic_f32_cells(xs: &mut [f32]) -> &[AtomicU32] {
 #[inline]
 pub fn as_atomic_i32_cells(xs: &mut [i32]) -> &[AtomicI32] {
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicI32, xs.len()) }
+}
+
+/// View a `&mut [u64]` as atomic u64 cells (the bit-parallel MS-BFS lane
+/// words). Sound for the same reason as the 32-bit views: `AtomicU64` has
+/// the same size/alignment as `u64` and the mutable borrow guarantees
+/// exclusive ownership for the duration.
+#[inline]
+pub fn as_atomic_u64_cells(xs: &mut [u64]) -> &[AtomicU64] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const AtomicU64, xs.len()) }
 }
 
 #[cfg(test)]
@@ -186,5 +195,13 @@ mod tests {
             atomic_min_i32(&cells[0], 2);
         }
         assert_eq!(ys, vec![2, 6]);
+
+        let mut zs = vec![0b1u64, 0];
+        {
+            let cells = as_atomic_u64_cells(&mut zs);
+            cells[0].fetch_or(0b100, Ordering::Relaxed);
+            cells[1].fetch_or(1 << 63, Ordering::Relaxed);
+        }
+        assert_eq!(zs, vec![0b101, 1 << 63]);
     }
 }

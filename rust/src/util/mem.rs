@@ -6,11 +6,88 @@
 //! no portable equivalent without new dependencies, so the probes return
 //! `None` and callers print `n/a` — accounting is advisory, never
 //! load-bearing for correctness.
+//!
+//! **Per-measurement peaks.** Raw `VmHWM` is a process-*lifetime* high
+//! water mark: in a process that measures many configurations (the
+//! harness, `totem serve`, benches), every report after the biggest run
+//! would repeat that run's peak. [`PeakRssProbe`] scopes the watermark to
+//! one measured region by resetting it through `/proc/self/clear_refs`
+//! (writing `"5"`, Linux ≥ 4.0) at region start; where the reset is
+//! unavailable (non-Linux, hardened /proc) it degrades to a documented
+//! baseline+delta estimate.
 
 /// Peak resident set size of this process in bytes (`VmHWM`), if the
-/// platform exposes it.
+/// platform exposes it. Process-lifetime unless reset — use
+/// [`PeakRssProbe`] for per-region accounting.
 pub fn peak_rss_bytes() -> Option<u64> {
     proc_status_kb("VmHWM:").map(|kb| kb * 1024)
+}
+
+/// Reset the kernel's peak-RSS watermark (`VmHWM`) to the current RSS by
+/// writing `"5"` to `/proc/self/clear_refs`. Returns whether the reset
+/// took effect; `false` on non-Linux targets or when /proc is hardened.
+pub fn reset_peak_rss() -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        std::fs::write("/proc/self/clear_refs", "5").is_ok()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+/// Peak-RSS accounting scoped to one measured region.
+///
+/// [`PeakRssProbe::start`] resets the kernel watermark when it can;
+/// [`PeakRssProbe::peak`] then reads a true per-region peak. When the
+/// reset is unavailable the probe falls back to baseline+delta: if the
+/// region pushed a **new** lifetime high water, that absolute peak is the
+/// region's peak too; otherwise the region's real peak is unobservable
+/// and the probe reports `max(baseline RSS, final RSS)` — a lower bound.
+/// Residual caveat: the fallback can under-report transient spikes that
+/// stayed below an *earlier* region's high water.
+pub struct PeakRssProbe {
+    reset_ok: bool,
+    baseline_peak: Option<u64>,
+    baseline_current: Option<u64>,
+}
+
+impl PeakRssProbe {
+    /// Open a measured region (resets `VmHWM` when the platform allows).
+    pub fn start() -> PeakRssProbe {
+        let reset_ok = reset_peak_rss();
+        PeakRssProbe {
+            reset_ok,
+            baseline_peak: peak_rss_bytes(),
+            baseline_current: current_rss_bytes(),
+        }
+    }
+
+    /// Did the watermark reset take effect (i.e. is [`Self::peak`] a true
+    /// per-region peak rather than the fallback estimate)?
+    pub fn is_exact(&self) -> bool {
+        self.reset_ok
+    }
+
+    /// Peak RSS attributable to the region since [`Self::start`].
+    pub fn peak(&self) -> Option<u64> {
+        let peak_now = peak_rss_bytes()?;
+        if self.reset_ok {
+            return Some(peak_now);
+        }
+        let bp = self.baseline_peak?;
+        if peak_now > bp {
+            // the region set a new lifetime high water — that IS its peak
+            return Some(peak_now);
+        }
+        // unobservable under an older high water: lower-bound estimate
+        match (self.baseline_current, current_rss_bytes()) {
+            (Some(bc), Some(cur)) => Some(bc.max(cur)),
+            (Some(bc), None) => Some(bc),
+            (None, cur) => cur,
+        }
+    }
 }
 
 /// Current resident set size of this process in bytes (`VmRSS`), if the
@@ -59,5 +136,35 @@ mod tests {
         assert_eq!(sum, 64 << 20);
         let after = peak_rss_bytes().unwrap();
         assert!(after >= before, "peak RSS is monotone");
+    }
+
+    /// The repeated-measurement regression (ISSUE 8): without the reset,
+    /// a small region measured after a large one inherits the large
+    /// region's lifetime watermark. With [`PeakRssProbe`] the second,
+    /// much smaller region must report a strictly smaller peak.
+    #[test]
+    fn probe_scopes_peak_to_the_measured_region() {
+        fn touch(mb: usize) -> u64 {
+            let buf = vec![1u8; mb << 20];
+            buf.iter().map(|&b| b as u64).sum()
+        }
+        let p1 = PeakRssProbe::start();
+        assert_eq!(touch(64), 64 << 20);
+        let peak1 = p1.peak().unwrap();
+        // 64 MiB was freed (> MMAP_THRESHOLD, so munmapped) before the
+        // second region opens
+        let p2 = PeakRssProbe::start();
+        assert_eq!(touch(8), 8 << 20);
+        let peak2 = p2.peak().unwrap();
+        if p1.is_exact() && p2.is_exact() {
+            assert!(
+                peak2 < peak1,
+                "per-region peaks must not inherit earlier watermarks \
+                 (region1 {peak1} B, region2 {peak2} B)"
+            );
+        } else {
+            // hardened /proc: the fallback still reports something sane
+            assert!(peak2 > 0 && peak1 > 0);
+        }
     }
 }

@@ -25,6 +25,20 @@
 //! calling thread with its original payload — never swallowed, never
 //! `expect`ed inside the pool.
 //!
+//! **Concurrent-caller contract** (the serving layer and the pipelined
+//! executor depend on this, DESIGN.md §13): any number of threads may
+//! submit jobs concurrently. Submission is one queue push under a single
+//! mutex; per-job state (`JobHeader`) lives on the submitting caller's
+//! stack, so jobs share nothing but the queue. Every submitter
+//! help-drains the queue until its own job quiesces — it may execute
+//! *another* job's chunks while waiting, so a saturated pool degrades to
+//! caller-executed work instead of deadlocking, and total progress is
+//! guaranteed with zero pool workers. `ensure_workers` is grow-only and
+//! idempotent: concurrent sizing races are benign (the pool ends at the
+//! max of all requests and never shrinks mid-job). Per-job determinism
+//! (ascending-order combine, panic ownership) is unaffected by
+//! concurrent submitters.
+//!
 //! The thread count models the paper's `xS` configurations (CPU sockets).
 //! On a 1-core container the structure is exercised but wall-clock speedup
 //! is not observable; see DESIGN.md §2.
@@ -37,8 +51,13 @@ use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Upper bound on pool threads; a safety valve, far above any realistic
-/// `available_parallelism` on this testbed.
-const MAX_POOL_WORKERS: usize = 256;
+/// `available_parallelism` on this testbed. Public because the effective
+/// thread count must be clamped *consistently* everywhere: `ChunkPlan`
+/// sizing, `EngineConfig::validate` (typed rejection of `--threads`
+/// above the cap), and `default_threads()` all honor this one constant —
+/// `ensure_workers` silently capping while plans cut more chunks was the
+/// PR 8 oversubscription bug.
+pub const MAX_POOL_WORKERS: usize = 256;
 
 // ---------------------------------------------------------------------------
 // Balance modes and chunk plans

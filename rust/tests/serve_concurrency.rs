@@ -1,0 +1,304 @@
+//! Concurrency suite for the query-serving layer (ISSUE 8; DESIGN.md §13).
+//!
+//! Four contracts, each load-bearing for the serving design:
+//!
+//! 1. **Shared-graph fidelity** — N threads submitting mixed
+//!    BFS/SSSP/PageRank queries against one server get answers
+//!    bit-identical to solo `engine::run` executions of the same
+//!    algorithm on the same graph. Concurrent `run_shared` calls on the
+//!    persistent worker pool never bleed state across runs.
+//! 2. **Typed saturation** — a stampede of submitters against a tiny
+//!    admission limit admits exactly `limit` queries and rejects the rest
+//!    with [`AdmissionError::Saturated`], never a panic or silent queue.
+//! 3. **64-lane bit identity** — a full-width multi-source BFS matches 64
+//!    sequential single-source runs lane-for-lane exactly, and the same
+//!    batch stays identical under the pipelined executor.
+//! 4. **Batch-width fuzz** — a seeded sweep samples batch widths, source
+//!    multisets (repeats included) and engine configurations, checking
+//!    every lane against its solo run. Failures carry the sweep seed:
+//!    `SERVE_FUZZ_SEED=<seed> cargo test --test serve_concurrency`.
+
+use std::sync::Arc;
+use totem::alg::bfs::Bfs;
+use totem::alg::msbfs::MsBfs;
+use totem::alg::pagerank::Pagerank;
+use totem::alg::sssp::Sssp;
+use totem::alg::INF_I32;
+use totem::engine::{self, EngineConfig, ExecMode};
+use totem::graph::generator::{rmat, with_random_weights, RmatParams};
+use totem::graph::CsrGraph;
+use totem::partition::{Strategy, ALL_PLACEMENTS};
+use totem::serve::{AdmissionError, QueryKind, QueryResponse, Server, ServerConfig};
+use totem::util::rng::Rng;
+
+fn weighted_rmat(scale: u32, seed: u64) -> CsrGraph {
+    let mut el = rmat(&RmatParams::paper(scale, seed));
+    with_random_weights(&mut el, 64, seed ^ 0xabcd);
+    CsrGraph::from_edge_list(&el)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Contract 1: concurrent mixed queries match solo engine runs exactly.
+#[test]
+fn concurrent_mixed_queries_match_solo_runs_bit_for_bit() {
+    let g = weighted_rmat(8, 21);
+    let cfg = EngineConfig::host_only(2);
+
+    // Solo expectations, computed up front on the main thread.
+    let sources: Vec<u32> = (0..8).map(|i| i * 17 % g.vertex_count as u32).collect();
+    let bfs_want: Vec<Vec<i32>> = sources
+        .iter()
+        .map(|&s| engine::run(&g, &mut Bfs::new(s), &cfg).unwrap().output.as_i32().to_vec())
+        .collect();
+    let sssp_want: Vec<Vec<f32>> = sources
+        .iter()
+        .map(|&s| engine::run(&g, &mut Sssp::new(s), &cfg).unwrap().output.as_f32().to_vec())
+        .collect();
+    let pr_want = engine::run(&g, &mut Pagerank::new(5), &cfg).unwrap().output.as_f32().to_vec();
+
+    let srv = Server::start(
+        g.clone(),
+        ServerConfig { workers: 4, max_in_flight: 256, ..ServerConfig::new(cfg.clone()) },
+    )
+    .unwrap();
+
+    std::thread::scope(|scope| {
+        for (t, &src) in sources.iter().enumerate() {
+            let (srv, bfs_want, sssp_want, pr_want) = (&srv, &bfs_want, &sssp_want, &pr_want);
+            scope.spawn(move || {
+                for round in 0..3 {
+                    let a = srv.submit(QueryKind::Bfs { source: src }).unwrap().wait().unwrap();
+                    match a.response {
+                        QueryResponse::Levels(got) => {
+                            assert_eq!(
+                                got.as_slice(),
+                                bfs_want[t].as_slice(),
+                                "bfs {src} diverged (thread {t}, round {round})"
+                            );
+                        }
+                        other => panic!("bfs answered with {other:?}"),
+                    }
+                    let a = srv.submit(QueryKind::Sssp { source: src }).unwrap().wait().unwrap();
+                    match a.response {
+                        QueryResponse::Distances(got) => {
+                            assert_eq!(
+                                got, sssp_want[t],
+                                "sssp {src} diverged (thread {t}, round {round})"
+                            );
+                        }
+                        other => panic!("sssp answered with {other:?}"),
+                    }
+                    let a = srv.submit(QueryKind::Pagerank).unwrap().wait().unwrap();
+                    match a.response {
+                        QueryResponse::Ranks(got) => {
+                            assert_eq!(got, *pr_want, "pagerank diverged (thread {t}, round {round})");
+                        }
+                        other => panic!("pagerank answered with {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let report = srv.shutdown();
+    assert_eq!(report.served, 8 * 3 * 3);
+    assert_eq!(report.rejected, 0, "limit 256 never saturates here");
+}
+
+/// Contract 2: a submitter stampede against a tiny limit yields exactly
+/// `limit` admissions and typed rejections for the rest. No workers, so
+/// admitted queries hold their slots for the whole test — deterministic.
+#[test]
+fn submitter_stampede_saturates_typed() {
+    let g = weighted_rmat(6, 5);
+    let limit = 3;
+    let srv = Server::start(
+        g,
+        ServerConfig {
+            workers: 0,
+            max_in_flight: limit,
+            ..ServerConfig::new(EngineConfig::host_only(1))
+        },
+    )
+    .unwrap();
+    let admitted = std::sync::atomic::AtomicUsize::new(0);
+    let rejected = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..16 {
+            let (srv, admitted, rejected) = (&srv, &admitted, &rejected);
+            scope.spawn(move || match srv.submit(QueryKind::Bfs { source: t }) {
+                Ok(_ticket) => {
+                    // the slot is held by the queued query (no workers to
+                    // drain it), not by the ticket
+                    admitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                Err(e) => {
+                    assert!(matches!(e, AdmissionError::Saturated { .. }));
+                    rejected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(admitted.load(std::sync::atomic::Ordering::Relaxed), limit);
+    assert_eq!(rejected.load(std::sync::atomic::Ordering::Relaxed), 16 - limit);
+    assert_eq!(srv.in_flight(), limit);
+    let report = srv.shutdown();
+    assert_eq!(report.rejected, (16 - limit) as u64);
+}
+
+/// Contract 3: full-width (64-lane) MS-BFS equals 64 sequential solo runs
+/// lane-for-lane, under both executors.
+#[test]
+fn sixty_four_lanes_match_sixty_four_solo_runs() {
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(8, 2)));
+    let sources: Vec<u32> = (0..64).map(|i| (i * 37 + 5) % g.vertex_count as u32).collect();
+    let solo: Vec<Vec<i32>> = sources
+        .iter()
+        .map(|&s| {
+            engine::run(&g, &mut Bfs::new(s), &EngineConfig::host_only(1))
+                .unwrap()
+                .output
+                .as_i32()
+                .to_vec()
+        })
+        .collect();
+    for cfg in [
+        EngineConfig::host_only(2),
+        EngineConfig::cpu_partitions(&[0.4, 0.6], Strategy::High).with_mode(ExecMode::Pipelined),
+    ] {
+        let mut alg = MsBfs::new(&sources).unwrap();
+        let r = engine::run(&g, &mut alg, &cfg).unwrap();
+        assert_eq!(r.extra.len(), 64);
+        for (b, want) in solo.iter().enumerate() {
+            assert_eq!(
+                r.extra[b].as_i32(),
+                want.as_slice(),
+                "lane {b} (source {}) diverged under {:?}",
+                sources[b],
+                cfg.mode
+            );
+        }
+        // seen masks agree with the lanes they summarize
+        let seen = r.output.as_u64();
+        for v in 0..g.vertex_count {
+            for b in 0..64 {
+                assert_eq!(
+                    (seen[v] >> b) & 1 == 1,
+                    solo[b][v] != INF_I32,
+                    "seen bit {b} of vertex {v} contradicts its lane"
+                );
+            }
+        }
+    }
+}
+
+/// Contract 3 through the server: 64 distinct sources submitted at once
+/// all come back equal to their solo runs, however the batcher slices
+/// them.
+#[test]
+fn server_answers_a_full_width_burst_correctly() {
+    let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 13)));
+    let cfg = EngineConfig::host_only(2);
+    let sources: Vec<u32> = (0..64).map(|i| (i * 29 + 1) % g.vertex_count as u32).collect();
+    let srv = Server::start(
+        g.clone(),
+        ServerConfig { workers: 1, max_in_flight: 128, ..ServerConfig::new(cfg.clone()) },
+    )
+    .unwrap();
+    let tickets: Vec<_> =
+        sources.iter().map(|&s| srv.submit(QueryKind::Bfs { source: s }).unwrap()).collect();
+    for (b, t) in tickets.into_iter().enumerate() {
+        let want = engine::run(&g, &mut Bfs::new(sources[b]), &cfg).unwrap();
+        match t.wait().unwrap().response {
+            QueryResponse::Levels(got) => {
+                assert_eq!(got.as_slice(), want.output.as_i32(), "source {} diverged", sources[b])
+            }
+            other => panic!("bfs answered with {other:?}"),
+        }
+    }
+    srv.shutdown();
+}
+
+/// Contract 4: seeded fuzz over batch widths, source multisets, and
+/// engine configurations.
+#[test]
+fn fuzz_batch_widths_against_solo_runs() {
+    let seed = env_u64("SERVE_FUZZ_SEED", 0x5E21);
+    let iters = env_u64("SERVE_FUZZ_ITERS", 12) as usize;
+    let mut rng = Rng::new(seed);
+    let pool: Vec<CsrGraph> = vec![
+        CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 3))),
+        CsrGraph::from_edge_list(&rmat(&RmatParams::paper(6, 8))),
+    ];
+    for iter in 0..iters {
+        let g = &pool[rng.below(pool.len() as u64) as usize];
+        let width = 1 + rng.below(64) as usize;
+        // repeats allowed: duplicate sources must still fill their own
+        // lanes with identical answers
+        let sources: Vec<u32> =
+            (0..width).map(|_| rng.below(g.vertex_count as u64) as u32).collect();
+        let parts = 1 + rng.below(3) as usize;
+        let mut shares: Vec<f64> = (0..parts).map(|_| 0.2 + rng.next_f64()).collect();
+        let total: f64 = shares.iter().sum();
+        shares.iter_mut().for_each(|s| *s /= total);
+        let mode = if rng.below(2) == 0 { ExecMode::Synchronous } else { ExecMode::Pipelined };
+        let strategy = [Strategy::Rand, Strategy::High, Strategy::Low][rng.below(3) as usize];
+        let placement = ALL_PLACEMENTS[rng.below(ALL_PLACEMENTS.len() as u64) as usize];
+        let cfg = EngineConfig::cpu_partitions(&shares, strategy)
+            .with_mode(mode)
+            .with_placement(placement)
+            .with_threads(1 + rng.below(3) as usize)
+            .with_seed(rng.below(1 << 20));
+        let label = format!(
+            "iter={iter}/{iters} seed={seed:#x} width={width} parts={parts} mode={mode:?} \
+             strategy={} placement={} sources={sources:?}",
+            strategy.name(),
+            placement.name()
+        );
+        let mut alg = MsBfs::new(&sources).unwrap();
+        let r = engine::run(g, &mut alg, &cfg)
+            .unwrap_or_else(|e| panic!("engine failed [{label}]: {e:#}"));
+        for (b, &s) in sources.iter().enumerate() {
+            let want = engine::run(g, &mut Bfs::new(s), &EngineConfig::host_only(1)).unwrap();
+            assert_eq!(
+                r.extra[b].as_i32(),
+                want.output.as_i32(),
+                "lane {b} diverged [{label}]"
+            );
+        }
+    }
+}
+
+/// The cache answers across submitter threads: after one thread computes
+/// a source, other threads' identical queries hit without recompute.
+#[test]
+fn cache_hits_are_shared_across_threads() {
+    let g = weighted_rmat(7, 31);
+    let srv = Arc::new(
+        Server::start(
+            g,
+            ServerConfig {
+                workers: 2,
+                max_in_flight: 64,
+                ..ServerConfig::new(EngineConfig::host_only(2))
+            },
+        )
+        .unwrap(),
+    );
+    // warm one source
+    let warm = srv.submit(QueryKind::Bfs { source: 9 }).unwrap().wait().unwrap();
+    assert!(!warm.metrics.cache_hit);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let srv = Arc::clone(&srv);
+            scope.spawn(move || {
+                let a = srv.submit(QueryKind::Reach { source: 9 }).unwrap().wait().unwrap();
+                assert!(a.metrics.cache_hit, "warmed source must hit from every thread");
+            });
+        }
+    });
+    let report = Arc::into_inner(srv).unwrap().shutdown();
+    assert_eq!(report.cache_hits, 4);
+}

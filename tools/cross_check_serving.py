@@ -1,0 +1,313 @@
+#!/usr/bin/env python3
+"""Independent cross-check of the query-serving layer (DESIGN.md §13).
+
+Re-implements, in pure Python, the three contracts the serving layer
+rests on and checks them offline (no toolchain, no network):
+
+  1. **Lane packing** (`serve/batch.rs::select_batch`): FIFO head anchor,
+     source-dedup lane joins, `min(max_batch, 64)` lane budget,
+     non-batchable queries never reordered. Pinned vectors mirror the
+     Rust unit tests; a seeded sweep checks the invariants on random
+     query streams.
+  2. **Bit-parallel MS-BFS** (`alg/program.rs::bit_traversal`): a
+     word-level simulation of the two-phase kernel (Phase A settle
+     next→seen + stamp lane levels, Phase B OR frontier words into
+     targets) must match one plain BFS per source, lane-for-lane, on
+     mirrored R-MAT graphs.
+  3. **Graph fingerprint** (`serve/cache.rs::graph_fingerprint`): FNV-1a
+     over n, m, weightedness and strided CSR samples — the cache identity
+     key. Pinned here so the Rust side cannot drift silently; with
+     `--totem` the fingerprint the live server prints must match the
+     Python mirror, and served BFS level dumps must equal Python BFS on
+     the mirrored graph.
+
+Exit 0 with a PASS summary, non-zero with the first failure.
+"""
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cross_sim_bench import Csr, Rng, rmat_paper
+from tcsr_v2 import fnv1a64
+
+INF_I32 = 1 << 30
+MAX_LANES = 64
+FINGERPRINT_SAMPLES = 1024
+
+_passed = []
+
+
+def check(name, cond, detail=""):
+    if not cond:
+        print("FAIL %s%s" % (name, (": " + detail) if detail else ""))
+        sys.exit(1)
+    _passed.append(name)
+    print("ok   %s" % name)
+
+
+# ---------------------------------------------------------------------------
+# 1. serve/batch.rs mirror
+# ---------------------------------------------------------------------------
+
+# A query is ("bfs", src) | ("reach", src) | ("sssp", src) | ("pagerank",)
+
+
+def lane_source(q):
+    return q[1] if q[0] in ("bfs", "reach") else None
+
+
+def select_batch(kinds, max_batch):
+    budget = max(1, min(max_batch, MAX_LANES))
+    assert lane_source(kinds[0]) is not None, "head must be lane-batchable"
+    picked, lane_sources, lane_of = [], [], []
+    for i, k in enumerate(kinds):
+        src = lane_source(k)
+        if src is None:
+            continue
+        if src in lane_sources:
+            picked.append(i)
+            lane_of.append(lane_sources.index(src))
+        elif len(lane_sources) < budget:
+            picked.append(i)
+            lane_of.append(len(lane_sources))
+            lane_sources.append(src)
+    return picked, lane_sources, lane_of
+
+
+def check_lane_packing():
+    # pinned vectors, mirroring serve/batch.rs unit tests
+    p, ls, lo = select_batch([("bfs", 5), ("reach", 7), ("bfs", 9)], 64)
+    check("batch.fifo", (p, ls, lo) == ([0, 1, 2], [5, 7, 9], [0, 1, 2]))
+    p, ls, lo = select_batch([("bfs", 5), ("reach", 5), ("bfs", 5), ("bfs", 8)], 64)
+    check("batch.dedup", (p, ls, lo) == ([0, 1, 2, 3], [5, 8], [0, 0, 0, 1]))
+    p, ls, lo = select_batch(
+        [("bfs", 1), ("pagerank",), ("sssp", 2), ("bfs", 3)], 64)
+    check("batch.nonbatchable", (p, ls) == ([0, 3], [1, 3]))
+    p, ls, lo = select_batch([("bfs", 1), ("bfs", 2), ("bfs", 3), ("bfs", 1)], 2)
+    check("batch.budget_joins", (p, ls, lo) == ([0, 1, 3], [1, 2], [0, 1, 0]))
+    p, ls, lo = select_batch([("bfs", s) for s in range(100)], 1000)
+    check("batch.clamp64", len(ls) == MAX_LANES and len(p) == MAX_LANES)
+
+    # seeded invariant sweep
+    rng = Rng(0xBA7C4)
+    for it in range(200):
+        n = 1 + rng.below(40)
+        kinds = []
+        for _ in range(n):
+            r = rng.below(4)
+            if r == 0:
+                kinds.append(("bfs", rng.below(8)))
+            elif r == 1:
+                kinds.append(("reach", rng.below(8)))
+            elif r == 2:
+                kinds.append(("sssp", rng.below(8)))
+            else:
+                kinds.append(("pagerank",))
+        if lane_source(kinds[0]) is None:
+            continue
+        budget = 1 + rng.below(70)
+        picked, lane_sources, lane_of = select_batch(kinds, budget)
+        label = "iter %d kinds=%r budget=%d" % (it, kinds, budget)
+        # head anchors; pick order is FIFO; lanes are first-seen order
+        assert picked[0] == 0, label
+        assert picked == sorted(picked), label
+        assert len(lane_sources) == len(set(lane_sources)) <= min(budget, MAX_LANES), label
+        for j, i in enumerate(picked):
+            assert lane_sources[lane_of[j]] == lane_source(kinds[i]), label
+        # completeness: an unpicked batchable query must have a new source
+        # (joins are unconditional) and the lane budget must be full
+        for i, k in enumerate(kinds):
+            src = lane_source(k)
+            if src is None:
+                assert i not in picked, label
+            elif i not in picked:
+                assert src not in lane_sources, label
+                assert len(lane_sources) == min(budget, MAX_LANES), label
+    check("batch.invariant_sweep", True)
+
+
+# ---------------------------------------------------------------------------
+# 2. bit-parallel MS-BFS kernel mirror
+# ---------------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+
+
+def plain_bfs(g, src):
+    levels = [INF_I32] * g.n
+    levels[src] = 0
+    frontier = [src]
+    d = 0
+    while frontier:
+        d += 1
+        nxt = []
+        for v in frontier:
+            for t in g.targets(v):
+                if levels[t] == INF_I32:
+                    levels[t] = d
+                    nxt.append(t)
+        frontier = nxt
+    return levels
+
+
+def msbfs_words(g, sources):
+    """Word-level simulation of Kernel::BitTraversal's two-phase cycle."""
+    lanes = len(sources)
+    nxt = [0] * g.n
+    seen = [0] * g.n
+    frontier = [0] * g.n
+    levels = [[INF_I32] * g.n for _ in range(lanes)]
+    for b, s in enumerate(sources):
+        nxt[s] |= 1 << b
+    level = 0
+    while True:
+        changed = False
+        # Phase A: settle next into seen, stamp levels for new bits
+        for v in range(g.n):
+            new = nxt[v] & ~seen[v] & MASK64
+            if new:
+                changed = True
+                seen[v] |= new
+                bits = new
+                while bits:
+                    b = (bits & -bits).bit_length() - 1
+                    levels[b][v] = level
+                    bits &= bits - 1
+            frontier[v] = new
+            nxt[v] = 0
+        # Phase B: OR frontier words into targets
+        for v in range(g.n):
+            w = frontier[v]
+            if not w:
+                continue
+            for t in g.targets(v):
+                if w & ~nxt[t] & MASK64:
+                    changed = True
+                nxt[t] |= w
+        if not changed:
+            return seen, levels
+        level += 1
+
+
+def check_msbfs():
+    for scale, seed in ((6, 9), (7, 3)):
+        n, edges = rmat_paper(scale, seed)
+        g = Csr(n, edges)
+        rng = Rng(seed ^ 0x15)
+        sources = [rng.below(n) for _ in range(MAX_LANES)]
+        seen, lanes = msbfs_words(g, sources)
+        for b, s in enumerate(sources):
+            want = plain_bfs(g, s)
+            if lanes[b] != want:
+                diff = next(v for v in range(n) if lanes[b][v] != want[v])
+                check("msbfs.lane", False,
+                      "rmat%d/%d lane %d (source %d) differs at vertex %d" %
+                      (scale, seed, b, s, diff))
+        for v in range(n):
+            for b in range(MAX_LANES):
+                assert ((seen[v] >> b) & 1 == 1) == (lanes[b][v] != INF_I32), \
+                    "seen bit %d of vertex %d contradicts its lane" % (b, v)
+        check("msbfs.rmat%d_%d_64lane" % (scale, seed), True)
+    # duplicate sources fill identical lanes
+    n, edges = rmat_paper(6, 2)
+    g = Csr(n, edges)
+    seen, lanes = msbfs_words(g, [4, 4, 9])
+    check("msbfs.duplicate_sources", lanes[0] == lanes[1] and lanes[0] == plain_bfs(g, 4))
+
+
+# ---------------------------------------------------------------------------
+# 3. graph fingerprint mirror (serve/cache.rs)
+# ---------------------------------------------------------------------------
+
+
+def graph_fingerprint(off, tgt, weighted):
+    n = len(off) - 1
+    m = len(tgt)
+    h = fnv1a64((n & MASK64).to_bytes(8, "little"))
+    h = fnv1a64((m & MASK64).to_bytes(8, "little"), h)
+    h = fnv1a64(int(weighted).to_bytes(8, "little"), h)
+    stride = max(1, len(off) // FINGERPRINT_SAMPLES)
+    for i in range(0, len(off), stride):
+        h = fnv1a64(off[i].to_bytes(8, "little"), h)
+    stride = max(1, len(tgt) // FINGERPRINT_SAMPLES)
+    for i in range(0, len(tgt), stride):
+        h = fnv1a64(tgt[i].to_bytes(8, "little"), h)
+    return h
+
+
+def check_fingerprint():
+    n1, e1 = rmat_paper(6, 9)
+    g1 = Csr(n1, e1)
+    f1 = graph_fingerprint(g1.off, g1.tgt, False)
+    f1b = graph_fingerprint(g1.off, g1.tgt, False)
+    check("fingerprint.reproducible", f1 == f1b)
+    n2, e2 = rmat_paper(6, 10)
+    g2 = Csr(n2, e2)
+    check("fingerprint.distinguishes",
+          f1 != graph_fingerprint(g2.off, g2.tgt, False))
+    check("fingerprint.weightedness",
+          f1 != graph_fingerprint(g1.off, g1.tgt, True))
+
+
+# ---------------------------------------------------------------------------
+# 4. [--totem] live serve run vs the mirrors
+# ---------------------------------------------------------------------------
+
+
+def check_live(totem):
+    scale, seed = 7, 42
+    n, edges = rmat_paper(scale, seed)
+    g = Csr(n, edges)
+    want_fp = graph_fingerprint(g.off, g.tgt, False)
+    sources = [0, 3, n - 1]
+    with tempfile.TemporaryDirectory() as d:
+        qfile = os.path.join(d, "queries.txt")
+        with open(qfile, "w") as f:
+            for s in sources:
+                f.write("bfs %d\n" % s)
+        dump = os.path.join(d, "dump")
+        proc = subprocess.run(
+            [totem, "serve", "--workload", "rmat%d" % scale, "--seed",
+             str(seed), "--queries", qfile, "--dump-dir", dump,
+             "--serve-workers", "1", "--threads", "2"],
+            capture_output=True, text=True)
+        check("live.exit0", proc.returncode == 0, proc.stderr[-2000:])
+        m = re.search(r"graph fingerprint ([0-9a-f]{16})", proc.stderr)
+        check("live.fingerprint_printed", m is not None, proc.stderr[-2000:])
+        check("live.fingerprint_matches", int(m.group(1), 16) == want_fp,
+              "rust %s python %016x" % (m.group(1), want_fp))
+        for i, s in enumerate(sources):
+            want = plain_bfs(g, s)
+            path = os.path.join(dump, "q%04d_bfs.txt" % i)
+            got = [None] * n
+            with open(path) as f:
+                for line in f:
+                    v, x = line.split()
+                    got[int(v)] = int(x)
+            check("live.bfs_%d_levels" % s, got == want,
+                  "first diff at vertex %d" %
+                  next((v for v in range(n) if got[v] != want[v]), -1))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--totem", help="path to a built totem binary for live checks")
+    args = ap.parse_args()
+    check_lane_packing()
+    check_msbfs()
+    check_fingerprint()
+    if args.totem:
+        check_live(args.totem)
+    else:
+        print("skip live checks (--totem not given)")
+    print("PASS %d checks" % len(_passed))
+
+
+if __name__ == "__main__":
+    main()
