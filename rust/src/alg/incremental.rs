@@ -1,0 +1,331 @@
+//! Incremental recompute after streaming mutations (DESIGN.md §14.3).
+//!
+//! Three strategies, picked by `harness::incremental_rerun` per algorithm
+//! and batch shape:
+//!
+//! - **Monotone warm start** (SSSP / CC / widest — and BFS via
+//!   [`BfsRelax`]): re-run the engine on the post-batch graph, but seed
+//!   every vertex with its prior converged value and re-activate only the
+//!   mutation-touched endpoints ([`super::program::WarmStart`]). After an
+//!   insert-only batch the old fixed point still over-approximates the new
+//!   one, so chaotic min/max relaxation re-converges to the *same* least
+//!   fixed point a cold run finds, computing candidates with the identical
+//!   binary ops — **bit-identical** output, touching only the affected
+//!   cone.
+//! - **Residual push** (PageRank): Gauss–Seidel push of the residual
+//!   `r = F(p_prior) − p_prior` on the new graph until quiescence
+//!   ([`pagerank_residual_push`]) — within the established f32 tolerance
+//!   of a converged from-scratch run.
+//! - **Full fallback**: any *effective* delete breaks the monotone
+//!   over-approximation invariant (a shortened distance may need to grow
+//!   back, which min-relaxation cannot do), so the caller falls back to a
+//!   cold run. Same for programs with no incremental form (BC's two-cycle
+//!   forward/backward sweeps).
+//!
+//! BFS needs its own program here because the level-synchronous
+//! [`Kernel::Traversal`] activation (`level == superstep`) cannot resume
+//! mid-wave: [`BfsRelax`] recasts BFS as unit-weight SSSP on the i32
+//! monotone-scatter family. Integer unit-distance relaxation has the same
+//! unique fixed point as wavefront BFS, so its levels are exactly the
+//! `Bfs` levels in every configuration (asserted by this module's tests
+//! and the differential-fuzz mutation axis).
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, Value, VertexProgram,
+};
+use super::{StepCtx, INF_I32};
+use crate::alg::pagerank::DAMPING;
+use crate::graph::CsrGraph;
+
+/// BFS as unit-distance monotone relaxation (module docs): warm-startable
+/// where [`crate::alg::bfs::Bfs`]'s level-synchronous kernel is not.
+pub struct BfsRelaxProgram {
+    pub source: u32,
+}
+
+const DIST: FieldId = FieldId(0);
+/// CPU-only shadow: distance at which the vertex last relaxed its edges.
+const RELAXED_AT: FieldId = FieldId(1);
+
+impl VertexProgram for BfsRelaxProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "bfs_relax",
+            needs_weights: false,
+            undirected: false,
+            reversed: false,
+            fixed_rounds: None,
+            output: DIST,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("dist", Role::Device, INF_I32),
+            FieldSpec::i32("relaxed_at", Role::Host, INF_I32),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::MonotoneScatter { value: DIST, shadow: RELAXED_AT },
+            comm: vec![CommDecl::PushMin(DIST)],
+            device: None,
+            accel: AccelSpec { name: "bfs_relax", n_si32: 0, n_sf32: 0 },
+        }
+    }
+
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        if global_id == self.source {
+            row.set_i32(DIST, 0);
+        }
+    }
+
+    /// Unit-weight relaxation: the whole of BFS, minus the wavefront.
+    fn edge_update(&self, _ctx: &StepCtx, src: Value, _w: f32) -> Option<Value> {
+        Some(Value::I32(src.expect_i32() + 1))
+    }
+}
+
+/// The engine-facing warm-startable BFS.
+pub type BfsRelax = ProgramDriver<BfsRelaxProgram>;
+
+impl BfsRelax {
+    pub fn new(source: u32) -> BfsRelax {
+        ProgramDriver::build(BfsRelaxProgram { source }).expect("static schema is valid")
+    }
+}
+
+/// Residual-push budget guard; hit only by a diverging bug, never by the
+/// geometric contraction (rate [`DAMPING`]) of a healthy run.
+pub const MAX_RESIDUAL_SWEEPS: usize = 10_000;
+
+/// Per-vertex residual quiescence threshold. The remaining error is
+/// bounded by `‖r‖₁ / (1 − d)`, so `1e-12` per vertex sits orders of
+/// magnitude under the fuzz suite's f32 tolerance (`1e-4·|x|` floored at
+/// `1e-7`).
+pub const RESIDUAL_EPS: f64 = 1e-12;
+
+/// Incremental PageRank by residual push (module docs; DESIGN.md §14.3).
+///
+/// `prior` is the previous rank vector by global id (any length: vertices
+/// the mutation grew start at the fresh-init `1/n`). One pull-free
+/// application of the PageRank operator on the *new* graph computes the
+/// initial residual, then deterministic ascending-id Gauss–Seidel sweeps
+/// push residual mass (`r[t] += d·r[v]/outdeg(v)`) until every vertex is
+/// quiescent. Dangling vertices drop their mass, matching the engine's
+/// semantics (`inv_outdeg = 0`). Returns the new ranks and the sweep
+/// count. Internally f64 so the comparison slack vs the engine's f32 run
+/// is the engine's own rounding, not ours.
+pub fn pagerank_residual_push(g: &CsrGraph, prior: &[f32]) -> (Vec<f32>, usize) {
+    let n = g.vertex_count;
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let d = DAMPING as f64;
+    let base = (1.0 - d) / n as f64;
+    let fresh = 1.0 / n as f64;
+    let mut p: Vec<f64> =
+        (0..n).map(|v| prior.get(v).map_or(fresh, |&x| x as f64)).collect();
+
+    // r = F(p) − p via one forward scatter of the operator
+    let mut r = vec![base; n];
+    for v in 0..n as u32 {
+        let nbrs = g.neighbors(v);
+        if nbrs.is_empty() {
+            continue;
+        }
+        let contrib = d * p[v as usize] / nbrs.len() as f64;
+        for &t in nbrs {
+            r[t as usize] += contrib;
+        }
+    }
+    for v in 0..n {
+        r[v] -= p[v];
+    }
+
+    let mut sweeps = 0;
+    while sweeps < MAX_RESIDUAL_SWEEPS {
+        sweeps += 1;
+        let mut any = false;
+        for v in 0..n {
+            let rv = r[v];
+            if rv.abs() <= RESIDUAL_EPS {
+                continue;
+            }
+            any = true;
+            p[v] += rv;
+            r[v] = 0.0;
+            let nbrs = g.neighbors(v as u32);
+            if nbrs.is_empty() {
+                continue;
+            }
+            let push = d * rv / nbrs.len() as f64;
+            for &t in nbrs {
+                r[t as usize] += push;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    (p.into_iter().map(|x| x as f32).collect(), sweeps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::Bfs;
+    use crate::alg::pagerank::Pagerank;
+    use crate::alg::program::WarmStart;
+    use crate::alg::sssp::Sssp;
+    use crate::engine::{self, EngineConfig};
+    use crate::engine::state::StateArray;
+    use crate::graph::delta::{apply, DeltaBatch, MutationOp};
+    use crate::graph::{generator, CsrGraph, EdgeList};
+    use crate::partition::Strategy;
+
+    fn rmat(scale: u32, seed: u64) -> CsrGraph {
+        let el = generator::rmat(&generator::RmatParams::paper(scale, 6 + seed));
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn bfs_relax_matches_wavefront_bfs() {
+        let g = rmat(7, 0);
+        for cfg in [
+            EngineConfig::host_only(1),
+            EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::High),
+        ] {
+            let mut a = Bfs::new(0);
+            let r1 = engine::run(&g, &mut a, &cfg).unwrap();
+            let mut b = BfsRelax::new(0);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+        }
+    }
+
+    #[test]
+    fn warm_start_rejects_traversal_and_dtype_mismatch() {
+        let warm = WarmStart { prior: StateArray::I32(vec![0; 4]), seeds: vec![] };
+        assert!(Bfs::new(0).with_warm_start(warm.clone()).is_err());
+        // SSSP's value field is f32; an i32 prior must be rejected
+        assert!(Sssp::new(0).with_warm_start(warm).is_err());
+    }
+
+    #[test]
+    fn warm_started_bfs_bit_identical_after_inserts() {
+        let g = rmat(7, 1);
+        let cfg = EngineConfig::cpu_partitions(&[0.4, 0.6], Strategy::Rand);
+        let mut cold = BfsRelax::new(0);
+        let prior = engine::run(&g, &mut cold, &cfg).unwrap().output;
+
+        let batch = DeltaBatch::seeded(&g, 24, 0.0, 0xD311A);
+        let a = apply(&g, &batch).unwrap();
+        assert!(!a.effective_deletes);
+
+        let mut warm = BfsRelax::new(0)
+            .with_warm_start(WarmStart { prior: prior.clone(), seeds: a.touched.clone() })
+            .unwrap();
+        let warm_out = engine::run(&a.graph, &mut warm, &cfg).unwrap().output;
+
+        let mut scratch = BfsRelax::new(0);
+        let cold_out = engine::run(&a.graph, &mut scratch, &cfg).unwrap().output;
+        assert_eq!(warm_out.as_i32(), cold_out.as_i32());
+    }
+
+    #[test]
+    fn warm_started_sssp_bit_identical_after_inserts() {
+        let mut el = generator::rmat(&generator::RmatParams::paper(6, 8));
+        generator::with_random_weights(&mut el, 64, 0x5eed);
+        let g = CsrGraph::from_edge_list(&el);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Low).pipelined();
+
+        let mut cold = Sssp::new(1);
+        let prior = engine::run(&g, &mut cold, &cfg).unwrap().output;
+
+        let batch = DeltaBatch::seeded(&g, 16, 0.0, 77);
+        let a = apply(&g, &batch).unwrap();
+
+        let mut warm = Sssp::new(1)
+            .with_warm_start(WarmStart { prior, seeds: a.touched.clone() })
+            .unwrap();
+        let warm_out = engine::run(&a.graph, &mut warm, &cfg).unwrap().output;
+        let mut scratch = Sssp::new(1);
+        let cold_out = engine::run(&a.graph, &mut scratch, &cfg).unwrap().output;
+        for (x, y) in warm_out.as_f32().iter().zip(cold_out.as_f32()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_start_with_empty_seeds_is_a_no_op_run() {
+        let g = rmat(6, 2);
+        let cfg = EngineConfig::host_only(1);
+        let mut cold = BfsRelax::new(3);
+        let prior = engine::run(&g, &mut cold, &cfg).unwrap().output;
+        let mut warm = BfsRelax::new(3)
+            .with_warm_start(WarmStart { prior: prior.clone(), seeds: vec![] })
+            .unwrap();
+        let r = engine::run(&g, &mut warm, &cfg).unwrap();
+        assert_eq!(r.output.as_i32(), prior.as_i32());
+        // quiesces immediately: nothing was re-activated
+        assert!(r.supersteps <= 1, "supersteps = {}", r.supersteps);
+    }
+
+    #[test]
+    fn residual_push_matches_converged_engine_run() {
+        let g = rmat(6, 3);
+        // enough rounds that the fixed iteration converged below tolerance
+        let mut full = Pagerank::new(100);
+        let want = engine::run(&g, &mut full, &EngineConfig::host_only(1)).unwrap().output;
+
+        // start the push from a deliberately different prior (uniform)
+        let uniform = vec![1.0 / g.vertex_count as f32; g.vertex_count];
+        let (got, sweeps) = pagerank_residual_push(&g, &uniform);
+        assert!(sweeps < MAX_RESIDUAL_SWEEPS);
+        for (v, (a, b)) in got.iter().zip(want.as_f32()).enumerate() {
+            let tol = (1e-4 * b.abs()).max(1e-7);
+            assert!((a - b).abs() <= tol, "vertex {v}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_push_after_mutation_matches_full_recompute() {
+        let g = rmat(6, 4);
+        let mut before = Pagerank::new(100);
+        let prior = engine::run(&g, &mut before, &EngineConfig::host_only(1)).unwrap().output;
+
+        let first_nbr = g.neighbors(0).first().copied().unwrap_or(1);
+        let batch = DeltaBatch {
+            ops: vec![
+                MutationOp::Insert { src: 0, dst: 5, weight: None },
+                MutationOp::Delete { src: 0, dst: first_nbr },
+            ],
+        };
+        let a = apply(&g, &batch).unwrap();
+
+        let (got, _) = pagerank_residual_push(&a.graph, prior.as_f32());
+        let mut full = Pagerank::new(100);
+        let want = engine::run(&a.graph, &mut full, &EngineConfig::host_only(1)).unwrap().output;
+        for (v, (x, y)) in got.iter().zip(want.as_f32()).enumerate() {
+            let tol = (1e-4 * y.abs()).max(1e-7);
+            assert!((x - y).abs() <= tol, "vertex {v}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn residual_push_handles_grown_and_empty_graphs() {
+        let (out, _) = pagerank_residual_push(&CsrGraph::from_edge_list(&EdgeList::new(0)), &[]);
+        assert!(out.is_empty());
+        // prior shorter than the graph: new vertices start at fresh init
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        let g = CsrGraph::from_edge_list(&el);
+        let (out, _) = pagerank_residual_push(&g, &[0.5]);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|x| x.is_finite() && *x > 0.0));
+    }
+}

@@ -30,6 +30,7 @@
 pub mod bc;
 pub mod bfs;
 pub mod cc;
+pub mod incremental;
 pub mod msbfs;
 pub mod pagerank;
 pub mod program;

@@ -553,6 +553,25 @@ impl<'a> Fields<'a> {
 // Driver
 // ---------------------------------------------------------------------------
 
+/// Prior-state injection for incremental recompute (DESIGN.md §14.3).
+///
+/// `prior` holds the converged output of a previous run of the *same*
+/// program on the *pre-mutation* graph, indexed by global vertex id;
+/// `seeds` are the mutation-touched endpoints whose out-edges must
+/// re-relax. Valid only for single-cycle [`Kernel::MonotoneScatter`]
+/// programs and only when every prior value is still an over-approximation
+/// of the new fixed point — i.e. after **insert-only** batches (the caller
+/// enforces the delete fallback; `alg::incremental` is that caller).
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    /// Prior converged output values by global id. Vertices at or beyond
+    /// `prior.len()` (grown by the mutation) keep their fresh init.
+    pub prior: StateArray,
+    /// Global ids to re-activate (their shadow resets to the pad, so they
+    /// re-scatter their current value on the first superstep).
+    pub seeds: Vec<u32>,
+}
+
 /// The generic adapter that runs any [`VertexProgram`] through the engine's
 /// [`Algorithm`] interface. Construct with [`ProgramDriver::build`] — schema
 /// and plan validation happens there, once, with typed errors.
@@ -568,6 +587,8 @@ pub struct ProgramDriver<P: VertexProgram> {
     /// Per-cycle monotone improvement direction (`Some(upward)` for
     /// [`Kernel::MonotoneScatter`] cycles), cached at construction.
     monotone_upward: Vec<Option<bool>>,
+    /// Optional warm start, validated in [`ProgramDriver::with_warm_start`].
+    warm: Option<WarmStart>,
 }
 
 impl<P: VertexProgram> ProgramDriver<P> {
@@ -623,6 +644,7 @@ impl<P: VertexProgram> ProgramDriver<P> {
             n_state,
             kernels: Vec::new(),
             monotone_upward: Vec::new(),
+            warm: None,
         };
         for cycle in 0..driver.program.cycles() {
             driver.validate_plan(cycle)?;
@@ -653,6 +675,44 @@ impl<P: VertexProgram> ProgramDriver<P> {
     /// driver types.
     pub fn inner(&self) -> &P {
         &self.program
+    }
+
+    /// Arm a warm start (see [`WarmStart`]): `init_state` will overwrite
+    /// the fresh per-vertex init with the prior converged values — shadow
+    /// included, so un-seeded vertices start quiescent — then reset the
+    /// shadow of every seed to the field pad so seeds re-scatter on the
+    /// first superstep. Chaotic monotone relaxation started from any state
+    /// ≥ the least fixed point converges to that same fixed point, and the
+    /// per-edge candidates are computed by the identical binary ops — so a
+    /// warm run's output is **bit-identical** to a cold run's (asserted by
+    /// the differential-fuzz mutation axis).
+    ///
+    /// Typed rejections: any program that is not single-cycle
+    /// [`Kernel::MonotoneScatter`] (a level-synchronous traversal's
+    /// `level == superstep` activation cannot resume mid-wave), or a
+    /// `prior` dtype that does not match the value field.
+    pub fn with_warm_start(mut self, warm: WarmStart) -> Result<Self> {
+        let meta = self.program.meta();
+        let value = match (self.kernels.as_slice(), self.program.cycles()) {
+            ([Kernel::MonotoneScatter { value, .. }], 1) => *value,
+            _ => bail!(
+                "program '{}': warm start requires a single-cycle MonotoneScatter kernel",
+                meta.name
+            ),
+        };
+        let want = self.schema[value.0].ty;
+        let got = warm.prior.field_type();
+        if want != got {
+            bail!(
+                "program '{}': warm-start prior is {} but value field '{}' is {}",
+                meta.name,
+                got.name(),
+                self.field_name(value),
+                want.name()
+            );
+        }
+        self.warm = Some(warm);
+        Ok(self)
     }
 
     fn field_name(&self, f: FieldId) -> &'static str {
@@ -958,7 +1018,7 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
         self.program.prepare(original, prepared);
     }
 
-    fn init_state(&mut self, _pg: &PartitionedGraph, part: &Partition) -> AlgState {
+    fn init_state(&mut self, pg: &PartitionedGraph, part: &Partition) -> AlgState {
         let n = part.state_len();
         let mut arrays = vec![StateArray::I32(Vec::new()); self.n_state];
         let mut aux: Vec<StateArray> = Vec::new();
@@ -982,6 +1042,52 @@ impl<P: VertexProgram> Algorithm for ProgramDriver<P> {
                 v: l,
             };
             self.program.init_vertex(g, &mut row);
+        }
+        if let Some(warm) = &self.warm {
+            // validated in with_warm_start: single-cycle MonotoneScatter
+            let (value, shadow) = match self.kernels[0] {
+                Kernel::MonotoneScatter { value, shadow } => (value, shadow),
+                _ => unreachable!("validated in with_warm_start"),
+            };
+            let (vi, si) = (self.state_index(value), self.state_index(shadow));
+            // prior values land in value AND shadow (quiescent); ghost and
+            // dummy slots keep the pad — the push-reduce identity.
+            match &warm.prior {
+                StateArray::I32(prior) => {
+                    for (l, &g) in part.local_to_global.iter().enumerate() {
+                        if let Some(&p) = prior.get(g as usize) {
+                            st.arrays[vi].as_i32_mut()[l] = p;
+                            st.arrays[si].as_i32_mut()[l] = p;
+                        }
+                    }
+                }
+                StateArray::F32(prior) => {
+                    for (l, &g) in part.local_to_global.iter().enumerate() {
+                        if let Some(&p) = prior.get(g as usize) {
+                            st.arrays[vi].as_f32_mut()[l] = p;
+                            st.arrays[si].as_f32_mut()[l] = p;
+                        }
+                    }
+                }
+                StateArray::U64(_) => unreachable!("rejected in with_warm_start"),
+            }
+            // seeds re-activate: shadow back to the pad means "has never
+            // scattered", so the monotone gate fires for any finite value.
+            let pad = self.schema[shadow.0].pad;
+            for &gid in &warm.seeds {
+                let g = gid as usize;
+                if g < pg.part_of.len()
+                    && pg.part_of[g] as usize == part.id
+                    && pg.local_of[g] != u32::MAX
+                {
+                    let l = pg.local_of[g] as usize;
+                    match pad {
+                        Value::I32(x) => st.arrays[si].as_i32_mut()[l] = x,
+                        Value::F32(x) => st.arrays[si].as_f32_mut()[l] = x,
+                        Value::U64(x) => st.arrays[si].as_u64_mut()[l] = x,
+                    }
+                }
+            }
         }
         if let Some(level) = self.is_traversal() {
             self.build_bitmap(level, part, &mut st);

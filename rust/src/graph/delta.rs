@@ -1,0 +1,598 @@
+//! Streaming graph mutations: the batched edge insert/delete log
+//! (DESIGN.md §14).
+//!
+//! A [`DeltaBatch`] is an ordered list of [`MutationOp`]s that commits
+//! **transactionally**: readers observe either the pre-batch graph or the
+//! post-batch graph, never an intermediate state. [`apply`] materializes
+//! the post-batch [`CsrGraph`] in one pass and reports the *touched*
+//! endpoint set that seeds incremental recompute
+//! (`alg::incremental`), and [`rebuild_partitions`] refreshes the live
+//! [`PartitionedGraph`] — reusing the same rebuild-and-remap machinery the
+//! dynamic-α controller uses (placement-preserving `build_placed`, which
+//! re-derives ghost tables and lets transpose CSRs rebuild lazily) — with
+//! a commit-time reassignment tier that absorbs mutation-induced load
+//! skew.
+//!
+//! ## Text format (the `--mutations` replay file)
+//!
+//! ```text
+//! # comment / blank lines ignored
+//! add <src> <dst> [<weight>]   # weight required iff the graph is weighted
+//! del <src> <dst>              # removes ALL parallel copies of (src, dst)
+//! commit                       # batch boundary; trailing ops form a final batch
+//! ```
+//!
+//! ## Batch semantics
+//!
+//! Within one batch, deletes are resolved against the **pre-batch** graph
+//! first, then inserts are appended in op order — so an edge both deleted
+//! and inserted in the same batch survives with the inserted weight, and
+//! the rebuilt CSR's intra-row edge order is deterministic (surviving old
+//! edges in old CSR order, then inserts in batch order). Inserting an
+//! endpoint `>=` the current vertex count grows the graph; deleting a
+//! never-present edge is a counted no-op (`delete_misses`), not an error,
+//! and crucially does **not** count as an *effective* delete — only
+//! effective deletes force the monotone programs off the warm-start path
+//! (DESIGN.md §14.3).
+
+use std::collections::HashSet;
+
+use super::csr::{CsrGraph, EdgeList};
+use super::IngestError;
+use crate::partition::{assign, PartitionedGraph, Strategy};
+
+/// Edge-share deviation (realized vs target, max over partitions) above
+/// which a mutation commit re-runs assignment from scratch instead of
+/// extending the previous one — the α controller's commit-time tier.
+pub const DEFAULT_SKEW_THRESHOLD: f64 = 0.10;
+
+/// One entry in the mutation log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MutationOp {
+    /// Append an edge. `weight` must be `Some` iff the graph is weighted.
+    Insert { src: u32, dst: u32, weight: Option<f32> },
+    /// Remove every parallel copy of `(src, dst)` present pre-batch.
+    Delete { src: u32, dst: u32 },
+}
+
+/// An ordered group of mutations that commits atomically.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeltaBatch {
+    pub ops: Vec<MutationOp>,
+}
+
+/// Typed errors raised by mutation parsing and application.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaError {
+    /// A malformed line in a mutation file (1-based line number).
+    Parse { line: u64, msg: String },
+    /// Insert carried a weight but the graph is unweighted.
+    UnexpectedWeight { src: u32, dst: u32 },
+    /// Insert on a weighted graph omitted the weight.
+    MissingWeight { src: u32, dst: u32 },
+    /// An endpoint id does not fit the platform's `usize` (+1 for the
+    /// vertex count) — same checked-narrowing contract as `graph/io.rs`.
+    VertexOverflow { id: u32 },
+    /// Rebuilding the CSR failed (the batch is rejected, graph unchanged).
+    Rebuild(IngestError),
+}
+
+impl std::fmt::Display for DeltaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeltaError::Parse { line, msg } => write!(f, "mutation file line {line}: {msg}"),
+            DeltaError::UnexpectedWeight { src, dst } => {
+                write!(f, "insert {src} -> {dst} carries a weight but the graph is unweighted")
+            }
+            DeltaError::MissingWeight { src, dst } => {
+                write!(f, "insert {src} -> {dst} omits the weight the weighted graph requires")
+            }
+            DeltaError::VertexOverflow { id } => {
+                write!(f, "vertex id {id} does not fit this platform's usize")
+            }
+            DeltaError::Rebuild(e) => write!(f, "delta rebuild failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DeltaError {}
+
+impl From<IngestError> for DeltaError {
+    fn from(e: IngestError) -> Self {
+        DeltaError::Rebuild(e)
+    }
+}
+
+impl DeltaBatch {
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Parse a whole mutation file into its committed batches (module
+    /// docs give the grammar). Trailing ops without a final `commit` form
+    /// a last batch; empty batches (e.g. `commit commit`) are dropped.
+    pub fn parse_file(text: &str) -> Result<Vec<DeltaBatch>, DeltaError> {
+        let mut batches = Vec::new();
+        let mut cur = DeltaBatch::default();
+        for (i, raw) in text.lines().enumerate() {
+            let line = i as u64 + 1;
+            let s = raw.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let mut it = s.split_whitespace();
+            let verb = it.next().unwrap();
+            match verb {
+                "commit" => {
+                    if it.next().is_some() {
+                        return Err(DeltaError::Parse {
+                            line,
+                            msg: "commit takes no operands".into(),
+                        });
+                    }
+                    if !cur.is_empty() {
+                        batches.push(std::mem::take(&mut cur));
+                    }
+                }
+                "add" | "del" => {
+                    let src = parse_id(it.next(), line, "src")?;
+                    let dst = parse_id(it.next(), line, "dst")?;
+                    let op = if verb == "add" {
+                        let weight = match it.next() {
+                            None => None,
+                            Some(w) => Some(w.parse::<f32>().map_err(|_| DeltaError::Parse {
+                                line,
+                                msg: format!("bad weight {w:?}"),
+                            })?),
+                        };
+                        MutationOp::Insert { src, dst, weight }
+                    } else {
+                        MutationOp::Delete { src, dst }
+                    };
+                    if it.next().is_some() {
+                        return Err(DeltaError::Parse {
+                            line,
+                            msg: format!("trailing tokens after {verb}"),
+                        });
+                    }
+                    cur.ops.push(op);
+                }
+                other => {
+                    return Err(DeltaError::Parse {
+                        line,
+                        msg: format!("unknown verb {other:?} (expected add/del/commit)"),
+                    });
+                }
+            }
+        }
+        if !cur.is_empty() {
+            batches.push(cur);
+        }
+        Ok(batches)
+    }
+
+    /// Seeded random batch over an existing graph: `n_ops` operations,
+    /// each a delete of a uniformly sampled existing edge with probability
+    /// `delete_frac`, else an insert between uniform endpoints (weighted
+    /// iff the graph is). Fully determined by `seed` — the differential
+    /// fuzzer's mutation axis uses it directly; the CI `mutate-smoke`
+    /// replay drives its Python mirror (`tools/cross_check_mutations.py
+    /// emit`) to author the replay files.
+    pub fn seeded(g: &CsrGraph, n_ops: usize, delete_frac: f64, seed: u64) -> DeltaBatch {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n = g.vertex_count.max(1) as u64;
+        let edges: Vec<(u32, u32)> = g.iter_edges().collect();
+        let mut ops = Vec::with_capacity(n_ops);
+        for _ in 0..n_ops {
+            if !edges.is_empty() && rng.next_f64() < delete_frac {
+                let (src, dst) = edges[rng.below(edges.len() as u64) as usize];
+                ops.push(MutationOp::Delete { src, dst });
+            } else {
+                let src = rng.below(n) as u32;
+                let dst = rng.below(n) as u32;
+                let weight = g
+                    .weights
+                    .is_some()
+                    // match `generator::with_random_weights`: positive
+                    // small integers, exactly representable in f32
+                    .then(|| (rng.below(64) + 1) as f32);
+                ops.push(MutationOp::Insert { src, dst, weight });
+            }
+        }
+        DeltaBatch { ops }
+    }
+
+    /// Render in the `parse_file` grammar (without the trailing `commit`).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for op in &self.ops {
+            match op {
+                MutationOp::Insert { src, dst, weight: Some(w) } => {
+                    s.push_str(&format!("add {src} {dst} {w}\n"));
+                }
+                MutationOp::Insert { src, dst, weight: None } => {
+                    s.push_str(&format!("add {src} {dst}\n"));
+                }
+                MutationOp::Delete { src, dst } => {
+                    s.push_str(&format!("del {src} {dst}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+fn parse_id(tok: Option<&str>, line: u64, what: &str) -> Result<u32, DeltaError> {
+    let t = tok.ok_or_else(|| DeltaError::Parse { line, msg: format!("missing {what}") })?;
+    t.parse::<u32>()
+        .map_err(|_| DeltaError::Parse { line, msg: format!("bad {what} {t:?}") })
+}
+
+/// The committed result of applying one batch.
+#[derive(Debug, Clone)]
+pub struct AppliedDelta {
+    /// The post-batch graph.
+    pub graph: CsrGraph,
+    /// Sorted, deduplicated endpoints of every applied insert and every
+    /// *effective* delete — the seed set for affected-frontier recompute.
+    pub touched: Vec<u32>,
+    /// Edges appended.
+    pub inserted: u64,
+    /// Edge copies actually removed.
+    pub deleted: u64,
+    /// `del` ops that matched nothing pre-batch (counted no-ops).
+    pub delete_misses: u64,
+    /// Vertices the batch grew the graph by.
+    pub new_vertices: usize,
+    /// At least one edge copy was really removed — monotone warm starts
+    /// are invalid and incremental recompute must fall back to a full run.
+    pub effective_deletes: bool,
+}
+
+/// Apply one batch transactionally (module docs give the semantics); on
+/// any error the input graph is untouched.
+pub fn apply(g: &CsrGraph, batch: &DeltaBatch) -> Result<AppliedDelta, DeltaError> {
+    let weighted = g.weights.is_some();
+    let mut nv = g.vertex_count;
+    let mut delete_pairs: HashSet<(u32, u32)> = HashSet::new();
+    let mut inserts: Vec<(u32, u32, f32)> = Vec::new();
+    for op in &batch.ops {
+        match *op {
+            MutationOp::Insert { src, dst, weight } => {
+                match (weighted, weight) {
+                    (true, None) => return Err(DeltaError::MissingWeight { src, dst }),
+                    (false, Some(_)) => return Err(DeltaError::UnexpectedWeight { src, dst }),
+                    _ => {}
+                }
+                for id in [src, dst] {
+                    let wanted = usize::try_from(id)
+                        .ok()
+                        .and_then(|x| x.checked_add(1))
+                        .ok_or(DeltaError::VertexOverflow { id })?;
+                    nv = nv.max(wanted);
+                }
+                inserts.push((src, dst, weight.unwrap_or(0.0)));
+            }
+            MutationOp::Delete { src, dst } => {
+                delete_pairs.insert((src, dst));
+            }
+        }
+    }
+
+    let mut el = EdgeList::new(nv);
+    el.edges.reserve(g.edge_count() + inserts.len());
+    if weighted {
+        el.weights = Some(Vec::with_capacity(g.edge_count() + inserts.len()));
+    }
+    let mut deleted = 0u64;
+    let mut deleted_pairs_hit: HashSet<(u32, u32)> = HashSet::new();
+    for v in 0..g.vertex_count as u32 {
+        let nbrs = g.neighbors(v);
+        let ws = if weighted { g.edge_weights(v) } else { &[] };
+        for (i, &t) in nbrs.iter().enumerate() {
+            if delete_pairs.contains(&(v, t)) {
+                deleted += 1;
+                deleted_pairs_hit.insert((v, t));
+                continue;
+            }
+            el.edges.push((v, t));
+            if let Some(w) = el.weights.as_mut() {
+                w.push(ws[i]);
+            }
+        }
+    }
+    let inserted = inserts.len() as u64;
+    for &(src, dst, w) in &inserts {
+        el.edges.push((src, dst));
+        if let Some(ws) = el.weights.as_mut() {
+            ws.push(w);
+        }
+    }
+
+    let graph = CsrGraph::try_from_edge_list(&el)?;
+
+    let mut touched: Vec<u32> = inserts
+        .iter()
+        .flat_map(|&(s, d, _)| [s, d])
+        .chain(deleted_pairs_hit.iter().flat_map(|&(s, d)| [s, d]))
+        .collect();
+    touched.sort_unstable();
+    touched.dedup();
+
+    Ok(AppliedDelta {
+        graph,
+        touched,
+        inserted,
+        deleted,
+        delete_misses: (delete_pairs.len() - deleted_pairs_hit.len()) as u64,
+        new_vertices: nv - g.vertex_count,
+        effective_deletes: deleted > 0,
+    })
+}
+
+/// How a mutation commit rebuilt the live partitioning.
+#[derive(Debug)]
+pub struct RebuildOutcome {
+    pub pg: PartitionedGraph,
+    /// `true` when edge-share skew exceeded the threshold and assignment
+    /// was re-run from scratch instead of extended.
+    pub reassigned: bool,
+    /// Max |realized − target| edge share after the rebuild actually used.
+    pub skew: f64,
+}
+
+/// Rebuild the partitioning for the post-batch graph.
+///
+/// Fast path: extend the previous global→partition assignment (new
+/// vertices go to the partition whose member count is furthest below its
+/// target share, lowest id on ties — deterministic) and re-run the
+/// placement-preserving [`PartitionedGraph::build_placed`], which refreshes
+/// local CSRs, ghost tables, and (lazily) transpose CSRs exactly like the
+/// α controller's migration path. If the realized edge shares then deviate
+/// from the targets by more than `skew_threshold`, the commit absorbs the
+/// skew by re-running [`assign`] from scratch with the original strategy,
+/// shares, and seed.
+pub fn rebuild_partitions(
+    g_new: &CsrGraph,
+    prev: &PartitionedGraph,
+    strategy: Strategy,
+    shares: &[f64],
+    seed: u64,
+    skew_threshold: f64,
+) -> RebuildOutcome {
+    let nparts = prev.parts.len();
+    debug_assert_eq!(shares.len(), nparts);
+    let mut asg = prev.part_of.clone();
+    if g_new.vertex_count > asg.len() {
+        let total: f64 = shares.iter().sum();
+        let mut members = vec![0usize; nparts];
+        for &p in &asg {
+            members[p as usize] += 1;
+        }
+        for _ in asg.len()..g_new.vertex_count {
+            // deficit = target fraction − realized fraction; argmax wins
+            let n_now = asg.len().max(1) as f64;
+            let pick = (0..nparts)
+                .max_by(|&a, &b| {
+                    let da = shares[a] / total - members[a] as f64 / n_now;
+                    let db = shares[b] / total - members[b] as f64 / n_now;
+                    da.partial_cmp(&db).unwrap().then(b.cmp(&a))
+                })
+                .unwrap();
+            asg.push(pick as u8);
+            members[pick] += 1;
+        }
+    }
+    let pg = PartitionedGraph::build_placed(g_new, &asg, nparts, prev.placement);
+    let skew = share_skew(&pg.edge_shares(), shares);
+    if nparts > 1 && skew > skew_threshold {
+        let fresh = assign(g_new, strategy, shares, seed);
+        let pg = PartitionedGraph::build_placed(g_new, &fresh, nparts, prev.placement);
+        let skew = share_skew(&pg.edge_shares(), shares);
+        return RebuildOutcome { pg, reassigned: true, skew };
+    }
+    RebuildOutcome { pg, reassigned: false, skew }
+}
+
+fn share_skew(realized: &[f64], target: &[f64]) -> f64 {
+    let total: f64 = target.iter().sum();
+    realized
+        .iter()
+        .zip(target)
+        .map(|(r, t)| (r - t / total.max(f64::MIN_POSITIVE)).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{Placement, Strategy};
+
+    fn diamond() -> CsrGraph {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(0, 2);
+        el.push(1, 3);
+        el.push(2, 3);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn parse_batches_and_roundtrip() {
+        let text = "# header\nadd 1 2\ndel 0 3\ncommit\n\nadd 5 6\n";
+        let batches = DeltaBatch::parse_file(text).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(
+            batches[0].ops,
+            vec![
+                MutationOp::Insert { src: 1, dst: 2, weight: None },
+                MutationOp::Delete { src: 0, dst: 3 },
+            ]
+        );
+        let re = DeltaBatch::parse_file(&batches[0].to_text()).unwrap();
+        assert_eq!(re[0], batches[0]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for (bad, want) in [
+            ("frobnicate 1 2", "unknown verb"),
+            ("add 1", "missing dst"),
+            ("add 1 x", "bad dst"),
+            ("add 1 2 zz", "bad weight"),
+            ("del 1 2 3", "trailing tokens"),
+            ("commit now", "commit takes no operands"),
+        ] {
+            match DeltaBatch::parse_file(bad) {
+                Err(DeltaError::Parse { line: 1, msg }) => {
+                    assert!(msg.contains(want), "{bad:?}: {msg}")
+                }
+                other => panic!("{bad:?}: expected parse error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn apply_insert_grows_and_touches() {
+        let g = diamond();
+        let batch = DeltaBatch {
+            ops: vec![MutationOp::Insert { src: 3, dst: 5, weight: None }],
+        };
+        let a = apply(&g, &batch).unwrap();
+        assert_eq!(a.graph.vertex_count, 6);
+        assert_eq!(a.graph.edge_count(), 5);
+        assert_eq!(a.new_vertices, 2);
+        assert_eq!(a.touched, vec![3, 5]);
+        assert!(!a.effective_deletes);
+        // pre-existing rows untouched
+        assert_eq!(a.graph.neighbors(0), &[1, 2]);
+        assert_eq!(a.graph.neighbors(3), &[5]);
+    }
+
+    #[test]
+    fn apply_delete_removes_all_copies_and_counts_misses() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(0, 1); // parallel copy
+        el.push(1, 2);
+        let g = CsrGraph::from_edge_list(&el);
+        let batch = DeltaBatch {
+            ops: vec![
+                MutationOp::Delete { src: 0, dst: 1 },
+                MutationOp::Delete { src: 2, dst: 0 }, // never present
+            ],
+        };
+        let a = apply(&g, &batch).unwrap();
+        assert_eq!(a.deleted, 2);
+        assert_eq!(a.delete_misses, 1);
+        assert!(a.effective_deletes);
+        assert_eq!(a.graph.edge_count(), 1);
+        // misses do not pollute the touched seed set
+        assert_eq!(a.touched, vec![0, 1]);
+    }
+
+    #[test]
+    fn delete_then_insert_same_edge_survives() {
+        let g = diamond();
+        let batch = DeltaBatch {
+            ops: vec![
+                MutationOp::Delete { src: 0, dst: 1 },
+                MutationOp::Insert { src: 0, dst: 1, weight: None },
+            ],
+        };
+        let a = apply(&g, &batch).unwrap();
+        assert_eq!(a.graph.edge_count(), 4);
+        assert_eq!(a.graph.neighbors(0), &[2, 1]); // survivors first, insert appended
+        assert!(a.effective_deletes);
+    }
+
+    #[test]
+    fn weight_arity_is_typed() {
+        let g = diamond(); // unweighted
+        let b = DeltaBatch { ops: vec![MutationOp::Insert { src: 0, dst: 1, weight: Some(2.0) }] };
+        assert_eq!(apply(&g, &b), Err(DeltaError::UnexpectedWeight { src: 0, dst: 1 }));
+
+        let mut el = EdgeList::new(2);
+        el.push(0, 1);
+        el.weights = Some(vec![1.0]);
+        let wg = CsrGraph::from_edge_list(&el);
+        let b = DeltaBatch { ops: vec![MutationOp::Insert { src: 1, dst: 0, weight: None }] };
+        assert_eq!(apply(&wg, &b), Err(DeltaError::MissingWeight { src: 1, dst: 0 }));
+    }
+
+    #[test]
+    fn weighted_apply_keeps_weights_parallel() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.weights = Some(vec![4.0, 7.0]);
+        let g = CsrGraph::from_edge_list(&el);
+        let b = DeltaBatch {
+            ops: vec![
+                MutationOp::Delete { src: 0, dst: 1 },
+                MutationOp::Insert { src: 2, dst: 0, weight: Some(9.0) },
+            ],
+        };
+        let a = apply(&g, &b).unwrap();
+        assert_eq!(a.graph.edge_weights(1), &[7.0]);
+        assert_eq!(a.graph.edge_weights(2), &[9.0]);
+    }
+
+    #[test]
+    fn seeded_batches_are_deterministic() {
+        let g = diamond();
+        let a = DeltaBatch::seeded(&g, 16, 0.3, 42);
+        let b = DeltaBatch::seeded(&g, 16, 0.3, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.ops.len(), 16);
+        let c = DeltaBatch::seeded(&g, 16, 0.3, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rebuild_extends_assignment_then_reassigns_on_skew() {
+        let g = diamond();
+        let pg = PartitionedGraph::partition_placed(
+            &g,
+            Strategy::Rand,
+            &[0.5, 0.5],
+            7,
+            Placement::DegreeDesc,
+        );
+        // no growth, generous threshold: assignment must be extended as-is
+        let out = rebuild_partitions(&g, &pg, Strategy::Rand, &[0.5, 0.5], 7, 1e9);
+        assert!(!out.reassigned);
+        assert_eq!(out.pg.part_of, pg.part_of);
+        assert_eq!(out.pg.placement, pg.placement);
+
+        // grow the graph and force the skew tier with a zero threshold
+        let batch = DeltaBatch {
+            ops: (0..8).map(|i| MutationOp::Insert { src: 4 + i, dst: 0, weight: None }).collect(),
+        };
+        let a = apply(&g, &batch).unwrap();
+        let out = rebuild_partitions(&a.graph, &pg, Strategy::Rand, &[0.5, 0.5], 7, -1.0);
+        assert!(out.reassigned);
+        assert_eq!(out.pg.global_vertex_count, 12);
+        // every vertex got a partition and the graph rebuilt consistently
+        assert_eq!(out.pg.part_of.len(), 12);
+    }
+
+    #[test]
+    fn rebuild_assigns_new_vertices_toward_deficit() {
+        let g = diamond();
+        let pg = PartitionedGraph::partition_placed(
+            &g,
+            Strategy::Rand,
+            &[0.75, 0.25],
+            3,
+            Placement::AssignmentOrder,
+        );
+        let batch =
+            DeltaBatch { ops: vec![MutationOp::Insert { src: 4, dst: 5, weight: None }] };
+        let a = apply(&g, &batch).unwrap();
+        let out = rebuild_partitions(&a.graph, &pg, Strategy::Rand, &[0.75, 0.25], 3, 1e9);
+        // previous vertices keep their partitions on the fast path
+        assert_eq!(&out.pg.part_of[..4], &pg.part_of[..]);
+        assert_eq!(out.pg.part_of.len(), 6);
+    }
+}

@@ -170,7 +170,18 @@ pub fn stream_edge_list(
     let vertex_count = match declared_v {
         Some(v) => v,
         None if count == 0 => 0,
-        None => max_id as usize + 1,
+        // checked: `max_id as usize + 1` would wrap on a 32-bit host when
+        // the file names vertex u32::MAX (ISSUE 9 satellite bugfix)
+        None => usize::try_from(max_id)
+            .ok()
+            .and_then(|m| m.checked_add(1))
+            .ok_or_else(|| {
+                anyhow::Error::from(IngestError::CountOverflow {
+                    what: "vertex",
+                    count: max_id as u64 + 1,
+                })
+                .context(format!("{path:?}"))
+            })?,
     };
     if let Some(e) = declared_e {
         if e != count {
@@ -325,9 +336,20 @@ pub fn read_csr_v1(path: &Path) -> Result<CsrGraph> {
         bail!("{path:?}: {} trailing bytes after CSR payload", file_len - expected);
     }
 
-    let v = v64 as usize;
-    let e = e64 as usize;
-    let row_offsets: Vec<u64> = read_vec_le(&mut r, v + 1)
+    // Typed narrowing: the bare `v64 as usize` / `e64 as usize` this
+    // replaced silently truncated >4G counts on 32-bit hosts, making the
+    // reader allocate tiny arrays for a huge payload (ISSUE 9 satellite
+    // bugfix). The +1 for the offsets row is checked for the same reason.
+    let overflow = |what: &'static str, count: u64| {
+        anyhow::Error::from(IngestError::CountOverflow { what, count })
+            .context(format!("{path:?}"))
+    };
+    let v = usize::try_from(v64).map_err(|_| overflow("vertex", v64))?;
+    let e = usize::try_from(e64).map_err(|_| overflow("edge", e64))?;
+    let rows = v
+        .checked_add(1)
+        .ok_or_else(|| overflow("row-offset", v64.saturating_add(1)))?;
+    let row_offsets: Vec<u64> = read_vec_le(&mut r, rows)
         .with_context(|| format!("{path:?}: truncated row offsets"))?;
     let col_indices: Vec<u32> =
         read_vec_le(&mut r, e).with_context(|| format!("{path:?}: truncated column indices"))?;

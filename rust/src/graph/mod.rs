@@ -1,8 +1,10 @@
 //! Graph substrate: CSR representation (paper §4.3.1), synthetic workload
 //! generators (Table 2), serialization, the out-of-core `.tcsr` v2
-//! container (DESIGN.md §12), and topology statistics.
+//! container (DESIGN.md §12), the streaming mutation log (DESIGN.md §14),
+//! and topology statistics.
 
 pub mod csr;
+pub mod delta;
 pub mod generator;
 pub mod ingest;
 pub mod io;
@@ -31,6 +33,12 @@ pub enum IngestError {
     /// A weighted edge follows unweighted ones (or vice versa) at input
     /// line `line` (1-based).
     MixedWeights { line: u64 },
+    /// A declared count does not fit this platform's `usize` (or its
+    /// derived size arithmetic overflows) — a 32-bit host reading a
+    /// >4G-element container, or a corrupt header. Narrowing with a bare
+    /// `as usize` used to truncate these silently (ISSUE 9 satellite
+    /// bugfix).
+    CountOverflow { what: &'static str, count: u64 },
 }
 
 impl std::fmt::Display for IngestError {
@@ -50,6 +58,10 @@ impl std::fmt::Display for IngestError {
             IngestError::MixedWeights { line } => {
                 write!(f, "line {line}: mixed weighted/unweighted edges")
             }
+            IngestError::CountOverflow { what, count } => write!(
+                f,
+                "{what} count {count} overflows this platform's addressable size"
+            ),
         }
     }
 }

@@ -36,6 +36,7 @@
 //! in `CsrGraph::validate`.
 
 use super::csr::CsrGraph;
+use super::IngestError;
 use crate::util::mmap::{mmap_supported, Mmap};
 use anyhow::{bail, Context, Result};
 use std::fs::File;
@@ -760,6 +761,38 @@ pub fn is_tcsr(path: &Path) -> bool {
     }
 }
 
+/// Narrow a section's element count for indexing/allocation. The header
+/// arithmetic is u64-checked in [`layout_for`], but a count that is valid
+/// as u64 can still exceed this platform's address space (a 32-bit host
+/// opening a >4G-element container); a bare `as usize` truncated these
+/// silently — with `verify=false` that meant a short read and a corrupt
+/// graph, not an error (ISSUE 9 satellite bugfix). Checking `byte_len`
+/// too keeps `read_vec_le`'s `n * ELEM_BYTES` from overflowing `usize`.
+fn sec_elems(path: &Path, s: &SectionSpan) -> Result<usize> {
+    if usize::try_from(s.byte_len).is_err() {
+        return Err(anyhow::Error::from(IngestError::CountOverflow {
+            what: section_name(s.kind),
+            count: s.elem_count,
+        })
+        .context(format!("{path:?}")));
+    }
+    usize::try_from(s.elem_count).map_err(|_| {
+        anyhow::Error::from(IngestError::CountOverflow {
+            what: section_name(s.kind),
+            count: s.elem_count,
+        })
+        .context(format!("{path:?}"))
+    })
+}
+
+/// Narrow the declared vertex count for `CsrGraph::vertex_count`.
+fn vertices_usize(path: &Path, vertices: u64) -> Result<usize> {
+    usize::try_from(vertices).map_err(|_| {
+        anyhow::Error::from(IngestError::CountOverflow { what: "vertex", count: vertices })
+            .context(format!("{path:?}"))
+    })
+}
+
 fn check_padding_zero(path: &Path, bytes: &[u8], at: u64) -> Result<()> {
     if bytes.iter().any(|&b| b != 0) {
         bail!("{path:?}: corrupt CSR file (non-zero padding at offset {at})");
@@ -840,20 +873,23 @@ impl GraphStore {
             }
             prev_end = s.offset + s.byte_len;
         }
+        // The mapping succeeded, so file_len (== layout.total_bytes) fits
+        // the address space and every offset below it does too; sec_elems
+        // still gates the counts so the invariant is checked, not assumed.
         let row = &info.sections[0];
         let col = &info.sections[1];
         let row_offsets =
-            Segment::<u64>::mapped(map.clone(), row.offset as usize, row.elem_count as usize);
+            Segment::<u64>::mapped(map.clone(), row.offset as usize, sec_elems(path, row)?);
         let col_indices =
-            Segment::<u32>::mapped(map.clone(), col.offset as usize, col.elem_count as usize);
+            Segment::<u32>::mapped(map.clone(), col.offset as usize, sec_elems(path, col)?);
         let weights = if info.weighted {
             let w = &info.sections[2];
-            Some(Segment::<f32>::mapped(map, w.offset as usize, w.elem_count as usize))
+            Some(Segment::<f32>::mapped(map, w.offset as usize, sec_elems(path, w)?))
         } else {
             None
         };
         let graph = CsrGraph {
-            vertex_count: info.vertices as usize,
+            vertex_count: vertices_usize(path, info.vertices)?,
             row_offsets,
             col_indices,
             weights,
@@ -889,19 +925,19 @@ impl GraphStore {
         };
         let row = &info.sections[0];
         skip_padding(&mut r, &mut pos, row.offset)?;
-        let row_offsets: Vec<u64> = read_vec_le(&mut r, row.elem_count as usize)
+        let row_offsets: Vec<u64> = read_vec_le(&mut r, sec_elems(path, row)?)
             .with_context(|| format!("{path:?}: truncated row offsets"))?;
         pos += row.byte_len;
         let col = &info.sections[1];
         skip_padding(&mut r, &mut pos, col.offset)?;
-        let col_indices: Vec<u32> = read_vec_le(&mut r, col.elem_count as usize)
+        let col_indices: Vec<u32> = read_vec_le(&mut r, sec_elems(path, col)?)
             .with_context(|| format!("{path:?}: truncated column indices"))?;
         pos += col.byte_len;
         let weights: Option<Vec<f32>> = if info.weighted {
             let wsec = &info.sections[2];
             skip_padding(&mut r, &mut pos, wsec.offset)?;
             Some(
-                read_vec_le(&mut r, wsec.elem_count as usize)
+                read_vec_le(&mut r, sec_elems(path, wsec)?)
                     .with_context(|| format!("{path:?}: truncated weights"))?,
             )
         } else {
@@ -923,7 +959,7 @@ impl GraphStore {
             }
         }
         let graph = CsrGraph {
-            vertex_count: info.vertices as usize,
+            vertex_count: vertices_usize(path, info.vertices)?,
             row_offsets: row_offsets.into(),
             col_indices: col_indices.into(),
             weights: weights.map(Segment::from),
@@ -1034,6 +1070,39 @@ mod tests {
     fn layout_rejects_overflowing_counts() {
         assert!(layout_for(u64::MAX, 8, false).is_err());
         assert!(layout_for(8, u64::MAX / 2, true).is_err());
+    }
+
+    #[test]
+    fn count_overflow_error_names_the_section() {
+        let e = IngestError::CountOverflow { what: "col-indices", count: 1 << 40 };
+        let msg = e.to_string();
+        assert!(msg.contains("col-indices") && msg.contains("overflows"), "{msg}");
+        assert_eq!(e, IngestError::CountOverflow { what: "col-indices", count: 1 << 40 });
+    }
+
+    #[test]
+    fn sec_elems_passes_addressable_counts_through() {
+        let s = SectionSpan { kind: SEC_COL, elem_bytes: 4, offset: 0, elem_count: 9, byte_len: 36 };
+        assert_eq!(sec_elems(Path::new("x.tcsr"), &s).unwrap(), 9);
+    }
+
+    // On 32-bit hosts a >4G-element section must fail typed instead of
+    // truncating the allocation and short-reading the file. (The same
+    // counts are unrepresentable in a real file on a 64-bit test host, so
+    // this path is exercised only where it can actually fire.)
+    #[cfg(target_pointer_width = "32")]
+    #[test]
+    fn sec_elems_rejects_counts_beyond_address_space() {
+        let s = SectionSpan {
+            kind: SEC_COL,
+            elem_bytes: 4,
+            offset: 0,
+            elem_count: 5u64 << 30,
+            byte_len: 20u64 << 30,
+        };
+        let msg = format!("{:#}", sec_elems(Path::new("x.tcsr"), &s).unwrap_err());
+        assert!(msg.contains("overflows"), "{msg}");
+        assert!(vertices_usize(Path::new("x.tcsr"), u64::MAX).is_err());
     }
 
     #[test]

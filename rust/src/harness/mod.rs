@@ -2,14 +2,18 @@
 //! workload under any engine configuration, with repeated measurements and
 //! TEPS accounting (paper §5 "Evaluation Metrics" / "Data Collection").
 
+use crate::alg::incremental::{pagerank_residual_push, BfsRelax};
+use crate::alg::program::WarmStart;
 use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
 use crate::alg::Algorithm;
+use crate::engine::state::StateArray;
 use crate::engine::{self, EngineConfig, RunResult};
 use crate::partition::Placement;
+use crate::graph::delta::AppliedDelta;
 use crate::graph::generator::{weight_seed, with_random_weights, WEIGHT_MAX_DEFAULT};
 use crate::graph::{CsrGraph, Workload};
 use crate::stats;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// The evaluated algorithms: the paper's five (§5 + §9.4) plus the
 /// widest-path program that proves the typed vertex-program API
@@ -141,6 +145,110 @@ pub fn run_alg(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig) -> Result<(RunRe
     }
 }
 
+/// How [`incremental_rerun`] recomputed after a mutation batch
+/// (DESIGN.md §14.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recompute {
+    /// Monotone warm start through the engine: prior values injected,
+    /// only the mutation-touched frontier re-activated. Bit-identical to
+    /// a cold run.
+    WarmStart,
+    /// PageRank residual push (host-side, deterministic), with the number
+    /// of Gauss–Seidel sweeps it took to quiesce.
+    ResidualPush { sweeps: usize },
+    /// Full cold rerun, with the reason incremental was declined.
+    Full(FullReason),
+}
+
+/// Why [`incremental_rerun`] fell back to a full recompute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullReason {
+    /// The batch really removed edge copies: the prior fixed point no
+    /// longer over-approximates the new one, and min/max relaxation
+    /// cannot move values *away* from the reduce direction.
+    EffectiveDeletes,
+    /// The algorithm has no incremental form (BC's two-cycle sweeps).
+    Unsupported,
+}
+
+/// Result of one incremental recompute.
+#[derive(Debug, Clone)]
+pub struct IncrementalRun {
+    /// Per-vertex output on the post-batch graph (same dtype contract as
+    /// `RunResult::output` for this algorithm).
+    pub output: StateArray,
+    /// Which strategy actually ran.
+    pub recompute: Recompute,
+    /// Engine supersteps (warm/full) or push sweeps (residual).
+    pub supersteps: usize,
+}
+
+/// Recompute `spec.alg` on the post-batch graph `g_new`, reusing `prior`
+/// (the same algorithm's converged output on the *pre-batch* graph) where
+/// correctness allows — strategy table in [`Recompute`] / DESIGN.md §14.3.
+///
+/// `spec.source` must already be resolved (the prior run fixed it against
+/// the pre-mutation graph; re-resolving `AUTO_SOURCE` against `g_new`
+/// could silently pick a different hub and invalidate `prior`).
+pub fn incremental_rerun(
+    g_new: &CsrGraph,
+    spec: RunSpec,
+    cfg: &EngineConfig,
+    prior: &StateArray,
+    delta: &AppliedDelta,
+) -> Result<IncrementalRun> {
+    let needs_source =
+        matches!(spec.alg, AlgKind::Bfs | AlgKind::Sssp | AlgKind::Bc | AlgKind::Widest);
+    if needs_source && spec.source == AUTO_SOURCE {
+        bail!(
+            "incremental_rerun needs a resolved source for {} — resolve AUTO against the \
+             pre-mutation graph first (resolve_source)",
+            spec.alg.name()
+        );
+    }
+    let full = |reason: FullReason| -> Result<IncrementalRun> {
+        let (r, _) = run_alg(g_new, spec, cfg)?;
+        Ok(IncrementalRun {
+            output: r.output,
+            recompute: Recompute::Full(reason),
+            supersteps: r.supersteps,
+        })
+    };
+    match spec.alg {
+        AlgKind::Bc => full(FullReason::Unsupported),
+        AlgKind::Pagerank => {
+            let (ranks, sweeps) = pagerank_residual_push(g_new, prior.try_as_f32()?);
+            Ok(IncrementalRun {
+                output: StateArray::F32(ranks),
+                recompute: Recompute::ResidualPush { sweeps },
+                supersteps: sweeps,
+            })
+        }
+        _ if delta.effective_deletes => full(FullReason::EffectiveDeletes),
+        AlgKind::Bfs | AlgKind::Sssp | AlgKind::Cc | AlgKind::Widest => {
+            let warm = WarmStart { prior: prior.clone(), seeds: delta.touched.clone() };
+            let r = match spec.alg {
+                AlgKind::Bfs => {
+                    engine::run(g_new, &mut BfsRelax::new(spec.source).with_warm_start(warm)?, cfg)?
+                }
+                AlgKind::Sssp => {
+                    engine::run(g_new, &mut Sssp::new(spec.source).with_warm_start(warm)?, cfg)?
+                }
+                AlgKind::Cc => engine::run(g_new, &mut Cc::new().with_warm_start(warm)?, cfg)?,
+                AlgKind::Widest => {
+                    engine::run(g_new, &mut Widest::new(spec.source).with_warm_start(warm)?, cfg)?
+                }
+                _ => unreachable!(),
+            };
+            Ok(IncrementalRun {
+                output: r.output,
+                recompute: Recompute::WarmStart,
+                supersteps: r.supersteps,
+            })
+        }
+    }
+}
+
 /// Repeated measurement of one configuration.
 pub struct Measured {
     /// Mean makespan over reps (Eq. 2 accounting).
@@ -250,6 +358,50 @@ mod tests {
         assert_eq!(AlgKind::parse("WSP").unwrap(), AlgKind::Widest);
         assert!(AlgKind::parse("dijkstra").is_err());
         assert!(AlgKind::Widest.needs_weights());
+    }
+
+    #[test]
+    fn incremental_rerun_picks_the_right_strategy() {
+        use crate::graph::delta::{apply, DeltaBatch};
+        let g = build_workload(Workload::Rmat(7), 9, AlgKind::Bfs);
+        let cfg = EngineConfig::host_only(1);
+        let spec = RunSpec::new(AlgKind::Bfs);
+        let spec = spec.with_source(resolve_source(&g, &spec));
+        let (r0, _) = run_alg(&g, spec, &cfg).unwrap();
+
+        // insert-only → warm start, bit-identical to a cold rerun
+        let ins = DeltaBatch::seeded(&g, 12, 0.0, 5);
+        let a = apply(&g, &ins).unwrap();
+        let inc = incremental_rerun(&a.graph, spec, &cfg, &r0.output, &a).unwrap();
+        assert_eq!(inc.recompute, Recompute::WarmStart);
+        let (cold, _) = run_alg(&a.graph, spec, &cfg).unwrap();
+        assert_eq!(inc.output.as_i32(), cold.output.as_i32());
+
+        // effective delete → full fallback
+        let del = DeltaBatch::seeded(&g, 12, 1.0, 5);
+        let b = apply(&g, &del).unwrap();
+        assert!(b.effective_deletes);
+        let inc = incremental_rerun(&b.graph, spec, &cfg, &r0.output, &b).unwrap();
+        assert_eq!(inc.recompute, Recompute::Full(FullReason::EffectiveDeletes));
+
+        // BC has no incremental form
+        let (bc0, _) = run_alg(&g, RunSpec::new(AlgKind::Bc).with_source(spec.source), &cfg)
+            .unwrap();
+        let inc = incremental_rerun(
+            &a.graph,
+            RunSpec::new(AlgKind::Bc).with_source(spec.source),
+            &cfg,
+            &bc0.output,
+            &a,
+        )
+        .unwrap();
+        assert_eq!(inc.recompute, Recompute::Full(FullReason::Unsupported));
+
+        // an unresolved AUTO source is a typed error, not a wrong answer
+        assert!(
+            incremental_rerun(&a.graph, RunSpec::new(AlgKind::Bfs), &cfg, &r0.output, &a)
+                .is_err()
+        );
     }
 
     #[test]

@@ -22,10 +22,14 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use totem::engine::{EngineConfig, StateArray};
+use totem::graph::delta::{self, DeltaBatch};
 use totem::graph::ingest;
 use totem::graph::store;
 use totem::graph::{io as gio, properties, GraphStore, LoadMode, Workload};
-use totem::harness::{build_workload, measure, AlgKind, RunSpec};
+use totem::harness::{
+    build_workload, incremental_rerun, measure, resolve_source, run_alg, AlgKind, FullReason,
+    Recompute, RunSpec,
+};
 use totem::model::{self, calibrate, ModelParams};
 use totem::partition::{PartitionedGraph, Strategy};
 use totem::report::{fmt_secs, fmt_teps, Table};
@@ -81,20 +85,30 @@ COMMANDS:
              [--balance vertex|edge|hub-split]
              [--direction] [--dir-alpha F] [--dir-beta F]
              [--store auto|mmap|buffered] [--no-verify] [--dump-output PATH]
+             [--mutations PATH] [--mutate-mode incremental|full]
              (--threads 0 or omitted = one worker per available core;
               --balance picks how CPU kernels cut chunks, DESIGN.md §11;
               --store picks how csr:PATH containers load, DESIGN.md §12;
-              --dump-output writes per-vertex results for exact diffing)
+              --dump-output writes per-vertex results for exact diffing;
+              --mutations replays `add u v [w]` / `del u v` batches
+              separated by `commit` lines (DESIGN.md §14.1), re-solving
+              after each batch — incrementally (warm-start / residual
+              push, with full-recompute fallback) or from scratch;
+              --dump-output then dumps the post-mutation result)
   serve      --workload W [--queries PATH] [--nqueries N] [--rate QPS]
              [--serve-workers N] [--max-inflight N] [--max-batch N]
              [--cache N] [--weights] [--rounds N] [--dump-dir DIR]
+             [--mutations PATH] [--mutate-policy drain|reject]
              [--hw xS --alpha F --strategy S --threads N ...]
              (queries: one per line, `bfs V|reach V|sssp V|pagerank`,
               replayed at --rate queries/s (0 = as fast as admitted);
               no --queries = --nqueries synthetic bfs queries;
               --max-batch 1 --cache 0 disables batching/caching for
               sequential-baseline diffs; --dump-dir writes one
-              per-vertex file per answered query for exact diffing)
+              per-vertex file per answered query for exact diffing;
+              --mutations interleaves its commit batches evenly through
+              the query stream — queries linearize around each commit
+              per --mutate-policy, DESIGN.md §14.3)
   model      [--alphas a,b,c] [--beta F] [--rcpu F] [--racc F] [--c F] [--msg-bytes F]
   calibrate  --alg A --workload W [--alpha F] [--artifacts DIR]
   generate   --workload W --out PATH [--format el|csr] [--seed N] [--weights]
@@ -281,12 +295,93 @@ fn run_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+    let mut output = r.output.clone();
+    let batches = parse_mutations(args)?;
+    if !batches.is_empty() {
+        output = replay_mutations(g, batches, spec, &cfg, args, output)?;
+    }
     if let Some(path) = args.get("dump-output") {
         let path = PathBuf::from(path);
-        dump_output(&path, &r.output)?;
+        dump_output(&path, &output)?;
         eprintln!("# wrote per-vertex output to {}", path.display());
     }
     Ok(())
+}
+
+/// Read and parse a `--mutations` file (empty when the flag is absent).
+fn parse_mutations(args: &Args) -> Result<Vec<DeltaBatch>> {
+    match args.get("mutations") {
+        None => Ok(vec![]),
+        Some(p) => {
+            let text = std::fs::read_to_string(&p).with_context(|| format!("read {p}"))?;
+            let batches = delta::parse_file(&text).map_err(|e| anyhow!("{p}: {e}"))?;
+            eprintln!("# {} mutation batches from {p}", batches.len());
+            Ok(batches)
+        }
+    }
+}
+
+/// Replay mutation batches against `g`, re-solving `spec` after each
+/// commit — incrementally (warm-start for monotone programs, residual
+/// push for PageRank, full-recompute fallback) or from scratch per
+/// `--mutate-mode`. Returns the final per-vertex output, which
+/// `--dump-output` then writes for exact diffing (the mutate-smoke CI job
+/// diffs the two modes against each other).
+fn replay_mutations(
+    g: totem::graph::CsrGraph,
+    batches: Vec<DeltaBatch>,
+    spec: RunSpec,
+    cfg: &EngineConfig,
+    args: &Args,
+    prior: StateArray,
+) -> Result<StateArray> {
+    let mode = args.str_or("mutate-mode", "incremental");
+    if mode != "incremental" && mode != "full" {
+        bail!("unknown --mutate-mode '{mode}' (incremental|full)");
+    }
+    // AUTO sources must be pinned against the pre-mutation graph: the
+    // max-degree vertex can move when edges land, and the incremental and
+    // full paths must answer the same question.
+    let spec = spec.with_source(resolve_source(&g, &spec));
+    let mut g_cur = g;
+    let mut output = prior;
+    for (bi, batch) in batches.into_iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let applied = delta::apply(&g_cur, &batch).map_err(|e| anyhow!("batch {bi}: {e}"))?;
+        let (out, how) = if mode == "incremental" {
+            let inc = incremental_rerun(&applied.graph, spec, cfg, &output, &applied)?;
+            let how = match inc.recompute {
+                Recompute::WarmStart => {
+                    format!("warm-start ({} supersteps)", inc.supersteps)
+                }
+                Recompute::ResidualPush { sweeps } => {
+                    format!("residual push ({sweeps} sweeps)")
+                }
+                Recompute::Full(FullReason::EffectiveDeletes) => {
+                    format!("full recompute: deletes ({} supersteps)", inc.supersteps)
+                }
+                Recompute::Full(FullReason::Unsupported) => {
+                    format!("full recompute: unsupported alg ({} supersteps)", inc.supersteps)
+                }
+            };
+            (inc.output, how)
+        } else {
+            let (rr, _) = run_alg(&applied.graph, spec, cfg)?;
+            (rr.output, format!("full recompute ({} supersteps)", rr.supersteps))
+        };
+        eprintln!(
+            "[mutate] batch {bi}: +{} -{} edges ({} delete misses, {} new vertices), {} touched -> {how} in {}",
+            applied.inserted,
+            applied.deleted,
+            applied.delete_misses,
+            applied.new_vertices,
+            applied.touched.len(),
+            fmt_secs(t0.elapsed().as_secs_f64()),
+        );
+        output = out;
+        g_cur = applied.graph;
+    }
+    Ok(output)
 }
 
 /// Write per-vertex results as `vertex value` lines. Floats are dumped as
@@ -322,7 +417,9 @@ fn dump_output(path: &Path, out: &StateArray) -> Result<()> {
 /// server-level report (throughput, latency histogram, batching/cache
 /// wins, typed rejections).
 fn serve_cmd(args: &Args) -> Result<()> {
-    use totem::serve::{arrival_delay_secs, parse_query_file, QueryKind, Server, ServerConfig};
+    use totem::serve::{
+        arrival_delay_secs, parse_query_file, MutationPolicy, QueryKind, Server, ServerConfig,
+    };
 
     // --weights attaches synthetic weights (required for sssp queries);
     // build_workload's Sssp arm is exactly that recipe.
@@ -350,14 +447,21 @@ fn serve_cmd(args: &Args) -> Result<()> {
         }
     };
     let rate = args.f64_or("rate", 0.0).map_err(anyhow::Error::msg)?;
+    let policy = match args.str_or("mutate-policy", "drain").as_str() {
+        "drain" => MutationPolicy::Drain,
+        "reject" => MutationPolicy::Reject,
+        p => bail!("unknown --mutate-policy '{p}' (drain|reject)"),
+    };
     let cfg = ServerConfig {
         workers: args.usize_or("serve-workers", 2).map_err(anyhow::Error::msg)?,
         max_in_flight: args.usize_or("max-inflight", 64).map_err(anyhow::Error::msg)?,
         max_batch: args.usize_or("max-batch", 64).map_err(anyhow::Error::msg)?,
         pagerank_rounds: args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?,
         cache_capacity: args.usize_or("cache", 1024).map_err(anyhow::Error::msg)?,
-        engine,
+        mutation_policy: policy,
+        ..ServerConfig::new(engine)
     };
+    let mutation_batches = parse_mutations(args)?;
     let dump_dir = args.get("dump-dir").map(PathBuf::from);
     if let Some(d) = &dump_dir {
         std::fs::create_dir_all(d).with_context(|| format!("create {d:?}"))?;
@@ -376,14 +480,46 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
     let delay = arrival_delay_secs(rate);
     let t0 = std::time::Instant::now();
+    // Interleave mutation batches evenly through the query stream: batch k
+    // is enqueued after every `stride` queries, linearized in FIFO order
+    // with the reads around it (DESIGN.md §14.3).
+    let stride = if mutation_batches.is_empty() {
+        usize::MAX
+    } else {
+        (queries.len() / (mutation_batches.len() + 1)).max(1)
+    };
+    let mut mutations = mutation_batches.into_iter();
+    let mut mutation_tickets = Vec::new();
     let mut tickets = Vec::new();
     for (i, &q) in queries.iter().enumerate() {
+        if i > 0 && i % stride == 0 {
+            if let Some(b) = mutations.next() {
+                mutation_tickets.push((i, srv.submit_mutation(b)));
+            }
+        }
         match srv.submit(q) {
             Ok(t) => tickets.push((i, t)),
             Err(e) => eprintln!("# query {i} rejected: {e}"),
         }
         if delay > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+    }
+    // more batches than interleave slots: enqueue the rest at the tail
+    for b in mutations {
+        mutation_tickets.push((queries.len(), srv.submit_mutation(b)));
+    }
+    for (i, mt) in mutation_tickets {
+        match mt.wait() {
+            Ok(rep) => eprintln!(
+                "# [mutate] at query {i}: epoch {} (+{} / -{} edges, {} new vertices{})",
+                rep.epoch,
+                rep.inserted,
+                rep.deleted,
+                rep.new_vertices,
+                if rep.reassigned { ", reassigned" } else { "" },
+            ),
+            Err(e) => eprintln!("# [mutate] at query {i} failed: {e}"),
         }
     }
     let mut answered = 0usize;
@@ -400,6 +536,8 @@ fn serve_cmd(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let final_epoch = srv.epoch();
+    let final_fingerprint = srv.fingerprint();
     let report = srv.shutdown();
 
     println!(
@@ -407,6 +545,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
         queries.len(),
         report.rejected
     );
+    if final_epoch > 0 {
+        println!("graph epoch      : {final_epoch} (fingerprint {final_fingerprint:016x})");
+    }
     println!(
         "throughput       : {:.1} queries/s over {}",
         answered as f64 / wall.max(1e-9),

@@ -1,17 +1,25 @@
-//! Per-lane result cache keyed by source **and graph identity**
-//! (DESIGN.md §13.4).
+//! Per-lane result cache keyed by source **and graph version**
+//! (DESIGN.md §13.4, §14.2).
 //!
 //! A lane answer (the i32 level array of one BFS source) is immutable
-//! once computed — the served graph is immutable by construction — so
-//! repeats of a hot source are cache hits that bypass admission-queue
-//! compute entirely. Keys embed a **graph fingerprint**: an FNV-1a hash
-//! over the vertex/edge counts and a bounded sample of CSR offsets and
-//! column indices. Serving a different graph (even one with identical
-//! n/m) changes the fingerprint, so a stale cache can never answer for
-//! the wrong graph; reloading the same file reproduces the same
-//! fingerprint, so warm caches survive server restarts by design.
-//! Invalidation is therefore structural — there is no TTL to tune and no
-//! explicit flush: entries are evicted FIFO only to bound memory.
+//! for as long as the served graph is — which, since streaming mutations
+//! landed (DESIGN.md §14), is one *graph epoch*, not the server's
+//! lifetime. Keys therefore embed a [`GraphVersion`]: the structural
+//! **fingerprint** (an FNV-1a hash over the vertex/edge counts and a
+//! bounded sample of CSR offsets and column indices) *and* the mutation
+//! **epoch**. [`LaneCache::commit`] moves the cache to the post-mutation
+//! version and drops every older entry, and [`LaneCache::insert_at`]
+//! refuses answers computed against a retired version (a worker racing a
+//! commit must not poison the new epoch) — so a post-mutation query can
+//! never be answered from a pre-mutation lane, even in the (fingerprint-
+//! collision) case where the mutated graph samples identically.
+//!
+//! The original version of this cache froze the fingerprint once in
+//! `new` and keyed on it forever — correct for an immutable graph,
+//! silently stale the moment mutations landed (ISSUE 9 satellite bug).
+//! Reloading the same file still reproduces fingerprints across restarts;
+//! epochs restart at 0 with the server, which is safe because the cache
+//! restarts empty with it.
 
 use crate::graph::store::Fnv64;
 use crate::graph::CsrGraph;
@@ -44,51 +52,88 @@ pub fn graph_fingerprint(g: &CsrGraph) -> u64 {
     h.finish()
 }
 
-/// Cache key: one lane answer of one graph.
+/// One committed state of the served graph: structural fingerprint plus
+/// the monotonically increasing mutation epoch (0 at server start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphVersion {
+    pub fingerprint: u64,
+    pub epoch: u64,
+}
+
+/// Cache key: one lane answer of one graph version.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct LaneKey {
-    fingerprint: u64,
+    version: GraphVersion,
     source: u32,
 }
 
 /// Bounded FIFO cache of lane level arrays. Values are `Arc`ed: a hit
 /// hands the caller a shared handle, never a copy of an |V|-sized array.
 pub struct LaneCache {
-    fingerprint: u64,
     capacity: usize,
     inner: Mutex<CacheInner>,
 }
 
 struct CacheInner {
+    version: GraphVersion,
     map: HashMap<LaneKey, Arc<Vec<i32>>>,
     fifo: VecDeque<LaneKey>,
 }
 
 impl LaneCache {
-    /// A cache bound to one served graph. `capacity` 0 disables caching.
+    /// A cache bound to one served graph at epoch 0. `capacity` 0
+    /// disables caching.
     pub fn new(g: &CsrGraph, capacity: usize) -> LaneCache {
         LaneCache {
-            fingerprint: graph_fingerprint(g),
             capacity,
-            inner: Mutex::new(CacheInner { map: HashMap::new(), fifo: VecDeque::new() }),
+            inner: Mutex::new(CacheInner {
+                version: GraphVersion { fingerprint: graph_fingerprint(g), epoch: 0 },
+                map: HashMap::new(),
+                fifo: VecDeque::new(),
+            }),
         }
     }
 
+    /// The version current entries are keyed under.
+    pub fn version(&self) -> GraphVersion {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Current structural fingerprint (report/display convenience).
     pub fn fingerprint(&self) -> u64 {
-        self.fingerprint
+        self.version().fingerprint
     }
 
+    /// Move the cache to the post-mutation graph at `epoch`: recompute the
+    /// fingerprint and drop every entry of every older version. Called
+    /// under the server's graph write lock, so no reader observes the new
+    /// graph with the old cache.
+    pub fn commit(&self, g: &CsrGraph, epoch: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.version = GraphVersion { fingerprint: graph_fingerprint(g), epoch };
+        inner.map.clear();
+        inner.fifo.clear();
+    }
+
+    /// Look up a lane answer for the **current** version.
     pub fn get(&self, source: u32) -> Option<Arc<Vec<i32>>> {
-        let key = LaneKey { fingerprint: self.fingerprint, source };
-        self.inner.lock().unwrap().map.get(&key).cloned()
+        let inner = self.inner.lock().unwrap();
+        let key = LaneKey { version: inner.version, source };
+        inner.map.get(&key).cloned()
     }
 
-    pub fn insert(&self, source: u32, levels: Arc<Vec<i32>>) {
+    /// Insert an answer computed against `version`. Silently dropped when
+    /// `version` is no longer current — the answer was computed against a
+    /// retired epoch and must not survive the commit that retired it.
+    pub fn insert_at(&self, version: GraphVersion, source: u32, levels: Arc<Vec<i32>>) {
         if self.capacity == 0 {
             return;
         }
-        let key = LaneKey { fingerprint: self.fingerprint, source };
         let mut inner = self.inner.lock().unwrap();
+        if version != inner.version {
+            return;
+        }
+        let key = LaneKey { version, source };
         if inner.map.insert(key, levels).is_none() {
             inner.fifo.push_back(key);
             while inner.fifo.len() > self.capacity {
@@ -96,6 +141,12 @@ impl LaneCache {
                 inner.map.remove(&evict);
             }
         }
+    }
+
+    /// Insert at the current version (single-epoch callers and tests).
+    pub fn insert(&self, source: u32, levels: Arc<Vec<i32>>) {
+        let version = self.version();
+        self.insert_at(version, source, levels);
     }
 
     pub fn len(&self) -> usize {
@@ -157,5 +208,48 @@ mod tests {
         let c = LaneCache::new(&g, 0);
         c.insert(0, Arc::new(vec![0]));
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn commit_invalidates_prior_epoch_entries() {
+        // regression: the pre-ISSUE-9 cache froze its fingerprint in `new`
+        // and would keep answering for a graph that no longer exists
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 8);
+        c.insert(0, Arc::new(vec![0, 1]));
+        assert!(c.get(0).is_some());
+
+        let mutated = graph(&[(0, 1), (1, 0)], 2);
+        c.commit(&mutated, 1);
+        assert!(c.get(0).is_none(), "post-mutation query must miss");
+        assert!(c.is_empty(), "retired entries are dropped, not shadowed");
+        assert_eq!(c.version().epoch, 1);
+
+        c.insert(0, Arc::new(vec![0, 1]));
+        assert!(c.get(0).is_some(), "new epoch caches normally");
+    }
+
+    #[test]
+    fn epoch_distinguishes_identical_structures() {
+        // same structure re-committed at a later epoch: even a fingerprint
+        // match cannot resurrect old entries (epoch is part of the key)
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 8);
+        c.insert(0, Arc::new(vec![0, 1]));
+        c.commit(&g, 1); // e.g. del + add of the same edge
+        assert_eq!(c.fingerprint(), graph_fingerprint(&g));
+        assert!(c.get(0).is_none());
+    }
+
+    #[test]
+    fn insert_at_retired_version_is_dropped() {
+        let g = graph(&[(0, 1)], 2);
+        let c = LaneCache::new(&g, 8);
+        let old = c.version();
+        let mutated = graph(&[(0, 1), (1, 0)], 2);
+        c.commit(&mutated, 1);
+        // a worker that computed against epoch 0 finishes late
+        c.insert_at(old, 0, Arc::new(vec![0, 1]));
+        assert!(c.is_empty(), "stale compute must not poison the new epoch");
     }
 }

@@ -58,18 +58,26 @@ impl LatencyHistogram {
     }
 
     /// Latency below which `q` (0..=1) of samples fall, reported as the
-    /// upper edge of the containing bucket (conservative).
+    /// upper edge of the containing bucket (conservative). Exception:
+    /// `q == 0.0` asks for the *minimum*-latency estimate, so it reports
+    /// the first non-empty bucket's **lower** edge — the upper edge would
+    /// overstate p0 by up to 2× (ISSUE 9 satellite bug).
     pub fn quantile_secs(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
         for (b, &n) in self.buckets.iter().enumerate() {
             seen += n;
             if seen >= target {
-                return 2f64.powi(b as i32 + 1) / 1e6;
+                return if q == 0.0 {
+                    2f64.powi(b as i32) / 1e6
+                } else {
+                    2f64.powi(b as i32 + 1) / 1e6
+                };
             }
         }
         2f64.powi(Self::BUCKETS as i32) / 1e6
@@ -110,6 +118,17 @@ pub struct ServeReport {
     pub mean_compute_secs: f64,
     /// Mean TEPS over traversal-answering runs (cache hits excluded).
     pub mean_teps: f64,
+    /// Mutation batches committed (graph epochs past the initial one).
+    pub mutations: u64,
+    /// Edges inserted / removed across all committed batches.
+    pub edges_inserted: u64,
+    pub edges_deleted: u64,
+    /// Commits whose load skew triggered a from-scratch reassignment
+    /// (the α controller's commit-time tier, DESIGN.md §14.4).
+    pub reassignments: u64,
+    /// Queries rejected because their admission epoch was retired by a
+    /// mutation commit before dispatch (reject policy only).
+    pub stale_epoch_rejects: u64,
     /// End-to-end latency (queue wait + compute) distribution.
     pub histogram: LatencyHistogram,
 }
@@ -130,6 +149,17 @@ impl fmt::Display for ServeReport {
             self.histogram.quantile_secs(0.50) * 1e3,
             self.histogram.quantile_secs(0.99) * 1e3,
         )?;
+        if self.mutations > 0 || self.stale_epoch_rejects > 0 {
+            writeln!(
+                f,
+                "{} mutation batches (+{} / -{} edges, {} reassignments), {} stale-epoch rejects",
+                self.mutations,
+                self.edges_inserted,
+                self.edges_deleted,
+                self.reassignments,
+                self.stale_epoch_rejects,
+            )?;
+        }
         for (lo, hi, n) in self.histogram.rows() {
             writeln!(f, "  [{lo:>9} us, {hi:>9} us)  {n}")?;
         }
@@ -154,6 +184,11 @@ struct Accum {
     compute_sum: f64,
     teps_sum: f64,
     teps_samples: u64,
+    mutations: u64,
+    edges_inserted: u64,
+    edges_deleted: u64,
+    reassignments: u64,
+    stale_epoch_rejects: u64,
     histogram: LatencyHistogram,
 }
 
@@ -187,6 +222,22 @@ impl ServeMetrics {
         a.batched_queries += queries as u64;
     }
 
+    /// One mutation batch committed (DESIGN.md §14).
+    pub fn record_mutation(&self, inserted: u64, deleted: u64, reassigned: bool) {
+        let mut a = self.inner.lock().unwrap();
+        a.mutations += 1;
+        a.edges_inserted += inserted;
+        a.edges_deleted += deleted;
+        if reassigned {
+            a.reassignments += 1;
+        }
+    }
+
+    /// One query bounced at an epoch boundary under the reject policy.
+    pub fn record_stale_epoch_reject(&self) {
+        self.inner.lock().unwrap().stale_epoch_rejects += 1;
+    }
+
     pub fn report(&self) -> ServeReport {
         let a = self.inner.lock().unwrap();
         let served = a.served.max(1) as f64;
@@ -199,6 +250,11 @@ impl ServeMetrics {
             mean_queue_wait_secs: a.queue_wait_sum / served,
             mean_compute_secs: a.compute_sum / served,
             mean_teps: if a.teps_samples > 0 { a.teps_sum / a.teps_samples as f64 } else { 0.0 },
+            mutations: a.mutations,
+            edges_inserted: a.edges_inserted,
+            edges_deleted: a.edges_deleted,
+            reassignments: a.reassignments,
+            stale_epoch_rejects: a.stale_epoch_rejects,
             histogram: a.histogram.clone(),
         }
     }
@@ -237,6 +293,47 @@ mod tests {
         assert_eq!(rows[1], (524288, 1048576, 1));
         assert!(h.quantile_secs(0.5) <= 8e-6);
         assert!(h.quantile_secs(1.0) >= 1.0);
+    }
+
+    #[test]
+    fn quantile_boundaries_use_lower_edge_at_p0_and_upper_at_p100() {
+        let mut h = LatencyHistogram::new();
+        h.record(3e-6); // bucket [2, 4) us
+        h.record(1.0); // bucket [524288, 1048576) us
+        // p0: minimum estimate = lower edge of the first non-empty bucket.
+        // The pre-fix code returned the upper edge (4 us) here.
+        assert_eq!(h.quantile_secs(0.0), 2e-6);
+        // p100: conservative maximum = upper edge of the last non-empty bucket.
+        assert_eq!(h.quantile_secs(1.0), 1048576e-6);
+        // Out-of-range q clamps to the boundaries rather than misbehaving.
+        assert_eq!(h.quantile_secs(-1.0), h.quantile_secs(0.0));
+        assert_eq!(h.quantile_secs(2.0), h.quantile_secs(1.0));
+        // A single-sample histogram: p0 and p100 are the same bucket's
+        // opposite edges.
+        let mut one = LatencyHistogram::new();
+        one.record(3e-6);
+        assert_eq!(one.quantile_secs(0.0), 2e-6);
+        assert_eq!(one.quantile_secs(1.0), 4e-6);
+    }
+
+    #[test]
+    fn mutation_counters_aggregate_and_render() {
+        let m = ServeMetrics::new();
+        m.record_mutation(12, 3, false);
+        m.record_mutation(5, 0, true);
+        m.record_stale_epoch_reject();
+        let r = m.report();
+        assert_eq!(r.mutations, 2);
+        assert_eq!(r.edges_inserted, 17);
+        assert_eq!(r.edges_deleted, 3);
+        assert_eq!(r.reassignments, 1);
+        assert_eq!(r.stale_epoch_rejects, 1);
+        let text = format!("{r}");
+        assert!(text.contains("2 mutation batches (+17 / -3 edges, 1 reassignments)"));
+        assert!(text.contains("1 stale-epoch rejects"));
+        // The mutation line is suppressed for a mutation-free session.
+        let quiet = format!("{}", ServeMetrics::new().report());
+        assert!(!quiet.contains("mutation batches"));
     }
 
     #[test]

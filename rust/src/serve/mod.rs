@@ -1,5 +1,5 @@
-//! Concurrent query serving over one immutable partitioned graph
-//! (DESIGN.md §13).
+//! Concurrent query serving over one partitioned graph, with streaming
+//! mutations between queries (DESIGN.md §13, §14).
 //!
 //! The offline engine answers one algorithm per process run; this layer
 //! turns the same engine into a **server**: one graph is partitioned once
@@ -14,7 +14,7 @@
 //! - [`batch`] — the pure lane-packing policy that folds compatible
 //!   queued traversals into one bit-parallel multi-source BFS
 //!   ([`crate::alg::msbfs::MsBfs`], up to 64 sources per run);
-//! - [`cache`] — per-lane result cache keyed by source + graph identity;
+//! - [`cache`] — per-lane result cache keyed by source + graph version;
 //! - [`metrics`] — per-query latency split and the server-level report.
 //!
 //! Worker threads pop the FIFO queue; a lane-batchable head drags every
@@ -23,6 +23,25 @@
 //! `Reduce::OrU64` is order-free, batched traversals stay bit-identical
 //! lane-for-lane to solo runs under every executor and partitioning —
 //! the serving layer never trades answer fidelity for throughput.
+//!
+//! ## Graph epochs (DESIGN.md §14.3)
+//!
+//! [`Server::submit_mutation`] enqueues a [`DeltaBatch`] as a queue entry
+//! like any query, so mutations are **linearized in FIFO order** with the
+//! reads around them. Applying one takes the graph's write lock — every
+//! in-flight engine run holds the read lock, so the commit naturally
+//! *drains* dispatched work — then rebuilds the partitioning through
+//! [`delta::rebuild_partitions`] (the α controller's commit-time tier:
+//! mutation-induced load skew past the threshold triggers reassignment),
+//! swaps the [`ServeGraph`], invalidates the lane cache via
+//! [`LaneCache::commit`], and only then publishes the new epoch. Queries
+//! carry the epoch they were admitted under; at dispatch, a query whose
+//! epoch was retired is answered against the current graph under
+//! [`MutationPolicy::Drain`] (the default) or bounced with a typed
+//! [`ServeError::StaleEpoch`] under [`MutationPolicy::Reject`]. Batches
+//! never span a mutation entry: lane-packing stops at the first mutation
+//! in the queue, so one engine run never mixes pre- and post-commit
+//! answers.
 
 pub mod admission;
 pub mod batch;
@@ -32,7 +51,7 @@ pub mod workload;
 
 pub use admission::{Admission, AdmissionError, AdmissionGuard};
 pub use batch::{select_batch, BatchSelection};
-pub use cache::{graph_fingerprint, LaneCache};
+pub use cache::{graph_fingerprint, GraphVersion, LaneCache};
 pub use metrics::{LatencyHistogram, QueryMetrics, ServeMetrics, ServeReport};
 pub use workload::{arrival_delay_secs, parse_query, parse_query_file, QueryKind};
 
@@ -41,13 +60,14 @@ use crate::alg::pagerank::Pagerank;
 use crate::alg::sssp::Sssp;
 use crate::alg::{Algorithm, INF_I32};
 use crate::engine::{self, EngineConfig, StateArray};
+use crate::graph::delta::{self, DeltaBatch, DEFAULT_SKEW_THRESHOLD};
 use crate::graph::CsrGraph;
 use crate::partition::PartitionedGraph;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread;
 use std::time::Instant;
 
@@ -57,10 +77,13 @@ use std::time::Instant;
 
 /// One graph, partitioned once, served by any number of concurrent runs.
 ///
-/// The forward partitioning answers traversals (BFS / reach / SSSP); the
-/// reversed view pull-mode PageRank needs is built **lazily** on the first
-/// PageRank query (a `OnceLock` — pure traversal servers never pay the
-/// doubled footprint).
+/// The value itself is immutable — a mutation commit builds a *successor*
+/// `ServeGraph` and swaps it under the server's write lock, so each value
+/// describes exactly one graph epoch. The forward partitioning answers
+/// traversals (BFS / reach / SSSP); the reversed view pull-mode PageRank
+/// needs is built **lazily** on the first PageRank query of the epoch (a
+/// `OnceLock` — pure traversal servers never pay the doubled footprint,
+/// and a commit drops the stale reversed view with the epoch).
 pub struct ServeGraph {
     graph: CsrGraph,
     forward_pg: PartitionedGraph,
@@ -145,6 +168,14 @@ pub enum ServeError {
     Unsupported(String),
     /// The engine run failed.
     Engine(String),
+    /// The query's admission epoch was retired by a mutation commit before
+    /// it dispatched ([`MutationPolicy::Reject`] only — under
+    /// [`MutationPolicy::Drain`] the query is answered against the current
+    /// graph instead).
+    StaleEpoch { submitted: u64, current: u64 },
+    /// A mutation batch failed to apply; the graph is unchanged and the
+    /// epoch did not advance.
+    Mutation(String),
     /// The server shut down before answering.
     Disconnected,
 }
@@ -154,6 +185,11 @@ impl fmt::Display for ServeError {
         match self {
             ServeError::Unsupported(why) => write!(f, "unsupported query: {why}"),
             ServeError::Engine(why) => write!(f, "engine failure: {why}"),
+            ServeError::StaleEpoch { submitted, current } => write!(
+                f,
+                "query admitted at graph epoch {submitted} retired by commit (current epoch {current})"
+            ),
+            ServeError::Mutation(why) => write!(f, "mutation rejected: {why}"),
             ServeError::Disconnected => write!(f, "server shut down before answering"),
         }
     }
@@ -180,6 +216,57 @@ impl Ticket {
 }
 
 // ---------------------------------------------------------------------------
+// Mutations
+// ---------------------------------------------------------------------------
+
+/// What happens to queries whose admission epoch a mutation commit retires
+/// before they dispatch (DESIGN.md §14.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutationPolicy {
+    /// Answer them against the current (post-commit) graph. The default:
+    /// every admitted query gets an answer, linearized after the commit.
+    Drain,
+    /// Bounce them with [`ServeError::StaleEpoch`] — for clients that must
+    /// know their answer describes the graph they submitted against.
+    Reject,
+}
+
+/// What one committed mutation batch did to the served graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MutationReport {
+    /// The epoch this commit published (first commit publishes 1).
+    pub epoch: u64,
+    /// Edge insertions applied / edge copies removed.
+    pub inserted: u64,
+    pub deleted: u64,
+    /// Deletes that matched no edge (counted no-ops).
+    pub delete_misses: u64,
+    /// Vertices the batch grew the graph by.
+    pub new_vertices: usize,
+    /// Did commit-time load skew trigger a from-scratch reassignment?
+    pub reassigned: bool,
+    /// Realized edge-share skew after the rebuild.
+    pub skew: f64,
+}
+
+/// Handle to an enqueued mutation; blocks until its commit (or failure).
+pub struct MutationTicket {
+    rx: mpsc::Receiver<Result<MutationReport, ServeError>>,
+}
+
+impl MutationTicket {
+    pub fn wait(self) -> Result<MutationReport, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Disconnected))
+    }
+}
+
+/// One enqueued, not-yet-applied mutation batch.
+struct MutationJob {
+    batch: DeltaBatch,
+    tx: mpsc::Sender<Result<MutationReport, ServeError>>,
+}
+
+// ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
@@ -197,6 +284,13 @@ pub struct ServerConfig {
     pub pagerank_rounds: usize,
     /// Lane cache entries (0 disables caching).
     pub cache_capacity: usize,
+    /// What to do with admitted queries a mutation commit strands on a
+    /// retired epoch (DESIGN.md §14.3).
+    pub mutation_policy: MutationPolicy,
+    /// Commit-time load-skew threshold above which
+    /// [`delta::rebuild_partitions`] abandons the extended assignment and
+    /// reassigns from scratch.
+    pub skew_threshold: f64,
     /// Engine configuration every query runs under (re-balancing
     /// rejected — see [`ServeGraph::build`]).
     pub engine: EngineConfig,
@@ -210,6 +304,8 @@ impl ServerConfig {
             max_batch: 64,
             pagerank_rounds: 5,
             cache_capacity: 1024,
+            mutation_policy: MutationPolicy::Drain,
+            skew_threshold: DEFAULT_SKEW_THRESHOLD,
             engine,
         }
     }
@@ -219,15 +315,32 @@ impl ServerConfig {
 /// releases its admission slot via the RAII guard.
 struct Pending {
     kind: QueryKind,
+    /// Graph epoch this query was admitted under; compared against the
+    /// current epoch at dispatch (see [`MutationPolicy`]).
+    epoch: u64,
     _guard: AdmissionGuard,
     enqueued_at: Instant,
     tx: mpsc::Sender<Result<QueryAnswer, ServeError>>,
 }
 
+/// FIFO queue entry: queries and mutations share one queue so mutations
+/// are linearized with the reads around them.
+enum Entry {
+    Query(Pending),
+    Mutation(MutationJob),
+}
+
 struct Shared {
-    graph: ServeGraph,
+    /// The served graph of the current epoch. Queries hold the read lock
+    /// for the duration of their engine run; a mutation commit takes the
+    /// write lock, which drains every dispatched run before it applies.
+    graph: RwLock<ServeGraph>,
+    /// Published graph epoch (0 at start). Bumped under the write lock,
+    /// after the cache commit — a reader holding the graph read lock
+    /// always observes an epoch consistent with the graph it sees.
+    epoch: AtomicU64,
     cfg: ServerConfig,
-    queue: Mutex<VecDeque<Pending>>,
+    queue: Mutex<VecDeque<Entry>>,
     ready: Condvar,
     admission: Arc<Admission>,
     cache: LaneCache,
@@ -247,7 +360,8 @@ impl Server {
         let sg = ServeGraph::build(graph, cfg.engine.clone())?;
         let cache = LaneCache::new(&sg.graph, cfg.cache_capacity);
         let shared = Arc::new(Shared {
-            graph: sg,
+            graph: RwLock::new(sg),
+            epoch: AtomicU64::new(0),
             admission: Admission::new(cfg.max_in_flight),
             cfg,
             queue: Mutex::new(VecDeque::new()),
@@ -295,18 +409,40 @@ impl Server {
                 return Err(e);
             }
         };
-        let pending = Pending { kind, _guard: guard, enqueued_at: Instant::now(), tx };
-        self.shared.queue.lock().unwrap().push_back(pending);
+        let pending = Pending {
+            kind,
+            epoch: self.shared.epoch.load(Ordering::Acquire),
+            _guard: guard,
+            enqueued_at: Instant::now(),
+            tx,
+        };
+        self.shared.queue.lock().unwrap().push_back(Entry::Query(pending));
         self.shared.ready.notify_one();
         Ok(Ticket { rx })
+    }
+
+    /// Enqueue one mutation batch. It is applied in FIFO position — every
+    /// query submitted before it is answered against the pre-commit graph,
+    /// every query after it against the post-commit graph. Mutations do
+    /// not consume admission slots (they are control-plane, not load).
+    pub fn submit_mutation(&self, batch: DeltaBatch) -> MutationTicket {
+        let (tx, rx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(Entry::Mutation(MutationJob { batch, tx }));
+        self.shared.ready.notify_one();
+        MutationTicket { rx }
     }
 
     pub fn in_flight(&self) -> usize {
         self.shared.admission.in_flight()
     }
 
+    /// The published graph epoch (0 until the first mutation commits).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+
     pub fn fingerprint(&self) -> u64 {
-        self.shared.graph.fingerprint()
+        self.shared.graph.read().unwrap().fingerprint()
     }
 
     pub fn report(&self) -> ServeReport {
@@ -351,19 +487,44 @@ enum Work {
     /// lane, and each pending's lane.
     Batch { pendings: Vec<Pending>, lane_sources: Vec<u32>, lane_of: Vec<usize> },
     Solo(Pending),
+    /// A mutation batch to commit.
+    Mutate(MutationJob),
 }
 
 /// Pop the next unit of work (caller holds the queue non-empty).
-fn take_work(q: &mut VecDeque<Pending>, max_batch: usize) -> Work {
-    let head_batchable = q.front().expect("caller checked non-empty").kind.batchable();
-    if !head_batchable {
-        return Work::Solo(q.pop_front().expect("checked above"));
+fn take_work(q: &mut VecDeque<Entry>, max_batch: usize) -> Work {
+    match q.front().expect("caller checked non-empty") {
+        Entry::Mutation(_) => {
+            return match q.pop_front().expect("checked above") {
+                Entry::Mutation(job) => Work::Mutate(job),
+                Entry::Query(_) => unreachable!("front was a mutation"),
+            };
+        }
+        Entry::Query(p) if !p.kind.batchable() => {
+            return match q.pop_front().expect("checked above") {
+                Entry::Query(p) => Work::Solo(p),
+                Entry::Mutation(_) => unreachable!("front was a query"),
+            };
+        }
+        Entry::Query(_) => {}
     }
-    let kinds: Vec<QueryKind> = q.iter().map(|p| p.kind).collect();
+    // Lane-pack over the prefix of queries ahead of the first queued
+    // mutation: a batch must never span an epoch boundary, or one engine
+    // run would mix pre- and post-commit answers.
+    let kinds: Vec<QueryKind> = q
+        .iter()
+        .map_while(|e| match e {
+            Entry::Query(p) => Some(p.kind),
+            Entry::Mutation(_) => None,
+        })
+        .collect();
     let sel = select_batch(&kinds, max_batch);
     let mut pendings = Vec::with_capacity(sel.picked.len());
     for &i in sel.picked.iter().rev() {
-        pendings.push(q.remove(i).expect("selected index in range"));
+        match q.remove(i).expect("selected index in range") {
+            Entry::Query(p) => pendings.push(p),
+            Entry::Mutation(_) => unreachable!("selection restricted to the query prefix"),
+        }
     }
     pendings.reverse(); // back to pick (FIFO) order, aligned with lane_of
     Work::Batch { pendings, lane_sources: sel.lane_sources, lane_of: sel.lane_of }
@@ -390,35 +551,96 @@ fn worker_loop(shared: &Shared) {
                 run_batch(shared, pendings, &lane_sources, &lane_of)
             }
             Work::Solo(p) => run_solo(shared, p),
+            Work::Mutate(job) => apply_mutation(shared, job),
         }
     }
+}
+
+/// Apply one mutation batch under the graph write lock: delta-apply,
+/// rebuild the partitioning (reassigning from scratch when commit-time
+/// load skew exceeds the threshold — the α controller's commit-time
+/// tier), swap the [`ServeGraph`], invalidate the lane cache, and only
+/// then publish the new epoch. Acquiring the write lock drains every
+/// dispatched engine run; a failed apply leaves graph and epoch untouched.
+fn apply_mutation(shared: &Shared, job: MutationJob) {
+    let outcome = {
+        let mut sg = shared.graph.write().unwrap();
+        match delta::apply(&sg.graph, &job.batch) {
+            Err(e) => Err(ServeError::Mutation(e.to_string())),
+            Ok(applied) => {
+                let ecfg = &shared.cfg.engine;
+                let rb = delta::rebuild_partitions(
+                    &applied.graph,
+                    &sg.forward_pg,
+                    ecfg.strategy,
+                    &ecfg.shares,
+                    ecfg.seed,
+                    shared.cfg.skew_threshold,
+                );
+                let epoch = shared.epoch.load(Ordering::Relaxed) + 1;
+                let report = MutationReport {
+                    epoch,
+                    inserted: applied.inserted,
+                    deleted: applied.deleted,
+                    delete_misses: applied.delete_misses,
+                    new_vertices: applied.new_vertices,
+                    reassigned: rb.reassigned,
+                    skew: rb.skew,
+                };
+                let engine = sg.engine.clone();
+                let fingerprint = graph_fingerprint(&applied.graph);
+                *sg = ServeGraph {
+                    graph: applied.graph,
+                    forward_pg: rb.pg,
+                    reversed: OnceLock::new(),
+                    engine,
+                    fingerprint,
+                };
+                shared.cache.commit(&sg.graph, epoch);
+                shared.epoch.store(epoch, Ordering::Release);
+                shared.metrics.record_mutation(report.inserted, report.deleted, report.reassigned);
+                Ok(report)
+            }
+        }
+    };
+    let _ = job.tx.send(outcome);
 }
 
 /// Dispatch one bit-parallel multi-source traversal and fan its lanes
 /// back out to the queries that rode them.
 fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane_of: &[usize]) {
     let dispatched = Instant::now();
-    let fail_all = |pendings: Vec<Pending>, err: ServeError| {
-        for p in pendings {
+    // held for the whole run: this is what a mutation commit drains on
+    let sg = shared.graph.read().unwrap();
+    let current = shared.epoch.load(Ordering::Acquire);
+    let mut live: Vec<(Pending, usize)> = Vec::with_capacity(pendings.len());
+    for (j, p) in pendings.into_iter().enumerate() {
+        if shared.cfg.mutation_policy == MutationPolicy::Reject && p.epoch != current {
+            shared.metrics.record_stale_epoch_reject();
+            let _ = p.tx.send(Err(ServeError::StaleEpoch { submitted: p.epoch, current }));
+        } else {
+            live.push((p, lane_of[j]));
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let fail_all = |live: Vec<(Pending, usize)>, err: ServeError| {
+        for (p, _) in live {
             let _ = p.tx.send(Err(err.clone()));
         }
     };
     let mut alg = match MsBfs::new(lane_sources) {
         Ok(a) => a,
-        Err(e) => return fail_all(pendings, ServeError::Engine(format!("{e:#}"))),
+        Err(e) => return fail_all(live, ServeError::Engine(format!("{e:#}"))),
     };
-    let r = match engine::run_shared(
-        &shared.graph.graph,
-        &shared.graph.graph,
-        &shared.graph.forward_pg,
-        &mut alg,
-        &shared.cfg.engine,
-    ) {
+    let r = match engine::run_shared(&sg.graph, &sg.graph, &sg.forward_pg, &mut alg, &shared.cfg.engine)
+    {
         Ok(r) => r,
-        Err(e) => return fail_all(pendings, ServeError::Engine(format!("{e:#}"))),
+        Err(e) => return fail_all(live, ServeError::Engine(format!("{e:#}"))),
     };
     let compute = dispatched.elapsed().as_secs_f64();
-    let traversed = alg.traversed_edges(&r.output, &shared.graph.graph, 1);
+    let traversed = alg.traversed_edges(&r.output, &sg.graph, 1);
     let teps = if compute > 0.0 { traversed as f64 / compute } else { 0.0 };
     let width = lane_sources.len();
     let lane_levels: Vec<Arc<Vec<i32>>> = r
@@ -430,11 +652,16 @@ fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane
         })
         .collect();
     debug_assert_eq!(lane_levels.len(), width, "one collected level array per lane");
+    // insert at the version the lanes were computed against (read under
+    // the graph read lock, so it cannot move mid-capture): even if a
+    // commit lands between dropping the lock and these inserts, insert_at
+    // drops the stale answers instead of poisoning the new epoch
+    let version = shared.cache.version();
     for (b, &src) in lane_sources.iter().enumerate() {
-        shared.cache.insert(src, Arc::clone(&lane_levels[b]));
+        shared.cache.insert_at(version, src, Arc::clone(&lane_levels[b]));
     }
-    shared.metrics.record_batch(pendings.len());
-    for (j, p) in pendings.into_iter().enumerate() {
+    shared.metrics.record_batch(live.len());
+    for (p, lane) in live {
         let m = QueryMetrics {
             queue_wait_secs: dispatched.saturating_duration_since(p.enqueued_at).as_secs_f64(),
             compute_secs: compute,
@@ -444,7 +671,7 @@ fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane
             cache_hit: false,
         };
         shared.metrics.record_query(m);
-        let response = respond(p.kind, &lane_levels[lane_of[j]]);
+        let response = respond(p.kind, &lane_levels[lane]);
         let _ = p.tx.send(Ok(QueryAnswer { response, metrics: m }));
     }
 }
@@ -452,7 +679,14 @@ fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane
 /// Dispatch one non-batchable query (SSSP / PageRank) solo.
 fn run_solo(shared: &Shared, p: Pending) {
     let dispatched = Instant::now();
-    let g = &shared.graph.graph;
+    let sg = shared.graph.read().unwrap();
+    let current = shared.epoch.load(Ordering::Acquire);
+    if shared.cfg.mutation_policy == MutationPolicy::Reject && p.epoch != current {
+        shared.metrics.record_stale_epoch_reject();
+        let _ = p.tx.send(Err(ServeError::StaleEpoch { submitted: p.epoch, current }));
+        return;
+    }
+    let g = &sg.graph;
     let cfg = &shared.cfg.engine;
     let outcome: Result<(Vec<f32>, usize, u64)> = match p.kind {
         QueryKind::Sssp { source } => {
@@ -463,13 +697,13 @@ fn run_solo(shared: &Shared, p: Pending) {
                 return;
             }
             let mut alg = Sssp::new(source);
-            engine::run_shared(g, g, &shared.graph.forward_pg, &mut alg, cfg).map(|r| {
+            engine::run_shared(g, g, &sg.forward_pg, &mut alg, cfg).map(|r| {
                 let traversed = alg.traversed_edges(&r.output, g, 1);
                 (take_f32(r.output), r.supersteps, traversed)
             })
         }
         QueryKind::Pagerank => {
-            let (rg, rpg) = shared.graph.reversed();
+            let (rg, rpg) = sg.reversed();
             let rounds = shared.cfg.pagerank_rounds;
             let mut alg = Pagerank::new(rounds);
             engine::run_shared(g, rg, rpg, &mut alg, cfg).map(|r| {
@@ -515,7 +749,8 @@ fn take_f32(a: StateArray) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::alg::bfs::Bfs;
-    use crate::graph::{rmat, with_random_weights, RmatParams};
+    use crate::graph::delta::MutationOp;
+    use crate::graph::{rmat, with_random_weights, EdgeList, RmatParams};
 
     fn weighted_rmat(scale: u32, seed: u64) -> CsrGraph {
         let mut el = rmat(&RmatParams::paper(scale, seed));
@@ -617,6 +852,167 @@ mod tests {
         let err = srv.submit(QueryKind::Sssp { source: 0 }).unwrap().wait().unwrap_err();
         assert!(matches!(err, ServeError::Unsupported(_)));
         assert!(format!("{err}").contains("weighted"));
+    }
+
+    /// 0 → 1 → … → n-1 (unweighted): BFS levels from 0 are the vertex ids.
+    fn path_graph(n: u32) -> CsrGraph {
+        let mut el = EdgeList::new(n as usize);
+        for v in 0..n - 1 {
+            el.push(v, v + 1);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn post_mutation_query_never_sees_pre_mutation_cache() {
+        // ISSUE 9 acceptance: a post-mutation serve query must provably
+        // never be answered from a pre-mutation cached lane.
+        let g = path_graph(4);
+        let srv = server(&g, 1, 16);
+        let a1 = srv.submit(QueryKind::Bfs { source: 0 }).unwrap().wait().unwrap();
+        assert_eq!(levels(&a1), &[0, 1, 2, 3]);
+        let a2 = srv.submit(QueryKind::Bfs { source: 0 }).unwrap().wait().unwrap();
+        assert!(a2.metrics.cache_hit, "identical pre-mutation query hits the cache");
+
+        let batch =
+            DeltaBatch { ops: vec![MutationOp::Insert { src: 0, dst: 3, weight: None }] };
+        let report = srv.submit_mutation(batch).wait().unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(report.inserted, 1);
+        assert_eq!(srv.epoch(), 1);
+
+        let a3 = srv.submit(QueryKind::Bfs { source: 0 }).unwrap().wait().unwrap();
+        assert!(!a3.metrics.cache_hit, "commit must invalidate the cached lane");
+        assert_eq!(levels(&a3), &[0, 1, 2, 1], "answer reflects the inserted shortcut");
+        // and the new epoch caches normally
+        let a4 = srv.submit(QueryKind::Bfs { source: 0 }).unwrap().wait().unwrap();
+        assert!(a4.metrics.cache_hit);
+        let r = srv.shutdown();
+        assert_eq!(r.mutations, 1);
+        assert_eq!(r.edges_inserted, 1);
+    }
+
+    #[test]
+    fn mutations_linearize_with_queries_in_fifo_order() {
+        let g = path_graph(4);
+        let srv = server(&g, 1, 16);
+        // pre-mutation query is ahead of the mutation in the FIFO, so it is
+        // answered against the pre-commit graph even if still queued when
+        // the mutation is submitted
+        let pre = srv.submit(QueryKind::Bfs { source: 1 }).unwrap();
+        let mt = srv.submit_mutation(DeltaBatch {
+            ops: vec![MutationOp::Insert { src: 1, dst: 3, weight: None }],
+        });
+        // the commit implies the pre query already dispatched (FIFO ahead
+        // of the mutation), so its answer describes the pre-commit graph
+        mt.wait().unwrap();
+        assert_eq!(levels(&pre.wait().unwrap()), &[INF_I32, 0, 1, 2]);
+        let post = srv.submit(QueryKind::Bfs { source: 1 }).unwrap();
+        let post = post.wait().unwrap();
+        assert!(!post.metrics.cache_hit, "pre-commit lane cannot answer post-commit");
+        assert_eq!(levels(&post), &[INF_I32, 0, 1, 1]);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn reject_policy_bounces_stale_epoch_queries() {
+        let g = path_graph(4);
+        let cfg = ServerConfig {
+            workers: 0, // dispatch by hand for determinism
+            mutation_policy: MutationPolicy::Reject,
+            ..ServerConfig::new(EngineConfig::host_only(2))
+        };
+        let srv = Server::start(g, cfg).unwrap();
+        let t = srv.submit(QueryKind::Bfs { source: 0 }).unwrap(); // epoch 0
+        // a commit lands while the query is still queued
+        let (mtx, mrx) = mpsc::channel();
+        apply_mutation(
+            &srv.shared,
+            MutationJob {
+                batch: DeltaBatch {
+                    ops: vec![MutationOp::Insert { src: 0, dst: 3, weight: None }],
+                },
+                tx: mtx,
+            },
+        );
+        assert_eq!(mrx.recv().unwrap().unwrap().epoch, 1);
+        // dispatch the stranded query
+        let work = {
+            let mut q = srv.shared.queue.lock().unwrap();
+            take_work(&mut q, 64)
+        };
+        match work {
+            Work::Batch { pendings, lane_sources, lane_of } => {
+                run_batch(&srv.shared, pendings, &lane_sources, &lane_of)
+            }
+            _ => panic!("a queued bfs dispatches as a batch"),
+        }
+        assert_eq!(t.wait().unwrap_err(), ServeError::StaleEpoch { submitted: 0, current: 1 });
+        let r = srv.shutdown();
+        assert_eq!(r.stale_epoch_rejects, 1);
+        assert_eq!(r.served, 0, "a bounced query is not an answer");
+    }
+
+    #[test]
+    fn take_work_never_batches_across_a_mutation() {
+        let adm = Admission::new(16);
+        let mut pend = |kind: QueryKind| {
+            let (tx, _rx) = mpsc::channel();
+            // receiver dropped: sends become no-ops, fine for a queue test
+            Entry::Query(Pending {
+                kind,
+                epoch: 0,
+                _guard: adm.try_admit().unwrap(),
+                enqueued_at: Instant::now(),
+                tx,
+            })
+        };
+        let (mtx, _mrx) = mpsc::channel();
+        let mut q = VecDeque::new();
+        q.push_back(pend(QueryKind::Bfs { source: 0 }));
+        q.push_back(pend(QueryKind::Bfs { source: 1 }));
+        q.push_back(Entry::Mutation(MutationJob { batch: DeltaBatch { ops: vec![] }, tx: mtx }));
+        q.push_back(pend(QueryKind::Bfs { source: 2 }));
+        match take_work(&mut q, 64) {
+            Work::Batch { lane_sources, .. } => {
+                assert_eq!(lane_sources, vec![0, 1], "batching stops at the mutation")
+            }
+            _ => panic!("batchable head dispatches as a batch"),
+        }
+        assert!(matches!(take_work(&mut q, 64), Work::Mutate(_)));
+        match take_work(&mut q, 64) {
+            Work::Batch { lane_sources, .. } => assert_eq!(lane_sources, vec![2]),
+            _ => panic!("post-mutation query dispatches on its own"),
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn failed_mutation_leaves_graph_and_epoch_untouched() {
+        let g = path_graph(3);
+        let srv = server(&g, 1, 16);
+        let before = srv.fingerprint();
+        // weight on an unweighted graph is a typed arity error
+        let err = srv
+            .submit_mutation(DeltaBatch {
+                ops: vec![MutationOp::Insert { src: 0, dst: 2, weight: Some(1.0) }],
+            })
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Mutation(_)));
+        assert_eq!(srv.epoch(), 0, "failed apply publishes no epoch");
+        assert_eq!(srv.fingerprint(), before, "graph is unchanged");
+        let a = srv.submit(QueryKind::Bfs { source: 0 }).unwrap().wait().unwrap();
+        assert_eq!(levels(&a), &[0, 1, 2]);
+        let r = srv.shutdown();
+        assert_eq!(r.mutations, 0);
+    }
+
+    fn levels(a: &QueryAnswer) -> &[i32] {
+        match &a.response {
+            QueryResponse::Levels(l) => l.as_slice(),
+            other => panic!("expected levels, got {other:?}"),
+        }
     }
 
     #[test]

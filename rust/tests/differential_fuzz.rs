@@ -12,7 +12,11 @@
 //! property (ISSUE 5) pins the vertex-program driver itself: for every
 //! pull-capable program, the derived push and pull kernels must be
 //! bit-identical on seeded R-MAT graphs across placements and both
-//! executors.
+//! executors. A fourth axis (ISSUE 9) fuzzes streaming mutations: a
+//! seeded insert/delete batch is applied and the incremental recompute
+//! must agree with a from-scratch run on the mutated graph — bit-identical
+//! where the warm start claims bit-identity, within engine tolerance for
+//! PageRank's residual push.
 //!
 //! Reproduction: every failure message carries the sweep seed and the full
 //! sampled configuration. Re-run just that case with
@@ -23,9 +27,12 @@
 
 use totem::baseline;
 use totem::engine::{Balance, EngineConfig, ExecMode};
+use totem::graph::delta::{self, DeltaBatch};
 use totem::graph::generator::{rmat, uniform, with_random_weights, RmatParams};
 use totem::graph::CsrGraph;
-use totem::harness::{run_alg, AlgKind, RunSpec, ALL_ALGS};
+use totem::harness::{
+    incremental_rerun, run_alg, AlgKind, FullReason, Recompute, RunSpec, ALL_ALGS,
+};
 use totem::partition::{Placement, Strategy, ALL_PLACEMENTS};
 use totem::util::rng::Rng;
 
@@ -189,6 +196,108 @@ fn fuzz_engine_against_baseline() {
     for iter in 0..iters {
         let s = sample(&mut rng, &pool);
         check_against_baseline(&pool[s.graph_idx].1, &s, sweep_seed, iter, iters);
+    }
+}
+
+/// The mutation axis (ISSUE 9 tentpole contract): after a seeded
+/// insert/delete batch, [`incremental_rerun`] must agree with a
+/// from-scratch run on the mutated graph under the *same* sampled engine
+/// configuration — executor mode × partitions × strategy × placement ×
+/// balance × direction all inherited from [`sample`]. Monotone warm
+/// starts (BFS/CC/SSSP/widest, insert-only batches) and full fallbacks
+/// compare bit-identical; PageRank's residual push compares within the
+/// engine's own baseline tolerance. The recompute classification itself
+/// is pinned against the batch's delete effect.
+#[test]
+fn fuzz_incremental_recompute_against_full_rerun() {
+    let sweep_seed = env_u64("DIFF_FUZZ_SEED", DEFAULT_SEED);
+    let iters = env_u64("DIFF_FUZZ_ITERS", DEFAULT_ITERS as u64) as usize;
+    let pool = graph_pool();
+    // decorrelated from the baseline sweep so the two tests explore
+    // different configurations under the same CI seed
+    let mut rng = Rng::new(sweep_seed ^ 0xD317A);
+    for iter in 0..iters {
+        let s = sample(&mut rng, &pool);
+        let g = &pool[s.graph_idx].1;
+        // insert-only half the time so the monotone warm-start path runs
+        // as often as the effective-delete fallback
+        let delete_frac = if rng.below(2) == 0 { 0.0 } else { 0.4 };
+        let n_ops = 1 + rng.below(24) as usize;
+        let dseed = rng.below(1 << 30);
+        let repro = format!(
+            "DIFF_FUZZ_SEED={sweep_seed} DIFF_FUZZ_ITERS={iters} iter={iter} \
+             n_ops={n_ops} delete_frac={delete_frac} dseed={dseed}"
+        );
+        let batch = DeltaBatch::seeded(g, n_ops, delete_frac, dseed);
+        let applied = delta::apply(g, &batch)
+            .unwrap_or_else(|e| panic!("{repro} [{}]: delta apply failed: {e}", s.label));
+
+        let spec = RunSpec::new(s.alg).with_source(s.source).with_rounds(s.rounds);
+        let (prior, _) = run_alg(g, spec, &s.cfg)
+            .unwrap_or_else(|e| panic!("{repro} [{}]: prior run failed: {e:#}", s.label));
+        let inc = incremental_rerun(&applied.graph, spec, &s.cfg, &prior.output, &applied)
+            .unwrap_or_else(|e| panic!("{repro} [{}]: incremental failed: {e:#}", s.label));
+        let (full, _) = run_alg(&applied.graph, spec, &s.cfg)
+            .unwrap_or_else(|e| panic!("{repro} [{}]: full rerun failed: {e:#}", s.label));
+
+        // classification must be a pure function of (alg, delete effect)
+        let want_recompute = match s.alg {
+            AlgKind::Bc => Recompute::Full(FullReason::Unsupported),
+            AlgKind::Pagerank => match inc.recompute {
+                Recompute::ResidualPush { .. } => inc.recompute,
+                other => panic!("{repro} [{}]: pagerank took {other:?}", s.label),
+            },
+            _ if applied.effective_deletes => Recompute::Full(FullReason::EffectiveDeletes),
+            _ => Recompute::WarmStart,
+        };
+        assert_eq!(
+            inc.recompute, want_recompute,
+            "{repro} [{}]: recompute classification",
+            s.label
+        );
+
+        let ctx = |v: usize, a: String, b: String| {
+            format!(
+                "{repro} [{}] {:?} vertex {v}: incremental {a} vs full {b}",
+                s.label, inc.recompute
+            )
+        };
+        match s.alg {
+            AlgKind::Pagerank => {
+                // residual push vs engine: same tolerance the engine is
+                // held to against the sequential baseline
+                for (v, (&a, &b)) in
+                    inc.output.as_f32().iter().zip(full.output.as_f32()).enumerate()
+                {
+                    let tol = (1e-4 * b.abs()).max(1e-7);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{}",
+                        ctx(v, a.to_string(), b.to_string())
+                    );
+                }
+            }
+            AlgKind::Bfs | AlgKind::Cc => {
+                for (v, (&a, &b)) in
+                    inc.output.as_i32().iter().zip(full.output.as_i32()).enumerate()
+                {
+                    assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+                }
+            }
+            // SSSP/widest warm starts and every full fallback (incl. BC)
+            // ran through the same engine: compared on bits
+            AlgKind::Sssp | AlgKind::Widest | AlgKind::Bc => {
+                for (v, (&a, &b)) in
+                    inc.output.as_f32().iter().zip(full.output.as_f32()).enumerate()
+                {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{}",
+                        ctx(v, a.to_string(), b.to_string())
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -1,0 +1,335 @@
+#!/usr/bin/env python3
+"""Independent cross-check of streaming mutations (DESIGN.md §14).
+
+Re-implements, in pure Python, the delta-log contracts the mutation
+layer rests on, and drives them against a built `totem` binary:
+
+  1. **Seeded batch generation** (`DeltaBatch::seeded`): same
+     Xoshiro256** stream, same op mix — each op is a delete of a
+     uniformly sampled existing edge (CSR enumeration order) with
+     probability `delete_frac`, else an insert between uniform
+     endpoints, weighted iff the graph is. `emit` writes the replay
+     file `totem run --mutations` consumes, so the CI workload is
+     deterministic without any Rust-side generator CLI.
+  2. **Batch application** (`delta::apply`, §14.1): deletes resolve
+     against the pre-batch graph and remove ALL parallel copies of a
+     named pair; inserts append afterward in op order; endpoint growth;
+     per-unique-pair miss accounting. `verify` recomputes every
+     per-batch counter (+N / -M edges, misses, new vertices) and checks
+     them against the `[mutate]` lines totem printed during replay.
+  3. **End-to-end answers**: BFS levels on the Python-applied final
+     graph (source = pre-mutation max-degree vertex, the AUTO rule)
+     must equal the per-vertex dump of
+     `totem run --mutations … --dump-output` — one oracle for both
+     `--mutate-mode incremental` and `full`, which CI has already
+     diffed against each other.
+
+Exit 0 with a PASS summary, non-zero with the first failure.
+"""
+
+import argparse
+import os
+import re
+import sys
+from collections import deque
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cross_sim_bench import Rng
+
+INF_I32 = 1 << 30
+
+failures = []
+
+
+def check(name, cond, detail=""):
+    tag = "PASS" if cond else "FAIL"
+    print(f"[{tag}] {name}" + (f" — {detail}" if detail and not cond else ""))
+    if not cond:
+        failures.append(name)
+
+
+# ---------------------------------------------------------------------------
+# graph/io.rs text edge-list parse (the `p V E` grammar)
+# ---------------------------------------------------------------------------
+
+
+def parse_edge_list(path):
+    """Returns (n, edges, weights|None); n from the `p` header or max id+1."""
+    declared_n = None
+    edges, weights = [], None
+    with open(path) as f:
+        for raw in f:
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            t = s.split()
+            if t[0] == "p":
+                declared_n = int(t[1])
+                continue
+            src, dst = int(t[0]), int(t[1])
+            if len(t) == 3:
+                if weights is None:
+                    weights = []
+                weights.append(float(t[2]))
+            edges.append((src, dst))
+    n = declared_n
+    if n is None:
+        n = max((max(s, d) for s, d in edges), default=-1) + 1
+    return n, edges, weights
+
+
+def csr_order(n, edges, weights):
+    """Counting-sort into CSR enumeration order (mirrors from_edge_list:
+    stable within a row), the order `CsrGraph::iter_edges` yields."""
+    deg = [0] * n
+    for s, _ in edges:
+        deg[s] += 1
+    off = [0] * (n + 1)
+    for v in range(n):
+        off[v + 1] = off[v] + deg[v]
+    out_e = [None] * len(edges)
+    out_w = [0.0] * len(edges) if weights is not None else None
+    cur = off[:n]
+    for k, (s, d) in enumerate(edges):
+        out_e[cur[s]] = (s, d)
+        if out_w is not None:
+            out_w[cur[s]] = weights[k]
+        cur[s] += 1
+    return out_e, out_w
+
+
+# ---------------------------------------------------------------------------
+# delta.rs mirrors
+# ---------------------------------------------------------------------------
+
+
+def seeded_batch(n, csr_edges, weighted, n_ops, delete_frac, seed):
+    """Mirror of `DeltaBatch::seeded` — including RNG call order: the
+    delete coin is flipped only when edges exist, the weight draw only
+    when the graph is weighted."""
+    rng = Rng(seed)
+    nb = max(n, 1)
+    ops = []
+    for _ in range(n_ops):
+        if csr_edges and rng.next_f64() < delete_frac:
+            src, dst = csr_edges[rng.below(len(csr_edges))]
+            ops.append(("del", src, dst, None))
+        else:
+            src = rng.below(nb)
+            dst = rng.below(nb)
+            w = float(rng.below(64) + 1) if weighted else None
+            ops.append(("add", src, dst, w))
+    return ops
+
+
+def parse_mutations(path):
+    """Mirror of `DeltaBatch::parse_file`: batches split on `commit`,
+    trailing ops form a last batch, empty batches dropped."""
+    batches, cur = [], []
+    with open(path) as f:
+        for raw in f:
+            s = raw.strip()
+            if not s or s.startswith("#"):
+                continue
+            t = s.split()
+            if t[0] == "commit":
+                if cur:
+                    batches.append(cur)
+                    cur = []
+            elif t[0] == "add":
+                w = float(t[3]) if len(t) > 3 else None
+                cur.append(("add", int(t[1]), int(t[2]), w))
+            elif t[0] == "del":
+                cur.append(("del", int(t[1]), int(t[2]), None))
+            else:
+                raise ValueError(f"unknown verb {t[0]!r}")
+    if cur:
+        batches.append(cur)
+    return batches
+
+
+def apply_batch(n, edges, weights, ops):
+    """Mirror of `delta::apply`. Returns (n', edges', weights', stats).
+    `edges` must be in CSR enumeration order; the result is the exact
+    intra-row edge order the Rust rebuild produces (surviving old edges
+    in old order, inserts appended in op order, then re-sorted by row)."""
+    delete_pairs = set()
+    inserts = []
+    nv = n
+    for verb, src, dst, w in ops:
+        if verb == "add":
+            nv = max(nv, src + 1, dst + 1)
+            inserts.append((src, dst, w))
+        else:
+            delete_pairs.add((src, dst))
+    out_e, out_w = [], [] if weights is not None else None
+    deleted, hit = 0, set()
+    for k, (s, d) in enumerate(edges):
+        if (s, d) in delete_pairs:
+            deleted += 1
+            hit.add((s, d))
+            continue
+        out_e.append((s, d))
+        if out_w is not None:
+            out_w.append(weights[k])
+    for src, dst, w in inserts:
+        out_e.append((src, dst))
+        if out_w is not None:
+            out_w.append(w if w is not None else 0.0)
+    stats = {
+        "inserted": len(inserts),
+        "deleted": deleted,
+        "misses": len(delete_pairs) - len(hit),
+        "new_vertices": nv - n,
+    }
+    out_e, out_w = csr_order(nv, out_e, out_w)
+    return nv, out_e, out_w, stats
+
+
+# ---------------------------------------------------------------------------
+# harness mirrors: AUTO source + baseline BFS
+# ---------------------------------------------------------------------------
+
+
+def auto_source(n, edges):
+    """`resolve_source`: max out-degree; Rust's `max_by_key` keeps the
+    LAST maximal element on ties."""
+    deg = [0] * max(n, 1)
+    for s, _ in edges:
+        deg[s] += 1
+    best = 0
+    for v in range(n):
+        if deg[v] >= deg[best]:
+            best = v
+    return best
+
+
+def bfs_levels(n, edges, source):
+    adj = [[] for _ in range(n)]
+    for s, d in edges:
+        adj[s].append(d)
+    lv = [INF_I32] * n
+    if n == 0:
+        return lv
+    lv[source] = 0
+    q = deque([source])
+    while q:
+        v = q.popleft()
+        for d in adj[v]:
+            if lv[d] == INF_I32:
+                lv[d] = lv[v] + 1
+                q.append(d)
+    return lv
+
+
+# ---------------------------------------------------------------------------
+# commands
+# ---------------------------------------------------------------------------
+
+
+def cmd_emit(args):
+    n, edges, weights = parse_edge_list(args.graph)
+    csr_e, _ = csr_order(n, edges, weights)
+    weighted = weights is not None
+    lines = [f"# seeded mutations: graph={os.path.basename(args.graph)} "
+             f"seed={args.seed} ops={args.ops}"]
+    # batch 1: insert-only (the monotone warm-start path), batch 2:
+    # mixed with deletes (the full-fallback path) — CI greps the replay
+    # log to prove both strategies actually ran.
+    specs = [(0.0, args.seed), (0.4, (args.seed ^ 0xBEEF) & ((1 << 64) - 1))]
+    for frac, seed in specs:
+        for verb, s, d, w in seeded_batch(n, csr_e, weighted, args.ops, frac, seed):
+            if verb == "add" and w is not None:
+                lines.append(f"add {s} {d} {int(w)}")
+            elif verb == "add":
+                lines.append(f"add {s} {d}")
+            else:
+                lines.append(f"del {s} {d}")
+        lines.append("commit")
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {args.out}: 2 batches x {args.ops} ops over |V|={n} |E|={len(edges)}")
+
+
+MUTATE_LINE = re.compile(
+    r"\[mutate\] batch (\d+): \+(\d+) -(\d+) edges \((\d+) delete misses?, "
+    r"(\d+) new vertices\)"
+)
+
+
+def cmd_verify(args):
+    n, edges, weights = parse_edge_list(args.graph)
+    edges, weights = csr_order(n, edges, weights)
+    source = auto_source(n, edges)
+    batches = parse_mutations(args.mutations)
+    check("mutation file parses into batches", len(batches) > 0,
+          f"{args.mutations} held no batches")
+
+    all_stats = []
+    for ops in batches:
+        n, edges, weights, stats = apply_batch(n, edges, weights, ops)
+        all_stats.append(stats)
+
+    if args.log:
+        got = []
+        with open(args.log) as f:
+            for line in f:
+                m = MUTATE_LINE.search(line)
+                if m:
+                    got.append({
+                        "inserted": int(m.group(2)),
+                        "deleted": int(m.group(3)),
+                        "misses": int(m.group(4)),
+                        "new_vertices": int(m.group(5)),
+                    })
+        check("replay log holds one [mutate] line per batch",
+              len(got) == len(all_stats),
+              f"log {len(got)} vs python {len(all_stats)}")
+        for i, (want, have) in enumerate(zip(all_stats, got)):
+            check(f"batch {i} counters (+{want['inserted']} -{want['deleted']} "
+                  f"misses={want['misses']} grow={want['new_vertices']})",
+                  want == have, f"totem printed {have}")
+
+    if args.dump:
+        want = bfs_levels(n, edges, source)
+        got = {}
+        with open(args.dump) as f:
+            for line in f:
+                t = line.split()
+                if len(t) == 2:
+                    got[int(t[0])] = int(t[1])
+        check("dump covers the post-mutation vertex set", len(got) == n,
+              f"dump {len(got)} vs python {n}")
+        bad = [(v, got.get(v), want[v]) for v in range(n) if got.get(v) != want[v]]
+        check(f"post-mutation BFS levels from source {source} match dump",
+              not bad, f"first diff {bad[:3]}")
+
+    print(f"final graph: |V|={n} |E|={len(edges)}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    e = sub.add_parser("emit", help="write a seeded mutation replay file")
+    e.add_argument("--graph", required=True, help="text edge list (`p V E` grammar)")
+    e.add_argument("--seed", type=lambda s: int(s, 0), default=0xD317A)
+    e.add_argument("--ops", type=int, default=64, help="ops per batch")
+    e.add_argument("--out", required=True)
+    v = sub.add_parser("verify", help="check replay counters + final BFS dump")
+    v.add_argument("--graph", required=True, help="PRE-mutation text edge list")
+    v.add_argument("--mutations", required=True)
+    v.add_argument("--log", help="totem run stderr with the [mutate] lines")
+    v.add_argument("--dump", help="per-vertex --dump-output of the replayed BFS run")
+    args = ap.parse_args()
+    if args.cmd == "emit":
+        cmd_emit(args)
+    else:
+        cmd_verify(args)
+    if failures:
+        print(f"\n{len(failures)} check(s) FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
