@@ -135,7 +135,10 @@ fn calibrate_alg(
     alg: AlgKind,
     artifacts: &std::path::Path,
 ) -> anyhow::Result<calibrate::Calibration> {
-    use totem::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
+    use totem::alg::{
+        bc::Bc, bfs::Bfs, cc::Cc, kcore::KCore, labelprop::LabelProp, pagerank::Pagerank,
+        ppr::Ppr, sssp::Sssp, triangles::Triangles, widest::Widest,
+    };
     // same source policy as the harness sweep (max-degree hub)
     let src = totem::harness::resolve_source(g, &RunSpec::new(alg));
     match alg {
@@ -157,5 +160,19 @@ fn calibrate_alg(
             g, &mut Cc::new(), &mut Cc::new(), artifacts, 0.7, Strategy::Rand),
         AlgKind::Widest => calibrate::calibrate_with(
             g, &mut Widest::new(src), &mut Widest::new(src), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Triangles => calibrate::calibrate_with(
+            g, &mut Triangles::new(), &mut Triangles::new(), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Kcore => calibrate::calibrate_with(
+            g, &mut KCore::new(), &mut KCore::new(), artifacts, 0.7, Strategy::Rand),
+        AlgKind::Labelprop => calibrate::calibrate_with(
+            g,
+            &mut LabelProp::new(5),
+            &mut LabelProp::new(5),
+            artifacts,
+            0.7,
+            Strategy::Rand,
+        ),
+        AlgKind::Ppr => calibrate::calibrate_with(
+            g, &mut Ppr::new(src, 5), &mut Ppr::new(src, 5), artifacts, 0.7, Strategy::Rand),
     }
 }

@@ -41,6 +41,18 @@ fn baseline_secs(alg: AlgKind, g: &CsrGraph, reps: usize) -> f64 {
             AlgKind::Widest => {
                 let _ = baseline::widest(g, 1);
             }
+            AlgKind::Triangles => {
+                let _ = baseline::triangles(g);
+            }
+            AlgKind::Kcore => {
+                let _ = baseline::kcore(g);
+            }
+            AlgKind::Labelprop => {
+                let _ = baseline::labelprop(g, 1);
+            }
+            AlgKind::Ppr => {
+                let _ = baseline::ppr(g, 1, 1);
+            }
         }
         best = best.min(t0.elapsed().as_secs_f64());
     }

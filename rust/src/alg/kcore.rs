@@ -1,0 +1,189 @@
+//! k-core decomposition — synchronous batch peeling on the
+//! [`Kernel::NeighborScan`] family (DESIGN.md §15).
+//!
+//! Coreness of `v` = the largest `k` such that `v` survives in the
+//! `k`-core (the maximal subgraph where every vertex has degree ≥ `k`).
+//! The program peels in rounds over the engine's **undirected view**
+//! (the doubled multigraph — parallel edges and self-loops count with
+//! multiplicity, exactly like CC's view): at the current threshold `k`,
+//! every still-alive vertex counts its alive neighbors in the previous
+//! round's snapshot; a count ≤ `k` assigns coreness `k` and kills the
+//! vertex. A round that kills nobody either terminates (no one left
+//! alive) or **escalates** `k` by one in `cycle_done` and reactivates
+//! the peel — the quiescence override is the reactivation mechanism.
+//! Batch-synchronous peeling removes any subset of sub-threshold
+//! vertices per round, which converges to the same unique k-core as
+//! sequential peeling; determinism comes from the snapshot reads and
+//! own-cell integer writes (§9 order-free), so every executor,
+//! placement, and balance plan is bit-identical. CPU-only ("kcore" is
+//! not in the AOT manifest).
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, Fields, FieldSpec, InitRow, Kernel, NeighborView,
+    ProgramDriver, ProgramMeta, Role, VertexProgram,
+};
+use super::{StepCtx, INF_I32};
+use crate::engine::state::{AlgState, StateArray};
+use crate::graph::CsrGraph;
+use crate::partition::PartitionedGraph;
+use std::sync::atomic::{AtomicI32, AtomicU32, Ordering};
+
+/// Alive marker: a vertex whose `core` is still `INF_I32` has not been
+/// peeled yet.
+const CORE: FieldId = FieldId(0);
+const CORE_PREV: FieldId = FieldId(1);
+
+/// k-core decomposition as a vertex program.
+pub struct KCoreProgram {
+    /// Global vertex count (set in `prepare`).
+    n_global: u32,
+    /// Current peeling threshold. Escalated in `cycle_done` when a round
+    /// kills nobody — interior mutability because the hook takes `&self`
+    /// (it runs once per superstep, single-threaded, after the barrier).
+    k: AtomicI32,
+    /// Vertices still alive, decremented once per death in `scan_vertex`
+    /// (each real vertex is local to exactly one partition).
+    remaining: AtomicU32,
+}
+
+impl VertexProgram for KCoreProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "kcore",
+            needs_weights: false,
+            undirected: true,
+            reversed: false,
+            fixed_rounds: None,
+            output: CORE,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("core", Role::Host, INF_I32),
+            FieldSpec::i32("core_prev", Role::Host, INF_I32),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::NeighborScan { cur: CORE, prev: CORE_PREV },
+            comm: vec![CommDecl::Pull(CORE)],
+            device: None,
+            accel: AccelSpec { name: "kcore", n_si32: 0, n_sf32: 0 },
+        }
+    }
+
+    fn prepare(&mut self, original: &CsrGraph, _prepared: &CsrGraph) {
+        self.n_global = original.vertex_count as u32;
+    }
+
+    fn begin_cycle(&mut self, _cycle: usize, _pg: &PartitionedGraph, _states: &mut [AlgState]) {
+        self.k.store(0, Ordering::Relaxed);
+        self.remaining.store(self.n_global, Ordering::Relaxed);
+    }
+
+    fn init_vertex(&self, _global_id: u32, _row: &mut InitRow<'_>) {}
+
+    fn scan_vertex(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>, nb: &NeighborView<'_, '_>) -> i32 {
+        let own = f.i32(CORE_PREV, v);
+        if own != INF_I32 {
+            return own; // already peeled: coreness is settled
+        }
+        let k = self.k.load(Ordering::Relaxed);
+        let mut alive = 0i64;
+        for i in 0..nb.len() {
+            if nb.value(i) == INF_I32 {
+                alive += 1;
+            }
+        }
+        if alive <= k as i64 {
+            self.remaining.fetch_sub(1, Ordering::Relaxed);
+            k
+        } else {
+            INF_I32
+        }
+    }
+
+    /// The reactivation mechanism: a changed round keeps peeling at the
+    /// same threshold; a quiet round with survivors escalates `k` and
+    /// continues; a quiet round with no survivors terminates.
+    fn cycle_done(&self, _cycle: usize, _next_superstep: usize, any_changed: bool) -> Option<bool> {
+        if any_changed {
+            return Some(false);
+        }
+        if self.remaining.load(Ordering::Relaxed) == 0 {
+            return Some(true);
+        }
+        self.k.fetch_add(1, Ordering::Relaxed);
+        Some(false)
+    }
+
+    /// Each peel round scans every adjacency cell of the doubled view.
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        2 * g.edge_count() as u64 * rounds.max(1) as u64
+    }
+}
+
+/// The engine-facing k-core algorithm.
+pub type KCore = ProgramDriver<KCoreProgram>;
+
+impl KCore {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> KCore {
+        ProgramDriver::build(KCoreProgram {
+            n_global: 0,
+            k: AtomicI32::new(0),
+            remaining: AtomicU32::new(0),
+        })
+        .expect("static schema is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::EdgeList;
+    use crate::partition::Strategy;
+
+    /// K4 (coreness 3) with a pendant path 4-5 (coreness 1) and an
+    /// isolated vertex 6 (coreness 0).
+    fn k4_tail() -> CsrGraph {
+        let mut el = EdgeList::new(7);
+        for (s, d) in [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4), (4, 5)] {
+            el.push(s, d);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn coreness_k4_tail() {
+        let g = k4_tail();
+        let mut alg = KCore::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_i32(), &[3, 3, 3, 3, 1, 1, 0]);
+    }
+
+    #[test]
+    fn partitioned_matches_host_bitwise() {
+        let g = k4_tail();
+        let mut a = KCore::new();
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for shares in [[0.5, 0.5], [0.3, 0.7]] {
+            let mut b = KCore::new();
+            let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+        }
+    }
+
+    #[test]
+    fn matches_baseline_on_rmat() {
+        use crate::graph::generator::{rmat, RmatParams};
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 6)));
+        let mut alg = KCore::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(2)).unwrap();
+        assert_eq!(r.output.as_i32(), crate::baseline::kcore(&g).as_slice());
+    }
+}

@@ -1,0 +1,176 @@
+//! Label propagation community detection — synchronous, with a
+//! deterministic **min-label** tie-break, on the [`Kernel::NeighborScan`]
+//! family (DESIGN.md §15).
+//!
+//! Every vertex starts labeled with its own global id. Each round, every
+//! vertex simultaneously adopts the most frequent label among its
+//! neighbors' previous-round labels — over the engine's **undirected
+//! doubled multigraph**, so parallel edges weight their endpoint's label
+//! with multiplicity — breaking frequency ties toward the smallest
+//! label. A vertex with no neighbors keeps its own label. The scan is a
+//! pure function of the previous round's snapshot and integer-only, so
+//! runs are bit-identical across executors, placements, and balance
+//! plans — the determinism contract satellite-tested in
+//! `differential_fuzz`. Synchronous LPA can oscillate (e.g. on bipartite
+//! structures), so the cycle runs a fixed number of rounds
+//! ([`DEFAULT_ROUNDS`], `--rounds` on the CLI) with early exit on a
+//! fully quiet round. CPU-only ("labelprop" is not in the AOT manifest).
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, Fields, FieldSpec, InitRow, Kernel, NeighborView,
+    ProgramDriver, ProgramMeta, Role, VertexProgram,
+};
+use super::StepCtx;
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
+
+pub const DEFAULT_ROUNDS: usize = 5;
+
+const LABEL: FieldId = FieldId(0);
+const LABEL_PREV: FieldId = FieldId(1);
+
+/// Label propagation as a vertex program.
+pub struct LabelPropProgram {
+    pub rounds: usize,
+}
+
+impl VertexProgram for LabelPropProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "labelprop",
+            needs_weights: false,
+            undirected: true,
+            reversed: false,
+            fixed_rounds: Some(self.rounds),
+            output: LABEL,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::i32("label", Role::Host, 0),
+            FieldSpec::i32("label_prev", Role::Host, 0),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::NeighborScan { cur: LABEL, prev: LABEL_PREV },
+            comm: vec![CommDecl::Pull(LABEL)],
+            device: None,
+            accel: AccelSpec { name: "labelprop", n_si32: 0, n_sf32: 0 },
+        }
+    }
+
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        row.set_i32(LABEL, global_id as i32);
+    }
+
+    fn scan_vertex(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>, nb: &NeighborView<'_, '_>) -> i32 {
+        if nb.is_empty() {
+            return f.i32(LABEL_PREV, v);
+        }
+        let mut labels: Vec<i32> = (0..nb.len()).map(|k| nb.value(k)).collect();
+        labels.sort_unstable();
+        // ascending scan: the first maximal run wins, which IS the
+        // min-label tie-break (only strictly longer runs replace it)
+        let mut best = labels[0];
+        let mut best_count = 0usize;
+        let mut run = labels[0];
+        let mut run_count = 0usize;
+        for &l in &labels {
+            if l == run {
+                run_count += 1;
+            } else {
+                run = l;
+                run_count = 1;
+            }
+            if run_count > best_count {
+                best = run;
+                best_count = run_count;
+            }
+        }
+        best
+    }
+
+    /// A quiet round is a fixed point: every later round would repeat it.
+    fn cycle_done(&self, _cycle: usize, _next_superstep: usize, any_changed: bool) -> Option<bool> {
+        if any_changed {
+            None // fall through to the fixed-rounds cap
+        } else {
+            Some(true)
+        }
+    }
+
+    /// Every round scans every adjacency cell of the doubled view.
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        2 * g.edge_count() as u64 * rounds.max(1) as u64
+    }
+}
+
+/// The engine-facing label-propagation algorithm.
+pub type LabelProp = ProgramDriver<LabelPropProgram>;
+
+impl LabelProp {
+    pub fn new(rounds: usize) -> LabelProp {
+        ProgramDriver::build(LabelPropProgram { rounds }).expect("static schema is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::EdgeList;
+    use crate::partition::Strategy;
+
+    /// Two dense communities {0,1,2} and {3,4,5} joined by one bridge.
+    fn two_communities() -> CsrGraph {
+        let mut el = EdgeList::new(6);
+        for (s, d) in [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5), (2, 3)] {
+            el.push(s, d);
+        }
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn communities_converge_to_min_labels() {
+        let g = two_communities();
+        let mut alg = LabelProp::new(DEFAULT_ROUNDS);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        let labels = r.output.as_i32();
+        // each triangle is internally uniform, and they stay distinct
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_eq!(labels[4], labels[5]);
+        assert_ne!(labels[2], labels[3]);
+    }
+
+    #[test]
+    fn min_label_tie_break_is_deterministic() {
+        // a single undirected edge 0-1: each adopts the other's label and
+        // oscillates; the fixed round cap terminates and every config
+        // must land on the identical oscillation phase
+        let mut el = EdgeList::new(2);
+        el.push(0, 1);
+        let g = CsrGraph::from_edge_list(&el);
+        let mut a = LabelProp::new(3);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        let mut b = LabelProp::new(3);
+        let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::Rand);
+        let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+        assert_eq!(r1.output.as_i32(), r2.output.as_i32());
+        // 3 rounds: [1,0] -> [0,1] -> [1,0]
+        assert_eq!(r1.output.as_i32(), &[1, 0]);
+    }
+
+    #[test]
+    fn matches_baseline_on_rmat() {
+        use crate::graph::generator::{rmat, RmatParams};
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 6)));
+        let mut alg = LabelProp::new(DEFAULT_ROUNDS);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(2)).unwrap();
+        assert_eq!(r.output.as_i32(), crate::baseline::labelprop(&g, DEFAULT_ROUNDS).as_slice());
+    }
+}

@@ -5,9 +5,11 @@
 //!   algorithms are written against: a named state schema (dtype, pad,
 //!   role), per-cycle communication declarations, a kernel family, and a
 //!   handful of small typed callbacks (`edge_update`, `gather_apply`, …).
-//!   All six algorithms (`bfs`, `pagerank`, `sssp`, `bc`, `cc`,
-//!   `widest`) live on this surface; see DESIGN.md §10 for how to add
-//!   one in well under 100 lines.
+//!   All ten algorithms (`bfs`, `pagerank`, `sssp`, `bc`, `cc`,
+//!   `widest`, `triangles`, `kcore`, `labelprop`, `ppr`) live on this
+//!   surface; see DESIGN.md §10 for how to add one in well under 100
+//!   lines, and §15 for the edge-centric kernel family the motif
+//!   workloads ride on.
 //! - [`Algorithm`] is the **engine-facing execution contract** — the
 //!   paper's `alg_init` / `alg_compute` / `alg_scatter` hooks plus the
 //!   direction-optimization and rebalance extensions. It is implemented
@@ -31,10 +33,14 @@ pub mod bc;
 pub mod bfs;
 pub mod cc;
 pub mod incremental;
+pub mod kcore;
+pub mod labelprop;
 pub mod msbfs;
 pub mod pagerank;
+pub mod ppr;
 pub mod program;
 pub mod sssp;
+pub mod triangles;
 pub mod widest;
 
 use crate::engine::direction::{Direction, FrontierStats};

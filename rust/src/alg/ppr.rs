@@ -1,0 +1,190 @@
+//! Personalized PageRank — the serving layer's natural per-user query
+//! (DESIGN.md §15.4), on the same pull-gather family as global PageRank.
+//!
+//! Standard power iteration from the source indicator: rank starts as
+//! `1{v == source}` and each round applies
+//! `rank_{t+1}[v] = (1-d)·1{v == source} + d · Σ_{u→v} rank_t[u]/outdeg(u)`
+//! for a fixed number of rounds (d = 0.85, same damping as global
+//! PageRank; dangling mass is dropped, same as the Figure 14 kernel).
+//! The only differences from [`super::pagerank`] are the personalized
+//! teleport vector (an aux source-mask field set in `init_vertex`, since
+//! `gather_apply` sees local indices) and the indicator initialization —
+//! the gather over the reversed graph, the pull channel, and therefore
+//! full pipelining eligibility are identical. Tolerances follow the
+//! established PageRank tiers. CPU-only ("ppr" is not in the AOT
+//! manifest).
+
+use super::pagerank::DAMPING;
+use super::program::{
+    AccelSpec, Activation, CommDecl, CyclePlan, FieldId, Fields, FieldSpec, InitRow, Kernel,
+    ProgramDriver, ProgramMeta, Role, VertexProgram,
+};
+use super::StepCtx;
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
+
+pub const DEFAULT_ROUNDS: usize = 5;
+
+const RANK: FieldId = FieldId(0);
+const CONTRIB: FieldId = FieldId(1);
+const INV_OUTDEG: FieldId = FieldId(2);
+/// Personalized teleport vector: 1.0 at the source, 0.0 elsewhere.
+const SRC_MASK: FieldId = FieldId(3);
+
+/// Personalized PageRank as a vertex program.
+pub struct PprProgram {
+    pub source: u32,
+    pub rounds: usize,
+    /// Original out-degrees, indexed by global id (set in `prepare`).
+    outdeg: Vec<u64>,
+}
+
+impl VertexProgram for PprProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "ppr",
+            needs_weights: false,
+            undirected: false,
+            // pull gathers over in-edges → partition the reversed graph
+            reversed: true,
+            fixed_rounds: Some(self.rounds),
+            output: RANK,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![
+            FieldSpec::f32("rank", Role::Device, 0.0),
+            FieldSpec::f32("contrib", Role::Device, 0.0),
+            FieldSpec::f32("inv_outdeg", Role::Aux, 0.0),
+            FieldSpec::f32("src_mask", Role::Aux, 0.0),
+        ]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            // single writer per pull slot → never order-sensitive: the
+            // pipelined executor keeps full exchange freedom (§9)
+            kernel: Kernel::Gather { src: CONTRIB, active: Activation::Always },
+            comm: vec![CommDecl::Pull(CONTRIB)],
+            device: None,
+            accel: AccelSpec { name: "ppr", n_si32: 0, n_sf32: 2 },
+        }
+    }
+
+    fn prepare(&mut self, original: &CsrGraph, _prepared: &CsrGraph) {
+        self.outdeg = original.out_degrees();
+    }
+
+    fn init_vertex(&self, global_id: u32, row: &mut InitRow<'_>) {
+        let d = self.outdeg[global_id as usize];
+        let inv = if d > 0 { 1.0 / d as f32 } else { 0.0 };
+        row.set_f32(INV_OUTDEG, inv);
+        if global_id == self.source {
+            row.set_f32(RANK, 1.0);
+            row.set_f32(CONTRIB, inv);
+            row.set_f32(SRC_MASK, 1.0);
+        }
+    }
+
+    /// Pull apply: personalized teleport instead of the uniform base.
+    fn gather_apply(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>, sum: f32) -> u64 {
+        f.set_f32(RANK, v, (1.0 - DAMPING) * f.f32(SRC_MASK, v) + DAMPING * sum);
+        1
+    }
+
+    /// Refresh contributions for the next superstep.
+    fn publish(&self, _ctx: &StepCtx, v: usize, f: &Fields<'_>) {
+        f.set_f32(CONTRIB, v, f.f32(RANK, v) * f.f32(INV_OUTDEG, v));
+    }
+
+    fn scalars_f32(&self, _ctx: &StepCtx) -> Vec<f32> {
+        vec![1.0 - DAMPING, DAMPING]
+    }
+
+    /// |E| per iteration, like global PageRank.
+    fn traversed_edges(&self, _output: &StateArray, g: &CsrGraph, rounds: usize) -> u64 {
+        g.edge_count() as u64 * rounds.max(1) as u64
+    }
+}
+
+/// The engine-facing personalized-PageRank algorithm.
+pub type Ppr = ProgramDriver<PprProgram>;
+
+impl Ppr {
+    pub fn new(source: u32, rounds: usize) -> Ppr {
+        ProgramDriver::build(PprProgram { source, rounds, outdeg: Vec::new() })
+            .expect("static schema is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::EdgeList;
+    use crate::partition::Strategy;
+
+    fn cycle_with_spur() -> CsrGraph {
+        // 0->1->2->0 cycle, plus 0->3 spur
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(2, 0);
+        el.push(0, 3);
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn mass_concentrates_near_the_source() {
+        let g = cycle_with_spur();
+        let mut alg = Ppr::new(0, 20);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        let ranks = r.output.as_f32();
+        // teleport restarts at 0: it keeps the largest rank, and 3 (a
+        // dead end fed only by 0) stays below 1 and 2 on the cycle path
+        assert!(ranks[0] > ranks[1] && ranks[1] > ranks[2]);
+        assert!(ranks.iter().all(|&x| x >= 0.0));
+        // total mass is bounded by 1 (dangling mass drops out via 3)
+        assert!(ranks.iter().sum::<f32>() <= 1.0 + 1e-5);
+    }
+
+    #[test]
+    fn source_locality_differs_by_source() {
+        let g = cycle_with_spur();
+        let mut a = Ppr::new(0, 10);
+        let r0 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        let mut b = Ppr::new(1, 10);
+        let r1 = engine::run(&g, &mut b, &EngineConfig::host_only(1)).unwrap();
+        assert!(r0.output.as_f32()[0] > r1.output.as_f32()[0]);
+        assert!(r1.output.as_f32()[1] > r0.output.as_f32()[1]);
+    }
+
+    #[test]
+    fn partitioned_matches_host() {
+        let g = cycle_with_spur();
+        let mut a = Ppr::new(0, 5);
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for shares in [[0.5, 0.5], [0.3, 0.7]] {
+            let mut b = Ppr::new(0, 5);
+            let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            for (v, (x, y)) in r1.output.as_f32().iter().zip(r2.output.as_f32()).enumerate() {
+                assert!((x - y).abs() < 1e-6, "vertex {v}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_baseline_on_rmat() {
+        use crate::graph::generator::{rmat, RmatParams};
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 6)));
+        let mut alg = Ppr::new(3, DEFAULT_ROUNDS);
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(2)).unwrap();
+        let want = crate::baseline::ppr(&g, 3, DEFAULT_ROUNDS);
+        for (v, (x, y)) in r.output.as_f32().iter().zip(&want).enumerate() {
+            let tol = (1e-4 * y.abs()).max(1e-7);
+            assert!((x - y).abs() <= tol, "vertex {v}: engine {x} vs baseline {y}");
+        }
+    }
+}

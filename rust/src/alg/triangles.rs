@@ -1,0 +1,167 @@
+//! Triangle counting — the intersection family's showcase (DESIGN.md
+//! §15; Rossi & Zhou's hybrid CPU-GPU network-motifs framework motivates
+//! the edge-centric iteration pattern).
+//!
+//! The program captures its own **undirected, deduplicated,
+//! self-loop-free** sorted adjacency from the original graph in
+//! `prepare` and declares [`Kernel::NeighborIntersect`]: one fixed
+//! superstep in which every vertex merges its neighbor list against each
+//! neighbor's, counting common vertices strictly above the neighbor —
+//! each incident triangle charged exactly once, so `tri[v]` is the exact
+//! per-vertex incident-triangle count and `Σ tri[v] / 3` the global
+//! count (every triangle is incident to three vertices). Per-vertex u64
+//! stores are order-free (§9), so the pipelined executor and every
+//! balance plan stay bit-identical. CPU-only: no AOT program is shipped
+//! ("triangles" is not in the manifest), so accelerator placements fail
+//! at manifest lookup with an actionable message.
+
+use super::program::{
+    AccelSpec, CommDecl, CyclePlan, FieldId, FieldSpec, InitRow, Kernel, ProgramDriver,
+    ProgramMeta, Role, VertexProgram,
+};
+use crate::engine::state::StateArray;
+use crate::graph::CsrGraph;
+
+const TRI: FieldId = FieldId(0);
+
+/// Triangle counting as a vertex program.
+pub struct TrianglesProgram {
+    /// Flat CSR of the sorted dedup undirected adjacency (global ids),
+    /// built in `prepare`.
+    offsets: Vec<usize>,
+    nbrs: Vec<u32>,
+}
+
+impl VertexProgram for TrianglesProgram {
+    fn meta(&self) -> ProgramMeta {
+        ProgramMeta {
+            name: "triangles",
+            needs_weights: false,
+            // the program builds its own undirected closure; the engine
+            // keeps the forward graph (doubling it would only inflate the
+            // chunking row offsets, never the merge inputs)
+            undirected: false,
+            reversed: false,
+            fixed_rounds: Some(1),
+            output: TRI,
+        }
+    }
+
+    fn schema(&self) -> Vec<FieldSpec> {
+        vec![FieldSpec::u64("tri", Role::Host, 0)]
+    }
+
+    fn plan(&self, _cycle: usize) -> CyclePlan {
+        CyclePlan {
+            kernel: Kernel::NeighborIntersect { count: TRI },
+            comm: Vec::<CommDecl>::new(),
+            device: None,
+            accel: AccelSpec { name: "triangles", n_si32: 0, n_sf32: 0 },
+        }
+    }
+
+    fn prepare(&mut self, original: &CsrGraph, _prepared: &CsrGraph) {
+        let n = original.vertex_count;
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for v in 0..n as u32 {
+            for &t in original.neighbors(v) {
+                if t != v {
+                    adj[v as usize].push(t);
+                    adj[t as usize].push(v);
+                }
+            }
+        }
+        self.offsets = Vec::with_capacity(n + 1);
+        self.offsets.push(0);
+        self.nbrs.clear();
+        for mut a in adj {
+            a.sort_unstable();
+            a.dedup();
+            self.nbrs.extend_from_slice(&a);
+            self.offsets.push(self.nbrs.len());
+        }
+    }
+
+    fn init_vertex(&self, _global_id: u32, _row: &mut InitRow<'_>) {}
+
+    fn neighbors(&self, g: u32) -> &[u32] {
+        &self.nbrs[self.offsets[g as usize]..self.offsets[g as usize + 1]]
+    }
+
+    /// Intersection work is bounded below by the adjacency cells fetched:
+    /// every merge touches two neighbor lists once each.
+    fn traversed_edges(&self, _output: &StateArray, _g: &CsrGraph, _rounds: usize) -> u64 {
+        2 * self.nbrs.len() as u64
+    }
+}
+
+/// The engine-facing triangle-counting algorithm.
+pub type Triangles = ProgramDriver<TrianglesProgram>;
+
+impl Triangles {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Triangles {
+        ProgramDriver::build(TrianglesProgram { offsets: vec![0], nbrs: Vec::new() })
+            .expect("static schema is valid")
+    }
+}
+
+/// Global triangle count from the per-vertex output: each triangle is
+/// incident to exactly three vertices.
+pub fn global_count(per_vertex: &[u64]) -> u64 {
+    per_vertex.iter().sum::<u64>() / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{self, EngineConfig};
+    use crate::graph::EdgeList;
+    use crate::partition::Strategy;
+
+    /// Two triangles sharing edge 1-2, plus duplicate and self-loop noise
+    /// that the dedup closure must ignore.
+    fn bowtie() -> CsrGraph {
+        let mut el = EdgeList::new(5);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(2, 0);
+        el.push(1, 3);
+        el.push(3, 2);
+        el.push(2, 1); // duplicate of 1-2, reversed
+        el.push(4, 4); // self-loop
+        CsrGraph::from_edge_list(&el)
+    }
+
+    #[test]
+    fn bowtie_counts() {
+        let g = bowtie();
+        let mut alg = Triangles::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(1)).unwrap();
+        assert_eq!(r.output.as_u64(), &[1, 2, 2, 1, 0]);
+        assert_eq!(global_count(r.output.as_u64()), 2);
+        assert_eq!(r.supersteps, 1);
+    }
+
+    #[test]
+    fn partitioned_matches_host_bitwise() {
+        let g = bowtie();
+        let mut a = Triangles::new();
+        let r1 = engine::run(&g, &mut a, &EngineConfig::host_only(1)).unwrap();
+        for shares in [[0.5, 0.5], [0.3, 0.7]] {
+            let mut b = Triangles::new();
+            let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand);
+            let r2 = engine::run(&g, &mut b, &cfg).unwrap();
+            assert_eq!(r1.output.as_u64(), r2.output.as_u64());
+        }
+    }
+
+    #[test]
+    fn matches_baseline_on_rmat() {
+        use crate::graph::generator::{rmat, RmatParams};
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 6)));
+        let mut alg = Triangles::new();
+        let r = engine::run(&g, &mut alg, &EngineConfig::host_only(2)).unwrap();
+        assert_eq!(r.output.as_u64(), crate::baseline::triangles(&g).as_slice());
+    }
+}

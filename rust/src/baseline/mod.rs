@@ -219,6 +219,149 @@ pub fn bc(g: &CsrGraph, source: u32) -> Vec<f32> {
     bc
 }
 
+/// Per-vertex incident-triangle counts over the undirected, deduplicated,
+/// self-loop-free closure of `g`. Hash-set membership probes instead of
+/// the engine's sorted-merge orientation, so a bug can't cancel out.
+pub fn triangles(g: &CsrGraph) -> Vec<u64> {
+    let n = g.vertex_count;
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for v in 0..n as u32 {
+        for &t in g.neighbors(v) {
+            if t != v {
+                adj[v as usize].push(t);
+                adj[t as usize].push(v);
+            }
+        }
+    }
+    for a in &mut adj {
+        a.sort_unstable();
+        a.dedup();
+    }
+    let sets: Vec<std::collections::HashSet<u32>> =
+        adj.iter().map(|a| a.iter().copied().collect()).collect();
+    let mut tri = vec![0u64; n];
+    for v in 0..n {
+        // for each neighbor pair (w, u) with w < u, probe the edge w-u
+        let a = &adj[v];
+        for (i, &w) in a.iter().enumerate() {
+            for &u in &a[i + 1..] {
+                if sets[w as usize].contains(&u) {
+                    tri[v] += 1;
+                }
+            }
+        }
+    }
+    tri
+}
+
+/// k-core decomposition (coreness) over the undirected **multigraph**
+/// view — `to_undirected` keeps parallel edges and doubles self-loops,
+/// and degrees count multiplicity, exactly like the engine's view.
+/// Synchronous batch peeling: at threshold `k`, repeatedly remove every
+/// alive vertex whose alive-degree is ≤ `k` (coreness = `k`); when a
+/// round removes nobody, escalate `k`.
+pub fn kcore(g: &CsrGraph) -> Vec<i32> {
+    let u = g.to_undirected();
+    let n = u.vertex_count;
+    let mut core = vec![INF_I32; n];
+    let mut remaining = n;
+    let mut k = 0i32;
+    while remaining > 0 {
+        let mut doomed = Vec::new();
+        for v in 0..n as u32 {
+            if core[v as usize] != INF_I32 {
+                continue;
+            }
+            let alive =
+                u.neighbors(v).iter().filter(|&&t| core[t as usize] == INF_I32).count() as i64;
+            if alive <= k as i64 {
+                doomed.push(v);
+            }
+        }
+        if doomed.is_empty() {
+            k += 1;
+        } else {
+            for v in doomed {
+                core[v as usize] = k;
+                remaining -= 1;
+            }
+        }
+    }
+    core
+}
+
+/// Synchronous label propagation over the undirected multigraph view
+/// (multiplicities weight labels), min-label tie-break, fixed `rounds`
+/// with early exit on a quiet round — the engine's exact semantics,
+/// reimplemented with a frequency map instead of a sorted-run scan.
+pub fn labelprop(g: &CsrGraph, rounds: usize) -> Vec<i32> {
+    let u = g.to_undirected();
+    let n = u.vertex_count;
+    let mut label: Vec<i32> = (0..n as i32).collect();
+    for _ in 0..rounds {
+        let prev = label.clone();
+        let mut changed = false;
+        for v in 0..n as u32 {
+            let ns = u.neighbors(v);
+            if ns.is_empty() {
+                continue;
+            }
+            let mut freq = std::collections::HashMap::new();
+            for &t in ns {
+                *freq.entry(prev[t as usize]).or_insert(0usize) += 1;
+            }
+            // max count, ties toward the smaller label
+            let best = freq
+                .into_iter()
+                .min_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)))
+                .map(|(l, _)| l)
+                .unwrap();
+            if best != label[v as usize] {
+                label[v as usize] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    label
+}
+
+/// Personalized PageRank: power iteration from the source indicator,
+/// fixed rounds, d = 0.85, dangling mass dropped (same contract as
+/// [`pagerank`]).
+pub fn ppr(g: &CsrGraph, source: u32, rounds: usize) -> Vec<f32> {
+    let n = g.vertex_count;
+    if n == 0 {
+        return Vec::new();
+    }
+    let rev = g.reverse();
+    let d = crate::alg::pagerank::DAMPING;
+    let outdeg = g.out_degrees();
+    let mut rank = vec![0f32; n];
+    rank[source as usize] = 1.0;
+    let mut contrib = vec![0f32; n];
+    for _ in 0..rounds {
+        for v in 0..n {
+            contrib[v] = if outdeg[v] > 0 {
+                rank[v] / outdeg[v] as f32
+            } else {
+                0.0
+            };
+        }
+        for v in 0..n as u32 {
+            let mut sum = 0f32;
+            for &u in rev.neighbors(v) {
+                sum += contrib[u as usize];
+            }
+            let teleport = if v == source { 1.0 - d } else { 0.0 };
+            rank[v as usize] = teleport + d * sum;
+        }
+    }
+    rank
+}
+
 /// Connected components on the undirected view via label propagation.
 pub fn cc(g: &CsrGraph) -> Vec<i32> {
     let u = g.to_undirected();
@@ -359,5 +502,57 @@ mod tests {
         el.push(3, 4);
         let g = CsrGraph::from_edge_list(&el);
         assert_eq!(cc(&g), vec![0, 0, 0, 3, 3]);
+    }
+
+    #[test]
+    fn triangles_bowtie_ignores_duplicates_and_self_loops() {
+        let mut el = EdgeList::new(5);
+        for (s, d) in [(0, 1), (1, 2), (2, 0), (1, 3), (3, 2), (2, 1), (4, 4)] {
+            el.push(s, d);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(triangles(&g), vec![1, 2, 2, 1, 0]);
+    }
+
+    #[test]
+    fn kcore_k4_with_tail() {
+        let mut el = EdgeList::new(7);
+        for (s, d) in [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4), (4, 5)] {
+            el.push(s, d);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(kcore(&g), vec![3, 3, 3, 3, 1, 1, 0]);
+    }
+
+    #[test]
+    fn kcore_never_exceeds_multigraph_degree() {
+        let g = CsrGraph::from_edge_list(&rmat(&RmatParams::paper(7, 6)));
+        let u = g.to_undirected();
+        let core = kcore(&g);
+        for v in 0..g.vertex_count as u32 {
+            assert!(core[v as usize] as u64 <= u.out_degree(v));
+        }
+    }
+
+    #[test]
+    fn labelprop_two_triangles() {
+        let mut el = EdgeList::new(6);
+        for (s, d) in [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)] {
+            el.push(s, d);
+        }
+        let g = CsrGraph::from_edge_list(&el);
+        assert_eq!(labelprop(&g, 5), vec![0, 0, 0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn ppr_mass_is_bounded_and_source_heavy() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(2, 0);
+        let g = CsrGraph::from_edge_list(&el);
+        let r = ppr(&g, 0, 30);
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-3, "cycle conserves mass");
+        assert!(r[0] > r[1] && r[0] > r[2]);
     }
 }

@@ -4,7 +4,10 @@
 
 use crate::alg::incremental::{pagerank_residual_push, BfsRelax};
 use crate::alg::program::WarmStart;
-use crate::alg::{bc::Bc, bfs::Bfs, cc::Cc, pagerank::Pagerank, sssp::Sssp, widest::Widest};
+use crate::alg::{
+    bc::Bc, bfs::Bfs, cc::Cc, kcore::KCore, labelprop::LabelProp, pagerank::Pagerank, ppr::Ppr,
+    sssp::Sssp, triangles::Triangles, widest::Widest,
+};
 use crate::alg::Algorithm;
 use crate::engine::state::StateArray;
 use crate::engine::{self, EngineConfig, RunResult};
@@ -15,9 +18,11 @@ use crate::graph::{CsrGraph, Workload};
 use crate::stats;
 use anyhow::{bail, Result};
 
-/// The evaluated algorithms: the paper's five (§5 + §9.4) plus the
+/// The evaluated algorithms: the paper's five (§5 + §9.4), the
 /// widest-path program that proves the typed vertex-program API
-/// (DESIGN.md §10).
+/// (DESIGN.md §10), and the motif/community family on the edge-centric
+/// kernels (DESIGN.md §15): triangle counting, k-core, label
+/// propagation, and personalized PageRank.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AlgKind {
     Bfs,
@@ -26,15 +31,23 @@ pub enum AlgKind {
     Bc,
     Cc,
     Widest,
+    Triangles,
+    Kcore,
+    Labelprop,
+    Ppr,
 }
 
-pub const ALL_ALGS: [AlgKind; 6] = [
+pub const ALL_ALGS: [AlgKind; 10] = [
     AlgKind::Bfs,
     AlgKind::Pagerank,
     AlgKind::Sssp,
     AlgKind::Bc,
     AlgKind::Cc,
     AlgKind::Widest,
+    AlgKind::Triangles,
+    AlgKind::Kcore,
+    AlgKind::Labelprop,
+    AlgKind::Ppr,
 ];
 
 impl AlgKind {
@@ -46,8 +59,13 @@ impl AlgKind {
             "bc" => Ok(AlgKind::Bc),
             "cc" => Ok(AlgKind::Cc),
             "widest" | "wsp" => Ok(AlgKind::Widest),
+            "triangles" | "tc" => Ok(AlgKind::Triangles),
+            "kcore" => Ok(AlgKind::Kcore),
+            "labelprop" | "lp" => Ok(AlgKind::Labelprop),
+            "ppr" => Ok(AlgKind::Ppr),
             _ => Err(format!(
-                "unknown algorithm '{name}' (bfs|pagerank|sssp|bc|cc|widest)"
+                "unknown algorithm '{name}' \
+                 (bfs|pagerank|sssp|bc|cc|widest|triangles|kcore|labelprop|ppr)"
             )),
         }
     }
@@ -60,12 +78,65 @@ impl AlgKind {
             AlgKind::Bc => "bc",
             AlgKind::Cc => "cc",
             AlgKind::Widest => "widest",
+            AlgKind::Triangles => "triangles",
+            AlgKind::Kcore => "kcore",
+            AlgKind::Labelprop => "labelprop",
+            AlgKind::Ppr => "ppr",
         }
     }
 
     pub fn needs_weights(&self) -> bool {
         matches!(self, AlgKind::Sssp | AlgKind::Widest)
     }
+
+    /// Does the run interpret `RunSpec::rounds` (fixed-iteration
+    /// algorithms)? Everything else runs to quiescence.
+    pub fn uses_rounds(&self) -> bool {
+        matches!(self, AlgKind::Pagerank | AlgKind::Ppr | AlgKind::Labelprop)
+    }
+
+    /// Does the run interpret `RunSpec::source`?
+    pub fn needs_source(&self) -> bool {
+        matches!(
+            self,
+            AlgKind::Bfs | AlgKind::Sssp | AlgKind::Bc | AlgKind::Widest | AlgKind::Ppr
+        )
+    }
+
+    /// Incremental-recompute strategy class (DESIGN.md §14.3) — an
+    /// exhaustive match, so adding an `AlgKind` is a compile error here
+    /// instead of a silent fall-through into a wildcard arm of
+    /// [`incremental_rerun`].
+    pub fn incremental_class(&self) -> IncClass {
+        match self {
+            // monotone min/max relaxations: warm start unless the batch
+            // really deleted edge copies
+            AlgKind::Bfs | AlgKind::Sssp | AlgKind::Cc | AlgKind::Widest => IncClass::Monotone,
+            // residual push (host-side Gauss–Seidel)
+            AlgKind::Pagerank => IncClass::Residual,
+            // no incremental form: BC's two-cycle sweeps; triangle counts,
+            // coreness, and labels are not monotone under insertion; PPR
+            // is served per-query from the epoch cache instead (§15.4)
+            AlgKind::Bc
+            | AlgKind::Triangles
+            | AlgKind::Kcore
+            | AlgKind::Labelprop
+            | AlgKind::Ppr => IncClass::Unsupported,
+        }
+    }
+}
+
+/// How an algorithm can be recomputed after a mutation batch — the
+/// decision table behind [`incremental_rerun`], factored out so the
+/// classification is a single exhaustive `match` per [`AlgKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IncClass {
+    /// Monotone warm start through the engine (insert-only batches).
+    Monotone,
+    /// PageRank residual push.
+    Residual,
+    /// Always a full cold rerun.
+    Unsupported,
 }
 
 /// Sentinel: pick the highest-degree vertex as the source (Graph500
@@ -134,7 +205,7 @@ fn run_counted<A: Algorithm>(
 /// the traversed-edge count for TEPS.
 pub fn run_alg(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig) -> Result<(RunResult, u64)> {
     let spec = RunSpec { source: resolve_source(g, &spec), ..spec };
-    let rounds = if spec.alg == AlgKind::Pagerank { spec.rounds } else { 1 };
+    let rounds = if spec.alg.uses_rounds() { spec.rounds } else { 1 };
     match spec.alg {
         AlgKind::Bfs => run_counted(g, &mut Bfs::new(spec.source), cfg, rounds),
         AlgKind::Pagerank => run_counted(g, &mut Pagerank::new(spec.rounds), cfg, rounds),
@@ -142,6 +213,10 @@ pub fn run_alg(g: &CsrGraph, spec: RunSpec, cfg: &EngineConfig) -> Result<(RunRe
         AlgKind::Bc => run_counted(g, &mut Bc::new(spec.source), cfg, rounds),
         AlgKind::Cc => run_counted(g, &mut Cc::new(), cfg, rounds),
         AlgKind::Widest => run_counted(g, &mut Widest::new(spec.source), cfg, rounds),
+        AlgKind::Triangles => run_counted(g, &mut Triangles::new(), cfg, rounds),
+        AlgKind::Kcore => run_counted(g, &mut KCore::new(), cfg, rounds),
+        AlgKind::Labelprop => run_counted(g, &mut LabelProp::new(spec.rounds), cfg, rounds),
+        AlgKind::Ppr => run_counted(g, &mut Ppr::new(spec.source, spec.rounds), cfg, rounds),
     }
 }
 
@@ -167,7 +242,8 @@ pub enum FullReason {
     /// longer over-approximates the new one, and min/max relaxation
     /// cannot move values *away* from the reduce direction.
     EffectiveDeletes,
-    /// The algorithm has no incremental form (BC's two-cycle sweeps).
+    /// The algorithm has no incremental form
+    /// ([`AlgKind::incremental_class`] says [`IncClass::Unsupported`]).
     Unsupported,
 }
 
@@ -197,9 +273,7 @@ pub fn incremental_rerun(
     prior: &StateArray,
     delta: &AppliedDelta,
 ) -> Result<IncrementalRun> {
-    let needs_source =
-        matches!(spec.alg, AlgKind::Bfs | AlgKind::Sssp | AlgKind::Bc | AlgKind::Widest);
-    if needs_source && spec.source == AUTO_SOURCE {
+    if spec.alg.needs_source() && spec.source == AUTO_SOURCE {
         bail!(
             "incremental_rerun needs a resolved source for {} — resolve AUTO against the \
              pre-mutation graph first (resolve_source)",
@@ -214,9 +288,9 @@ pub fn incremental_rerun(
             supersteps: r.supersteps,
         })
     };
-    match spec.alg {
-        AlgKind::Bc => full(FullReason::Unsupported),
-        AlgKind::Pagerank => {
+    match spec.alg.incremental_class() {
+        IncClass::Unsupported => full(FullReason::Unsupported),
+        IncClass::Residual => {
             let (ranks, sweeps) = pagerank_residual_push(g_new, prior.try_as_f32()?);
             Ok(IncrementalRun {
                 output: StateArray::F32(ranks),
@@ -224,8 +298,8 @@ pub fn incremental_rerun(
                 supersteps: sweeps,
             })
         }
-        _ if delta.effective_deletes => full(FullReason::EffectiveDeletes),
-        AlgKind::Bfs | AlgKind::Sssp | AlgKind::Cc | AlgKind::Widest => {
+        IncClass::Monotone if delta.effective_deletes => full(FullReason::EffectiveDeletes),
+        IncClass::Monotone => {
             let warm = WarmStart { prior: prior.clone(), seeds: delta.touched.clone() };
             let r = match spec.alg {
                 AlgKind::Bfs => {
@@ -238,7 +312,7 @@ pub fn incremental_rerun(
                 AlgKind::Widest => {
                     engine::run(g_new, &mut Widest::new(spec.source).with_warm_start(warm)?, cfg)?
                 }
-                _ => unreachable!(),
+                _ => unreachable!("only Monotone algorithms reach the warm-start arm"),
             };
             Ok(IncrementalRun {
                 output: r.output,
@@ -356,8 +430,19 @@ mod tests {
         assert_eq!(AlgKind::parse("pr").unwrap(), AlgKind::Pagerank);
         assert_eq!(AlgKind::parse("widest").unwrap(), AlgKind::Widest);
         assert_eq!(AlgKind::parse("WSP").unwrap(), AlgKind::Widest);
-        assert!(AlgKind::parse("dijkstra").is_err());
+        assert_eq!(AlgKind::parse("tc").unwrap(), AlgKind::Triangles);
+        assert_eq!(AlgKind::parse("kcore").unwrap(), AlgKind::Kcore);
+        assert_eq!(AlgKind::parse("LP").unwrap(), AlgKind::Labelprop);
+        assert_eq!(AlgKind::parse("ppr").unwrap(), AlgKind::Ppr);
+        let err = AlgKind::parse("dijkstra").unwrap_err();
+        for a in ALL_ALGS {
+            assert!(err.contains(a.name()), "error should list {}", a.name());
+        }
         assert!(AlgKind::Widest.needs_weights());
+        // round-trip: every kind parses back from its own name
+        for a in ALL_ALGS {
+            assert_eq!(AlgKind::parse(a.name()).unwrap(), a);
+        }
     }
 
     #[test]
@@ -400,6 +485,21 @@ mod tests {
         // an unresolved AUTO source is a typed error, not a wrong answer
         assert!(
             incremental_rerun(&a.graph, RunSpec::new(AlgKind::Bfs), &cfg, &r0.output, &a)
+                .is_err()
+        );
+
+        // the motif workloads classify Unsupported even for insert-only
+        // batches (prior output is ignored on the full-rerun path)
+        for alg in [AlgKind::Triangles, AlgKind::Kcore, AlgKind::Labelprop] {
+            assert_eq!(alg.incremental_class(), IncClass::Unsupported);
+            let inc =
+                incremental_rerun(&a.graph, RunSpec::new(alg), &cfg, &r0.output, &a).unwrap();
+            assert_eq!(inc.recompute, Recompute::Full(FullReason::Unsupported), "{alg:?}");
+        }
+        // PPR needs a resolved source like the other source algorithms
+        assert_eq!(AlgKind::Ppr.incremental_class(), IncClass::Unsupported);
+        assert!(
+            incremental_rerun(&a.graph, RunSpec::new(AlgKind::Ppr), &cfg, &r0.output, &a)
                 .is_err()
         );
     }

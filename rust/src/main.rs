@@ -77,7 +77,8 @@ totem — hybrid (CPU + accelerator) graph processing engine
 USAGE: totem <command> [--flags]
 
 COMMANDS:
-  run        --alg bfs|pagerank|sssp|bc|cc|widest --workload rmatN|uniformN|twitter|ukweb|csr:PATH
+  run        --alg bfs|pagerank|sssp|bc|cc|widest|triangles|kcore|labelprop|ppr
+             --workload rmatN|uniformN|twitter|ukweb|csr:PATH
              --hw xS[yG] --alpha F --strategy rand|high|low [--source N]
              [--placement assign|degree-desc|degree-asc|bfs]
              [--rounds N] [--reps N] [--seed N] [--instrument]
@@ -87,6 +88,8 @@ COMMANDS:
              [--store auto|mmap|buffered] [--no-verify] [--dump-output PATH]
              [--mutations PATH] [--mutate-mode incremental|full]
              (--threads 0 or omitted = one worker per available core;
+              --rounds applies to the fixed-iteration algorithms
+              (pagerank, ppr, labelprop); ppr personalizes to --source;
               --balance picks how CPU kernels cut chunks, DESIGN.md §11;
               --store picks how csr:PATH containers load, DESIGN.md §12;
               --dump-output writes per-vertex results for exact diffing;
@@ -100,9 +103,10 @@ COMMANDS:
              [--cache N] [--weights] [--rounds N] [--dump-dir DIR]
              [--mutations PATH] [--mutate-policy drain|reject]
              [--hw xS --alpha F --strategy S --threads N ...]
-             (queries: one per line, `bfs V|reach V|sssp V|pagerank`,
+             (queries: one per line, `bfs V|reach V|sssp V|pagerank|ppr V`,
               replayed at --rate queries/s (0 = as fast as admitted);
-              no --queries = --nqueries synthetic bfs queries;
+              no --queries = --nqueries synthetic queries (seeded
+              bfs/reach/ppr mix);
               --max-batch 1 --cache 0 disables batching/caching for
               sequential-baseline diffs; --dump-dir writes one
               per-vertex file per answered query for exact diffing;
@@ -195,7 +199,7 @@ fn engine_config(args: &Args, alg: AlgKind) -> Result<EngineConfig> {
     if mb > 0 {
         cfg.accel_memory_budget = (mb as u64) << 20;
     }
-    if alg == AlgKind::Pagerank {
+    if alg.uses_rounds() {
         cfg.rounds = Some(args.usize_or("rounds", 5).map_err(anyhow::Error::msg)?);
     }
     // Direction-optimized traversal (DESIGN.md §8): Beamer α/β heuristic
@@ -432,18 +436,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
             parse_query_file(&text)?
         }
         None => {
-            // Synthetic closed-loop load: seeded BFS sources (xorshift so
-            // repeats occur — they exercise lane dedup and the cache).
+            // Synthetic closed-loop load: a seeded bfs/reach/ppr mix
+            // (sources repeat, exercising lane dedup and both caches).
             let n = args.usize_or("nqueries", 64).map_err(anyhow::Error::msg)?;
-            let mut x = args.u64_or("seed", 42).map_err(anyhow::Error::msg)? | 1;
-            (0..n)
-                .map(|_| {
-                    x ^= x << 13;
-                    x ^= x >> 7;
-                    x ^= x << 17;
-                    QueryKind::Bfs { source: (x % g.vertex_count as u64) as u32 }
-                })
-                .collect()
+            let seed = args.u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+            totem::serve::synthetic_mix(n, seed, g.vertex_count as u32)
         }
     };
     let rate = args.f64_or("rate", 0.0).map_err(anyhow::Error::msg)?;
@@ -574,7 +571,12 @@ fn dump_response(path: &Path, resp: &totem::serve::QueryResponse) -> Result<()> 
                 writeln!(w, "{i} {}", *x as u8)?;
             }
         }
-        QR::Distances(v) | QR::Ranks(v) => {
+        QR::Distances(v) => {
+            for (i, x) in v.iter().enumerate() {
+                writeln!(w, "{i} {:08x}", x.to_bits())?;
+            }
+        }
+        QR::Ranks(v) => {
             for (i, x) in v.iter().enumerate() {
                 writeln!(w, "{i} {:08x}", x.to_bits())?;
             }
@@ -657,6 +659,34 @@ fn calibrate_cmd(args: &Args) -> Result<()> {
             &g,
             &mut totem::alg::widest::Widest::new(src),
             &mut totem::alg::widest::Widest::new(src),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Triangles => calibrate::calibrate(
+            &g,
+            &mut totem::alg::triangles::Triangles::new(),
+            &mut totem::alg::triangles::Triangles::new(),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Kcore => calibrate::calibrate(
+            &g,
+            &mut totem::alg::kcore::KCore::new(),
+            &mut totem::alg::kcore::KCore::new(),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Labelprop => calibrate::calibrate(
+            &g,
+            &mut totem::alg::labelprop::LabelProp::new(5),
+            &mut totem::alg::labelprop::LabelProp::new(5),
+            &artifacts,
+            alpha,
+        )?,
+        AlgKind::Ppr => calibrate::calibrate(
+            &g,
+            &mut totem::alg::ppr::Ppr::new(src, 5),
+            &mut totem::alg::ppr::Ppr::new(src, 5),
             &artifacts,
             alpha,
         )?,

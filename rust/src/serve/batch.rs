@@ -99,6 +99,18 @@ mod tests {
     }
 
     #[test]
+    fn ppr_is_skipped_without_reordering() {
+        // PPR carries a source but must NOT be folded into a lane: its
+        // f32 ranks cannot ride a bit lane. It stays queued, in place,
+        // and the batchable queries around it keep their FIFO order.
+        let kinds = [bfs(1), QueryKind::Ppr { source: 1 }, bfs(2), QueryKind::Ppr { source: 9 }];
+        let b = select_batch(&kinds, 64);
+        assert_eq!(b.picked, vec![0, 2], "ppr never picked, order preserved");
+        assert_eq!(b.lane_sources, vec![1, 2]);
+        assert_eq!(b.lane_of, vec![0, 1]);
+    }
+
+    #[test]
     fn lane_budget_caps_new_sources_but_not_joins() {
         let kinds = [bfs(1), bfs(2), bfs(3), bfs(1)];
         let b = select_batch(&kinds, 2);

@@ -1,18 +1,24 @@
-//! Per-lane result cache keyed by source **and graph version**
-//! (DESIGN.md §13.4, §14.2).
+//! Per-source result cache keyed by source **and graph version**
+//! (DESIGN.md §13.4, §14.2, §15.4).
 //!
-//! A lane answer (the i32 level array of one BFS source) is immutable
-//! for as long as the served graph is — which, since streaming mutations
+//! A per-source answer (the i32 level array of one BFS lane, or the f32
+//! rank vector of one personalized-PageRank source) is immutable for as
+//! long as the served graph is — which, since streaming mutations
 //! landed (DESIGN.md §14), is one *graph epoch*, not the server's
 //! lifetime. Keys therefore embed a [`GraphVersion`]: the structural
 //! **fingerprint** (an FNV-1a hash over the vertex/edge counts and a
 //! bounded sample of CSR offsets and column indices) *and* the mutation
-//! **epoch**. [`LaneCache::commit`] moves the cache to the post-mutation
-//! version and drops every older entry, and [`LaneCache::insert_at`]
-//! refuses answers computed against a retired version (a worker racing a
-//! commit must not poison the new epoch) — so a post-mutation query can
-//! never be answered from a pre-mutation lane, even in the (fingerprint-
-//! collision) case where the mutated graph samples identically.
+//! **epoch**. [`ResultCache::commit`] moves the cache to the
+//! post-mutation version and drops every older entry, and
+//! [`ResultCache::insert_at`] refuses answers computed against a retired
+//! version (a worker racing a commit must not poison the new epoch) — so
+//! a post-mutation query can never be answered from a pre-mutation
+//! answer, even in the (fingerprint-collision) case where the mutated
+//! graph samples identically.
+//!
+//! The cache is generic over the answer payload: [`LaneCache`] holds
+//! level arrays, [`PprCache`] rank vectors — one eviction/invalidation
+//! policy, two payloads, zero duplicated epoch logic.
 //!
 //! The original version of this cache froze the fingerprint once in
 //! `new` and keyed on it forever — correct for an immutable graph,
@@ -60,31 +66,38 @@ pub struct GraphVersion {
     pub epoch: u64,
 }
 
-/// Cache key: one lane answer of one graph version.
+/// Cache key: one per-source answer of one graph version.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct LaneKey {
+struct SourceKey {
     version: GraphVersion,
     source: u32,
 }
 
-/// Bounded FIFO cache of lane level arrays. Values are `Arc`ed: a hit
+/// Bounded FIFO cache of per-source answers. Values are `Arc`ed: a hit
 /// hands the caller a shared handle, never a copy of an |V|-sized array.
-pub struct LaneCache {
+pub struct ResultCache<T> {
     capacity: usize,
-    inner: Mutex<CacheInner>,
+    inner: Mutex<CacheInner<T>>,
 }
 
-struct CacheInner {
+/// BFS lane answers (i32 level arrays), shared by `reach` bit queries.
+pub type LaneCache = ResultCache<Vec<i32>>;
+
+/// Personalized-PageRank answers (f32 rank vectors), keyed by the query
+/// source (DESIGN.md §15.4).
+pub type PprCache = ResultCache<Vec<f32>>;
+
+struct CacheInner<T> {
     version: GraphVersion,
-    map: HashMap<LaneKey, Arc<Vec<i32>>>,
-    fifo: VecDeque<LaneKey>,
+    map: HashMap<SourceKey, Arc<T>>,
+    fifo: VecDeque<SourceKey>,
 }
 
-impl LaneCache {
+impl<T> ResultCache<T> {
     /// A cache bound to one served graph at epoch 0. `capacity` 0
     /// disables caching.
-    pub fn new(g: &CsrGraph, capacity: usize) -> LaneCache {
-        LaneCache {
+    pub fn new(g: &CsrGraph, capacity: usize) -> ResultCache<T> {
+        ResultCache {
             capacity,
             inner: Mutex::new(CacheInner {
                 version: GraphVersion { fingerprint: graph_fingerprint(g), epoch: 0 },
@@ -115,17 +128,17 @@ impl LaneCache {
         inner.fifo.clear();
     }
 
-    /// Look up a lane answer for the **current** version.
-    pub fn get(&self, source: u32) -> Option<Arc<Vec<i32>>> {
+    /// Look up a per-source answer for the **current** version.
+    pub fn get(&self, source: u32) -> Option<Arc<T>> {
         let inner = self.inner.lock().unwrap();
-        let key = LaneKey { version: inner.version, source };
+        let key = SourceKey { version: inner.version, source };
         inner.map.get(&key).cloned()
     }
 
     /// Insert an answer computed against `version`. Silently dropped when
     /// `version` is no longer current — the answer was computed against a
     /// retired epoch and must not survive the commit that retired it.
-    pub fn insert_at(&self, version: GraphVersion, source: u32, levels: Arc<Vec<i32>>) {
+    pub fn insert_at(&self, version: GraphVersion, source: u32, answer: Arc<T>) {
         if self.capacity == 0 {
             return;
         }
@@ -133,8 +146,8 @@ impl LaneCache {
         if version != inner.version {
             return;
         }
-        let key = LaneKey { version, source };
-        if inner.map.insert(key, levels).is_none() {
+        let key = SourceKey { version, source };
+        if inner.map.insert(key, answer).is_none() {
             inner.fifo.push_back(key);
             while inner.fifo.len() > self.capacity {
                 let evict = inner.fifo.pop_front().expect("len checked");
@@ -144,9 +157,9 @@ impl LaneCache {
     }
 
     /// Insert at the current version (single-epoch callers and tests).
-    pub fn insert(&self, source: u32, levels: Arc<Vec<i32>>) {
+    pub fn insert(&self, source: u32, answer: Arc<T>) {
         let version = self.version();
-        self.insert_at(version, source, levels);
+        self.insert_at(version, source, answer);
     }
 
     pub fn len(&self) -> usize {
@@ -251,5 +264,17 @@ mod tests {
         // a worker that computed against epoch 0 finishes late
         c.insert_at(old, 0, Arc::new(vec![0, 1]));
         assert!(c.is_empty(), "stale compute must not poison the new epoch");
+    }
+
+    #[test]
+    fn ppr_cache_shares_the_epoch_policy() {
+        // the f32 instantiation gets the identical version/eviction logic
+        let g = graph(&[(0, 1)], 2);
+        let c = PprCache::new(&g, 2);
+        c.insert(0, Arc::new(vec![0.85f32, 0.15]));
+        assert_eq!(c.get(0).unwrap().as_slice(), &[0.85, 0.15]);
+        let mutated = graph(&[(0, 1), (1, 0)], 2);
+        c.commit(&mutated, 1);
+        assert!(c.get(0).is_none(), "ranks from a retired epoch never serve");
     }
 }

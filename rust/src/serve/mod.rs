@@ -9,12 +9,14 @@
 //!
 //! - [`admission`] — bounded in-flight queries, typed rejection when
 //!   saturated;
-//! - [`workload`] — the query vocabulary (`bfs`/`reach`/`sssp`/`pagerank`)
-//!   and replayable query files;
+//! - [`workload`] — the query vocabulary
+//!   (`bfs`/`reach`/`sssp`/`pagerank`/`ppr`) and replayable query files;
 //! - [`batch`] — the pure lane-packing policy that folds compatible
 //!   queued traversals into one bit-parallel multi-source BFS
 //!   ([`crate::alg::msbfs::MsBfs`], up to 64 sources per run);
-//! - [`cache`] — per-lane result cache keyed by source + graph version;
+//! - [`cache`] — per-source result caches keyed by source + graph
+//!   version: [`LaneCache`] for BFS lanes, [`PprCache`] for
+//!   personalized-PageRank ranks (DESIGN.md §15.4);
 //! - [`metrics`] — per-query latency split and the server-level report.
 //!
 //! Worker threads pop the FIFO queue; a lane-batchable head drags every
@@ -23,6 +25,11 @@
 //! `Reduce::OrU64` is order-free, batched traversals stay bit-identical
 //! lane-for-lane to solo runs under every executor and partitioning —
 //! the serving layer never trades answer fidelity for throughput.
+//! Personalized PageRank (`ppr V`) is the deliberately *non*-batchable
+//! per-source query: it carries a source but its f32 ranks cannot ride a
+//! bit lane, so the batcher must skip it **without reordering** (tested
+//! in [`batch`]); it runs solo over the epoch's lazily built reversed
+//! view like global PageRank and caches per `(version, source)`.
 //!
 //! ## Graph epochs (DESIGN.md §14.3)
 //!
@@ -51,12 +58,15 @@ pub mod workload;
 
 pub use admission::{Admission, AdmissionError, AdmissionGuard};
 pub use batch::{select_batch, BatchSelection};
-pub use cache::{graph_fingerprint, GraphVersion, LaneCache};
+pub use cache::{graph_fingerprint, GraphVersion, LaneCache, PprCache, ResultCache};
 pub use metrics::{LatencyHistogram, QueryMetrics, ServeMetrics, ServeReport};
-pub use workload::{arrival_delay_secs, parse_query, parse_query_file, QueryKind};
+pub use workload::{
+    arrival_delay_secs, parse_query, parse_query_file, synthetic_mix, QueryKind, QueryParseError,
+};
 
 use crate::alg::msbfs::MsBfs;
 use crate::alg::pagerank::Pagerank;
+use crate::alg::ppr::Ppr;
 use crate::alg::sssp::Sssp;
 use crate::alg::{Algorithm, INF_I32};
 use crate::engine::{self, EngineConfig, StateArray};
@@ -156,8 +166,9 @@ pub enum QueryResponse {
     Reachable(Vec<bool>),
     /// SSSP distances per vertex.
     Distances(Vec<f32>),
-    /// PageRank scores per vertex.
-    Ranks(Vec<f32>),
+    /// PageRank / personalized-PageRank scores per vertex. `Arc`-shared
+    /// with the [`PprCache`]: a cache hit clones a handle, not |V| f32s.
+    Ranks(Arc<Vec<f32>>),
 }
 
 /// Typed post-admission failure (admission failures are rejected at
@@ -280,9 +291,10 @@ pub struct ServerConfig {
     pub max_in_flight: usize,
     /// Lane budget per batched traversal (capped at 64 bit lanes).
     pub max_batch: usize,
-    /// Rounds for PageRank queries.
+    /// Rounds for PageRank and personalized-PageRank queries.
     pub pagerank_rounds: usize,
-    /// Lane cache entries (0 disables caching).
+    /// Cache entries per result cache — the lane cache and the PPR cache
+    /// each get this many (0 disables caching).
     pub cache_capacity: usize,
     /// What to do with admitted queries a mutation commit strands on a
     /// retired epoch (DESIGN.md §14.3).
@@ -344,6 +356,9 @@ struct Shared {
     ready: Condvar,
     admission: Arc<Admission>,
     cache: LaneCache,
+    /// Personalized-PageRank answers, same version/epoch policy as the
+    /// lane cache (DESIGN.md §15.4).
+    ppr_cache: PprCache,
     metrics: ServeMetrics,
     shutdown: AtomicBool,
 }
@@ -359,6 +374,7 @@ impl Server {
     pub fn start(graph: CsrGraph, cfg: ServerConfig) -> Result<Server> {
         let sg = ServeGraph::build(graph, cfg.engine.clone())?;
         let cache = LaneCache::new(&sg.graph, cfg.cache_capacity);
+        let ppr_cache = PprCache::new(&sg.graph, cfg.cache_capacity);
         let shared = Arc::new(Shared {
             graph: RwLock::new(sg),
             epoch: AtomicU64::new(0),
@@ -367,6 +383,7 @@ impl Server {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             cache,
+            ppr_cache,
             metrics: ServeMetrics::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -382,23 +399,32 @@ impl Server {
         Ok(Server { shared, workers })
     }
 
-    /// Submit one query. Lane-cache hits answer immediately without
-    /// consuming an admission slot; otherwise the query takes a slot (or
-    /// is rejected typed) and queues for a worker.
+    /// Submit one query. Cache hits (lane or PPR) answer immediately
+    /// without consuming an admission slot; otherwise the query takes a
+    /// slot (or is rejected typed) and queues for a worker.
     pub fn submit(&self, kind: QueryKind) -> Result<Ticket, AdmissionError> {
         let (tx, rx) = mpsc::channel();
+        let hit = QueryMetrics {
+            queue_wait_secs: 0.0,
+            compute_secs: 0.0,
+            supersteps: 0,
+            teps: 0.0,
+            batch_width: 1,
+            cache_hit: true,
+        };
         if let Some(src) = kind.lane_source() {
             if let Some(levels) = self.shared.cache.get(src) {
-                let m = QueryMetrics {
-                    queue_wait_secs: 0.0,
-                    compute_secs: 0.0,
-                    supersteps: 0,
-                    teps: 0.0,
-                    batch_width: 1,
-                    cache_hit: true,
-                };
-                self.shared.metrics.record_query(m);
-                let _ = tx.send(Ok(QueryAnswer { response: respond(kind, &levels), metrics: m }));
+                self.shared.metrics.record_query(hit);
+                let _ =
+                    tx.send(Ok(QueryAnswer { response: respond(kind, &levels), metrics: hit }));
+                return Ok(Ticket { rx });
+            }
+        }
+        if let QueryKind::Ppr { source } = kind {
+            if let Some(ranks) = self.shared.ppr_cache.get(source) {
+                self.shared.metrics.record_query(hit);
+                let _ = tx
+                    .send(Ok(QueryAnswer { response: QueryResponse::Ranks(ranks), metrics: hit }));
                 return Ok(Ticket { rx });
             }
         }
@@ -597,6 +623,7 @@ fn apply_mutation(shared: &Shared, job: MutationJob) {
                     fingerprint,
                 };
                 shared.cache.commit(&sg.graph, epoch);
+                shared.ppr_cache.commit(&sg.graph, epoch);
                 shared.epoch.store(epoch, Ordering::Release);
                 shared.metrics.record_mutation(report.inserted, report.deleted, report.reassigned);
                 Ok(report)
@@ -676,7 +703,7 @@ fn run_batch(shared: &Shared, pendings: Vec<Pending>, lane_sources: &[u32], lane
     }
 }
 
-/// Dispatch one non-batchable query (SSSP / PageRank) solo.
+/// Dispatch one non-batchable query (SSSP / PageRank / PPR) solo.
 fn run_solo(shared: &Shared, p: Pending) {
     let dispatched = Instant::now();
     let sg = shared.graph.read().unwrap();
@@ -711,6 +738,17 @@ fn run_solo(shared: &Shared, p: Pending) {
                 (take_f32(r.output), r.supersteps, traversed)
             })
         }
+        QueryKind::Ppr { source } => {
+            // same reversed view and round budget as global PageRank —
+            // the first pagerank-family query of an epoch pays the build
+            let (rg, rpg) = sg.reversed();
+            let rounds = shared.cfg.pagerank_rounds;
+            let mut alg = Ppr::new(source, rounds);
+            engine::run_shared(g, rg, rpg, &mut alg, cfg).map(|r| {
+                let traversed = alg.traversed_edges(&r.output, g, rounds);
+                (take_f32(r.output), r.supersteps, traversed)
+            })
+        }
         other => unreachable!("{} heads dispatch as batches", other.name()),
     };
     match outcome {
@@ -730,7 +768,19 @@ fn run_solo(shared: &Shared, p: Pending) {
             shared.metrics.record_query(m);
             let response = match p.kind {
                 QueryKind::Sssp { .. } => QueryResponse::Distances(values),
-                QueryKind::Pagerank => QueryResponse::Ranks(values),
+                QueryKind::Pagerank => QueryResponse::Ranks(Arc::new(values)),
+                QueryKind::Ppr { source } => {
+                    let ranks = Arc::new(values);
+                    // still under the graph read lock (`sg` is live), so
+                    // the cache version cannot move mid-capture; a racing
+                    // commit makes insert_at drop the stale answer
+                    shared.ppr_cache.insert_at(
+                        shared.ppr_cache.version(),
+                        source,
+                        Arc::clone(&ranks),
+                    );
+                    QueryResponse::Ranks(ranks)
+                }
                 other => unreachable!("{} heads dispatch as batches", other.name()),
             };
             let _ = p.tx.send(Ok(QueryAnswer { response, metrics: m }));
@@ -776,6 +826,7 @@ mod tests {
             QueryKind::Reach { source: 3 },
             QueryKind::Sssp { source: 0 },
             QueryKind::Pagerank,
+            QueryKind::Ppr { source: 0 },
         ]
         .into_iter()
         .map(|k| (k, srv.submit(k).unwrap()))
@@ -802,12 +853,52 @@ mod tests {
                     let want = engine::run(&g, &mut Pagerank::new(5), &cfg).unwrap();
                     assert_eq!(got.as_slice(), want.output.as_f32());
                 }
+                (QueryKind::Ppr { source }, QueryResponse::Ranks(got)) => {
+                    let want = engine::run(&g, &mut Ppr::new(source, 5), &cfg).unwrap();
+                    assert_eq!(got.as_slice(), want.output.as_f32());
+                }
                 (kind, other) => panic!("{} answered with {other:?}", kind.name()),
             }
         }
         let report = srv.shutdown();
-        assert_eq!(report.served, 4);
+        assert_eq!(report.served, 5);
         assert_eq!(report.rejected, 0);
+    }
+
+    #[test]
+    fn repeated_ppr_sources_hit_the_ppr_cache() {
+        let g = weighted_rmat(6, 13);
+        let srv = server(&g, 1, 16);
+        let a1 = srv.submit(QueryKind::Ppr { source: 4 }).unwrap().wait().unwrap();
+        assert!(!a1.metrics.cache_hit);
+        let a2 = srv.submit(QueryKind::Ppr { source: 4 }).unwrap().wait().unwrap();
+        assert!(a2.metrics.cache_hit, "second identical ppr query is a cache hit");
+        assert_eq!(a1.response, a2.response);
+        // a different source misses (keyed per source)
+        let a3 = srv.submit(QueryKind::Ppr { source: 5 }).unwrap().wait().unwrap();
+        assert!(!a3.metrics.cache_hit);
+        let report = srv.shutdown();
+        assert_eq!(report.cache_hits, 1);
+        assert_eq!(report.served, 3);
+    }
+
+    #[test]
+    fn mutation_commit_invalidates_cached_ppr_answers() {
+        let g = path_graph(4);
+        let srv = server(&g, 1, 16);
+        let a1 = srv.submit(QueryKind::Ppr { source: 0 }).unwrap().wait().unwrap();
+        let a2 = srv.submit(QueryKind::Ppr { source: 0 }).unwrap().wait().unwrap();
+        assert!(a2.metrics.cache_hit);
+        srv.submit_mutation(DeltaBatch {
+            ops: vec![MutationOp::Insert { src: 0, dst: 3, weight: None }],
+        })
+        .wait()
+        .unwrap();
+        let a3 = srv.submit(QueryKind::Ppr { source: 0 }).unwrap().wait().unwrap();
+        assert!(!a3.metrics.cache_hit, "commit must invalidate cached ranks");
+        // the inserted 0->3 edge redirects mass: the answer really changed
+        assert_ne!(a1.response, a3.response);
+        srv.shutdown();
     }
 
     #[test]

@@ -9,13 +9,17 @@
 //! reach 17      # reachable-set bit from source 17 (batches with bfs)
 //! sssp 42       # weighted distances (requires a weighted graph)
 //! pagerank      # fixed-round ranks
+//! ppr 17        # personalized PageRank from source 17 (DESIGN.md §15.4)
 //! ```
 //!
 //! Replay paces submissions at a configured arrival rate
 //! (queries/second; `0` = submit as fast as possible), which is how the
-//! serving benchmarks model open-loop load.
+//! serving benchmarks model open-loop load. File parsing reports a
+//! typed [`QueryParseError`] carrying the 1-based line number, so a bad
+//! line in a 10k-query replay names itself instead of failing wholesale.
 
 use anyhow::{bail, Result};
+use std::fmt;
 
 /// One query. `Bfs` and `Reach` are **lane-compatible**: both are
 /// answered by one bit lane of a multi-source traversal, so the batcher
@@ -31,6 +35,10 @@ pub enum QueryKind {
     Sssp { source: u32 },
     /// Fixed-round PageRank over the whole graph.
     Pagerank,
+    /// Personalized PageRank from `source` (DESIGN.md §15.4). Not
+    /// lane-batchable — its f32 ranks cannot ride a bit lane — but
+    /// cacheable per `(version, source)` like a lane answer.
+    Ppr { source: u32 },
 }
 
 impl QueryKind {
@@ -53,9 +61,29 @@ impl QueryKind {
             QueryKind::Reach { .. } => "reach",
             QueryKind::Sssp { .. } => "sssp",
             QueryKind::Pagerank => "pagerank",
+            QueryKind::Ppr { .. } => "ppr",
         }
     }
 }
+
+/// A query-file line that failed to parse: the 1-based line number plus
+/// the per-line reason (which names an unknown kind when that is the
+/// failure). Typed so callers can point at the exact line of a large
+/// replay file rather than re-scanning it.
+#[derive(Debug)]
+pub struct QueryParseError {
+    /// 1-based line number in the query file.
+    pub line: usize,
+    pub reason: String,
+}
+
+impl fmt::Display for QueryParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "query file line {}: {}", self.line, self.reason)
+    }
+}
+
+impl std::error::Error for QueryParseError {}
 
 /// Parse one query line (already comment/blank-filtered).
 pub fn parse_query(line: &str) -> Result<QueryKind> {
@@ -80,16 +108,51 @@ pub fn parse_query(line: &str) -> Result<QueryKind> {
             }
             Ok(QueryKind::Pagerank)
         }
-        other => bail!("query '{line}': unknown kind '{other}' (bfs|reach|sssp|pagerank)"),
+        "ppr" => Ok(QueryKind::Ppr { source: source("ppr")? }),
+        other => bail!("query '{line}': unknown kind '{other}' (bfs|reach|sssp|pagerank|ppr)"),
     }
 }
 
-/// Parse a whole query file (one query per line; `#` comments).
+/// Parse a whole query file (one query per line; `#` comments). The
+/// first bad line aborts with a [`QueryParseError`] naming its 1-based
+/// line number.
 pub fn parse_query_file(text: &str) -> Result<Vec<QueryKind>> {
-    text.lines()
-        .map(|l| l.split('#').next().unwrap_or("").trim())
-        .filter(|l| !l.is_empty())
-        .map(parse_query)
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_query(line) {
+            Ok(q) => out.push(q),
+            Err(e) => {
+                return Err(QueryParseError { line: i + 1, reason: format!("{e}") }.into());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Seeded synthetic load for `totem serve` without `--queries`: a
+/// deterministic bfs/reach/ppr mix over xorshift sources (repeats occur
+/// by design — they exercise lane dedup, the lane cache, and the PPR
+/// result cache). Half the stream is lane-batchable bfs, a quarter
+/// reach (dedups against the bfs lanes), a quarter ppr (must be skipped
+/// by the lane batcher without reordering).
+pub fn synthetic_mix(n: usize, seed: u64, vertex_count: u32) -> Vec<QueryKind> {
+    let mut x = seed | 1;
+    (0..n)
+        .map(|i| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let source = (x % vertex_count.max(1) as u64) as u32;
+            match i % 4 {
+                0 | 2 => QueryKind::Bfs { source },
+                1 => QueryKind::Reach { source },
+                _ => QueryKind::Ppr { source },
+            }
+        })
         .collect()
 }
 
@@ -115,6 +178,8 @@ mod tests {
         assert_eq!(parse_query("sssp 42").unwrap(), QueryKind::Sssp { source: 42 });
         assert_eq!(parse_query("pagerank").unwrap(), QueryKind::Pagerank);
         assert_eq!(parse_query("pr").unwrap(), QueryKind::Pagerank);
+        assert_eq!(parse_query("ppr 7").unwrap(), QueryKind::Ppr { source: 7 });
+        assert_eq!(parse_query("PPR 7").unwrap(), QueryKind::Ppr { source: 7 });
     }
 
     #[test]
@@ -123,7 +188,21 @@ mod tests {
         assert!(parse_query("bfs x").is_err(), "non-numeric source");
         assert!(parse_query("bfs 1 2").is_err(), "trailing tokens");
         assert!(parse_query("pagerank 3").is_err(), "pagerank takes no source");
+        assert!(parse_query("ppr").is_err(), "ppr needs a source");
         assert!(parse_query("dijkstra 1").is_err(), "unknown kind");
+    }
+
+    #[test]
+    fn file_errors_carry_the_line_number_and_kind() {
+        // line 4 (1-based, counting the comment and blank) is the bad one
+        let err = parse_query_file("# header\nbfs 1\n\ndijkstra 9\n").unwrap_err();
+        let typed = err.downcast_ref::<QueryParseError>().expect("typed error");
+        assert_eq!(typed.line, 4);
+        assert!(typed.reason.contains("dijkstra"), "{}", typed.reason);
+        assert!(format!("{typed}").contains("line 4"));
+        // a malformed-but-known kind also names its line
+        let err = parse_query_file("bfs 1\nppr\n").unwrap_err();
+        assert_eq!(err.downcast_ref::<QueryParseError>().unwrap().line, 2);
     }
 
     #[test]
@@ -145,8 +224,29 @@ mod tests {
         assert!(QueryKind::Reach { source: 1 }.batchable());
         assert!(!QueryKind::Sssp { source: 1 }.batchable());
         assert!(!QueryKind::Pagerank.batchable());
+        assert!(!QueryKind::Ppr { source: 1 }.batchable(), "f32 ranks cannot ride a bit lane");
         assert_eq!(QueryKind::Reach { source: 9 }.lane_source(), Some(9));
         assert_eq!(QueryKind::Pagerank.lane_source(), None);
+        assert_eq!(QueryKind::Ppr { source: 9 }.lane_source(), None);
+    }
+
+    #[test]
+    fn synthetic_mix_is_seeded_and_mixed() {
+        let a = synthetic_mix(64, 42, 1000);
+        let b = synthetic_mix(64, 42, 1000);
+        assert_eq!(a, b, "same seed, same stream");
+        let c = synthetic_mix(64, 43, 1000);
+        assert_ne!(a, c, "different seed, different sources");
+        let ppr = a.iter().filter(|q| matches!(q, QueryKind::Ppr { .. })).count();
+        let lane = a.iter().filter(|q| q.batchable()).count();
+        assert_eq!(ppr, 16, "a quarter of the stream is ppr");
+        assert_eq!(lane, 48, "the rest is lane-batchable bfs/reach");
+        for q in &a {
+            assert!(q.lane_source().unwrap_or_else(|| match q {
+                QueryKind::Ppr { source } => *source,
+                _ => unreachable!(),
+            }) < 1000);
+        }
     }
 
     #[test]

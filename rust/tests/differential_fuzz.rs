@@ -5,8 +5,10 @@
 //! uniform) × algorithm × executor mode × partition count × strategy ×
 //! [`Placement`] × direction on/off — and checks every run against the
 //! baseline: **exact** for the min/max-reduction algorithms (BFS, CC,
-//! SSSP, widest-path), within f32-summation tolerance for the
-//! order-sensitive ones (PageRank, BC). A second deterministic sweep pins
+//! SSSP, widest-path) and for the integer-accumulating edge-centric
+//! family (triangles, k-core, label propagation — DESIGN.md §15), within
+//! f32-summation tolerance for the order-sensitive ones (PageRank, BC,
+//! personalized PageRank). A second deterministic sweep pins
 //! the placement-invariance contract: the same configuration run under
 //! every placement must produce bit-identical global outputs. A third
 //! property (ISSUE 5) pins the vertex-program driver itself: for every
@@ -182,6 +184,33 @@ fn check_against_baseline(g: &CsrGraph, s: &Sampled, sweep_seed: u64, iter: usiz
                 assert!((a - b).abs() <= tol, "{}", ctx(v, a.to_string(), b.to_string()));
             }
         }
+        AlgKind::Triangles => {
+            // u64 integer accumulation: exact in every configuration
+            let want = baseline::triangles(g);
+            for (v, (&a, &b)) in r.output.as_u64().iter().zip(&want).enumerate() {
+                assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Kcore => {
+            let want = baseline::kcore(g);
+            for (v, (&a, &b)) in r.output.as_i32().iter().zip(&want).enumerate() {
+                assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Labelprop => {
+            let want = baseline::labelprop(g, s.rounds);
+            for (v, (&a, &b)) in r.output.as_i32().iter().zip(&want).enumerate() {
+                assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
+        AlgKind::Ppr => {
+            // order-sensitive f32 summation, same slack as PageRank
+            let want = baseline::ppr(g, s.source, s.rounds);
+            for (v, (&a, &b)) in r.output.as_f32().iter().zip(&want).enumerate() {
+                let tol = (1e-4 * b.abs()).max(1e-7);
+                assert!((a - b).abs() <= tol, "{}", ctx(v, a.to_string(), b.to_string()));
+            }
+        }
     }
 }
 
@@ -242,7 +271,11 @@ fn fuzz_incremental_recompute_against_full_rerun() {
 
         // classification must be a pure function of (alg, delete effect)
         let want_recompute = match s.alg {
-            AlgKind::Bc => Recompute::Full(FullReason::Unsupported),
+            AlgKind::Bc
+            | AlgKind::Triangles
+            | AlgKind::Kcore
+            | AlgKind::Labelprop
+            | AlgKind::Ppr => Recompute::Full(FullReason::Unsupported),
             AlgKind::Pagerank => match inc.recompute {
                 Recompute::ResidualPush { .. } => inc.recompute,
                 other => panic!("{repro} [{}]: pagerank took {other:?}", s.label),
@@ -277,16 +310,23 @@ fn fuzz_incremental_recompute_against_full_rerun() {
                     );
                 }
             }
-            AlgKind::Bfs | AlgKind::Cc => {
+            AlgKind::Bfs | AlgKind::Cc | AlgKind::Kcore | AlgKind::Labelprop => {
                 for (v, (&a, &b)) in
                     inc.output.as_i32().iter().zip(full.output.as_i32()).enumerate()
                 {
                     assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
                 }
             }
-            // SSSP/widest warm starts and every full fallback (incl. BC)
-            // ran through the same engine: compared on bits
-            AlgKind::Sssp | AlgKind::Widest | AlgKind::Bc => {
+            AlgKind::Triangles => {
+                for (v, (&a, &b)) in
+                    inc.output.as_u64().iter().zip(full.output.as_u64()).enumerate()
+                {
+                    assert_eq!(a, b, "{}", ctx(v, a.to_string(), b.to_string()));
+                }
+            }
+            // SSSP/widest warm starts and every full fallback (incl. BC
+            // and PPR) ran through the same engine: compared on bits
+            AlgKind::Sssp | AlgKind::Widest | AlgKind::Bc | AlgKind::Ppr => {
                 for (v, (&a, &b)) in
                     inc.output.as_f32().iter().zip(full.output.as_f32()).enumerate()
                 {
@@ -329,7 +369,8 @@ fn outputs_bit_identical_across_placements() {
                             panic!("{gname}/{}/{mode:?}/{parts}p/{}: {e:#}",
                                 alg.name(), placement.name())
                         });
-                        // compare raw bits regardless of dtype
+                        // compare raw bits regardless of dtype (u64
+                        // counts contribute both halves)
                         let bits: Vec<u32> = match &r.output {
                             totem::engine::StateArray::I32(v) => {
                                 v.iter().map(|&x| x as u32).collect()
@@ -337,6 +378,10 @@ fn outputs_bit_identical_across_placements() {
                             totem::engine::StateArray::F32(v) => {
                                 v.iter().map(|x| x.to_bits()).collect()
                             }
+                            totem::engine::StateArray::U64(v) => v
+                                .iter()
+                                .flat_map(|&x| [x as u32, (x >> 32) as u32])
+                                .collect(),
                         };
                         match &reference {
                             None => reference = Some((placement, bits)),
@@ -358,7 +403,7 @@ fn outputs_bit_identical_across_placements() {
 /// Balance-mode invariance (ISSUE 6 tentpole contract, DESIGN.md §11):
 /// the same configuration run under {Vertex, Edge, HubSplit} chunking at
 /// several worker counts must produce bit-identical global outputs for
-/// all six algorithms, on both executors. CAS-scatter kernels take any
+/// all ten algorithms, on both executors. CAS-scatter kernels take any
 /// mode; the order-sensitive f32 kernels run their canonical sequential
 /// path regardless — either way, bits may not move.
 #[test]
@@ -388,6 +433,10 @@ fn outputs_bit_identical_across_balance_modes() {
                             totem::engine::StateArray::F32(v) => {
                                 v.iter().map(|x| x.to_bits()).collect()
                             }
+                            totem::engine::StateArray::U64(v) => v
+                                .iter()
+                                .flat_map(|&x| [x as u32, (x >> 32) as u32])
+                                .collect(),
                         };
                         match &reference {
                             None => reference = Some((balance, bits)),
@@ -474,6 +523,9 @@ fn pull_capable_programs_push_pull_bit_identical() {
         match out {
             totem::engine::StateArray::I32(v) => v.iter().map(|&x| x as u32).collect(),
             totem::engine::StateArray::F32(v) => v.iter().map(|x| x.to_bits()).collect(),
+            totem::engine::StateArray::U64(v) => {
+                v.iter().flat_map(|&x| [x as u32, (x >> 32) as u32]).collect()
+            }
         }
     }
 
@@ -528,7 +580,104 @@ fn pull_capable_programs_push_pull_bit_identical() {
     any_pull |= check("bc", &|s| totem::alg::bc::Bc::new(s));
     any_pull |= check("cc", &|_| totem::alg::cc::Cc::new());
     any_pull |= check("widest", &|s| totem::alg::widest::Widest::new(s));
+    // the edge-centric family (DESIGN.md §15) runs intersection/scan
+    // kernels, not traversal — each must opt out rather than derive a
+    // bogus pull kernel
+    assert!(!check("triangles", &|_| totem::alg::triangles::Triangles::new()));
+    assert!(!check("kcore", &|_| totem::alg::kcore::KCore::new()));
+    assert!(!check("labelprop", &|_| totem::alg::labelprop::LabelProp::new(3)));
+    assert!(!check("ppr", &|s| totem::alg::ppr::Ppr::new(s, 3)));
     assert!(any_pull, "at least one program (BFS) must be pull-capable");
+}
+
+/// k-core property sweep (DESIGN.md §15.2): the engine's batch-synchronous
+/// peel must agree with an *independently shaped* oracle — the textbook
+/// sequential min-degree peel (Matula–Beck) over the same undirected
+/// multigraph view. The two peel in different orders (whole frontiers vs
+/// one vertex at a time), so an escalation or reactivation bug in the
+/// engine cannot be mirrored by the oracle.
+#[test]
+fn kcore_matches_sequential_min_degree_peel() {
+    fn sequential_peel(g: &CsrGraph) -> Vec<i32> {
+        let u = g.to_undirected();
+        let n = u.vertex_count;
+        let mut deg: Vec<i64> = (0..n as u32).map(|v| u.neighbors(v).len() as i64).collect();
+        let mut alive = vec![true; n];
+        let mut core = vec![0i32; n];
+        let mut k = 0i64;
+        for _ in 0..n {
+            let v = (0..n)
+                .filter(|&v| alive[v])
+                .min_by_key(|&v| deg[v])
+                .expect("one alive vertex per step");
+            k = k.max(deg[v]);
+            core[v] = k as i32;
+            alive[v] = false;
+            for &t in u.neighbors(v as u32) {
+                if alive[t as usize] {
+                    deg[t as usize] -= 1; // multiplicity: one per parallel edge
+                }
+            }
+        }
+        core
+    }
+
+    for seed in [3u64, 11, 0xC04E] {
+        let el = rmat(&RmatParams::paper(7, seed));
+        let g = CsrGraph::from_edge_list(&el);
+        let want = sequential_peel(&g);
+        for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+            let cfg = EngineConfig::cpu_partitions(&[0.5, 0.5], Strategy::High)
+                .with_mode(mode)
+                .with_seed(7)
+                .with_threads(2);
+            let (r, _) = run_alg(&g, RunSpec::new(AlgKind::Kcore), &cfg)
+                .unwrap_or_else(|e| panic!("rmat7/{seed:x}/{mode:?}: {e:#}"));
+            for (v, (&a, &b)) in r.output.as_i32().iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "rmat7/{seed:x}/{mode:?} vertex {v}: engine coreness {a} vs \
+                     sequential peel {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Label propagation's tie-break contract (DESIGN.md §15.3): min-label
+/// resolution makes every round a pure function of the previous label
+/// array, so the output is **bit-identical** across executors, placements,
+/// and partition counts — and equal to the sequential baseline — despite
+/// label propagation being chaotic under unspecified tie-breaks.
+#[test]
+fn labelprop_deterministic_across_executors_and_placements() {
+    for seed in [5u64, 0xBEEF] {
+        let el = rmat(&RmatParams::paper(7, seed));
+        let g = CsrGraph::from_edge_list(&el);
+        let rounds = 6;
+        let want = baseline::labelprop(&g, rounds);
+        for mode in [ExecMode::Synchronous, ExecMode::Pipelined] {
+            for parts in [1usize, 2, 3] {
+                let shares = vec![1.0 / parts as f64; parts];
+                for placement in ALL_PLACEMENTS {
+                    let cfg = EngineConfig::cpu_partitions(&shares, Strategy::Rand)
+                        .with_mode(mode)
+                        .with_seed(7)
+                        .with_placement(placement);
+                    let spec = RunSpec::new(AlgKind::Labelprop).with_rounds(rounds);
+                    let (r, _) = run_alg(&g, spec, &cfg).unwrap_or_else(|e| {
+                        panic!("rmat7/{seed:x}/{mode:?}/{parts}p/{}: {e:#}", placement.name())
+                    });
+                    assert_eq!(
+                        r.output.as_i32(),
+                        want.as_slice(),
+                        "rmat7/{seed:x}/{mode:?}/{parts}p/{}: labels diverged",
+                        placement.name()
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// The sweep is a pure function of its seed: same seed, same samples.

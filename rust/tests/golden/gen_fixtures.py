@@ -11,8 +11,15 @@ expected files from the engine's host-only synchronous run (see DESIGN.md
 "Testing").
 
 Integer-valued outputs (BFS levels, CC labels, SSSP distances under
-integer weights) are exact in f32 and asserted bit-for-bit; PageRank and
-BC are asserted within an f32 summation tolerance.
+integer weights, triangle counts, core numbers, propagation labels) are
+exact in f32/u64/i32 and asserted bit-for-bit; PageRank, BC, and
+personalized PageRank are asserted within an f32 summation tolerance.
+
+The edge-centric family (DESIGN.md section 15) mirrors baseline/ exactly:
+triangles over the undirected deduplicated self-loop-free closure, k-core
+and label propagation over the undirected *multigraph* view (parallel
+edges keep their multiplicity, self-loops double), PPR as float64 power
+iteration with dangling mass dropped.
 """
 
 import heapq
@@ -230,6 +237,105 @@ def bc(n, edges, src):
     return scores
 
 
+def triangles(n, edges):
+    """Per-vertex incident-triangle counts over the undirected,
+    deduplicated, self-loop-free closure (mirrors baseline::triangles)."""
+    adj = [set() for _ in range(n)]
+    for s, d, _ in edges:
+        if s != d:
+            adj[s].add(d)
+            adj[d].add(s)
+    srt = [sorted(a) for a in adj]
+    tri = [0] * n
+    for v in range(n):
+        a = srt[v]
+        for i, w in enumerate(a):
+            for u in a[i + 1:]:
+                if u in adj[w]:
+                    tri[v] += 1
+    return tri
+
+
+def undirected_multi(n, edges):
+    """The engine's to_undirected view: every directed edge contributes
+    both endpoints, parallel edges kept, self-loops doubled."""
+    und = [[] for _ in range(n)]
+    for s, d, _ in edges:
+        und[s].append(d)
+        und[d].append(s)
+    return und
+
+
+def kcore(n, edges):
+    """Coreness by synchronous batch peeling over the undirected
+    multigraph (mirrors baseline::kcore): at threshold k remove every
+    alive vertex with alive-degree <= k; a quiet round escalates k."""
+    und = undirected_multi(n, edges)
+    core = [INF_I32] * n
+    remaining = n
+    k = 0
+    while remaining > 0:
+        doomed = []
+        for v in range(n):
+            if core[v] != INF_I32:
+                continue
+            alive = sum(1 for t in und[v] if core[t] == INF_I32)
+            if alive <= k:
+                doomed.append(v)
+        if not doomed:
+            k += 1
+        else:
+            for v in doomed:
+                core[v] = k
+                remaining -= 1
+    return core
+
+
+def labelprop(n, edges, rounds):
+    """Synchronous label propagation over the undirected multigraph
+    (multiplicities weight labels), min-label tie-break, early exit on a
+    quiet round (mirrors baseline::labelprop)."""
+    und = undirected_multi(n, edges)
+    label = list(range(n))
+    for _ in range(rounds):
+        prev = list(label)
+        changed = False
+        for v in range(n):
+            if not und[v]:
+                continue
+            freq = {}
+            for t in und[v]:
+                freq[prev[t]] = freq.get(prev[t], 0) + 1
+            best = min(freq.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+            if best != label[v]:
+                label[v] = best
+                changed = True
+        if not changed:
+            break
+    return label
+
+
+def ppr(n, edges, src, rounds):
+    """Personalized PageRank: float64 power iteration from the source
+    indicator, fixed rounds, dangling mass dropped (mirrors
+    baseline::ppr; the engine's f32 run is asserted within tolerance)."""
+    out = adjacency(n, edges)
+    outdeg = [len(out[v]) for v in range(n)]
+    rev = [[] for _ in range(n)]
+    for s, d, _ in edges:
+        rev[d].append(s)
+    rank = [0.0] * n
+    rank[src] = 1.0
+    for _ in range(rounds):
+        contrib = [rank[v] / outdeg[v] if outdeg[v] > 0 else 0.0 for v in range(n)]
+        rank = [
+            (1.0 - DAMPING if v == src else 0.0)
+            + DAMPING * sum(contrib[u] for u in rev[v])
+            for v in range(n)
+        ]
+    return rank
+
+
 # --- emit ---------------------------------------------------------------
 def fmt(x):
     if x == float("inf"):
@@ -254,6 +360,10 @@ def write_fixture(name, n, edges, src):
         "pagerank": pagerank(n, edges, PR_ROUNDS),
         "bc": bc(n, edges, src),
         "widest": widest(n, edges, src),
+        "triangles": triangles(n, edges),
+        "kcore": kcore(n, edges),
+        "labelprop": labelprop(n, edges, PR_ROUNDS),
+        "ppr": ppr(n, edges, src, PR_ROUNDS),
     }
     for alg, vals in results.items():
         with open(os.path.join(HERE, "%s.%s.txt" % (name, alg)), "w") as f:

@@ -11,15 +11,20 @@
 //!   files in every configuration (min/max reductions are order-free; the
 //!   fixtures carry integer weights, so SSSP distances are exact in f32
 //!   and widest-path widths are pure selections among weights);
+//! - triangle counting, k-core, and label propagation (DESIGN.md §15) are
+//!   likewise **bit-exact** everywhere: their per-edge accumulations are
+//!   integer adds (u64 counts, i32 degrees/labels), associative and
+//!   commutative, so no configuration can perturb them;
 //! - direction-optimized BFS must also be bit-exact against the same
 //!   push-only golden files (DESIGN.md §8);
-//! - PageRank and BC are order-sensitive f32 summations, so their
-//!   partition-dependent results are checked within an f32 summation
-//!   tolerance against the golden files, while Synchronous vs Pipelined
-//!   at the *same* partitioning must agree bit-for-bit (the pipelined
-//!   executor's contract) — and so must every placement at the same
-//!   partitioning (the canonical-order contract, DESIGN.md §9: a vertex
-//!   placement is pure layout, invisible after `collect_to_global`).
+//! - PageRank, BC, and personalized PageRank are order-sensitive f32
+//!   summations, so their partition-dependent results are checked within
+//!   an f32 summation tolerance against the golden files, while
+//!   Synchronous vs Pipelined at the *same* partitioning must agree
+//!   bit-for-bit (the pipelined executor's contract) — and so must every
+//!   placement at the same partitioning (the canonical-order contract,
+//!   DESIGN.md §9: a vertex placement is pure layout, invisible after
+//!   `collect_to_global`).
 //!
 //! On mismatch the failing output is dumped under `target/golden-diff/`
 //! (CI uploads it as an artifact). Regenerate the expected files
@@ -71,26 +76,45 @@ fn golden_path(fixture: &str, alg: AlgKind) -> PathBuf {
     golden_dir().join(format!("{fixture}.{}.txt", alg.name()))
 }
 
-fn is_i32_output(alg: AlgKind) -> bool {
-    matches!(alg, AlgKind::Bfs | AlgKind::Cc)
+/// Which [`StateArray`] variant an algorithm's golden file encodes.
+/// Exhaustive over [`AlgKind`] so a new algorithm cannot land without a
+/// conformance decision.
+enum OutKind {
+    I32,
+    F32,
+    U64,
+}
+
+fn out_kind(alg: AlgKind) -> OutKind {
+    match alg {
+        AlgKind::Bfs | AlgKind::Cc | AlgKind::Kcore | AlgKind::Labelprop => OutKind::I32,
+        AlgKind::Sssp | AlgKind::Pagerank | AlgKind::Bc | AlgKind::Widest | AlgKind::Ppr => {
+            OutKind::F32
+        }
+        AlgKind::Triangles => OutKind::U64,
+    }
 }
 
 fn load_golden(fixture: &str, alg: AlgKind) -> StateArray {
     let path = golden_path(fixture, alg);
     let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
     let lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
-    if is_i32_output(alg) {
-        StateArray::I32(
+    match out_kind(alg) {
+        OutKind::I32 => StateArray::I32(
             lines
                 .map(|l| l.parse::<i32>().unwrap_or_else(|e| panic!("{path:?} '{l}': {e}")))
                 .collect(),
-        )
-    } else {
-        StateArray::F32(
+        ),
+        OutKind::F32 => StateArray::F32(
             lines
                 .map(|l| l.parse::<f32>().unwrap_or_else(|e| panic!("{path:?} '{l}': {e}")))
                 .collect(),
-        )
+        ),
+        OutKind::U64 => StateArray::U64(
+            lines
+                .map(|l| l.parse::<u64>().unwrap_or_else(|e| panic!("{path:?} '{l}': {e}")))
+                .collect(),
+        ),
     }
 }
 
@@ -103,6 +127,11 @@ fn render(out: &StateArray) -> String {
             }
         }
         StateArray::F32(v) => {
+            for x in v {
+                let _ = writeln!(s, "{x}");
+            }
+        }
+        StateArray::U64(v) => {
             for x in v {
                 let _ = writeln!(s, "{x}");
             }
@@ -163,6 +192,7 @@ fn assert_bit_exact(
 ) {
     let ok = match (got, want) {
         (StateArray::I32(g), StateArray::I32(w)) => g == w,
+        (StateArray::U64(g), StateArray::U64(w)) => g == w,
         (StateArray::F32(g), StateArray::F32(w)) => {
             g.len() == w.len()
                 && g.iter().zip(w).all(|(a, b)| a.to_bits() == b.to_bits())
@@ -191,7 +221,7 @@ fn assert_within_tolerance(
     // f32 vs float64-reference summation slack; BC accumulates larger
     // magnitudes than PageRank, so it gets the looser relative term.
     let (abs, rel) = match alg {
-        AlgKind::Pagerank => (1e-5f32, 1e-4f32),
+        AlgKind::Pagerank | AlgKind::Ppr => (1e-5f32, 1e-4f32),
         _ => (1e-3f32, 1e-3f32),
     };
     for (i, (a, b)) in g.iter().zip(w).enumerate() {
@@ -245,6 +275,29 @@ fn golden_bfs_cc_sssp_widest_bit_exact_across_all_configs() {
     }
 }
 
+/// The edge-centric family (DESIGN.md §15): triangle counts, core
+/// numbers, and propagation labels are integer-valued and order-free, so
+/// like BFS they must be bit-exact against the goldens in **every**
+/// engine configuration — executors, partition counts, strategies, and
+/// placements included.
+#[test]
+fn golden_triangles_kcore_labelprop_bit_exact_across_all_configs() {
+    if regen() {
+        return;
+    }
+    for fx in FIXTURES {
+        let g = load_graph(fx.name);
+        for alg in [AlgKind::Triangles, AlgKind::Kcore, AlgKind::Labelprop] {
+            let want = load_golden(fx.name, alg);
+            for (label, cfg) in configs() {
+                let (r, _) = run_alg(&g, spec_for(alg, fx), &cfg)
+                    .unwrap_or_else(|e| panic!("{}/{}/{label}: {e:#}", fx.name, alg.name()));
+                assert_bit_exact(fx.name, alg, &label, &r.output, &want);
+            }
+        }
+    }
+}
+
 #[test]
 fn golden_direction_optimized_bfs_bit_exact() {
     if regen() {
@@ -264,13 +317,13 @@ fn golden_direction_optimized_bfs_bit_exact() {
 }
 
 #[test]
-fn golden_pagerank_bc_tolerance_and_pipeline_bit_identity() {
+fn golden_pagerank_bc_ppr_tolerance_and_pipeline_bit_identity() {
     if regen() {
         return;
     }
     for fx in FIXTURES {
         let g = load_graph(fx.name);
-        for alg in [AlgKind::Pagerank, AlgKind::Bc] {
+        for alg in [AlgKind::Pagerank, AlgKind::Bc, AlgKind::Ppr] {
             let want = load_golden(fx.name, alg);
             for parts in [1usize, 2, 3] {
                 for strat in [Strategy::Rand, Strategy::High, Strategy::Low] {
@@ -323,12 +376,13 @@ fn golden_pagerank_bc_tolerance_and_pipeline_bit_identity() {
 
 /// Balance-mode axis (ISSUE 6; DESIGN.md §11): every algorithm under
 /// {Vertex, Edge, HubSplit} chunking at threads = 2, on both executors,
-/// against the same golden files. All six must be **bit-identical across
+/// against the same golden files. All ten must be **bit-identical across
 /// balance modes** (the modes only move chunk boundaries; eligibility for
 /// the order-sensitive kernels is decided centrally, forcing their
-/// canonical sequential path). BFS/CC/SSSP/widest are additionally
-/// bit-exact against the goldens; PageRank/BC within tolerance, anchored
-/// to the Vertex/Synchronous run for the cross-mode bit check.
+/// canonical sequential path). The integer- and selection-valued
+/// algorithms are additionally bit-exact against the goldens;
+/// PageRank/BC/PPR within tolerance, anchored to the Vertex/Synchronous
+/// run for the cross-mode bit check.
 #[test]
 fn golden_all_algs_bit_identical_across_balance_modes() {
     if regen() {
@@ -359,10 +413,13 @@ fn golden_all_algs_bit_identical_across_balance_modes() {
                             a,
                         ),
                     }
-                    if is_i32_output(alg) || matches!(alg, AlgKind::Sssp | AlgKind::Widest) {
-                        assert_bit_exact(fx.name, alg, &label, &r.output, &want);
-                    } else {
+                    // only the order-sensitive f32 summations get slack;
+                    // every integer-valued or selection-valued algorithm
+                    // is bit-exact against its golden here too
+                    if matches!(alg, AlgKind::Pagerank | AlgKind::Bc | AlgKind::Ppr) {
                         assert_within_tolerance(fx.name, alg, &label, &r.output, &want);
+                    } else {
+                        assert_bit_exact(fx.name, alg, &label, &r.output, &want);
                     }
                 }
             }

@@ -94,7 +94,11 @@ fn concurrent_mixed_queries_match_solo_runs_bit_for_bit() {
                     let a = srv.submit(QueryKind::Pagerank).unwrap().wait().unwrap();
                     match a.response {
                         QueryResponse::Ranks(got) => {
-                            assert_eq!(got, *pr_want, "pagerank diverged (thread {t}, round {round})");
+                            assert_eq!(
+                                got.as_slice(),
+                                pr_want.as_slice(),
+                                "pagerank diverged (thread {t}, round {round})"
+                            );
                         }
                         other => panic!("pagerank answered with {other:?}"),
                     }

@@ -1,0 +1,521 @@
+#!/usr/bin/env python3
+"""Independent cross-check of the edge-centric workload family
+(DESIGN.md §15): triangle counting, k-core, label propagation, and
+personalized PageRank.
+
+Re-implements each algorithm's contract in pure Python — with a
+*different shape* than both the engine kernels and the `baseline/`
+oracles — and checks them offline (no toolchain, no network):
+
+  1. **Committed goldens**: the fixture graphs under `rust/tests/golden/`
+     are re-solved here (triangles via oriented a<b<c enumeration, k-core
+     via sequential min-degree peel, label propagation via a sorted-run
+     scan, PPR via float64 push accumulation) and compared against the
+     committed expected files — integer outputs exactly, PPR to float64
+     round-off.
+  2. **Triangle duality**: oriented-enumeration counts must equal naive
+     neighbor-pair probing on mirrored R-MAT graphs.
+  3. **Peel duality**: batch-synchronous peeling (the engine's schedule)
+     must equal sequential min-degree peeling (Matula-Beck) on the
+     undirected multigraph view.
+  4. **LP determinism**: the min-label tie-break makes every round a pure
+     function of the previous labels — frequency-map and sorted-run
+     implementations must agree, and repeated runs must be identical.
+  5. **PPR mass**: rank mass stays within (0, 1], the source dominates on
+     its own out-star, and PPR with teleport-everywhere degenerates to
+     global PageRank's contract.
+
+With `--totem BIN` the live binary is driven too: a `totem run --alg
+triangles` dump (u64 hex) must equal the Python oracle exactly, and a
+`totem serve` PPR replay (f32-bit hex dumps through admission, batching
+skip, and the per-source cache) must match float64 power iteration within
+f32 summation tolerance — with repeated sources byte-identical (the
+cache may only ever return the same answer). `--big` adds the RMAT18
+smoke: cross-configuration determinism diffs and structural invariants
+on dumps too large to re-solve in Python.
+
+Exit 0 with a PASS summary, non-zero with the first failure.
+"""
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cross_sim_bench import Csr, Rng, rmat_paper
+
+INF_I32 = 1 << 30
+DAMPING = 0.85
+PR_ROUNDS = 5
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "rust", "tests", "golden")
+
+_passed = []
+
+
+def check(name, cond, detail=""):
+    if not cond:
+        print("FAIL %s%s" % (name, (": " + detail) if detail else ""))
+        sys.exit(1)
+    _passed.append(name)
+    print("ok   %s" % name)
+
+
+# ---------------------------------------------------------------------------
+# reference implementations (deliberately shaped unlike baseline/ and the
+# engine kernels, so a shared bug cannot cancel out)
+# ---------------------------------------------------------------------------
+
+
+def undirected_simple(n, edges):
+    """Deduplicated, self-loop-free undirected closure (triangle view)."""
+    adj = [set() for _ in range(n)]
+    for s, d in edges:
+        if s != d:
+            adj[s].add(d)
+            adj[d].add(s)
+    return adj
+
+
+def undirected_multi(n, edges):
+    """Multigraph view: parallel edges keep multiplicity, self-loops
+    double (the engine's `to_undirected`)."""
+    und = [[] for _ in range(n)]
+    for s, d in edges:
+        und[s].append(d)
+        und[d].append(s)
+    return und
+
+
+def triangles_probe(n, edges):
+    """Per-vertex incident-triangle counts by neighbor-pair probing."""
+    adj = undirected_simple(n, edges)
+    srt = [sorted(a) for a in adj]
+    tri = [0] * n
+    for v in range(n):
+        a = srt[v]
+        for i, w in enumerate(a):
+            for u in a[i + 1:]:
+                if u in adj[w]:
+                    tri[v] += 1
+    return tri
+
+
+def triangles_oriented(n, edges):
+    """Per-vertex counts by oriented a<b<c enumeration: every triangle is
+    found exactly once at its smallest vertex and credited to all three
+    corners. Different traversal order and different credit scheme than
+    the probe above."""
+    adj = undirected_simple(n, edges)
+    up = [sorted(t for t in adj[v] if t > v) for v in range(n)]
+    tri = [0] * n
+    for a in range(n):
+        for i, b in enumerate(up[a]):
+            bs = adj[b]
+            for c in up[a][i + 1:]:
+                if c in bs:
+                    tri[a] += 1
+                    tri[b] += 1
+                    tri[c] += 1
+    return tri
+
+
+def kcore_batch(n, edges):
+    """Batch-synchronous peel (the engine's schedule): at threshold k,
+    remove every alive vertex with alive-degree <= k per round; a quiet
+    round escalates k."""
+    und = undirected_multi(n, edges)
+    core = [INF_I32] * n
+    remaining = n
+    k = 0
+    while remaining > 0:
+        doomed = [
+            v
+            for v in range(n)
+            if core[v] == INF_I32
+            and sum(1 for t in und[v] if core[t] == INF_I32) <= k
+        ]
+        if not doomed:
+            k += 1
+        else:
+            for v in doomed:
+                core[v] = k
+                remaining -= 1
+    return core
+
+
+def kcore_sequential(n, edges):
+    """Sequential min-degree peel (Matula-Beck): one vertex at a time,
+    coreness = running max of removal degrees."""
+    und = undirected_multi(n, edges)
+    deg = [len(und[v]) for v in range(n)]
+    alive = [True] * n
+    core = [0] * n
+    k = 0
+    for _ in range(n):
+        v = min((v for v in range(n) if alive[v]), key=lambda v: deg[v])
+        k = max(k, deg[v])
+        core[v] = k
+        alive[v] = False
+        for t in und[v]:
+            if alive[t]:
+                deg[t] -= 1
+    return core
+
+
+def labelprop_freq(n, edges, rounds):
+    """Synchronous LP via frequency map, min-label tie-break."""
+    und = undirected_multi(n, edges)
+    label = list(range(n))
+    for _ in range(rounds):
+        prev = list(label)
+        changed = False
+        for v in range(n):
+            if not und[v]:
+                continue
+            freq = {}
+            for t in und[v]:
+                freq[prev[t]] = freq.get(prev[t], 0) + 1
+            best = min(freq.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+            if best != label[v]:
+                label[v] = best
+                changed = True
+        if not changed:
+            break
+    return label
+
+
+def labelprop_sorted(n, edges, rounds):
+    """Same contract via the engine's sorted-run scan: sort the incident
+    labels ascending, pick the longest run, first (= smallest) run wins
+    ties."""
+    und = undirected_multi(n, edges)
+    label = list(range(n))
+    for _ in range(rounds):
+        prev = list(label)
+        changed = False
+        for v in range(n):
+            if not und[v]:
+                continue
+            ls = sorted(prev[t] for t in und[v])
+            best, best_len = ls[0], 0
+            run, run_len = ls[0], 0
+            for x in ls:
+                if x == run:
+                    run_len += 1
+                else:
+                    run, run_len = x, 1
+                if run_len > best_len:
+                    best, best_len = run, run_len
+            if best != label[v]:
+                label[v] = best
+                changed = True
+        if not changed:
+            break
+    return label
+
+
+def ppr_push(n, edges, src, rounds):
+    """Personalized PageRank by float64 per-edge push accumulation:
+    teleport (1-d) at the source only, dangling mass dropped."""
+    outdeg = [0] * n
+    for s, _ in edges:
+        outdeg[s] += 1
+    rank = [0.0] * n
+    rank[src] = 1.0
+    for _ in range(rounds):
+        acc = [0.0] * n
+        for s, d in edges:
+            acc[d] += rank[s] / outdeg[s]
+        rank = [
+            (1.0 - DAMPING if v == src else 0.0) + DAMPING * acc[v]
+            for v in range(n)
+        ]
+    return rank
+
+
+# ---------------------------------------------------------------------------
+# 1. committed goldens
+# ---------------------------------------------------------------------------
+
+
+def read_fixture(name):
+    n = None
+    edges = []
+    with open(os.path.join(GOLDEN, name + ".el")) as f:
+        for line in f:
+            line = line.split("#")[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            if parts[0] == "p":
+                n = int(parts[1])
+            else:
+                edges.append((int(parts[0]), int(parts[1])))
+    assert n is not None, name
+    return n, edges
+
+
+def read_golden(name, alg, parse):
+    with open(os.path.join(GOLDEN, "%s.%s.txt" % (name, alg))) as f:
+        return [parse(l.strip()) for l in f if l.strip()]
+
+
+def fixture_source(name, n, edges):
+    """The fixtures' source policy: vertex 0 (all committed fixtures
+    resolve to it, including rmat64's max-out-degree hub)."""
+    return 0
+
+
+def check_goldens():
+    for name in ("chain8", "star8", "twocomm16", "rmat64"):
+        n, edges = read_fixture(name)
+        src = fixture_source(name, n, edges)
+
+        want = read_golden(name, "triangles", int)
+        got = triangles_oriented(n, edges)
+        check("golden.%s.triangles" % name, got == want,
+              "first diff at %s" %
+              next((v for v in range(n) if got[v] != want[v]), -1))
+
+        want = read_golden(name, "kcore", int)
+        got = kcore_sequential(n, edges)
+        check("golden.%s.kcore" % name, got == want,
+              "first diff at %s" %
+              next((v for v in range(n) if got[v] != want[v]), -1))
+
+        want = read_golden(name, "labelprop", int)
+        got = labelprop_sorted(n, edges, PR_ROUNDS)
+        check("golden.%s.labelprop" % name, got == want,
+              "first diff at %s" %
+              next((v for v in range(n) if got[v] != want[v]), -1))
+
+        want = read_golden(name, "ppr", float)
+        got = ppr_push(n, edges, src, PR_ROUNDS)
+        bad = next(
+            (v for v in range(n)
+             if abs(got[v] - want[v]) > 1e-12 + 1e-9 * abs(want[v])),
+            None)
+        check("golden.%s.ppr" % name, bad is None,
+              "vertex %s: %r vs golden %r" %
+              (bad, got[bad] if bad is not None else 0,
+               want[bad] if bad is not None else 0))
+
+
+# ---------------------------------------------------------------------------
+# 2-5. seeded R-MAT property sweeps
+# ---------------------------------------------------------------------------
+
+
+def check_triangle_duality():
+    for scale, seed in ((6, 9), (7, 3)):
+        n, edges = rmat_paper(scale, seed)
+        probe = triangles_probe(n, edges)
+        oriented = triangles_oriented(n, edges)
+        check("tri.rmat%d_%d.duality" % (scale, seed), probe == oriented)
+        total = sum(oriented)
+        check("tri.rmat%d_%d.mod3" % (scale, seed),
+              total % 3 == 0 and total > 0,
+              "total incident count %d" % total)
+
+
+def check_peel_duality():
+    for scale, seed in ((6, 9), (7, 3)):
+        n, edges = rmat_paper(scale, seed)
+        batch = kcore_batch(n, edges)
+        seq = kcore_sequential(n, edges)
+        check("kcore.rmat%d_%d.duality" % (scale, seed), batch == seq,
+              "first diff at %s" %
+              next((v for v in range(n) if batch[v] != seq[v]), -1))
+        # defining property: in the subgraph induced by
+        # {u : core(u) >= c}, v has degree >= c = core(v)
+        und = undirected_multi(n, edges)
+        bad = next(
+            (v for v in range(n)
+             if sum(1 for t in und[v] if seq[t] >= seq[v]) < seq[v]),
+            None)
+        check("kcore.rmat%d_%d.property" % (scale, seed), bad is None,
+              "vertex %s violates the core property" % bad)
+
+
+def check_lp_determinism():
+    for scale, seed in ((6, 9), (7, 3)):
+        n, edges = rmat_paper(scale, seed)
+        a = labelprop_freq(n, edges, 6)
+        b = labelprop_sorted(n, edges, 6)
+        check("lp.rmat%d_%d.duality" % (scale, seed), a == b,
+              "first diff at %s" %
+              next((v for v in range(n) if a[v] != b[v]), -1))
+        check("lp.rmat%d_%d.deterministic" % (scale, seed),
+              labelprop_sorted(n, edges, 6) == b)
+        # every surviving label names a vertex that carries it
+        check("lp.rmat%d_%d.anchored" % (scale, seed),
+              all(a[l] == l or 0 <= l < n for l in set(a)))
+
+
+def check_ppr_mass():
+    n, edges = rmat_paper(6, 9)
+    src = max(range(n), key=lambda v: sum(1 for s, _ in edges if s == v))
+    rank = ppr_push(n, edges, src, PR_ROUNDS)
+    mass = sum(rank)
+    check("ppr.mass_bounded", 0.0 < mass <= 1.0 + 1e-9, "mass %r" % mass)
+    check("ppr.source_positive", rank[src] >= 1.0 - DAMPING - 1e-12)
+    # isolated star: all mass stays between hub and leaves
+    star = [(0, i) for i in range(1, 5)]
+    r = ppr_push(5, star, 0, PR_ROUNDS)
+    check("ppr.star_hub_dominates", r[0] > max(r[1:]) > 0.0)
+    unreach = ppr_push(5, star, 1, 1)
+    check("ppr.leaf_sink", unreach[0] == 0.0 and unreach[1] == 1.0 - DAMPING)
+
+
+# ---------------------------------------------------------------------------
+# 6. [--totem] live runs vs the mirrors
+# ---------------------------------------------------------------------------
+
+
+def parse_dump_u64(path, n):
+    got = [None] * n
+    with open(path) as f:
+        for line in f:
+            v, x = line.split()
+            got[int(v)] = int(x, 16)
+    return got
+
+
+def parse_dump_f32(path, n):
+    import struct
+
+    got = [None] * n
+    with open(path) as f:
+        for line in f:
+            v, x = line.split()
+            got[int(v)] = struct.unpack("<f", int(x, 16).to_bytes(4, "little"))[0]
+    return got
+
+
+def run_ok(name, cmd):
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    check(name, proc.returncode == 0, proc.stderr[-2000:])
+    return proc
+
+
+def check_live(totem, scale):
+    seed = 42
+    n, edges = rmat_paper(scale, seed)
+    with tempfile.TemporaryDirectory() as d:
+        # triangle run: u64 dump must equal the Python oracle exactly
+        dump = os.path.join(d, "tri.txt")
+        run_ok("live.tri.exit0",
+               [totem, "run", "--alg", "triangles", "--workload",
+                "rmat%d" % scale, "--seed", str(seed), "--threads", "2",
+                "--dump-output", dump])
+        got = parse_dump_u64(dump, n)
+        want = triangles_oriented(n, edges)
+        check("live.tri.counts", got == want,
+              "first diff at vertex %s" %
+              next((v for v in range(n) if got[v] != want[v]), -1))
+
+        # ppr serve replay: through admission, the batcher's skip, and the
+        # per-source cache; f32 dumps vs float64 power iteration
+        sources = [0, 3, 0, n - 1]  # repeated source 0 exercises the cache
+        qfile = os.path.join(d, "queries.txt")
+        with open(qfile, "w") as f:
+            for s in sources:
+                f.write("ppr %d\n" % s)
+            f.write("bfs 0\n")  # a lane batch riding alongside
+        sdump = os.path.join(d, "serve")
+        run_ok("live.serve.exit0",
+               [totem, "serve", "--workload", "rmat%d" % scale, "--seed",
+                str(seed), "--queries", qfile, "--dump-dir", sdump,
+                "--rounds", str(PR_ROUNDS), "--serve-workers", "1",
+                "--threads", "2"])
+        for i, s in enumerate(sources):
+            got = parse_dump_f32(os.path.join(sdump, "q%04d_ppr.txt" % i), n)
+            want = ppr_push(n, edges, s, PR_ROUNDS)
+            bad = next(
+                (v for v in range(n)
+                 if abs(got[v] - want[v]) > 1e-5 + 1e-4 * abs(want[v])),
+                None)
+            check("live.serve.ppr_q%d_src%d" % (i, s), bad is None,
+                  "vertex %s: %r vs float64 %r" %
+                  (bad, got[bad] if bad is not None else 0,
+                   want[bad] if bad is not None else 0))
+        # the repeated source must be answered byte-identically (a cache
+        # hit can only ever return the same ranks)
+        with open(os.path.join(sdump, "q0000_ppr.txt")) as a, \
+                open(os.path.join(sdump, "q0002_ppr.txt")) as b:
+            check("live.serve.cache_identical", a.read() == b.read())
+
+
+def check_live_big(totem):
+    """RMAT18 smoke: too large to re-solve in Python, so check
+    cross-configuration determinism (integer kernels may not move a bit)
+    and structural invariants on the dumps."""
+    scale, seed = 18, 7
+    n = 1 << scale
+    with tempfile.TemporaryDirectory() as d:
+        dumps = []
+        for label, extra in (
+            ("2t-edge", ["--threads", "2", "--balance", "edge"]),
+            ("4t-hub", ["--threads", "4", "--balance", "hub-split"]),
+        ):
+            dump = os.path.join(d, "tri-%s.txt" % label)
+            run_ok("big.tri.%s.exit0" % label,
+                   [totem, "run", "--alg", "triangles", "--workload",
+                    "rmat%d" % scale, "--seed", str(seed),
+                    "--dump-output", dump] + extra)
+            dumps.append(dump)
+        with open(dumps[0]) as a, open(dumps[1]) as b:
+            check("big.tri.deterministic", a.read() == b.read())
+        got = parse_dump_u64(dumps[0], n)
+        total = sum(got)
+        check("big.tri.mod3", total % 3 == 0 and total > 0,
+              "total incident count %d" % total)
+
+        # ppr serve at scale 18: mass and dominance invariants only
+        qfile = os.path.join(d, "queries.txt")
+        with open(qfile, "w") as f:
+            f.write("ppr 0\nppr 0\n")
+        sdump = os.path.join(d, "serve")
+        run_ok("big.serve.exit0",
+               [totem, "serve", "--workload", "rmat%d" % scale, "--seed",
+                str(seed), "--queries", qfile, "--dump-dir", sdump,
+                "--rounds", str(PR_ROUNDS), "--serve-workers", "1",
+                "--threads", "4"])
+        got = parse_dump_f32(os.path.join(sdump, "q0000_ppr.txt"), n)
+        mass = sum(got)
+        check("big.serve.mass", 0.0 < mass <= 1.0 + 1e-3, "mass %r" % mass)
+        check("big.serve.source_floor", got[0] >= 1.0 - DAMPING - 1e-6)
+        with open(os.path.join(sdump, "q0000_ppr.txt")) as a, \
+                open(os.path.join(sdump, "q0001_ppr.txt")) as b:
+            check("big.serve.cache_identical", a.read() == b.read())
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--totem", help="path to a built totem binary for live checks")
+    ap.add_argument("--scale", type=int, default=10,
+                    help="R-MAT scale for the exact live oracle diff")
+    ap.add_argument("--big", action="store_true",
+                    help="with --totem: add the RMAT18 smoke invariants")
+    args = ap.parse_args()
+    check_goldens()
+    check_triangle_duality()
+    check_peel_duality()
+    check_lp_determinism()
+    check_ppr_mass()
+    if args.totem:
+        check_live(args.totem, args.scale)
+        if args.big:
+            check_live_big(args.totem)
+    else:
+        print("skip live checks (--totem not given)")
+    print("PASS %d checks" % len(_passed))
+
+
+if __name__ == "__main__":
+    main()
